@@ -1,0 +1,112 @@
+//! END-TO-END driver (DESIGN.md §deliverables): exercises all three layers
+//! on a real workload and reports the paper's headline comparison —
+//! bulk-synchronous processing vs the asynchronous diffusive model.
+//!
+//!  * Layer 1/2: the AOT JAX+Pallas BSP step artifacts (`make artifacts`)
+//!    are loaded and executed from Rust via PJRT (no Python at runtime).
+//!  * Layer 3: the same workloads run on the simulated AM-CCA chip under
+//!    the diffusive programming model.
+//!
+//! For each app it reports: result agreement (the XLA path is the oracle),
+//! BSP supersteps vs asynchronous cycles-to-solution, and wall-clock
+//! throughput of both engines.
+//!
+//!     make artifacts && cargo run --release --example bsp_vs_async
+
+use amcca::apps::driver;
+use amcca::arch::config::ChipConfig;
+use amcca::baseline::bsp;
+use amcca::coordinator::report::Table;
+use amcca::graph::datasets::{Dataset, Scale};
+use amcca::runtime::{oracle, pjrt::PjrtRuntime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let g = Dataset::R18.build(Scale::Tiny);
+    println!("workload: R18@Tiny ({} vertices, {} edges)\n", g.n, g.m());
+    let cfg = ChipConfig::torus(16);
+    let root = 0u32;
+    let iters = 10u32;
+
+    let mut table = Table::new(&[
+        "app", "xla_mismatch", "bsp_supersteps", "async_cycles", "xla_wall", "sim_wall",
+        "sim_Mcyc/s",
+    ]);
+
+    // ---------------- BFS ------------------------------------------------
+    let t0 = Instant::now();
+    let xla_bfs = oracle::to_u32(&oracle::relax_fixpoint(&mut rt, &g, root, true)?);
+    let xla_wall = t0.elapsed();
+    let t0 = Instant::now();
+    let (chip, built) = driver::run_bfs(cfg.clone(), &g, root)?;
+    let sim_wall = t0.elapsed();
+    let got = driver::bfs_levels(&chip, &built);
+    let mism = xla_bfs.iter().zip(&got).filter(|&(a, b)| a != b).count();
+    table.row(&[
+        "bfs".into(),
+        mism.to_string(),
+        bsp::bfs_supersteps(&g, root).to_string(),
+        chip.metrics.cycles.to_string(),
+        format!("{xla_wall:.2?}"),
+        format!("{sim_wall:.2?}"),
+        format!("{:.1}", chip.metrics.cycles as f64 / sim_wall.as_secs_f64() / 1e6),
+    ]);
+    anyhow::ensure!(mism == 0, "BFS diverged from the XLA oracle");
+
+    // ---------------- SSSP -----------------------------------------------
+    let t0 = Instant::now();
+    let xla_sssp = oracle::to_u32(&oracle::relax_fixpoint(&mut rt, &g, root, false)?);
+    let xla_wall = t0.elapsed();
+    let t0 = Instant::now();
+    let (chip, built) = driver::run_sssp(cfg.clone(), &g, root)?;
+    let sim_wall = t0.elapsed();
+    let got = driver::sssp_dists(&chip, &built);
+    let mism = xla_sssp.iter().zip(&got).filter(|&(a, b)| a != b).count();
+    // supersteps for weighted relaxation = Bellman-Ford rounds; report the
+    // number of relax_step applications the fixpoint loop used instead.
+    table.row(&[
+        "sssp".into(),
+        mism.to_string(),
+        "-".into(),
+        chip.metrics.cycles.to_string(),
+        format!("{xla_wall:.2?}"),
+        format!("{sim_wall:.2?}"),
+        format!("{:.1}", chip.metrics.cycles as f64 / sim_wall.as_secs_f64() / 1e6),
+    ]);
+    anyhow::ensure!(mism == 0, "SSSP diverged from the XLA oracle");
+
+    // ---------------- PageRank -------------------------------------------
+    let t0 = Instant::now();
+    let xla_pr = oracle::pagerank_iters(&mut rt, &g, iters)?;
+    let xla_wall = t0.elapsed();
+    let t0 = Instant::now();
+    let (chip, built) = driver::run_pagerank(cfg, &g, iters)?;
+    let sim_wall = t0.elapsed();
+    let got = driver::pagerank_scores(&chip, &built);
+    let mism = xla_pr
+        .iter()
+        .zip(&got)
+        .filter(|&(a, b)| (a - b).abs() / a.abs().max(1e-9) > 1e-3)
+        .count();
+    table.row(&[
+        "pagerank".into(),
+        mism.to_string(),
+        iters.to_string(),
+        chip.metrics.cycles.to_string(),
+        format!("{xla_wall:.2?}"),
+        format!("{sim_wall:.2?}"),
+        format!("{:.1}", chip.metrics.cycles as f64 / sim_wall.as_secs_f64() / 1e6),
+    ]);
+    anyhow::ensure!(mism == 0, "PageRank diverged from the XLA oracle");
+
+    print!("\n{}", table.render());
+    println!(
+        "\nAll three diffusive apps agree with the AOT JAX/Pallas BSP oracle.\n\
+         The async formulation needs no frontier/superstep barriers: BFS \n\
+         explores the whole graph in one diffusion wave whose length is set \n\
+         by the critical path, not by O(diameter) global rounds."
+    );
+    Ok(())
+}

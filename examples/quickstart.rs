@@ -1,0 +1,55 @@
+//! Quickstart: build a skewed graph onto a 16x16 AM-CCA torus chip, run
+//! asynchronous BFS (Listing 1's host program via the driver API), verify
+//! against the frontier reference, and print the run metrics + energy.
+//!
+//!     cargo run --release --example quickstart
+
+use amcca::apps::driver;
+use amcca::arch::config::ChipConfig;
+use amcca::energy::model::{account, EnergyParams};
+use amcca::graph::rmat::{generate, RmatParams};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A skewed input graph (R-MAT, the paper's R18 recipe at scale 12).
+    let g = generate(RmatParams::paper(12, 16, 42));
+    println!("graph: {} vertices, {} edges, max in-degree {}", g.n, g.m(), g.max_in_degree());
+
+    // 2. A 16x16 Torus-Mesh chip with paper-default policies.
+    let cfg = ChipConfig::torus(16);
+    println!(
+        "chip:  {}x{} {} | VCs={} buf={} throttle T={} cycles",
+        cfg.dim_x,
+        cfg.dim_y,
+        cfg.topology,
+        cfg.num_vcs,
+        cfg.vc_buffer,
+        cfg.throttle_period()
+    );
+
+    // 3. Germinate bfs-action(root=0, lvl=0) and run to termination.
+    let (chip, built) = driver::run_bfs(cfg.clone(), &g, 0)?;
+    println!(
+        "built: {} vertex objects ({} rhizomatic vertices)",
+        built.objects, built.rhizomatic_vertices
+    );
+
+    // 4. Verify: fully-asynchronous BFS must equal the frontier reference.
+    let levels = driver::bfs_levels(&chip, &built);
+    let mismatches = driver::verify_bfs(&g, 0, &levels);
+    assert_eq!(mismatches, 0, "async BFS diverged from the reference!");
+    let reached = levels.iter().filter(|&&l| l != amcca::apps::bfs::UNREACHED).count();
+    println!("bfs:   {reached}/{} vertices reached, all levels verified", g.n);
+
+    // 5. Metrics + energy (the §6.1 cost model).
+    println!("run:   {}", chip.metrics.summary());
+    let e = account(&chip.metrics, cfg.topology, cfg.num_cells(), &EnergyParams::default());
+    println!(
+        "energy: {:.2} uJ (network {:.1}% sram {:.1}% compute {:.1}% leakage {:.1}%)",
+        e.total_uj(),
+        100.0 * e.network_pj / e.total_pj(),
+        100.0 * e.sram_pj / e.total_pj(),
+        100.0 * e.compute_pj / e.total_pj(),
+        100.0 * e.leakage_pj / e.total_pj(),
+    );
+    Ok(())
+}

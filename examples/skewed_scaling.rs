@@ -1,0 +1,69 @@
+//! Strong scaling on skewed graphs, with and without rhizomes — a compact
+//! interactive version of the paper's Figs. 7 and 8.
+//!
+//! Runs BFS on the WK stand-in (hardest in-degree skew) across chip sizes,
+//! comparing rpvo_max = 1 (plain RPVO) against rpvo_max = 16 (rhizomes),
+//! in parallel across configurations.
+//!
+//!     cargo run --release --example skewed_scaling
+
+use amcca::arch::config::ChipConfig;
+use amcca::coordinator::campaign::{default_threads, run_all, Job};
+use amcca::coordinator::experiment::{AppKind, Experiment};
+use amcca::coordinator::report::Table;
+use amcca::graph::datasets::{Dataset, Scale};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let g = Arc::new(Dataset::WK.build(Scale::Tiny));
+    println!(
+        "WK@Tiny: {} vertices, {} edges, max in-degree {} (skew driver)\n",
+        g.n,
+        g.m(),
+        g.max_in_degree()
+    );
+
+    let dims = [8u32, 16, 32];
+    let rpvos = [1u32, 16];
+    let mut jobs = Vec::new();
+    for &dim in &dims {
+        for &rpvo in &rpvos {
+            let mut cfg = ChipConfig::torus(dim);
+            cfg.rpvo_max = rpvo;
+            let mut exp = Experiment::new(AppKind::Bfs, cfg);
+            exp.trials = 2;
+            jobs.push(Job { label: format!("{dim}x{dim}/rpvo{rpvo}"), exp, graph: g.clone() });
+        }
+    }
+    let results = run_all(jobs, default_threads());
+
+    let mut t = Table::new(&["chip", "rpvo_max", "cycles", "speedup_vs_plain", "stalls", "msgs"]);
+    let mut plain_cycles = 0u64;
+    for (label, out) in &results {
+        let out = out.as_ref().map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+        let (chip, rpvo) = label.split_once("/rpvo").unwrap();
+        if rpvo == "1" {
+            plain_cycles = out.metrics.cycles;
+        }
+        let speedup = if rpvo == "1" {
+            "1.00x".to_string()
+        } else {
+            format!("{:.2}x", plain_cycles as f64 / out.metrics.cycles as f64)
+        };
+        t.row(&[
+            chip.into(),
+            rpvo.into(),
+            out.metrics.cycles.to_string(),
+            speedup,
+            out.metrics.contention_stalls.to_string(),
+            out.metrics.messages_sent.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nExpected shape (paper Fig. 8): rhizomes help most at larger chip\n\
+         sizes, where the single hot vertex serializes delivery and congests\n\
+         its region; at small chips the network is the bottleneck either way."
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+"""AOT-lower the Layer-2 BSP step functions to HLO text artifacts.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards. Each artifact is shape-static; the Rust runtime
+pads graphs up to the artifact size (artifact registry: rust/src/runtime/).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Emits:  pagerank_step_{N}.hlo.txt, relax_step_{N}.hlo.txt for N in SIZES,
+        plus manifest.json describing operand shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Artifact sizes (padded vertex counts). 256 keeps tests fast; 1024/2048
+# cover the bench graphs run through the BSP comparator.
+SIZES = (256, 1024, 2048)
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pagerank(n: int) -> str:
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n, 1), jnp.float32)
+    return to_hlo_text(jax.jit(model.pagerank_step).lower(mat, vec, vec))
+
+
+def lower_relax(n: int) -> str:
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n, 1), jnp.float32)
+    return to_hlo_text(jax.jit(model.relax_step).lower(mat, vec))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--sizes", type=int, nargs="*", default=list(SIZES), help="padded sizes N"
+    )
+    args = parser.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict[str, dict] = {}
+    for n in args.sizes:
+        for name, lower in (("pagerank_step", lower_pagerank), ("relax_step", lower_relax)):
+            text = lower(n)
+            path = out / f"{name}_{n}.hlo.txt"
+            path.write_text(text)
+            manifest[f"{name}_{n}"] = {
+                "file": path.name,
+                "n": n,
+                "operands": (
+                    ["m[n,n]f32", "score[n,1]f32", "teleport[n,1]f32"]
+                    if name == "pagerank_step"
+                    else ["w[n,n]f32", "dist[n,1]f32"]
+                ),
+                "damping": model.DAMPING if name == "pagerank_step" else None,
+                "inf": model.INF if name == "relax_step" else None,
+            }
+            print(f"wrote {path} ({len(text)} chars)")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

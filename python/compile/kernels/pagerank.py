@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: VMEM-tiled blocked matvec for the BSP PageRank step.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the transition matrix is
+tiled into `block x block` dense tiles sized for VMEM, and each grid step
+feeds one `(B, B) @ (B, 1)` product to the MXU, accumulating into the output
+tile held in VMEM across the k-dimension of the grid. The BlockSpec index
+maps express the HBM <-> VMEM schedule that a GPU formulation would have
+written with threadblocks + shared memory.
+
+Runs under `interpret=True` only: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example/README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128  # MXU-shaped: 128x128 f32 tiles
+
+
+def _matvec_kernel(m_ref, v_ref, o_ref):
+    """Grid = (row blocks j, contraction blocks k); accumulate over k."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # One MXU-shaped block product per grid step.
+    o_ref[...] += m_ref[...] @ v_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matvec(m: jnp.ndarray, v: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Blocked dense matvec: (N, N) @ (N, 1) -> (N, 1), N % block == 0."""
+    n = m.shape[0]
+    assert m.shape == (n, n) and v.shape == (n, 1), (m.shape, v.shape)
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    grid = (n // block, n // block)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda j, k: (j, k)),  # M tile
+            pl.BlockSpec((block, 1), lambda j, k: (k, 0)),  # v tile
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda j, k: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), m.dtype),
+        interpret=True,
+    )(m, v)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must match its oracle (allclose) under pytest + hypothesis
+sweeps of shapes. They are also what `model.py` would compute if the Pallas
+kernels were replaced by plain jnp — keeping L2 semantics honest.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Value used to encode "no edge" in min-plus matrices. Large enough to never
+# be chosen over a real path, small enough that INF + INF does not overflow
+# float32 (3.4e38): 1e30 + 1e30 = 2e30 << 3.4e38.
+INF = 1.0e30
+
+
+def matvec_ref(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Dense matvec oracle: (N, N) @ (N, 1) -> (N, 1)."""
+    return m @ v
+
+
+def minplus_ref(w: jnp.ndarray, dist: jnp.ndarray) -> jnp.ndarray:
+    """One min-plus relaxation step (Bellman-Ford / BFS over a semiring).
+
+    out[j] = min(dist[j], min_i (dist[i] + w[i, j]))
+
+    `w` is (N, N) with `INF` encoding absent edges; `dist` is (N, 1).
+    """
+    cand = jnp.min(dist + w, axis=0, keepdims=True).T  # (N, 1)
+    return jnp.minimum(dist, cand)
+
+
+def pagerank_step_ref(
+    m: jnp.ndarray, score: jnp.ndarray, teleport: jnp.ndarray, damping: float
+) -> jnp.ndarray:
+    """One synchronous PageRank power-iteration step.
+
+    new_score = teleport + damping * (M @ score)
+
+    `m` is the column-normalized transition matrix M[j, i] = A[i, j] /
+    outdeg(i) (zero columns for dangling vertices are handled by the caller);
+    `teleport` is (1 - damping)/n_real on real slots and 0 on padded slots.
+    """
+    return teleport + damping * (m @ score)

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: tiled min-plus relaxation for BSP BFS/SSSP steps.
+
+One synchronous Bellman-Ford / BFS frontier step over the (min, +) semiring:
+
+    out[j] = min(dist[j], min_i (dist[i] + w[i, j]))
+
+`w` encodes absent edges as `ref.INF`. BFS is the special case w in {1, INF}.
+
+TPU adaptation: this is VPU work, not MXU — each grid step loads one
+(B, B) weight tile plus two (B, 1) distance tiles into VMEM, does a
+broadcast-add and a min-reduction over the source axis, and accumulates the
+running minimum in the output tile across the k grid dimension. The same
+HBM <-> VMEM BlockSpec schedule as the matmul kernel, with a min-reduce in
+place of the dot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _minplus_kernel(w_ref, dk_ref, dj_ref, o_ref):
+    """Grid = (dest blocks j, source blocks k).
+
+    w_ref:  (B, B) tile of w[i, j] with i in block k, j in block j
+    dk_ref: (B, 1) tile of dist over the source block k
+    dj_ref: (B, 1) tile of dist over the dest block j (identity term)
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = dj_ref[...]
+
+    # dist[i] broadcast down rows of the tile, then min over sources i.
+    cand = jnp.min(dk_ref[...] + w_ref[...], axis=0)[:, None]
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def minplus(w: jnp.ndarray, dist: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """One min-plus step: (N, N), (N, 1) -> (N, 1), N % block == 0."""
+    n = w.shape[0]
+    assert w.shape == (n, n) and dist.shape == (n, 1), (w.shape, dist.shape)
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    grid = (n // block, n // block)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda j, k: (k, j)),  # w[i, j] tile
+            pl.BlockSpec((block, 1), lambda j, k: (k, 0)),  # dist source tile
+            pl.BlockSpec((block, 1), lambda j, k: (j, 0)),  # dist dest tile
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda j, k: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), w.dtype),
+        interpret=True,
+    )(w, dist, dist)

@@ -1,0 +1,56 @@
+"""Layer-2 JAX compute graphs: the BSP baselines the paper motivates against.
+
+The paper's contribution is the *asynchronous* diffusive execution model; the
+conventional comparator is bulk-synchronous (frontier / power-iteration)
+processing. These step functions are that comparator, built on the Layer-1
+Pallas kernels, AOT-lowered once by `aot.py` to HLO text, and executed from
+the Rust coordinator via PJRT — as both the BSP baseline in the benches and
+the correctness oracle for the async simulator.
+
+The Rust side owns the fixed-point loop (run step until convergence): that
+keeps every artifact shape-static, avoids host round-trips *inside* a step,
+and matches how the coordinator drives executables.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import pagerank as pagerank_kernel
+from compile.kernels import relax as relax_kernel
+from compile.kernels.ref import INF
+
+__all__ = ["INF", "pagerank_step", "relax_step", "bfs_weights", "DAMPING"]
+
+DAMPING = 0.85
+
+
+def pagerank_step(
+    m: jnp.ndarray, score: jnp.ndarray, teleport: jnp.ndarray
+) -> tuple[jnp.ndarray]:
+    """One synchronous PageRank power-iteration step.
+
+    new_score = teleport + DAMPING * (M @ score)
+
+    m:        (N, N) column-normalized transition matrix,
+              M[j, i] = A[i, j] / outdeg(i)
+    score:    (N, 1) current scores
+    teleport: (N, 1), (1 - d)/n_real on real slots, 0 on padded slots
+    """
+    return (teleport + DAMPING * pagerank_kernel.matvec(m, score),)
+
+
+def relax_step(w: jnp.ndarray, dist: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """One min-plus relaxation step shared by BSP BFS and SSSP.
+
+    out[j] = min(dist[j], min_i (dist[i] + w[i, j]))
+
+    For SSSP, w holds edge weights (INF where no edge). For BFS, use
+    `bfs_weights` so every edge costs 1 and out[] converges to hop levels.
+    """
+    return (relax_kernel.minplus(w, dist),)
+
+
+def bfs_weights(adj: jnp.ndarray) -> jnp.ndarray:
+    """Map a {0,1} adjacency matrix to min-plus BFS weights {1, INF}."""
+    return jnp.where(adj > 0, 1.0, INF).astype(jnp.float32)

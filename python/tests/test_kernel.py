@@ -1,0 +1,121 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/blocks/seeds; fixed cases pin the artifact
+configurations (block=128, N in {256, 1024}).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pagerank, ref, relax
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_matvec(n: int, seed: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    m = jax.random.normal(k1, (n, n), jnp.float32)
+    v = jax.random.normal(k2, (n, 1), jnp.float32)
+    return m, v
+
+
+def rand_minplus(n: int, seed: int, density: float = 0.1):
+    rng = np.random.default_rng(seed)
+    w = rng.exponential(5.0, size=(n, n)).astype(np.float32)
+    mask = rng.random((n, n)) < density
+    w = np.where(mask, w, ref.INF).astype(np.float32)
+    dist = np.full((n, 1), ref.INF, np.float32)
+    # a few settled sources
+    for i in rng.integers(0, n, size=max(1, n // 64)):
+        dist[i, 0] = rng.exponential(3.0)
+    return jnp.asarray(w), jnp.asarray(dist)
+
+
+# ---------------------------------------------------------------- matvec --
+
+
+@pytest.mark.parametrize("n,block", [(256, 128), (256, 64), (1024, 128)])
+def test_matvec_fixed(n, block):
+    m, v = rand_matvec(n, seed=n + block)
+    got = pagerank.matvec(m, v, block=block)
+    np.testing.assert_allclose(got, ref.matvec_ref(m, v), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([32, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matvec_hypothesis(blocks, block, seed):
+    n = blocks * block
+    m, v = rand_matvec(n, seed)
+    got = pagerank.matvec(m, v, block=block)
+    np.testing.assert_allclose(got, ref.matvec_ref(m, v), rtol=2e-4, atol=2e-4)
+
+
+def test_matvec_identity():
+    n = 256
+    m = jnp.eye(n, dtype=jnp.float32)
+    v = jnp.arange(n, dtype=jnp.float32)[:, None]
+    np.testing.assert_allclose(pagerank.matvec(m, v), v)
+
+
+def test_matvec_rejects_ragged():
+    m = jnp.zeros((100, 100), jnp.float32)
+    v = jnp.zeros((100, 1), jnp.float32)
+    with pytest.raises(AssertionError):
+        pagerank.matvec(m, v, block=64)
+
+
+# --------------------------------------------------------------- minplus --
+
+
+@pytest.mark.parametrize("n,block", [(256, 128), (256, 64), (1024, 128)])
+def test_minplus_fixed(n, block):
+    w, dist = rand_minplus(n, seed=n + block)
+    got = relax.minplus(w, dist, block=block)
+    np.testing.assert_allclose(got, ref.minplus_ref(w, dist), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([32, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    density=st.floats(min_value=0.01, max_value=0.5),
+)
+def test_minplus_hypothesis(blocks, block, seed, density):
+    n = blocks * block
+    w, dist = rand_minplus(n, seed, density)
+    got = relax.minplus(w, dist, block=block)
+    np.testing.assert_allclose(got, ref.minplus_ref(w, dist), rtol=1e-6)
+
+
+def test_minplus_no_edges_is_identity():
+    n = 256
+    w = jnp.full((n, n), ref.INF, jnp.float32)
+    dist = jnp.arange(n, dtype=jnp.float32)[:, None]
+    np.testing.assert_allclose(relax.minplus(w, dist), dist)
+
+
+def test_minplus_monotone_nonincreasing():
+    w, dist = rand_minplus(256, seed=7)
+    got = np.asarray(relax.minplus(w, dist))
+    assert (got <= np.asarray(dist) + 1e-6).all()
+
+
+def test_minplus_single_edge_relaxes():
+    n = 128
+    w = np.full((n, n), ref.INF, np.float32)
+    w[3, 77] = 2.5
+    dist = np.full((n, 1), ref.INF, np.float32)
+    dist[3, 0] = 1.0
+    got = np.asarray(relax.minplus(jnp.asarray(w), jnp.asarray(dist)))
+    assert got[77, 0] == pytest.approx(3.5)
+    assert got[3, 0] == pytest.approx(1.0)

@@ -1,0 +1,110 @@
+"""Layer-2 correctness: BSP step functions converge to known fixed points,
+and their AOT lowering produces loadable HLO text.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def ring_adjacency(n: int) -> np.ndarray:
+    adj = np.zeros((n, n), np.float32)
+    for i in range(n):
+        adj[i, (i + 1) % n] = 1.0
+    return adj
+
+
+def test_bfs_fixed_point_on_ring():
+    """BFS over a directed ring: level[k] = k hops from the source."""
+    n = 256
+    w = model.bfs_weights(jnp.asarray(ring_adjacency(n)))
+    dist = np.full((n, 1), model.INF, np.float32)
+    dist[0, 0] = 0.0
+    dist = jnp.asarray(dist)
+    for _ in range(n):  # n steps guarantee convergence on a ring
+        (dist,) = model.relax_step(w, dist)
+    np.testing.assert_allclose(np.asarray(dist)[:, 0], np.arange(n, dtype=np.float32))
+
+
+def test_relax_step_matches_ref_oracle():
+    n = 256
+    rng = np.random.default_rng(0)
+    w = np.where(rng.random((n, n)) < 0.05, rng.exponential(2.0, (n, n)), model.INF)
+    w = jnp.asarray(w.astype(np.float32))
+    dist = np.full((n, 1), model.INF, np.float32)
+    dist[17, 0] = 0.0
+    dist = jnp.asarray(dist)
+    (got,) = model.relax_step(w, dist)
+    np.testing.assert_allclose(got, ref.minplus_ref(w, dist), rtol=1e-6)
+
+
+def test_pagerank_conserves_mass_and_converges():
+    """On a strongly-connected graph with no dangling nodes, scores sum to 1
+    and the iteration converges to the dominant eigenvector."""
+    n = 256
+    rng = np.random.default_rng(1)
+    adj = (rng.random((n, n)) < 0.05).astype(np.float32)
+    np.fill_diagonal(adj, 0)
+    adj[np.arange(n), (np.arange(n) + 1) % n] = 1.0  # ensure no dangling/disconnect
+    outdeg = adj.sum(axis=1, keepdims=True)
+    m = jnp.asarray((adj / outdeg).T)  # M[j, i] = A[i, j] / outdeg(i)
+    teleport = jnp.full((n, 1), (1 - model.DAMPING) / n, jnp.float32)
+    score = jnp.full((n, 1), 1.0 / n, jnp.float32)
+    prev = score
+    for _ in range(60):
+        prev = score
+        (score,) = model.pagerank_step(m, score, teleport)
+    assert float(jnp.sum(score)) == pytest.approx(1.0, abs=1e-3)
+    assert float(jnp.max(jnp.abs(score - prev))) < 1e-7
+
+
+def test_pagerank_step_matches_ref_oracle():
+    n = 256
+    k = jax.random.PRNGKey(3)
+    m = jax.random.uniform(k, (n, n), jnp.float32)
+    score = jnp.full((n, 1), 1.0 / n, jnp.float32)
+    teleport = jnp.full((n, 1), (1 - model.DAMPING) / n, jnp.float32)
+    (got,) = model.pagerank_step(m, score, teleport)
+    np.testing.assert_allclose(
+        got, ref.pagerank_step_ref(m, score, teleport, model.DAMPING), rtol=2e-4, atol=1e-6
+    )
+
+
+def test_bfs_weights_mapping():
+    adj = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])
+    w = model.bfs_weights(adj)
+    assert w[0, 1] == 1.0 and w[0, 0] == model.INF
+
+
+# ------------------------------------------------------------------- AOT --
+
+
+@pytest.mark.parametrize("name,lower", [("pagerank", aot.lower_pagerank), ("relax", aot.lower_relax)])
+def test_aot_lowering_emits_hlo_text(name, lower):
+    text = lower(256)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # Tuple return (return_tuple=True) is what the rust loader unwraps.
+    assert "tuple" in text
+
+
+def test_aot_hlo_text_reparses(tmp_path):
+    """The HLO text artifact must re-parse through XLA's text parser — the
+    same parser the rust loader (`HloModuleProto::from_text_file`) uses.
+    Execution of the parsed module is covered by the rust integration test
+    (rust/tests/pjrt_roundtrip.rs), completing the bridge."""
+    from jax._src.lib import xla_client as xc
+
+    for lower, nparams in ((aot.lower_relax, 2), (aot.lower_pagerank, 3)):
+        text = lower(256)
+        comp = xc._xla.hlo_module_from_text(text)
+        # parse retained the module; shape metadata reachable via proto
+        proto = comp.as_serialized_hlo_module_proto()
+        assert len(proto) > 0
+        assert text.count("parameter(") >= nparams

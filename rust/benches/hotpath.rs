@@ -1,0 +1,151 @@
+//! Hot-path micro-benchmarks (criterion is unavailable offline; in-tree
+//! timing with warmup + median-of-N). These are the §Perf numbers for the
+//! L3 simulator: cell-cycle throughput, routing, graph construction.
+//!
+//!     cargo bench --bench hotpath
+
+use amcca::apps::driver;
+use amcca::arch::config::ChipConfig;
+use amcca::coordinator::report::Table;
+use amcca::graph::datasets::{Dataset, Scale};
+use amcca::noc::routing::trace;
+use amcca::noc::topology::{Geometry, Topology};
+use std::time::Instant;
+
+/// Median wall time of `n` runs of `f` (after one warmup).
+fn median_time<F: FnMut() -> u64>(n: usize, mut f: F) -> (std::time::Duration, u64) {
+    let mut times = Vec::with_capacity(n);
+    let mut units = 0u64;
+    f(); // warmup
+    for _ in 0..n {
+        let t0 = Instant::now();
+        units = f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    (times[times.len() / 2], units)
+}
+
+fn main() {
+    let mut t = Table::new(&["bench", "median", "throughput"]);
+
+    // --- end-to-end simulation throughput (the headline §Perf metric) ----
+    for (name, dim, ds) in [
+        ("bfs R18 16x16", 16u32, Dataset::R18),
+        ("bfs R18 64x64", 64, Dataset::R18),
+        ("bfs WK-Rh 64x64", 64, Dataset::WK),
+    ] {
+        let g = ds.build(Scale::Tiny);
+        let mut cfg = ChipConfig::torus(dim);
+        if name.contains("Rh") {
+            cfg.rpvo_max = 16;
+        }
+        // measure the simulation loop only (build excluded)
+        let mut samples = Vec::new();
+        for _ in 0..5 {
+            let mut chip =
+                amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
+            let built = amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+            chip.germinate(built.addr_of(0), amcca::noc::message::ActionKind::App, 0, 0);
+            let t0 = Instant::now();
+            chip.run().unwrap();
+            let el = t0.elapsed();
+            samples.push((chip.metrics.cycles as f64 / el.as_secs_f64() / 1e6, el));
+        }
+        samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let (mcps, dur) = samples[samples.len() / 2];
+        t.row(&[name.into(), format!("{dur:?}"), format!("{mcps:.2} Mcycles/s (sim loop only)")]);
+    }
+
+    // --- per-cycle engine step cost on an idle-ish chip -------------------
+    {
+        let g = Dataset::R18.build(Scale::Tiny);
+        let cfg = ChipConfig::torus(32);
+        let (dur, steps) = median_time(5, || {
+            let mut chip =
+                amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
+            let built = amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+            chip.germinate(built.addr_of(0), amcca::noc::message::ActionKind::App, 0, 0);
+            for _ in 0..2000 {
+                chip.step();
+            }
+            2000
+        });
+        t.row(&[
+            "engine step (32x32, live BFS)".into(),
+            format!("{dur:?} / 2000 steps"),
+            format!("{:.2} Msteps/s", steps as f64 / dur.as_secs_f64() / 1e6),
+        ]);
+    }
+
+    // --- routing ----------------------------------------------------------
+    {
+        let geo = Geometry::new(64, 64, Topology::TorusMesh);
+        let (dur, hops) = median_time(9, || {
+            let mut total = 0u64;
+            for src in (0..4096u32).step_by(17) {
+                for dst in (0..4096u32).step_by(29) {
+                    total += trace(&geo, src, dst, 4).len() as u64;
+                }
+            }
+            total
+        });
+        t.row(&[
+            "routing trace 64x64 torus".into(),
+            format!("{dur:?}"),
+            format!("{:.1} Mhops/s", hops as f64 / dur.as_secs_f64() / 1e6),
+        ]);
+    }
+
+    // --- graph construction ------------------------------------------------
+    {
+        let g = Dataset::R18.build(Scale::Tiny);
+        let cfg = ChipConfig::torus(32);
+        let (dur, edges) = median_time(5, || {
+            let mut chip =
+                amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
+            amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+            g.m() as u64
+        });
+        t.row(&[
+            "builder R18@Tiny onto 32x32".into(),
+            format!("{dur:?}"),
+            format!("{:.2} Medges/s", edges as f64 / dur.as_secs_f64() / 1e6),
+        ]);
+    }
+
+    // --- PJRT artifact execution (L1/L2 path) ------------------------------
+    if !amcca::runtime::artifacts::available_sizes(amcca::runtime::artifacts::Step::RelaxStep)
+        .is_empty()
+    {
+        let mut rt = amcca::runtime::pjrt::PjrtRuntime::cpu().unwrap();
+        let g = Dataset::R18.build(Scale::Tiny);
+        let (dur, _) = median_time(3, || {
+            driver_relax(&mut rt, &g);
+            1
+        });
+        t.row(&[
+            "XLA relax_step fixpoint (1024)".into(),
+            format!("{dur:?}"),
+            "-".into(),
+        ]);
+    }
+
+    // --- full app wall time (context for the sim loop numbers) ------------
+    {
+        let g = Dataset::R18.build(Scale::Tiny);
+        let cfg = ChipConfig::torus(16);
+        let (dur, _) = median_time(5, || {
+            let (chip, _) = driver::run_bfs(cfg.clone(), &g, 0).unwrap();
+            chip.metrics.cycles
+        });
+        t.row(&["bfs R18@Tiny 16x16 (build+run+extract)".into(), format!("{dur:?}"), "-".into()]);
+    }
+
+    print!("{}", t.render());
+    t.save_csv("hotpath.csv");
+}
+
+fn driver_relax(rt: &mut amcca::runtime::pjrt::PjrtRuntime, g: &amcca::graph::model::HostGraph) {
+    let _ = amcca::runtime::oracle::relax_fixpoint(rt, g, 0, true).unwrap();
+}

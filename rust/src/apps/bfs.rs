@@ -1,0 +1,141 @@
+//! Asynchronous BFS as a diffusive action (paper Listings 4, 6, 9).
+//!
+//! Fully asynchronous: no frontier, no supersteps. A `bfs-action(v, lvl)`
+//! activates when `lvl < v.level` (the predicate), writes the level, then
+//! diffuses `lvl + 1` along the out-edges — with the diffuse clause's own
+//! predicate `level == lvl` pruning stale diffusions when a better level
+//! lands first (monotonic relaxation). With rhizomes, the new level is
+//! also broadcast over the rhizome-links (Listing 9) so every member
+//! diffuses its own out-edge chunk.
+
+use crate::diffusive::action::{DiffuseSpec, Work};
+use crate::diffusive::handler::{Application, VertexMeta};
+use crate::noc::message::ActionMsg;
+
+pub const UNREACHED: u32 = u32::MAX;
+
+/// §6.1: BFS actions take 2–3 cycles of compute.
+const WORK_CYCLES: u32 = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BfsState {
+    pub level: u32,
+}
+
+pub struct Bfs;
+
+impl Bfs {
+    fn relax(&self, st: &mut BfsState, lvl: u32, meta: &VertexMeta, share: bool) -> Work {
+        if lvl >= st.level {
+            return Work::none(1);
+        }
+        st.level = lvl;
+        let mut spec = DiffuseSpec::edges(lvl, 0);
+        // Rhizome consistency (Listing 9): broadcast the improved level to
+        // siblings — unless this update itself arrived over a rhizome-link
+        // (the originator already informed every sibling).
+        if share && meta.rhizome_size > 1 {
+            spec = spec.with_rhizome(lvl, 0);
+        }
+        Work::one(WORK_CYCLES, spec)
+    }
+}
+
+impl Application for Bfs {
+    type State = BfsState;
+
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn init(&self, _meta: &VertexMeta) -> BfsState {
+        BfsState { level: UNREACHED }
+    }
+
+    /// Listing 9 line 4: `(predicate (> (vertex-level v) lvl) …)`.
+    fn predicate(&self, st: &BfsState, msg: &ActionMsg) -> bool {
+        msg.payload < st.level
+    }
+
+    fn work(&self, st: &mut BfsState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        self.relax(st, msg.payload, meta, true)
+    }
+
+    fn on_rhizome_share(&self, st: &mut BfsState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        self.relax(st, msg.payload, meta, false)
+    }
+
+    fn apply_relay(&self, st: &mut BfsState, payload: u32, _aux: u32) {
+        st.level = st.level.min(payload);
+    }
+
+    /// Listing 9 line 9: `(predicate (eq? (vertex-level v) lvl) …)`.
+    fn diffuse_live(&self, st: &BfsState, payload: u32, _aux: u32) -> bool {
+        st.level == payload
+    }
+
+    /// `inform-neighbors` sends `lvl + 1` (Listing 5).
+    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
+        (payload + 1, aux)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(rhizome: u32) -> VertexMeta {
+        VertexMeta { rhizome_size: rhizome, ..Default::default() }
+    }
+
+    #[test]
+    fn predicate_is_monotonic() {
+        let app = Bfs;
+        let st = BfsState { level: 5 };
+        assert!(app.predicate(&st, &ActionMsg::app(0, 4, 0)));
+        assert!(!app.predicate(&st, &ActionMsg::app(0, 5, 0)));
+        assert!(!app.predicate(&st, &ActionMsg::app(0, 6, 0)));
+    }
+
+    #[test]
+    fn work_sets_level_and_diffuses_lvl() {
+        let app = Bfs;
+        let mut st = app.init(&meta(1));
+        let w = app.work(&mut st, &ActionMsg::app(0, 3, 0), &meta(1));
+        assert_eq!(st.level, 3);
+        assert_eq!(w.diffuse.len(), 1);
+        assert_eq!(w.diffuse[0].payload, 3);
+        assert!(w.diffuse[0].rhizome.is_none(), "no rhizome traffic when size 1");
+        assert_eq!(app.edge_payload(3, 0, 9).0, 4, "neighbors get lvl+1, weight ignored");
+    }
+
+    #[test]
+    fn rhizome_broadcast_only_from_primary_update() {
+        let app = Bfs;
+        let mut st = app.init(&meta(4));
+        let w = app.work(&mut st, &ActionMsg::app(0, 2, 0), &meta(4));
+        assert_eq!(w.diffuse[0].rhizome, Some((2, 0)), "edge update informs siblings");
+        let mut st2 = app.init(&meta(4));
+        let w2 = app.on_rhizome_share(&mut st2, &ActionMsg::app(0, 2, 0), &meta(4));
+        assert!(w2.diffuse[0].rhizome.is_none(), "share must not re-broadcast");
+        assert!(w2.diffuse[0].edges, "but the sibling diffuses its own chunk");
+    }
+
+    #[test]
+    fn diffuse_live_prunes_stale_levels() {
+        let app = Bfs;
+        let st = BfsState { level: 2 };
+        assert!(app.diffuse_live(&st, 2, 0));
+        assert!(!app.diffuse_live(&st, 5, 0), "a better level arrived; prune");
+    }
+
+    #[test]
+    fn relay_keeps_min() {
+        let app = Bfs;
+        let mut st = BfsState { level: 3 };
+        app.apply_relay(&mut st, 7, 0);
+        assert_eq!(st.level, 3);
+        app.apply_relay(&mut st, 1, 0);
+        assert_eq!(st.level, 1);
+    }
+}

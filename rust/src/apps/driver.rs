@@ -1,0 +1,234 @@
+//! App drivers: build a graph onto a chip, germinate, run to termination,
+//! extract per-vertex results, and verify against the BSP references —
+//! the Listing-1 host program, shared by the CLI, examples, and benches.
+
+use crate::apps::bfs::{Bfs, UNREACHED};
+use crate::apps::pagerank::{PageRank, KICKOFF};
+use crate::apps::sssp::Sssp;
+use crate::arch::chip::Chip;
+use crate::arch::config::ChipConfig;
+use crate::baseline::bsp;
+use crate::graph::model::HostGraph;
+use crate::noc::message::ActionKind;
+use crate::rpvo::builder::{build, BuiltGraph};
+
+/// Rhizome consistency tolerance for f32 all-reduce ordering differences.
+const PR_TOL: f32 = 1e-4;
+
+/// Build + run BFS from `root`. Returns the chip (for metrics/contention)
+/// and the construction handle.
+pub fn run_bfs(
+    cfg: ChipConfig,
+    g: &HostGraph,
+    root: u32,
+) -> anyhow::Result<(Chip<Bfs>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, Bfs)?;
+    let built = build(&mut chip, g)?;
+    // Germinate bfs-action(root, 0) at the vertex's member-0 root
+    // (Listing 1); rhizome broadcast spreads it to the other members.
+    chip.germinate(built.addr_of(root), ActionKind::App, 0, 0);
+    chip.run()?;
+    Ok((chip, built))
+}
+
+/// Extract BFS levels (min over members; panics if members disagree — the
+/// rhizome consistency invariant).
+pub fn bfs_levels(chip: &Chip<Bfs>, built: &BuiltGraph) -> Vec<u32> {
+    let mut levels = vec![UNREACHED; built.n as usize];
+    for (vid, members) in built.roots.iter().enumerate() {
+        let vals: Vec<u32> = members.iter().map(|&a| chip.object(a).state.level).collect();
+        let min = *vals.iter().min().unwrap();
+        debug_assert!(
+            vals.iter().all(|&v| v == min),
+            "rhizome members of v{vid} disagree: {vals:?}"
+        );
+        levels[vid] = min;
+    }
+    levels
+}
+
+pub fn run_sssp(
+    cfg: ChipConfig,
+    g: &HostGraph,
+    root: u32,
+) -> anyhow::Result<(Chip<Sssp>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, Sssp)?;
+    let built = build(&mut chip, g)?;
+    chip.germinate(built.addr_of(root), ActionKind::App, 0, 0);
+    chip.run()?;
+    Ok((chip, built))
+}
+
+pub fn sssp_dists(chip: &Chip<Sssp>, built: &BuiltGraph) -> Vec<u32> {
+    let mut dists = vec![crate::apps::sssp::UNREACHED; built.n as usize];
+    for (vid, members) in built.roots.iter().enumerate() {
+        let vals: Vec<u32> = members.iter().map(|&a| chip.object(a).state.dist).collect();
+        let min = *vals.iter().min().unwrap();
+        debug_assert!(vals.iter().all(|&v| v == min), "rhizome disagreement at v{vid}: {vals:?}");
+        dists[vid] = min;
+    }
+    dists
+}
+
+pub fn run_pagerank(
+    cfg: ChipConfig,
+    g: &HostGraph,
+    iters: u32,
+) -> anyhow::Result<(Chip<PageRank>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, PageRank::new(iters))?;
+    let built = build(&mut chip, g)?;
+    // Kickoff every member of every vertex (accelerator-style program load).
+    for members in &built.roots {
+        for &addr in members {
+            chip.germinate(addr, ActionKind::App, 0, KICKOFF);
+        }
+    }
+    chip.run()?;
+    Ok((chip, built))
+}
+
+/// Extract scores (member 0; members must agree to PR_TOL after collapse).
+pub fn pagerank_scores(chip: &Chip<PageRank>, built: &BuiltGraph) -> Vec<f32> {
+    let mut scores = vec![0.0f32; built.n as usize];
+    for (vid, members) in built.roots.iter().enumerate() {
+        let vals: Vec<f32> = members.iter().map(|&a| chip.object(a).state.score).collect();
+        for &v in &vals {
+            debug_assert!(
+                (v - vals[0]).abs() <= PR_TOL * vals[0].abs().max(1e-3),
+                "rhizome members of v{vid} disagree: {vals:?}"
+            );
+        }
+        scores[vid] = vals[0];
+    }
+    scores
+}
+
+/// Build + run connected components (min-label diffusion; kickoff at every
+/// member, like PageRank).
+pub fn run_cc(
+    cfg: ChipConfig,
+    g: &HostGraph,
+) -> anyhow::Result<(Chip<crate::apps::cc::Cc>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, crate::apps::cc::Cc)?;
+    let built = build(&mut chip, g)?;
+    for members in &built.roots {
+        for &addr in members {
+            chip.germinate(addr, ActionKind::App, 0, crate::apps::cc::KICKOFF);
+        }
+    }
+    chip.run()?;
+    Ok((chip, built))
+}
+
+pub fn cc_labels(chip: &Chip<crate::apps::cc::Cc>, built: &BuiltGraph) -> Vec<u32> {
+    let mut labels = vec![u32::MAX; built.n as usize];
+    for (vid, members) in built.roots.iter().enumerate() {
+        let vals: Vec<u32> = members.iter().map(|&a| chip.object(a).state.label).collect();
+        let min = *vals.iter().min().unwrap();
+        debug_assert!(vals.iter().all(|&v| v == min), "rhizome disagreement at v{vid}: {vals:?}");
+        labels[vid] = min;
+    }
+    labels
+}
+
+// -------------------------------------------------------------- verify --
+
+/// Verify async BFS against the frontier reference. Returns mismatches.
+pub fn verify_bfs(g: &HostGraph, root: u32, got: &[u32]) -> usize {
+    let want = bsp::bfs_levels(g, root);
+    want.iter().zip(got).filter(|&(w, g)| w != g).count()
+}
+
+pub fn verify_sssp(g: &HostGraph, root: u32, got: &[u32]) -> usize {
+    let want = bsp::sssp_dists(g, root);
+    want.iter()
+        .zip(got)
+        .filter(|&(&w, &g)| {
+            let g = if g == crate::apps::sssp::UNREACHED { u64::MAX } else { g as u64 };
+            w != g
+        })
+        .count()
+}
+
+/// Verify async PageRank against the synchronous power iteration (f32
+/// summation-order tolerance). Returns (mismatches, max relative error).
+pub fn verify_pagerank(g: &HostGraph, iters: u32, got: &[f32]) -> (usize, f32) {
+    let want = bsp::pagerank(g, iters, 0.85);
+    let mut bad = 0;
+    let mut max_rel = 0.0f32;
+    for (w, g) in want.iter().zip(got) {
+        let rel = (w - g).abs() / w.abs().max(1e-9);
+        max_rel = max_rel.max(rel);
+        if rel > 1e-3 {
+            bad += 1;
+        }
+    }
+    (bad, max_rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::erdos;
+
+    fn small_cfg() -> ChipConfig {
+        let mut cfg = ChipConfig::torus(4);
+        cfg.seed = 1;
+        cfg
+    }
+
+    #[test]
+    fn bfs_on_er_matches_reference() {
+        let g = erdos::generate(128, 512, 3);
+        let (chip, built) = run_bfs(small_cfg(), &g, 0).unwrap();
+        let got = bfs_levels(&chip, &built);
+        assert_eq!(verify_bfs(&g, 0, &got), 0, "async BFS must equal frontier BFS");
+        assert!(chip.metrics.cycles > 0);
+    }
+
+    #[test]
+    fn sssp_on_er_matches_dijkstra() {
+        let mut g = erdos::generate(128, 512, 4);
+        g.randomize_weights(16, 9);
+        let (chip, built) = run_sssp(small_cfg(), &g, 5).unwrap();
+        let got = sssp_dists(&chip, &built);
+        assert_eq!(verify_sssp(&g, 5, &got), 0);
+    }
+
+    #[test]
+    fn pagerank_matches_power_iteration() {
+        let g = erdos::generate(96, 480, 5);
+        let (chip, built) = run_pagerank(small_cfg(), &g, 5).unwrap();
+        let got = pagerank_scores(&chip, &built);
+        let (bad, max_rel) = verify_pagerank(&g, 5, &got);
+        assert_eq!(bad, 0, "max_rel={max_rel}");
+    }
+
+    #[test]
+    fn bfs_with_rhizomes_still_correct() {
+        // Star-heavy graph forces rhizome members on the hub.
+        let mut edges: Vec<(u32, u32, u32)> = (1..100).map(|v| (v, 0, 1)).collect();
+        edges.extend((0..99).map(|v| (v, v + 1, 1)));
+        let g = crate::graph::model::HostGraph { n: 100, edges };
+        let mut cfg = small_cfg();
+        cfg.rpvo_max = 8;
+        let (chip, built) = run_bfs(cfg, &g, 3).unwrap();
+        assert!(built.rhizomatic_vertices >= 1, "hub must be rhizomatic");
+        let got = bfs_levels(&chip, &built);
+        assert_eq!(verify_bfs(&g, 3, &got), 0);
+    }
+
+    #[test]
+    fn pagerank_with_rhizomes_consistent_and_correct() {
+        let mut edges: Vec<(u32, u32, u32)> = (1..80).map(|v| (v, 0, 1)).collect();
+        edges.extend((0..79).map(|v| (v, v + 1, 1)));
+        let g = crate::graph::model::HostGraph { n: 80, edges };
+        let mut cfg = small_cfg();
+        cfg.rpvo_max = 4;
+        let (chip, built) = run_pagerank(cfg, &g, 4).unwrap();
+        assert!(built.rhizomatic_vertices >= 1);
+        let got = pagerank_scores(&chip, &built);
+        let (bad, max_rel) = verify_pagerank(&g, 4, &got);
+        assert_eq!(bad, 0, "max_rel={max_rel}");
+    }
+}

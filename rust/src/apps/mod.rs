@@ -1,0 +1,8 @@
+//! Diffusive vertex-centric applications (§5, §6.1): asynchronous BFS,
+//! SSSP, and PageRank written as actions, plus the shared host drivers.
+
+pub mod bfs;
+pub mod cc;
+pub mod driver;
+pub mod pagerank;
+pub mod sssp;

@@ -1,0 +1,349 @@
+//! Asynchronous PageRank as a diffusive action (paper Listing 10, Fig. 3).
+//!
+//! Iteration `i` of a vertex: every in-neighbour's member diffuses its
+//! score share `score_i / out_degree` tagged with `aux = i`; the vertex
+//! accumulates until it has seen `in_degree_share` messages, then performs
+//! `rhizome-collapse (+ partial)` — an all-reduce over the rhizome-links
+//! into an AND-gate LCO of width `rhizome_size` (own partial + every
+//! sibling's). When the gate fills, the trigger-action runs locally:
+//! `score = (1-d)/|V| + d * total`, the gate resets, and iteration `i+1`
+//! diffuses. The computation is fully asynchronous: different vertices
+//! (and different rhizome members) may be several iterations apart, so
+//! early messages are buffered per future iteration.
+//!
+//! Semantically this matches the synchronous power iteration
+//! (`baseline::bsp::pagerank` and the AOT-XLA `pagerank_step` artifact)
+//! up to f32 summation order — which is exactly how it is verified.
+
+use std::collections::VecDeque;
+
+use crate::diffusive::action::{DiffuseSpec, Work};
+use crate::diffusive::handler::{Application, VertexMeta};
+use crate::noc::message::ActionMsg;
+
+/// `aux` sentinel for the host kickoff action (germinated per member).
+pub const KICKOFF: u32 = u32::MAX;
+
+/// §6.1: PageRank actions take 3–70 cycles. Accumulation is cheap; the
+/// collapse trigger (FPU divide + scale) costs more.
+const ACC_CYCLES: u32 = 3;
+const COLLAPSE_CYCLES: u32 = 10;
+
+/// Buffered contributions for an iteration the member hasn't reached yet.
+#[derive(Clone, Copy, Debug, Default)]
+struct Pend {
+    acc: f32,
+    seen: u32,
+    gate_acc: f32,
+    gate_seen: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct PrState {
+    /// Score as of the last completed iteration.
+    pub score: f32,
+    /// Iteration currently accumulating.
+    pub iter: u32,
+    /// In-edge accumulation for `iter` (Listing 10 `msg-count` + sum).
+    acc: f32,
+    seen: u32,
+    /// AND-gate LCO (Fig. 3), inlined: contributions for `iter`.
+    gate_acc: f32,
+    gate_seen: u32,
+    own_sent: bool,
+    /// Early contributions for iterations > `iter`.
+    pending: VecDeque<Pend>,
+    pub done: bool,
+}
+
+pub struct PageRank {
+    pub iters: u32,
+    pub damping: f32,
+}
+
+impl PageRank {
+    pub fn new(iters: u32) -> Self {
+        PageRank { iters, damping: 0.85 }
+    }
+
+    /// Completion cascade: fire the own-partial share and/or the collapse
+    /// trigger as many times as the buffered state allows.
+    fn cascade(&self, st: &mut PrState, meta: &VertexMeta, out: &mut Work) {
+        loop {
+            if st.done {
+                return;
+            }
+            // Local share complete -> contribute own partial to the gate
+            // (and share it over the rhizome-links).
+            if !st.own_sent && st.seen >= meta.in_degree_share {
+                st.own_sent = true;
+                let partial = st.acc;
+                st.gate_acc += partial;
+                st.gate_seen += 1;
+                if meta.rhizome_size > 1 {
+                    out.diffuse.push(DiffuseSpec::rhizome_only(partial.to_bits(), st.iter));
+                }
+            }
+            // AND gate full -> trigger-action: fold in teleport + damping,
+            // advance the iteration, diffuse the new score share.
+            if st.own_sent && st.gate_seen >= meta.rhizome_size {
+                let teleport = (1.0 - self.damping) / meta.total_vertices as f32;
+                st.score = teleport + self.damping * st.gate_acc;
+                st.iter += 1;
+                let p = st.pending.pop_front().unwrap_or_default();
+                st.acc = p.acc;
+                st.seen = p.seen;
+                st.gate_acc = p.gate_acc;
+                st.gate_seen = p.gate_seen;
+                st.own_sent = false;
+                out.cycles += COLLAPSE_CYCLES;
+                if st.iter < self.iters {
+                    out.diffuse.push(self.share_spec(st, meta));
+                } else {
+                    st.done = true;
+                }
+                continue;
+            }
+            return;
+        }
+    }
+
+    /// Out-edge diffusion of the current score share for `st.iter`.
+    fn share_spec(&self, st: &PrState, meta: &VertexMeta) -> DiffuseSpec {
+        let share =
+            if meta.out_degree > 0 { st.score / meta.out_degree as f32 } else { 0.0 };
+        DiffuseSpec::edges(share.to_bits(), st.iter)
+    }
+
+    fn pend_slot<'a>(st: &'a mut PrState, offset: u32) -> &'a mut Pend {
+        let idx = offset as usize - 1;
+        while st.pending.len() <= idx {
+            st.pending.push_back(Pend::default());
+        }
+        &mut st.pending[idx]
+    }
+}
+
+impl Application for PageRank {
+    type State = PrState;
+
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn init(&self, meta: &VertexMeta) -> PrState {
+        PrState {
+            score: 1.0 / meta.total_vertices.max(1) as f32,
+            iter: 0,
+            acc: 0.0,
+            seen: 0,
+            gate_acc: 0.0,
+            gate_seen: 0,
+            own_sent: false,
+            pending: VecDeque::new(),
+            done: false,
+        }
+    }
+
+    /// Listing 10: `(predicate (#t) …)` — PageRank actions always run.
+    fn predicate(&self, _st: &PrState, _msg: &ActionMsg) -> bool {
+        true
+    }
+
+    fn work(&self, st: &mut PrState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        let mut out = Work::none(ACC_CYCLES);
+        if msg.aux == KICKOFF {
+            // Host kickoff: diffuse iteration 0's share, then the cascade
+            // handles members whose in-degree share is empty.
+            out.diffuse.push(self.share_spec(st, meta));
+            self.cascade(st, meta, &mut out);
+            return out;
+        }
+        if st.done {
+            return out;
+        }
+        let i = msg.aux;
+        if i < st.iter {
+            debug_assert!(false, "score share for a completed iteration {i} < {}", st.iter);
+            return out;
+        }
+        if i == st.iter {
+            st.acc += msg.payload_f32();
+            st.seen += 1;
+        } else {
+            let p = Self::pend_slot(st, i - st.iter);
+            p.acc += msg.payload_f32();
+            p.seen += 1;
+        }
+        self.cascade(st, meta, &mut out);
+        out
+    }
+
+    /// A sibling's partial arrives over the rhizome-link into the AND gate.
+    fn on_rhizome_share(&self, st: &mut PrState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        let mut out = Work::none(ACC_CYCLES);
+        if st.done {
+            return out;
+        }
+        let i = msg.aux;
+        if i < st.iter {
+            debug_assert!(false, "partial for a completed iteration");
+            return out;
+        }
+        if i == st.iter {
+            st.gate_acc += msg.payload_f32();
+            st.gate_seen += 1;
+        } else {
+            let p = Self::pend_slot(st, i - st.iter);
+            p.gate_acc += msg.payload_f32();
+            p.gate_seen += 1;
+        }
+        self.cascade(st, meta, &mut out);
+        out
+    }
+
+    /// Ghosts just pass score shares through; nothing to snapshot.
+    fn apply_relay(&self, _st: &mut PrState, _payload: u32, _aux: u32) {}
+
+    /// Listing 10: the diffuse predicate is `#t` — score shares are never
+    /// stale (each iteration's share must be delivered exactly once).
+    fn diffuse_live(&self, _st: &PrState, _payload: u32, _aux: u32) -> bool {
+        true
+    }
+
+    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
+        (payload, aux)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(in_share: u32, out_deg: u32, rhizome: u32, n: u32) -> VertexMeta {
+        VertexMeta {
+            vid: 0,
+            out_degree: out_deg,
+            in_degree_share: in_share,
+            rhizome_size: rhizome,
+            total_vertices: n,
+        }
+    }
+
+    fn share_msg(score: f32, iter: u32) -> ActionMsg {
+        ActionMsg::app(0, score.to_bits(), iter)
+    }
+
+    #[test]
+    fn kickoff_diffuses_initial_share() {
+        let app = PageRank::new(3);
+        let m = meta(2, 4, 1, 100);
+        let mut st = app.init(&m);
+        let w = app.work(&mut st, &ActionMsg::app(0, 0, KICKOFF), &m);
+        assert_eq!(w.diffuse.len(), 1);
+        let share = f32::from_bits(w.diffuse[0].payload);
+        assert!((share - (1.0 / 100.0) / 4.0).abs() < 1e-9);
+        assert_eq!(w.diffuse[0].aux, 0);
+        assert!(!st.done);
+    }
+
+    #[test]
+    fn iteration_completes_at_in_degree() {
+        let app = PageRank::new(2);
+        let m = meta(2, 1, 1, 10);
+        let mut st = app.init(&m);
+        let _ = app.work(&mut st, &ActionMsg::app(0, 0, KICKOFF), &m);
+        let w1 = app.work(&mut st, &share_msg(0.05, 0), &m);
+        assert!(w1.diffuse.is_empty(), "one of two messages: keep waiting");
+        let w2 = app.work(&mut st, &share_msg(0.03, 0), &m);
+        // gate width 1: collapse fires immediately -> iteration 1 diffusion
+        assert_eq!(st.iter, 1);
+        let expected = (1.0 - 0.85) / 10.0 + 0.85 * 0.08;
+        assert!((st.score - expected).abs() < 1e-6, "score={}", st.score);
+        assert_eq!(w2.diffuse.len(), 1);
+        assert_eq!(w2.diffuse[0].aux, 1);
+    }
+
+    #[test]
+    fn zero_in_degree_runs_all_iterations_solo() {
+        // A source vertex with no in-edges and no rhizome completes every
+        // iteration at kickoff (score decays to the teleport fixpoint).
+        let app = PageRank::new(3);
+        let m = meta(0, 2, 1, 10);
+        let mut st = app.init(&m);
+        let w = app.work(&mut st, &ActionMsg::app(0, 0, KICKOFF), &m);
+        assert!(st.done);
+        assert_eq!(st.iter, 3);
+        // kickoff share + one per completed iteration except the last
+        assert_eq!(w.diffuse.len(), 3);
+        // with no in-edges, every collapse folds acc = 0: score -> teleport
+        let teleport = 0.15 / 10.0;
+        assert!((st.score - teleport).abs() < 1e-6, "score={}", st.score);
+    }
+
+    #[test]
+    fn early_messages_buffer_into_pending() {
+        let app = PageRank::new(3);
+        let m = meta(1, 1, 1, 10);
+        let mut st = app.init(&m);
+        let _ = app.work(&mut st, &ActionMsg::app(0, 0, KICKOFF), &m);
+        // iteration-1 share arrives before iteration 0 finished
+        let w = app.work(&mut st, &share_msg(0.2, 1), &m);
+        assert!(w.diffuse.is_empty());
+        assert_eq!(st.iter, 0, "must not skip ahead");
+        // iteration 0 completes; the buffered iteration-1 message then
+        // completes iteration 1 in the same cascade (in-degree share is 1)
+        let w = app.work(&mut st, &share_msg(0.1, 0), &m);
+        assert_eq!(st.iter, 2);
+        let auxes: Vec<u32> = w.diffuse.iter().map(|d| d.aux).collect();
+        assert_eq!(auxes, vec![1, 2], "cascade diffused iterations 1 and 2");
+        let s1 = 0.15 / 10.0 + 0.85 * 0.1;
+        let s2 = 0.15 / 10.0 + 0.85 * 0.2;
+        assert!((st.score - s2).abs() < 1e-6, "score={} expected {s2} (after {s1})", st.score);
+    }
+
+    #[test]
+    fn rhizome_members_collapse_via_gate() {
+        let app = PageRank::new(1);
+        let m0 = meta(1, 2, 2, 10); // member 0: one in-edge
+        let m1 = meta(0, 2, 2, 10); // member 1: no in-edges
+        let mut s0 = app.init(&m0);
+        let mut s1 = app.init(&m1);
+        // kickoff member 1: it immediately sends its (empty) partial
+        let w1 = app.work(&mut s1, &ActionMsg::app(0, 0, KICKOFF), &m1);
+        let shares: Vec<_> = w1.diffuse.iter().filter(|d| d.rhizome.is_some()).collect();
+        assert_eq!(shares.len(), 1, "member 1 shares partial 0.0");
+        assert!(!s1.done, "gate still waits for member 0's partial");
+        // member 0 receives its in-edge share -> sends partial
+        let _ = app.work(&mut s0, &ActionMsg::app(0, 0, KICKOFF), &m0);
+        let w0 = app.work(&mut s0, &share_msg(0.4, 0), &m0);
+        let p0 = w0.diffuse.iter().find(|d| d.rhizome.is_some()).unwrap();
+        let (bits, it) = p0.rhizome.unwrap();
+        assert_eq!(it, 0);
+        // exchange partials
+        let _ = app.on_rhizome_share(
+            &mut s0,
+            &ActionMsg {
+                kind: crate::noc::message::ActionKind::RhizomeShare,
+                target: 0,
+                payload: shares[0].rhizome.unwrap().0,
+                aux: 0,
+            },
+            &m0,
+        );
+        let _ = app.on_rhizome_share(
+            &mut s1,
+            &ActionMsg {
+                kind: crate::noc::message::ActionKind::RhizomeShare,
+                target: 0,
+                payload: bits,
+                aux: 0,
+            },
+            &m1,
+        );
+        assert!(s0.done && s1.done);
+        let expected = 0.15 / 10.0 + 0.85 * 0.4;
+        assert!((s0.score - expected).abs() < 1e-6);
+        assert!((s0.score - s1.score).abs() < 1e-6, "members agree after collapse");
+    }
+}

@@ -1,0 +1,117 @@
+//! Asynchronous SSSP as a diffusive action (§6.1): the weighted analogue
+//! of the BFS action. `sssp-action(v, dist)` activates when `dist <
+//! v.dist`, writes it, and diffuses `dist + w(e)` along each out-edge.
+//! Like BFS it relaxes monotonically, so stale diffusions prune.
+
+use crate::diffusive::action::{DiffuseSpec, Work};
+use crate::diffusive::handler::{Application, VertexMeta};
+use crate::noc::message::ActionMsg;
+
+pub const UNREACHED: u32 = u32::MAX;
+
+/// §6.1: SSSP actions take 2–3 cycles of compute (compare + store + add).
+const WORK_CYCLES: u32 = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SsspState {
+    pub dist: u32,
+}
+
+pub struct Sssp;
+
+impl Sssp {
+    fn relax(&self, st: &mut SsspState, dist: u32, meta: &VertexMeta, share: bool) -> Work {
+        if dist >= st.dist {
+            return Work::none(1);
+        }
+        st.dist = dist;
+        let mut spec = DiffuseSpec::edges(dist, 0);
+        if share && meta.rhizome_size > 1 {
+            spec = spec.with_rhizome(dist, 0);
+        }
+        Work::one(WORK_CYCLES, spec)
+    }
+}
+
+impl Application for Sssp {
+    type State = SsspState;
+
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn init(&self, _meta: &VertexMeta) -> SsspState {
+        SsspState { dist: UNREACHED }
+    }
+
+    fn predicate(&self, st: &SsspState, msg: &ActionMsg) -> bool {
+        msg.payload < st.dist
+    }
+
+    fn work(&self, st: &mut SsspState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        self.relax(st, msg.payload, meta, true)
+    }
+
+    fn on_rhizome_share(&self, st: &mut SsspState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        self.relax(st, msg.payload, meta, false)
+    }
+
+    fn apply_relay(&self, st: &mut SsspState, payload: u32, _aux: u32) {
+        st.dist = st.dist.min(payload);
+    }
+
+    fn diffuse_live(&self, st: &SsspState, payload: u32, _aux: u32) -> bool {
+        st.dist == payload
+    }
+
+    /// Relaxation over the (min, +) semiring: neighbour gets dist + w(e).
+    fn edge_payload(&self, payload: u32, aux: u32, weight: u32) -> (u32, u32) {
+        (payload.saturating_add(weight), aux)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_add_along_edges() {
+        let app = Sssp;
+        assert_eq!(app.edge_payload(10, 0, 7).0, 17);
+        assert_eq!(app.edge_payload(UNREACHED - 1, 0, 7).0, UNREACHED, "saturates");
+    }
+
+    #[test]
+    fn relaxation_is_monotonic() {
+        let app = Sssp;
+        let meta = VertexMeta::default();
+        let mut st = app.init(&meta);
+        let w = app.work(&mut st, &ActionMsg::app(0, 40, 0), &meta);
+        assert_eq!(st.dist, 40);
+        assert_eq!(w.diffuse.len(), 1);
+        let w2 = app.work(&mut st, &ActionMsg::app(0, 50, 0), &meta);
+        assert_eq!(st.dist, 40, "worse distance rejected");
+        assert!(w2.diffuse.is_empty());
+        let w3 = app.work(&mut st, &ActionMsg::app(0, 15, 0), &meta);
+        assert_eq!(st.dist, 15);
+        assert_eq!(w3.diffuse[0].payload, 15);
+    }
+
+    #[test]
+    fn diffuse_prunes_when_improved() {
+        let app = Sssp;
+        let st = SsspState { dist: 10 };
+        assert!(app.diffuse_live(&st, 10, 0));
+        assert!(!app.diffuse_live(&st, 40, 0));
+    }
+
+    #[test]
+    fn rhizome_share_updates_without_rebroadcast() {
+        let app = Sssp;
+        let meta = VertexMeta { rhizome_size: 3, ..Default::default() };
+        let mut st = app.init(&meta);
+        let w = app.on_rhizome_share(&mut st, &ActionMsg::app(0, 8, 0), &meta);
+        assert_eq!(st.dist, 8);
+        assert!(w.diffuse[0].rhizome.is_none());
+    }
+}

@@ -1,0 +1,78 @@
+//! PGAS addressing for the AM-CCA chip.
+//!
+//! Every vertex object (root RPVO, ghost, or rhizome sibling) lives in the
+//! object arena of exactly one Compute Cell. A global address is the pair
+//! `(cc, slot)`: the owning cell id and the slot index in that cell's arena.
+//! Addresses are plain 64-bit values so they pack into message flits.
+
+/// Compute-cell id: row-major index into the chip grid.
+pub type CellId = u32;
+
+/// Slot index into a cell's object arena.
+pub type Slot = u32;
+
+/// A global (PGAS) address of a vertex object on the chip.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Address {
+    pub cc: CellId,
+    pub slot: Slot,
+}
+
+impl Address {
+    pub const NULL: Address = Address { cc: u32::MAX, slot: u32::MAX };
+
+    #[inline]
+    pub fn new(cc: CellId, slot: Slot) -> Self {
+        Address { cc, slot }
+    }
+
+    #[inline]
+    pub fn is_null(&self) -> bool {
+        self.cc == u32::MAX
+    }
+
+    /// Pack into a single u64 (for flit payloads / compact edge lists).
+    #[inline]
+    pub fn pack(&self) -> u64 {
+        ((self.cc as u64) << 32) | self.slot as u64
+    }
+
+    #[inline]
+    pub fn unpack(bits: u64) -> Self {
+        Address { cc: (bits >> 32) as u32, slot: bits as u32 }
+    }
+}
+
+impl std::fmt::Display for Address {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_null() {
+            write!(f, "@null")
+        } else {
+            write!(f, "@{}:{}", self.cc, self.slot)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrip() {
+        let a = Address::new(16383, 123_456);
+        assert_eq!(Address::unpack(a.pack()), a);
+    }
+
+    #[test]
+    fn null_is_null() {
+        assert!(Address::NULL.is_null());
+        assert!(!Address::new(0, 0).is_null());
+        assert_eq!(Address::unpack(Address::NULL.pack()), Address::NULL);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Address::new(3, 7).to_string(), "@3:7");
+        assert_eq!(Address::NULL.to_string(), "@null");
+    }
+}

@@ -1,0 +1,127 @@
+//! One Compute Cell: router input units, action + diffuse queues, object
+//! arena, throttle state (§2, Fig. 1).
+
+use std::collections::VecDeque;
+
+use crate::arch::addr::Slot;
+use crate::diffusive::action::Diffusion;
+use crate::diffusive::throttle::Throttle;
+use crate::noc::channel::InputUnit;
+use crate::noc::message::{ActionMsg, NUM_PORTS};
+use crate::rpvo::object::Object;
+
+/// A compute cell parameterized by the application's per-vertex state.
+#[derive(Clone, Debug)]
+pub struct Cell<S> {
+    /// Router input units indexed by [`crate::noc::message::Port`]
+    /// (N/E/S/W + Local injection).
+    pub inputs: [InputUnit; NUM_PORTS],
+    /// Delivered actions awaiting execution. SRAM-backed and unbounded in
+    /// the simulator; the high-water mark is reported for sizing.
+    pub action_q: VecDeque<ActionMsg>,
+    /// Lazily-evaluated diffuse closures (Listing 6).
+    pub diffuse_q: VecDeque<Diffusion>,
+    /// Object arena: vertex objects owned by this cell.
+    pub objects: Vec<Object<S>>,
+    /// SRAM words used by the arena (capacity enforcement at build time).
+    pub mem_words: usize,
+    /// Cell busy executing work until this cycle (exclusive).
+    pub busy_until: u64,
+    /// Diffusion-throttle state (§6.2).
+    pub throttle: Throttle,
+    /// Congestion flag exported to neighbours (computed last cycle).
+    pub congested: bool,
+    /// Round-robin arbitration cursor for output-port allocation.
+    pub arb: u8,
+    /// Epoch marker for the active-list (see `Chip`).
+    pub active_epoch: u64,
+    /// Stall cycles per output channel N/E/S/W (Fig. 9).
+    pub contention: [u64; 4],
+}
+
+impl<S> Cell<S> {
+    pub fn new(num_vcs: u8, vc_buffer: usize) -> Self {
+        Cell {
+            inputs: std::array::from_fn(|_| InputUnit::new(num_vcs, vc_buffer)),
+            action_q: VecDeque::new(),
+            diffuse_q: VecDeque::new(),
+            objects: Vec::new(),
+            mem_words: 0,
+            busy_until: 0,
+            throttle: Throttle::default(),
+            congested: false,
+            arb: 0,
+            active_epoch: 0,
+            contention: [0; 4],
+        }
+    }
+
+    /// Any flits buffered in this cell's router?
+    pub fn has_flits(&self) -> bool {
+        self.inputs.iter().any(|u| !u.is_empty())
+    }
+
+    /// Anything at all pending (flits, actions, diffusions, or busy work)?
+    pub fn pending(&self, now: u64) -> bool {
+        self.busy_until > now
+            || !self.action_q.is_empty()
+            || !self.diffuse_q.is_empty()
+            || self.has_flits()
+    }
+
+    /// Install an object, returning its slot.
+    pub fn alloc_object(&mut self, obj: Object<S>) -> Slot {
+        self.mem_words += obj.words();
+        self.objects.push(obj);
+        (self.objects.len() - 1) as Slot
+    }
+
+    /// Total router buffer occupancy (heat-map frames).
+    pub fn occupancy(&self) -> usize {
+        self.inputs.iter().map(|u| u.occupancy()).sum()
+    }
+
+    /// Recompute the congestion flag (any VC buffer full).
+    pub fn compute_congested(&self) -> bool {
+        self.inputs.iter().any(|u| u.any_full())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::message::{ActionMsg, Flit, Port};
+    use crate::rpvo::object::Object;
+
+    #[test]
+    fn fresh_cell_is_idle() {
+        let c: Cell<u32> = Cell::new(2, 4);
+        assert!(!c.pending(0));
+        assert!(!c.has_flits());
+        assert_eq!(c.occupancy(), 0);
+        assert!(!c.compute_congested());
+    }
+
+    #[test]
+    fn pending_reflects_each_source() {
+        let mut c: Cell<u32> = Cell::new(2, 4);
+        c.busy_until = 5;
+        assert!(c.pending(0));
+        assert!(!c.pending(5));
+        c.action_q.push_back(ActionMsg::app(0, 0, 0));
+        assert!(c.pending(5));
+        c.action_q.clear();
+        let f = Flit { dst: 0, src: 0, vc: 0, next_port: crate::noc::message::DELIVER, next_vc: 0, hops: 0, moved_at: 0, action: ActionMsg::app(0, 0, 0) };
+        c.inputs[Port::North.index()].try_push(0, f);
+        assert!(c.pending(5));
+    }
+
+    #[test]
+    fn alloc_assigns_sequential_slots_and_tracks_words() {
+        let mut c: Cell<u32> = Cell::new(2, 4);
+        let s0 = c.alloc_object(Object::new_root(0, 0, 0));
+        let s1 = c.alloc_object(Object::new_root(1, 0, 0));
+        assert_eq!((s0, s1), (0, 1));
+        assert!(c.mem_words >= 8);
+    }
+}

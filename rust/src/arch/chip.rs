@@ -1,0 +1,899 @@
+//! The AM-CCA chip engine: cycle-level simulation of the NoC + compute
+//! cells executing a diffusive application (§6.1 methodology).
+//!
+//! Per simulated cycle:
+//!   1. **NoC phase** — each router forwards at most one flit per output
+//!      link (and pops at most one flit per input port), one hop per cycle;
+//!      blocked flits charge per-channel contention (Fig. 9).
+//!   2. **CC phase** — each free cell performs ONE operation: execute an
+//!      action (predicate resolution + work) or progress one diffusion
+//!      (stage one `propagate`). Blocked diffusions are overlapped with
+//!      action execution or spent on pruning filter passes (§6.2).
+//!   3. **Termination** — a hardware-style idle tree reports quiescence
+//!      (§4, TDP).
+//!
+//! The engine is event-driven for speed: only *active* cells (those with
+//! buffered flits, queued work, or busy timers) are visited each cycle.
+
+use crate::arch::addr::{Address, CellId};
+use crate::arch::cell::Cell;
+use crate::arch::config::ChipConfig;
+use crate::diffusive::action::Diffusion;
+use crate::diffusive::handler::Application;
+use crate::diffusive::terminator::Terminator;
+use crate::noc::message::{ActionKind, ActionMsg, Flit, Port, CARDINALS};
+use crate::noc::routing::route;
+use crate::noc::topology::Geometry;
+use crate::stats::heatmap::{Frame, Heatmap};
+use crate::stats::histogram::ChannelContention;
+use crate::stats::metrics::Metrics;
+
+/// How many queued diffusions (behind the head) a blocked cell inspects per
+/// filter pass (§6.2 "filter passes on action queue and diffuse queue").
+const FILTER_SCAN: usize = 4;
+
+pub struct Chip<A: Application> {
+    pub cfg: ChipConfig,
+    pub geo: Geometry,
+    pub app: A,
+    pub cells: Vec<Cell<A::State>>,
+    pub now: u64,
+    pub metrics: Metrics,
+    pub heatmap: Heatmap,
+    /// Cells to visit this cycle.
+    active: Vec<CellId>,
+    /// Cells already marked for the *next* cycle.
+    next_active: Vec<CellId>,
+    terminator: Terminator,
+    throttle_period: u64,
+    /// Per-cell flag: head diffusion observed blocked (for Fig. 6 overlap).
+    diff_blocked: Vec<bool>,
+}
+
+impl<A: Application> Chip<A> {
+    pub fn new(cfg: ChipConfig, app: A) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let n = cfg.num_cells();
+        let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
+        let cells = (0..n).map(|_| Cell::new(cfg.num_vcs, cfg.vc_buffer)).collect();
+        Ok(Chip {
+            geo,
+            app,
+            cells,
+            now: 0,
+            metrics: Metrics::default(),
+            heatmap: Heatmap::default(),
+            active: Vec::with_capacity(n as usize),
+            next_active: Vec::with_capacity(n as usize),
+            terminator: Terminator::new(n),
+            throttle_period: cfg.throttle_period(),
+            diff_blocked: vec![false; n as usize],
+            cfg,
+        })
+    }
+
+    /// Mark a cell for processing next cycle (dedup via epoch stamps).
+    #[inline]
+    fn mark(next_active: &mut Vec<CellId>, cell: &mut Cell<A::State>, id: CellId, epoch: u64) {
+        if cell.active_epoch != epoch {
+            cell.active_epoch = epoch;
+            next_active.push(id);
+        }
+    }
+
+    #[inline]
+    fn mark_id(&mut self, id: CellId) {
+        let epoch = self.now + 1;
+        Self::mark(&mut self.next_active, &mut self.cells[id as usize], id, epoch);
+    }
+
+    /// Inject an action at the cell owning `addr` (host `germinate`,
+    /// Listing 1). Free at cycle 0; models the accelerator-style kickoff.
+    pub fn germinate(&mut self, addr: Address, kind: ActionKind, payload: u32, aux: u32) {
+        let msg = ActionMsg { kind, target: addr.slot, payload, aux };
+        self.cells[addr.cc as usize].action_q.push_back(msg);
+        self.mark_id(addr.cc);
+    }
+
+    /// Run until the termination detector reports, or `max_cycles`.
+    pub fn run(&mut self) -> anyhow::Result<&Metrics> {
+        loop {
+            if let Some(done_at) = self.terminator.observe(
+                self.now,
+                0,
+                self.next_active.len() as u64,
+            ) {
+                self.metrics.cycles = done_at;
+                return Ok(&self.metrics);
+            }
+            anyhow::ensure!(
+                self.now < self.cfg.max_cycles,
+                "exceeded max_cycles={} (livelock or undersized budget)",
+                self.cfg.max_cycles
+            );
+            self.step();
+        }
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) {
+        self.now += 1;
+        std::mem::swap(&mut self.active, &mut self.next_active);
+        self.next_active.clear();
+        // Visit order rotates with the cycle so no cell gets permanent
+        // arbitration priority chipwide.
+        if self.now & 1 == 0 {
+            self.active.reverse();
+        }
+        let active = std::mem::take(&mut self.active);
+        for &c in &active {
+            self.route_cell(c);
+        }
+        for &c in &active {
+            self.compute_cell(c);
+        }
+        // Refresh congestion flags for cells that were touched.
+        for &c in &active {
+            let cell = &mut self.cells[c as usize];
+            cell.congested = cell.compute_congested();
+        }
+        self.active = active;
+        if self.cfg.heatmap_every > 0 && self.now % self.cfg.heatmap_every == 0 {
+            self.sample_frame();
+        }
+    }
+
+    // ------------------------------------------------------------ NoC --
+
+    fn route_cell(&mut self, c: CellId) {
+        let now = self.now;
+        let epoch = now + 1;
+        // Fast path: compute-only cells have an empty router.
+        if !self.cells[c as usize].has_flits() {
+            return;
+        }
+        let num_vcs = self.cfg.num_vcs;
+        let mut popped_ports: u8 = 0; // one pop per input port per cycle
+        // Deliveries: head flits addressed to this cell drain into the
+        // action queue (one per input port per cycle).
+        for p in 0..crate::noc::message::NUM_PORTS {
+            let cell = &mut self.cells[c as usize];
+            let unit = &mut cell.inputs[p];
+            let mut mask = unit.live_mask();
+            while mask != 0 {
+                let vc = mask.trailing_zeros() as u8;
+                mask &= mask - 1;
+                let deliverable = matches!(unit.head(vc),
+                    Some(f) if f.next_port == crate::noc::message::DELIVER && f.moved_at < now);
+                if deliverable {
+                    let f = unit.pop(vc).unwrap();
+                    cell.action_q.push_back(f.action);
+                    self.metrics.action_q_hwm =
+                        self.metrics.action_q_hwm.max(cell.action_q.len() as u64);
+                    popped_ports |= 1 << p;
+                    Self::mark(&mut self.next_active, cell, c, epoch);
+                    break;
+                }
+            }
+        }
+        // Forwarding: one flit per output direction, one pop per input
+        // port, rotating round-robin priority. A single pass over the
+        // lanes computes each head's route exactly once (the candidate
+        // first in rotation order wins its output — same arbitration as a
+        // per-direction rescan, ~5x cheaper).
+        let arb = self.cells[c as usize].arb;
+        let lanes = (crate::noc::message::NUM_PORTS as u8 * num_vcs) as usize;
+        let mut served_dirs: u8 = 0;
+        let mut blocked_dirs: u8 = 0;
+        let start = (arb as usize) % lanes;
+        let (mut p, mut vc) = (start / num_vcs as usize, (start % num_vcs as usize) as u8);
+        for _ in 0..lanes {
+            let (cur_p, cur_vc) = (p, vc);
+            // incremental lane decomposition (a div here dominates the
+            // router profile otherwise)
+            vc += 1;
+            if vc == num_vcs {
+                vc = 0;
+                p += 1;
+                if p == crate::noc::message::NUM_PORTS {
+                    p = 0;
+                }
+            }
+            let (p, vc) = (cur_p, cur_vc);
+            if popped_ports & (1 << p) != 0 {
+                continue;
+            }
+            if self.cells[c as usize].inputs[p].live_mask() & (1 << vc) == 0 {
+                continue; // empty VC: skip without touching the deque
+            }
+            let head = match self.cells[c as usize].inputs[p].head(vc) {
+                Some(f)
+                    if f.moved_at < now && f.next_port != crate::noc::message::DELIVER =>
+                {
+                    *f
+                }
+                _ => continue,
+            };
+            // The hop was cached when the flit entered this cell's buffer.
+            let d = head.next_port as usize;
+            if served_dirs & (1 << d) != 0 {
+                continue; // output link already used this cycle
+            }
+            let port = Port::from_index(d);
+            let out_vc = head.next_vc;
+            let n = self.geo.neighbor(c, port).expect("minimal route exits the chip");
+            let in_port = port.opposite().index();
+            if self.cells[n as usize].inputs[in_port].has_space(out_vc) {
+                let mut f = self.cells[c as usize].inputs[p].pop(vc).unwrap();
+                f.vc = out_vc;
+                f.hops += 1;
+                f.moved_at = now;
+                // Pre-route the following hop out of `n`.
+                if n == f.dst {
+                    f.next_port = crate::noc::message::DELIVER;
+                } else {
+                    let hop2 = route(&self.geo, n, f.dst, f.vc, num_vcs)
+                        .expect("undelivered flit must route");
+                    f.next_port = hop2.port.index() as u8;
+                    f.next_vc = hop2.vc;
+                }
+                let ncell = &mut self.cells[n as usize];
+                let ok = ncell.inputs[in_port].try_push(out_vc, f);
+                debug_assert!(ok);
+                Self::mark(&mut self.next_active, ncell, n, epoch);
+                self.metrics.hops += 1;
+                popped_ports |= 1 << p;
+                served_dirs |= 1 << d;
+            } else {
+                blocked_dirs |= 1 << d;
+            }
+        }
+        let stalled = blocked_dirs & !served_dirs;
+        if stalled != 0 {
+            let cell = &mut self.cells[c as usize];
+            for d in 0..4u8 {
+                if stalled & (1 << d) != 0 {
+                    cell.contention[d as usize] += 1;
+                    self.metrics.contention_stalls += 1;
+                }
+            }
+        }
+        let cell = &mut self.cells[c as usize];
+        cell.arb = cell.arb.wrapping_add(1);
+        if cell.has_flits() {
+            Self::mark(&mut self.next_active, cell, c, epoch);
+        }
+    }
+
+    // ------------------------------------------------------------- CC --
+
+    fn compute_cell(&mut self, c: CellId) {
+        let now = self.now;
+        let epoch = now + 1;
+        if self.cells[c as usize].busy_until > now {
+            let cell = &mut self.cells[c as usize];
+            Self::mark(&mut self.next_active, cell, c, epoch);
+            return;
+        }
+        if !self.cells[c as usize].action_q.is_empty() {
+            self.execute_action(c);
+        } else if !self.cells[c as usize].diffuse_q.is_empty() {
+            self.progress_diffusion(c);
+        }
+        let cell = &mut self.cells[c as usize];
+        if cell.pending(now) {
+            Self::mark(&mut self.next_active, cell, c, epoch);
+        }
+    }
+
+    fn execute_action(&mut self, c: CellId) {
+        let now = self.now;
+        let msg = self.cells[c as usize].action_q.pop_front().unwrap();
+        // Overlap accounting (Fig. 6): an action runs while this cell's
+        // head diffusion is blocked on the network or throttle.
+        if self.diff_blocked[c as usize] && !self.cells[c as usize].diffuse_q.is_empty() {
+            self.metrics.actions_overlapped += 1;
+        }
+        let mut busy = 1u32; // predicate resolution / dispatch
+        self.metrics.sram_reads += 2; // state + operand fetch
+        let slot = msg.target as usize;
+        match msg.kind {
+            ActionKind::App => {
+                let cell = &mut self.cells[c as usize];
+                let obj = &mut cell.objects[slot];
+                if self.app.predicate(&obj.state, &msg) {
+                    let meta = obj.meta;
+                    let work = self.app.work(&mut obj.state, &msg, &meta);
+                    busy += work.cycles;
+                    self.metrics.actions_work += 1;
+                    self.metrics.sram_writes += 1;
+                    for spec in work.diffuse {
+                        cell.diffuse_q.push_back(Diffusion::new(msg.target, spec));
+                        self.metrics.diffusions_created += 1;
+                    }
+                    self.metrics.diffuse_q_hwm =
+                        self.metrics.diffuse_q_hwm.max(cell.diffuse_q.len() as u64);
+                } else {
+                    self.metrics.actions_pruned += 1;
+                }
+            }
+            ActionKind::RelayDiffuse => {
+                let cell = &mut self.cells[c as usize];
+                let obj = &mut cell.objects[slot];
+                self.app.apply_relay(&mut obj.state, msg.payload, msg.aux);
+                self.metrics.relays += 1;
+                self.metrics.sram_writes += 1;
+                cell.diffuse_q.push_back(Diffusion::new(
+                    msg.target,
+                    crate::diffusive::action::DiffuseSpec::edges(msg.payload, msg.aux),
+                ));
+                self.metrics.diffusions_created += 1;
+            }
+            ActionKind::RhizomeShare => {
+                let cell = &mut self.cells[c as usize];
+                let obj = &mut cell.objects[slot];
+                let meta = obj.meta;
+                let work = self.app.on_rhizome_share(&mut obj.state, &msg, &meta);
+                busy += work.cycles;
+                self.metrics.rhizome_shares += 1;
+                self.metrics.sram_writes += 1;
+                for spec in work.diffuse {
+                    cell.diffuse_q.push_back(Diffusion::new(msg.target, spec));
+                    self.metrics.diffusions_created += 1;
+                }
+            }
+            ActionKind::InsertEdge => {
+                busy += self.handle_insert_edge(c, &msg);
+            }
+        }
+        let cell = &mut self.cells[c as usize];
+        cell.busy_until = now + busy as u64;
+        self.metrics.compute_cycles += busy as u64;
+    }
+
+    /// Handle a graph-mutation action (paper §7): insert the edge whose
+    /// packed destination address rides in (payload, aux) into the target
+    /// vertex object's local edge-list; when the chunk is full, relay
+    /// deeper into the RPVO (round-robin over ghost children), growing a
+    /// new ghost *on this cell* when the tree has room. Returns the
+    /// compute cycles charged.
+    fn handle_insert_edge(&mut self, c: CellId, msg: &ActionMsg) -> u32 {
+        let to = Address::unpack(((msg.payload as u64) << 32) | msg.aux as u64);
+        let slot = msg.target as usize;
+        let chunk = self.cfg.local_edgelist_size;
+        let arity = self.cfg.ghost_arity;
+        self.metrics.sram_writes += 1;
+        let cell = &mut self.cells[c as usize];
+        let obj = &mut cell.objects[slot];
+        if obj.edges.len() < chunk {
+            obj.edges.push(crate::rpvo::object::Edge { to, weight: 1 });
+            return 2;
+        }
+        if obj.ghosts.len() < arity {
+            // Grow a ghost locally (the message already paid the transit
+            // to this locality; vicinity-0 allocation).
+            let vid = obj.vid;
+            let member = obj.member;
+            let meta = obj.meta;
+            let state = self.app.init(&meta);
+            let mut ghost = crate::rpvo::object::Object::new_ghost(vid, member, state);
+            ghost.meta = meta;
+            ghost.edges.push(crate::rpvo::object::Edge { to, weight: 1 });
+            let gaddr = self.install(c, ghost);
+            self.cells[c as usize].objects[slot].ghosts.push(gaddr);
+            return 3;
+        }
+        // Relay to a ghost child, rotating on current edge count for
+        // balance; the action re-executes at the child's locality.
+        let g = obj.ghosts[obj.edges.len() % obj.ghosts.len()];
+        let relay = ActionMsg { kind: ActionKind::InsertEdge, target: g.slot, ..*msg };
+        if g.cc == c {
+            self.cells[c as usize].action_q.push_back(relay);
+            self.metrics.messages_local += 1;
+            self.mark_id(c);
+        } else {
+            // Mutation messages bypass the diffuse queue (they are single
+            // sends, not fan-outs); inject directly, retrying next cycle
+            // via re-enqueue if the local port is full.
+            let hop = route(&self.geo, c, g.cc, 0, self.cfg.num_vcs).expect("remote relays route");
+            let mut flit = Flit::new(c, g, relay, self.now);
+            flit.next_port = hop.port.index() as u8;
+            flit.next_vc = hop.vc;
+            let cell = &mut self.cells[c as usize];
+            if cell.inputs[Port::Local.index()].try_push(hop.vc, flit) {
+                self.metrics.messages_sent += 1;
+            } else {
+                cell.action_q.push_back(relay); // retry later
+            }
+            self.mark_id(c);
+        }
+        2
+    }
+
+    /// Send an InsertEdge mutation action into the chip (host side of §7;
+    /// it traverses the NoC like any other action). The follow-up compute
+    /// (e.g. an incremental bfs-action) is the caller's to germinate.
+    pub fn germinate_insert_edge(&mut self, src_root: Address, to: Address) {
+        let packed = to.pack();
+        let msg = ActionMsg {
+            kind: ActionKind::InsertEdge,
+            target: src_root.slot,
+            payload: (packed >> 32) as u32,
+            aux: packed as u32,
+        };
+        self.cells[src_root.cc as usize].action_q.push_back(msg);
+        self.mark_id(src_root.cc);
+    }
+
+    /// Progress the head diffusion by one `propagate` (or prune it).
+    fn progress_diffusion(&mut self, c: CellId) {
+        let now = self.now;
+        let d = *self.cells[c as usize].diffuse_q.front().unwrap();
+        // The diffuse clause's own predicate, evaluated lazily (Listing 6).
+        let live = {
+            let obj = &self.cells[c as usize].objects[d.slot as usize];
+            self.app.diffuse_live(&obj.state, d.payload, d.aux)
+        };
+        self.metrics.sram_reads += 1;
+        if !live {
+            self.cells[c as usize].diffuse_q.pop_front();
+            self.metrics.diffusions_pruned += 1;
+            self.diff_blocked[c as usize] = false;
+            self.charge(c, 1);
+            return;
+        }
+        // Throttling (§6.2): before creating a message, consult neighbour
+        // congestion from the previous cycle.
+        if self.cfg.throttling {
+            if self.cells[c as usize].throttle.halted(now) {
+                self.metrics.throttle_cycles += 1;
+                self.blocked_filter_pass(c);
+                return;
+            }
+            if self.neighbors_congested(c) {
+                self.cells[c as usize].throttle.engage(now, self.throttle_period);
+                self.metrics.throttle_engaged += 1;
+                self.metrics.throttle_cycles += 1;
+                self.blocked_filter_pass(c);
+                return;
+            }
+        }
+        // Stage the next propagate of this diffusion.
+        let (target_addr, msg) = {
+            let obj = &self.cells[c as usize].objects[d.slot as usize];
+            if d.edges && (d.e_idx as usize) < obj.edges.len() {
+                let e = obj.edges[d.e_idx as usize];
+                let (p, a) = self.app.edge_payload(d.payload, d.aux, e.weight);
+                (e.to, ActionMsg { kind: ActionKind::App, target: e.to.slot, payload: p, aux: a })
+            } else if d.edges && (d.g_idx as usize) < obj.ghosts.len() {
+                let g = obj.ghosts[d.g_idx as usize];
+                (
+                    g,
+                    ActionMsg {
+                        kind: ActionKind::RelayDiffuse,
+                        target: g.slot,
+                        payload: d.payload,
+                        aux: d.aux,
+                    },
+                )
+            } else if let Some((rp, ra)) = d.rhizome {
+                let r_len = obj.rhizome.len();
+                if (d.r_idx as usize) < r_len {
+                    let s = obj.rhizome[d.r_idx as usize];
+                    (
+                        s,
+                        ActionMsg {
+                            kind: ActionKind::RhizomeShare,
+                            target: s.slot,
+                            payload: rp,
+                            aux: ra,
+                        },
+                    )
+                } else {
+                    self.finish_diffusion(c);
+                    return;
+                }
+            } else {
+                self.finish_diffusion(c);
+                return;
+            }
+        };
+        self.metrics.sram_reads += 1; // edge/link fetch
+        if target_addr.cc == c {
+            // Same-cell action: skips the network (§4).
+            let cell = &mut self.cells[c as usize];
+            cell.action_q.push_back(msg);
+            self.metrics.messages_local += 1;
+            self.advance_cursor(c);
+            self.diff_blocked[c as usize] = false;
+            self.charge(c, 1);
+        } else {
+            let hop = route(&self.geo, c, target_addr.cc, 0, self.cfg.num_vcs)
+                .expect("remote target must route");
+            let mut flit = Flit::new(c, target_addr, msg, now);
+            flit.next_port = hop.port.index() as u8;
+            flit.next_vc = hop.vc;
+            let cell = &mut self.cells[c as usize];
+            if cell.inputs[Port::Local.index()].try_push(hop.vc, flit) {
+                self.metrics.messages_sent += 1;
+                self.advance_cursor(c);
+                self.diff_blocked[c as usize] = false;
+                self.charge(c, 1);
+            } else {
+                // Injection blocked on a congested network: overlap with
+                // pruning instead of stalling (§6.2).
+                self.metrics.diffusion_blocked_cycles += 1;
+                self.blocked_filter_pass(c);
+            }
+        }
+    }
+
+    /// Move the head diffusion's cursor past the send just staged; retire
+    /// the diffusion when all phases are done.
+    fn advance_cursor(&mut self, c: CellId) {
+        let done = {
+            let cell = &mut self.cells[c as usize];
+            let obj_edges;
+            let obj_ghosts;
+            let obj_rhiz;
+            {
+                let d = cell.diffuse_q.front().unwrap();
+                let obj = &cell.objects[d.slot as usize];
+                obj_edges = obj.edges.len() as u32;
+                obj_ghosts = obj.ghosts.len() as u32;
+                obj_rhiz = obj.rhizome.len() as u32;
+            }
+            let d = cell.diffuse_q.front_mut().unwrap();
+            if d.edges && d.e_idx < obj_edges {
+                d.e_idx += 1;
+            } else if d.edges && d.g_idx < obj_ghosts {
+                d.g_idx += 1;
+            } else if d.rhizome.is_some() && d.r_idx < obj_rhiz {
+                d.r_idx += 1;
+            }
+            let edges_done = !d.edges || (d.e_idx >= obj_edges && d.g_idx >= obj_ghosts);
+            let rhiz_done = d.rhizome.is_none() || d.r_idx >= obj_rhiz;
+            edges_done && rhiz_done
+        };
+        if done {
+            self.finish_diffusion(c);
+        }
+    }
+
+    fn finish_diffusion(&mut self, c: CellId) {
+        self.cells[c as usize].diffuse_q.pop_front();
+        self.metrics.diffusions_executed += 1;
+        self.diff_blocked[c as usize] = false;
+    }
+
+    /// The head diffusion is blocked: mark it, and spend the cycle pruning
+    /// queued diffusions whose predicates have gone stale (§6.2 "Lazy
+    /// Diffuse as Implicit Reduction").
+    fn blocked_filter_pass(&mut self, c: CellId) {
+        self.diff_blocked[c as usize] = true;
+        let cell = &mut self.cells[c as usize];
+        let len = cell.diffuse_q.len();
+        let scan = len.min(1 + FILTER_SCAN);
+        let mut dead: Vec<usize> = Vec::new();
+        for i in 1..scan {
+            let d = cell.diffuse_q[i];
+            let obj = &cell.objects[d.slot as usize];
+            if !self.app.diffuse_live(&obj.state, d.payload, d.aux) {
+                dead.push(i);
+            }
+        }
+        for &i in dead.iter().rev() {
+            cell.diffuse_q.remove(i);
+            self.metrics.diffusions_pruned_filter += 1;
+        }
+        self.charge(c, 1);
+    }
+
+    #[inline]
+    fn charge(&mut self, c: CellId, cycles: u32) {
+        self.cells[c as usize].busy_until = self.now + cycles as u64;
+        self.metrics.compute_cycles += cycles as u64;
+    }
+
+    /// Any immediate neighbour flagged congested last cycle? (§6.2 check.)
+    fn neighbors_congested(&self, c: CellId) -> bool {
+        CARDINALS.iter().any(|&p| {
+            self.geo
+                .neighbor(c, p)
+                .map(|n| self.cells[n as usize].congested)
+                .unwrap_or(false)
+        })
+    }
+
+    fn sample_frame(&mut self) {
+        let cap = (crate::noc::message::NUM_PORTS * self.cfg.num_vcs as usize
+            * self.cfg.vc_buffer) as f32;
+        let frame = Frame {
+            cycle: self.now,
+            dim_x: self.cfg.dim_x,
+            dim_y: self.cfg.dim_y,
+            occupancy: self.cells.iter().map(|c| c.occupancy() as f32 / cap).collect(),
+            congested: self.cells.iter().map(|c| c.congested).collect(),
+        };
+        self.heatmap.frames.push(frame);
+    }
+
+    /// Per-channel contention samples for Fig. 9.
+    pub fn contention(&self) -> ChannelContention {
+        let mut cc = ChannelContention::default();
+        for ch in 0..4 {
+            cc.per_channel[ch] = self.cells.iter().map(|c| c.contention[ch] as f64).collect();
+        }
+        cc
+    }
+
+    /// Visit every root object (including rhizome members) with its state.
+    pub fn for_each_root<F: FnMut(u32, u32, &A::State)>(&self, mut f: F) {
+        for cell in &self.cells {
+            for obj in &cell.objects {
+                if obj.is_root() {
+                    f(obj.vid, obj.member, &obj.state);
+                }
+            }
+        }
+    }
+
+    /// Look up an object (tests / verification).
+    pub fn object(&self, addr: Address) -> &crate::rpvo::object::Object<A::State> {
+        &self.cells[addr.cc as usize].objects[addr.slot as usize]
+    }
+
+    pub fn object_mut(&mut self, addr: Address) -> &mut crate::rpvo::object::Object<A::State> {
+        &mut self.cells[addr.cc as usize].objects[addr.slot as usize]
+    }
+
+    /// Slot-installing helper used by the graph builder.
+    pub fn install(&mut self, cc: CellId, obj: crate::rpvo::object::Object<A::State>) -> Address {
+        let slot = self.cells[cc as usize].alloc_object(obj);
+        Address::new(cc, slot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ChipConfig;
+    use crate::diffusive::action::{DiffuseSpec, Work};
+    use crate::diffusive::handler::VertexMeta;
+    use crate::rpvo::object::{Edge, Object};
+
+    /// Toy app: payload = countdown token. A vertex stores the smallest
+    /// token seen; work diffuses token-1 while > 0 (a bounded flood).
+    struct Flood;
+    impl Application for Flood {
+        type State = u32;
+        fn name(&self) -> &'static str {
+            "flood"
+        }
+        fn init(&self, _m: &VertexMeta) -> u32 {
+            0
+        }
+        fn predicate(&self, st: &u32, msg: &ActionMsg) -> bool {
+            msg.payload > *st
+        }
+        fn work(&self, st: &mut u32, msg: &ActionMsg, _m: &VertexMeta) -> Work {
+            *st = msg.payload;
+            if msg.payload > 1 {
+                Work::one(1, DiffuseSpec::edges(msg.payload, 0))
+            } else {
+                Work::none(1)
+            }
+        }
+        fn on_rhizome_share(&self, st: &mut u32, msg: &ActionMsg, m: &VertexMeta) -> Work {
+            self.work(st, msg, m)
+        }
+        fn apply_relay(&self, st: &mut u32, payload: u32, _aux: u32) {
+            *st = (*st).max(payload);
+        }
+        fn diffuse_live(&self, st: &u32, payload: u32, _aux: u32) -> bool {
+            *st == payload
+        }
+        fn edge_payload(&self, payload: u32, aux: u32, _w: u32) -> (u32, u32) {
+            (payload - 1, aux)
+        }
+    }
+
+    fn two_vertex_chip() -> (Chip<Flood>, Address, Address) {
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let b = chip.install(15, Object::new_root(1, 0, 0));
+        let mut oa = Object::new_root(0, 0, 0);
+        oa.edges.push(Edge { to: b, weight: 1 });
+        let a = chip.install(0, oa);
+        (chip, a, b)
+    }
+
+    #[test]
+    fn action_reaches_remote_vertex() {
+        let (mut chip, a, b) = two_vertex_chip();
+        chip.germinate(a, ActionKind::App, 5, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(a).state, 5);
+        assert_eq!(chip.object(b).state, 4);
+        assert_eq!(chip.metrics.actions_work, 2);
+        assert_eq!(chip.metrics.messages_sent, 1);
+        // 0 -> 15 on a 4x4 mesh: 3 east + 3 south = 6 hops.
+        assert_eq!(chip.metrics.hops, 6);
+    }
+
+    #[test]
+    fn same_cell_edges_skip_network() {
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let b = chip.install(3, Object::new_root(1, 0, 0));
+        let mut oa = Object::new_root(0, 0, 0);
+        oa.edges.push(Edge { to: b, weight: 1 });
+        let a = chip.install(3, oa);
+        chip.germinate(a, ActionKind::App, 3, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(b).state, 2);
+        assert_eq!(chip.metrics.messages_sent, 0);
+        assert_eq!(chip.metrics.messages_local, 1);
+        assert_eq!(chip.metrics.hops, 0);
+    }
+
+    #[test]
+    fn stale_diffusions_get_pruned() {
+        // Germinate 5 then 9 back-to-back: the 5-diffusion should be pruned
+        // once the state moves to 9 before it stages.
+        let (mut chip, a, b) = two_vertex_chip();
+        chip.germinate(a, ActionKind::App, 5, 0);
+        chip.germinate(a, ActionKind::App, 9, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(a).state, 9);
+        assert_eq!(chip.object(b).state, 8);
+        assert!(chip.metrics.diffusions_pruned >= 1, "{:?}", chip.metrics);
+    }
+
+    #[test]
+    fn single_flit_buffers_still_deliver() {
+        // vc_buffer = 1: every hop contends for a single slot; the flood
+        // must still complete (no protocol deadlock).
+        let mut cfg = ChipConfig::torus(4);
+        cfg.vc_buffer = 1;
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let targets: Vec<_> = (0..8).map(|i| chip.install(8 + i, Object::new_root(i, 0, 0))).collect();
+        let mut oa = Object::new_root(100, 0, 0);
+        for &t in &targets {
+            oa.edges.push(Edge { to: t, weight: 1 });
+        }
+        let a = chip.install(0, oa);
+        chip.germinate(a, ActionKind::App, 3, 0);
+        chip.run().unwrap();
+        for &t in &targets {
+            assert_eq!(chip.object(t).state, 2);
+        }
+    }
+
+    #[test]
+    fn smallest_chip_2x2_works() {
+        let mut cfg = ChipConfig::torus(2);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let b = chip.install(3, Object::new_root(1, 0, 0));
+        let mut oa = Object::new_root(0, 0, 0);
+        oa.edges.push(Edge { to: b, weight: 1 });
+        let a = chip.install(0, oa);
+        chip.germinate(a, ActionKind::App, 2, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(b).state, 1);
+    }
+
+    #[test]
+    fn torus_wrap_paths_deliver_with_dateline_vcs() {
+        // corner-to-corner on a torus crosses both datelines
+        let mut cfg = ChipConfig::torus(8);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let far = chip.install(8 * 7 + 7, Object::new_root(1, 0, 0)); // (7,7)
+        let mut oa = Object::new_root(0, 0, 0);
+        oa.edges.push(Edge { to: far, weight: 1 });
+        let a = chip.install(0, oa); // (0,0)
+        chip.germinate(a, ActionKind::App, 5, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(far).state, 4);
+        assert_eq!(chip.metrics.hops, 2, "wrap links make the corner 2 hops away");
+    }
+
+    #[test]
+    fn max_cycles_aborts_cleanly() {
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.max_cycles = 2;
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let b = chip.install(15, Object::new_root(1, 0, 0));
+        let mut oa = Object::new_root(0, 0, 0);
+        oa.edges.push(Edge { to: b, weight: 1 });
+        let a = chip.install(0, oa);
+        chip.germinate(a, ActionKind::App, 5, 0);
+        let err = chip.run().unwrap_err();
+        assert!(err.to_string().contains("max_cycles"), "{err}");
+    }
+
+    #[test]
+    fn terminates_on_empty_chip() {
+        let cfg = ChipConfig::mesh(4);
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let m = chip.run().unwrap();
+        assert!(m.cycles <= 16);
+    }
+
+    #[test]
+    fn insert_edge_action_mutates_graph_in_network() {
+        // §7: the mutation travels as a message; a full chunk grows a local
+        // ghost; a subsequent flood traverses the new edge.
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        cfg.local_edgelist_size = 1;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let b = chip.install(15, Object::new_root(1, 0, 0));
+        let c = chip.install(10, Object::new_root(2, 0, 0));
+        let mut oa = Object::new_root(0, 0, 0);
+        oa.edges.push(Edge { to: b, weight: 1 }); // chunk now full
+        let a = chip.install(0, oa);
+        // mutate: a -> c, inserted via an InsertEdge action
+        chip.germinate_insert_edge(a, c);
+        chip.run().unwrap();
+        let root = chip.object(a);
+        assert_eq!(root.edges.len(), 1, "chunk stays at capacity");
+        assert_eq!(root.ghosts.len(), 1, "ghost grown to hold the new edge");
+        let ghost = chip.object(root.ghosts[0]);
+        assert_eq!(ghost.edges[0].to, c);
+        // the new edge participates in computation
+        chip.germinate(a, ActionKind::App, 4, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(c).state, 3, "flood reached the vertex via the inserted edge");
+    }
+
+    #[test]
+    fn insert_edge_relays_through_full_tree() {
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        cfg.local_edgelist_size = 1;
+        cfg.ghost_arity = 1;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let targets: Vec<_> =
+            (0..4).map(|i| chip.install(12 + i, Object::new_root(1 + i, 0, 0))).collect();
+        let a = chip.install(0, Object::new_root(0, 0, 0));
+        for &t in &targets {
+            chip.germinate_insert_edge(a, t);
+            chip.run().unwrap();
+        }
+        // 4 edges, chunk 1, arity 1 => a chain of 3 ghosts under the root
+        let total_edges: usize =
+            chip.cells.iter().flat_map(|c| &c.objects).filter(|o| o.vid == 0).map(|o| o.edges.len()).sum();
+        assert_eq!(total_edges, 4, "every mutation landed exactly once");
+        chip.germinate(a, ActionKind::App, 9, 0);
+        chip.run().unwrap();
+        for &t in &targets {
+            assert_eq!(chip.object(t).state, 8, "edge at {t} traversed");
+        }
+    }
+
+    #[test]
+    fn ghost_relay_diffuses_ghost_chunk() {
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let far = chip.install(15, Object::new_root(2, 0, 0));
+        let mut ghost = Object::new_ghost(0, 0, 0);
+        ghost.edges.push(Edge { to: far, weight: 1 });
+        let g = chip.install(5, ghost);
+        let mut root = Object::new_root(0, 0, 0);
+        root.ghosts.push(g);
+        let r = chip.install(0, root);
+        chip.germinate(r, ActionKind::App, 4, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(g).state, 4, "relay refreshed ghost snapshot");
+        assert_eq!(chip.object(far).state, 3, "edge held by ghost delivered");
+        assert_eq!(chip.metrics.relays, 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Chip configuration: geometry, NoC parameters, runtime policies.
+//!
+//! Mirrors the knobs the paper sweeps in §6: chip dimension (16×16 …
+//! 128×128), Mesh vs Torus-Mesh (§6.4), per-VC buffer depth (Fig. 5 caption:
+//! 4), throttling on/off (§6.2, Eq. 2), and the RPVO/rhizome construction
+//! parameters `local edge-list size`, `ghost arity`, `rpvo_max` (Eq. 1).
+
+use crate::noc::topology::Topology;
+
+/// Vertex-object allocation policy (paper Fig. 4).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AllocPolicy {
+    /// Ghosts near their parent, rhizome roots random-far (Fig. 4c — default).
+    Mixed,
+    /// Everything vicinity-allocated (Fig. 4a).
+    Vicinity,
+    /// Everything random (Fig. 4b).
+    Random,
+}
+
+/// Full configuration of one simulated AM-CCA chip.
+#[derive(Clone, Debug)]
+pub struct ChipConfig {
+    /// Grid width (cells). Chip is `dim_x * dim_y` cells.
+    pub dim_x: u32,
+    /// Grid height (cells).
+    pub dim_y: u32,
+    /// Mesh or Torus-Mesh (§6.4).
+    pub topology: Topology,
+    /// Virtual channels per link. Torus requires >= 2 (distance classes
+    /// breaking wrap-around cycles, §6.1 Routing).
+    pub num_vcs: u8,
+    /// Flit buffer depth per (link, VC) (Fig. 5 uses 4).
+    pub vc_buffer: usize,
+    /// Congestion-triggered throttling (§6.2). Period is Eq. 2.
+    pub throttling: bool,
+    /// Max actions queued per cell before injection back-pressure.
+    pub action_queue_cap: usize,
+    /// Max pending diffusions per cell.
+    pub diffuse_queue_cap: usize,
+    /// Out-edges per vertex object before a ghost is spawned (RPVO chunk).
+    pub local_edgelist_size: usize,
+    /// Ghost children per vertex object (tree arity `g` in §3.1).
+    pub ghost_arity: usize,
+    /// Max RPVOs per rhizome (Eq. 1). 1 = plain RPVO, no rhizomes.
+    pub rpvo_max: u32,
+    /// Allocation policy (Fig. 4).
+    pub alloc: AllocPolicy,
+    /// Object-arena capacity per cell, in vertex objects. Models the small
+    /// per-CC SRAM; allocation spills to neighbouring cells when full.
+    pub cell_mem_objects: usize,
+    /// RNG seed for allocation / arbitration randomness.
+    pub seed: u64,
+    /// Safety valve for broken configs: abort after this many cycles.
+    pub max_cycles: u64,
+    /// Record per-cell congestion frames every N cycles (0 = off, Fig. 5).
+    pub heatmap_every: u64,
+}
+
+impl ChipConfig {
+    /// Paper-default configuration for a `dim x dim` Torus-Mesh chip.
+    pub fn torus(dim: u32) -> Self {
+        ChipConfig {
+            dim_x: dim,
+            dim_y: dim,
+            topology: Topology::TorusMesh,
+            num_vcs: 4,
+            vc_buffer: 4,
+            throttling: true,
+            action_queue_cap: 4096,
+            diffuse_queue_cap: 4096,
+            local_edgelist_size: 16,
+            ghost_arity: 2,
+            rpvo_max: 1,
+            alloc: AllocPolicy::Mixed,
+            cell_mem_objects: 8192,
+            seed: 0x5EED,
+            max_cycles: 200_000_000,
+            heatmap_every: 0,
+        }
+    }
+
+    /// Paper-default configuration for a `dim x dim` pure Mesh chip.
+    pub fn mesh(dim: u32) -> Self {
+        ChipConfig { topology: Topology::Mesh, ..Self::torus(dim) }
+    }
+
+    #[inline]
+    pub fn num_cells(&self) -> u32 {
+        self.dim_x * self.dim_y
+    }
+
+    /// Throttle period `T` (paper Eq. 2): chip hypotenuse, halved on torus.
+    pub fn throttle_period(&self) -> u64 {
+        let hyp = ((self.dim_x as f64).powi(2) + (self.dim_y as f64).powi(2)).sqrt();
+        match self.topology {
+            Topology::Mesh => hyp.round() as u64,
+            Topology::TorusMesh => (hyp / 2.0).round() as u64,
+        }
+    }
+
+    /// (x, y) coordinates of a cell id (row-major).
+    #[inline]
+    pub fn coords(&self, cc: u32) -> (u32, u32) {
+        (cc % self.dim_x, cc / self.dim_x)
+    }
+
+    /// Cell id from (x, y).
+    #[inline]
+    pub fn cell_at(&self, x: u32, y: u32) -> u32 {
+        debug_assert!(x < self.dim_x && y < self.dim_y);
+        y * self.dim_x + x
+    }
+
+    /// Validate invariants (call before constructing a chip).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.dim_x >= 2 && self.dim_y >= 2, "chip must be at least 2x2");
+        anyhow::ensure!(self.num_vcs >= 1, "need at least one VC");
+        anyhow::ensure!(
+            self.topology == Topology::Mesh || self.num_vcs >= 2,
+            "torus needs >= 2 VCs for deadlock freedom (distance classes)"
+        );
+        anyhow::ensure!(self.vc_buffer >= 1, "vc_buffer must be >= 1");
+        anyhow::ensure!(self.local_edgelist_size >= 1, "local edge-list must hold >= 1 edge");
+        anyhow::ensure!(self.ghost_arity >= 1, "ghost arity must be >= 1");
+        anyhow::ensure!(self.rpvo_max >= 1, "rpvo_max must be >= 1");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throttle_period_eq2() {
+        // 128x128: hypotenuse = 181.02 -> mesh 181, torus 91.
+        let mesh = ChipConfig::mesh(128);
+        assert_eq!(mesh.throttle_period(), 181);
+        let torus = ChipConfig::torus(128);
+        assert_eq!(torus.throttle_period(), 91);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let c = ChipConfig::torus(16);
+        for cc in 0..c.num_cells() {
+            let (x, y) = c.coords(cc);
+            assert_eq!(c.cell_at(x, y), cc);
+        }
+    }
+
+    #[test]
+    fn validate_catches_torus_without_vcs() {
+        let mut c = ChipConfig::torus(16);
+        c.num_vcs = 1;
+        assert!(c.validate().is_err());
+        assert!(ChipConfig::mesh(16).validate().is_ok());
+    }
+}

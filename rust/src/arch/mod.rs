@@ -1,0 +1,7 @@
+//! Chip substrate: PGAS addressing, configuration, compute cells, and the
+//! cycle-level engine.
+
+pub mod addr;
+pub mod cell;
+pub mod chip;
+pub mod config;

@@ -1,0 +1,144 @@
+//! Pure-Rust bulk-synchronous baselines: the conventional formulations the
+//! paper contrasts with (§2, §4), used three ways:
+//!   1. correctness oracles for the asynchronous diffusive apps (the paper
+//!      verified against NetworkX; we verify against these + the AOT-XLA
+//!      path in `runtime::oracle`),
+//!   2. the BSP comparator series in the benches,
+//!   3. Table-1 dataset statistics (sampled SSSP lengths).
+
+use std::collections::VecDeque;
+
+use crate::graph::model::HostGraph;
+
+pub const UNREACHED: u32 = u32::MAX;
+
+/// Frontier BFS levels from `root` (hop counts; UNREACHED if not reachable).
+pub fn bfs_levels(g: &HostGraph, root: u32) -> Vec<u32> {
+    let csr = g.csr();
+    let mut level = vec![UNREACHED; g.n as usize];
+    let mut q = VecDeque::new();
+    level[root as usize] = 0;
+    q.push_back(root);
+    while let Some(v) = q.pop_front() {
+        let next = level[v as usize] + 1;
+        for &(t, _) in csr.neighbors(v) {
+            if level[t as usize] == UNREACHED {
+                level[t as usize] = next;
+                q.push_back(t);
+            }
+        }
+    }
+    level
+}
+
+/// Dijkstra SSSP distances from `root` over u32 weights.
+pub fn sssp_dists(g: &HostGraph, root: u32) -> Vec<u64> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let csr = g.csr();
+    let mut dist = vec![u64::MAX; g.n as usize];
+    let mut heap = BinaryHeap::new();
+    dist[root as usize] = 0;
+    heap.push(Reverse((0u64, root)));
+    while let Some(Reverse((d, v))) = heap.pop() {
+        if d > dist[v as usize] {
+            continue;
+        }
+        for &(t, w) in csr.neighbors(v) {
+            let nd = d + w as u64;
+            if nd < dist[t as usize] {
+                dist[t as usize] = nd;
+                heap.push(Reverse((nd, t)));
+            }
+        }
+    }
+    dist
+}
+
+/// Synchronous PageRank power iteration, f32 to mirror the on-chip compute.
+///
+/// Matches the diffusive formulation (paper Listing 10): score mass from
+/// dangling vertices is dropped (not redistributed), teleport is
+/// `(1-d)/n` per vertex, `iters` full sweeps.
+pub fn pagerank(g: &HostGraph, iters: u32, damping: f32) -> Vec<f32> {
+    let n = g.n as usize;
+    let outdeg = g.out_degrees();
+    let csr = g.csr();
+    let teleport = (1.0 - damping) / n as f32;
+    let mut score = vec![1.0f32 / n as f32; n];
+    let mut next = vec![0.0f32; n];
+    for _ in 0..iters {
+        next.fill(0.0);
+        for v in 0..n {
+            if outdeg[v] == 0 {
+                continue;
+            }
+            let share = score[v] / outdeg[v] as f32;
+            for &(t, _) in csr.neighbors(v as u32) {
+                next[t as usize] += share;
+            }
+        }
+        for v in 0..n {
+            score[v] = teleport + damping * next[v];
+        }
+    }
+    score
+}
+
+/// Count of BSP supersteps a frontier BFS needs (diameter-ish; used by the
+/// bench report to contrast with asynchronous time-to-solution).
+pub fn bfs_supersteps(g: &HostGraph, root: u32) -> u32 {
+    bfs_levels(g, root).into_iter().filter(|&l| l != UNREACHED).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 -> 1 -> 2 -> 3, plus shortcut 0 -> 3 with weight 10.
+    fn chain() -> HostGraph {
+        HostGraph { n: 5, edges: vec![(0, 1, 1), (1, 2, 2), (2, 3, 3), (0, 3, 10)] }
+    }
+
+    #[test]
+    fn bfs_chain() {
+        let l = bfs_levels(&chain(), 0);
+        assert_eq!(l, vec![0, 1, 2, 1, UNREACHED]); // 0->3 edge short-cuts in hops
+    }
+
+    #[test]
+    fn sssp_prefers_cheap_path() {
+        let d = sssp_dists(&chain(), 0);
+        assert_eq!(d[3], 6); // 1+2+3 < 10
+        assert_eq!(d[4], u64::MAX);
+    }
+
+    #[test]
+    fn pagerank_uniform_on_cycle() {
+        // Symmetric cycle: stationary distribution is uniform.
+        let n = 8u32;
+        let edges = (0..n).map(|v| (v, (v + 1) % n, 1)).collect();
+        let g = HostGraph { n, edges };
+        let s = pagerank(&g, 50, 0.85);
+        for &x in &s {
+            assert!((x - 1.0 / n as f32).abs() < 1e-6, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn pagerank_sums_to_one_without_dangling() {
+        let n = 6u32;
+        let mut edges: Vec<(u32, u32, u32)> = (0..n).map(|v| (v, (v + 1) % n, 1)).collect();
+        edges.push((0, 3, 1));
+        edges.push((2, 5, 1));
+        let g = HostGraph { n, edges };
+        let s = pagerank(&g, 40, 0.85);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+    }
+
+    #[test]
+    fn supersteps_equal_eccentricity() {
+        assert_eq!(bfs_supersteps(&chain(), 0), 2);
+    }
+}

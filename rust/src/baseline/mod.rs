@@ -1,0 +1,3 @@
+//! Bulk-synchronous baselines (pure Rust): correctness oracles + comparators.
+
+pub mod bsp;

@@ -1,0 +1,71 @@
+//! Campaign runner: sweep experiment grids across OS threads (the leader
+//! process of the Makefile/bench targets). Each simulation is
+//! single-threaded and deterministic; campaigns parallelize across
+//! configurations.
+
+use crate::coordinator::experiment::{run, Experiment, Outcome};
+use crate::graph::model::HostGraph;
+
+/// A named experiment in a sweep.
+pub struct Job {
+    pub label: String,
+    pub exp: Experiment,
+    pub graph: std::sync::Arc<HostGraph>,
+}
+
+/// Run all jobs, up to `threads` at a time, preserving input order.
+pub fn run_all(jobs: Vec<Job>, threads: usize) -> Vec<(String, anyhow::Result<Outcome>)> {
+    let threads = threads.max(1);
+    let jobs: Vec<_> = jobs.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(jobs.into_iter().collect::<std::collections::VecDeque<_>>());
+    let results = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let item = queue.lock().unwrap().pop_front();
+                let Some((idx, job)) = item else { break };
+                let out = run(&job.exp, &job.graph);
+                results.lock().unwrap().push((idx, job.label, out));
+            });
+        }
+    });
+    let mut results = results.into_inner().unwrap();
+    results.sort_by_key(|(idx, _, _)| *idx);
+    results.into_iter().map(|(_, label, out)| (label, out)).collect()
+}
+
+/// Default worker count: physical parallelism minus one for the leader.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ChipConfig;
+    use crate::coordinator::experiment::AppKind;
+    use crate::graph::erdos;
+    use std::sync::Arc;
+
+    #[test]
+    fn parallel_sweep_preserves_order_and_results() {
+        let g = Arc::new(erdos::generate(64, 256, 2));
+        let jobs: Vec<Job> = (0..6)
+            .map(|i| Job {
+                label: format!("job{i}"),
+                exp: Experiment::new(AppKind::Bfs, ChipConfig::torus(4)),
+                graph: g.clone(),
+            })
+            .collect();
+        let results = run_all(jobs, 3);
+        assert_eq!(results.len(), 6);
+        for (i, (label, out)) in results.iter().enumerate() {
+            assert_eq!(label, &format!("job{i}"));
+            assert!(out.is_ok());
+        }
+        // identical configs => identical deterministic outcomes
+        let c0 = results[0].1.as_ref().unwrap().metrics.cycles;
+        let c1 = results[1].1.as_ref().unwrap().metrics.cycles;
+        assert_eq!(c0, c1);
+    }
+}

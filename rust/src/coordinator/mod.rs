@@ -1,0 +1,7 @@
+//! Experiment coordinator: single-experiment runner, multi-threaded
+//! campaign sweeps, and table/CSV report emitters — the leader side of the
+//! figure-regeneration harnesses (`rust/benches/figures.rs`).
+
+pub mod campaign;
+pub mod experiment;
+pub mod report;

@@ -1,0 +1,119 @@
+//! Actions, work outcomes, and diffusions — the units of the diffusive
+//! programming model (§4, §5).
+//!
+//! An *action* arrives as an [`ActionMsg`] and is dispatched against its
+//! target vertex object. Its `predicate` may prune it without invocation;
+//! when it runs, its *work* mutates vertex state and may request a
+//! *diffusion* — the `diffuse` clause of Listing 6, compiled into a closure
+//! with its own predicate and enqueued on the per-cell diffuse queue for
+//! lazy evaluation. Here the "closure" is reified as [`Diffusion`]: the
+//! snapshot operands plus cursors tracking how far the staged sends have
+//! progressed (one `propagate` per cycle, §6.1).
+
+use crate::arch::addr::Slot;
+
+/// The `diffuse` clause requested by a completed action.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiffuseSpec {
+    /// Snapshot operand captured by the closure (e.g. the BFS level that was
+    /// just written). The diffuse predicate compares it to live state.
+    pub payload: u32,
+    pub aux: u32,
+    /// Propagate along the local out-edge chunk + relay into ghost children.
+    pub edges: bool,
+    /// Also propagate a RhizomeShare with these operands to every rhizome
+    /// sibling (§5.1 `rhizome-collapse` traffic).
+    pub rhizome: Option<(u32, u32)>,
+}
+
+impl DiffuseSpec {
+    pub fn edges(payload: u32, aux: u32) -> Self {
+        DiffuseSpec { payload, aux, edges: true, rhizome: None }
+    }
+
+    pub fn with_rhizome(mut self, payload: u32, aux: u32) -> Self {
+        self.rhizome = Some((payload, aux));
+        self
+    }
+
+    /// A pure rhizome share (no out-edge traffic) — PageRank collapse.
+    pub fn rhizome_only(payload: u32, aux: u32) -> Self {
+        DiffuseSpec { payload: 0, aux: 0, edges: false, rhizome: Some((payload, aux)) }
+    }
+}
+
+/// Outcome of invoking an action's work on a vertex object.
+#[derive(Clone, Debug, Default)]
+pub struct Work {
+    /// Compute cycles consumed by the work body (on top of the 1-cycle
+    /// predicate resolution the runtime always charges). §6.1: BFS/SSSP
+    /// actions take 2–3 cycles, PageRank 3–70.
+    pub cycles: u32,
+    /// Diffusions to enqueue (usually 0 or 1; PageRank collapse cascades
+    /// can emit several).
+    pub diffuse: Vec<DiffuseSpec>,
+}
+
+impl Work {
+    pub fn none(cycles: u32) -> Self {
+        Work { cycles, diffuse: Vec::new() }
+    }
+
+    pub fn one(cycles: u32, spec: DiffuseSpec) -> Self {
+        Work { cycles, diffuse: vec![spec] }
+    }
+}
+
+/// A lazily-evaluated diffusion parked on a cell's diffuse queue.
+#[derive(Clone, Copy, Debug)]
+pub struct Diffusion {
+    /// Vertex object (on this cell) whose edges/links are being diffused.
+    pub slot: Slot,
+    pub payload: u32,
+    pub aux: u32,
+    pub edges: bool,
+    pub rhizome: Option<(u32, u32)>,
+    /// Progress cursors: next out-edge, next ghost child, next rhizome
+    /// sibling. Staging resumes exactly where it blocked.
+    pub e_idx: u32,
+    pub g_idx: u32,
+    pub r_idx: u32,
+}
+
+impl Diffusion {
+    pub fn new(slot: Slot, spec: DiffuseSpec) -> Self {
+        Diffusion {
+            slot,
+            payload: spec.payload,
+            aux: spec.aux,
+            edges: spec.edges,
+            rhizome: spec.rhizome,
+            e_idx: 0,
+            g_idx: 0,
+            r_idx: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builders() {
+        let s = DiffuseSpec::edges(5, 0).with_rhizome(5, 1);
+        assert!(s.edges);
+        assert_eq!(s.rhizome, Some((5, 1)));
+        let r = DiffuseSpec::rhizome_only(7, 2);
+        assert!(!r.edges);
+        assert_eq!(r.rhizome, Some((7, 2)));
+    }
+
+    #[test]
+    fn diffusion_starts_at_cursor_zero() {
+        let d = Diffusion::new(3, DiffuseSpec::edges(9, 1));
+        assert_eq!((d.e_idx, d.g_idx, d.r_idx), (0, 0, 0));
+        assert_eq!(d.slot, 3);
+        assert_eq!(d.payload, 9);
+    }
+}

@@ -1,0 +1,74 @@
+//! The [`Application`] trait: what a diffusive vertex-centric program
+//! provides to the runtime (paper §5).
+//!
+//! The paper's language constructs map onto trait methods:
+//!
+//! | paper construct                  | trait method        |
+//! |----------------------------------|---------------------|
+//! | `(predicate …)` on the action    | [`Application::predicate`] |
+//! | action body ("perform work")     | [`Application::work`] |
+//! | `(diffuse (predicate …) …)`      | returned [`DiffuseSpec`]s + [`Application::diffuse_live`] |
+//! | `propagate` along out-edges      | [`Application::edge_payload`] (runtime stages the sends) |
+//! | `rhizome-collapse` / AND-gate LCO| [`Application::on_rhizome_share`] (+ [`crate::diffusive::lco::AndGate`]) |
+//!
+//! The runtime owns scheduling: predicate resolution costs one cycle, work
+//! costs `Work::cycles`, each staged `propagate` costs one cycle, and
+//! diffusions are evaluated lazily so their predicate can prune them long
+//! after the action that created them retired (§5, Listing 6 rationale).
+
+use crate::diffusive::action::Work;
+use crate::noc::message::ActionMsg;
+
+/// Static, per-object metadata the runtime hands to every invocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VertexMeta {
+    /// Global vertex id.
+    pub vid: u32,
+    /// Total out-degree of the *whole* vertex (all rhizome members + ghosts).
+    pub out_degree: u32,
+    /// Number of in-edges pointing at *this* rhizome member (its share of
+    /// the in-degree load, §3.2).
+    pub in_degree_share: u32,
+    /// Rhizome members for this vertex (1 = plain RPVO).
+    pub rhizome_size: u32,
+    /// Total vertices in the graph (PageRank teleport term).
+    pub total_vertices: u32,
+}
+
+/// A diffusive vertex-centric application (BFS / SSSP / PageRank / user).
+pub trait Application: Send + Sync + 'static {
+    /// Per-vertex-object mutable state. Every root, rhizome member, and
+    /// ghost carries one (ghosts hold a relayed snapshot so their queued
+    /// diffusions stay prunable).
+    type State: Clone + Send + std::fmt::Debug;
+
+    fn name(&self) -> &'static str;
+
+    /// Initial state installed at graph-construction time.
+    fn init(&self, meta: &VertexMeta) -> Self::State;
+
+    /// The action's `predicate`: activate the vertex for this message?
+    /// The runtime may evaluate this without invoking the action (pruning).
+    fn predicate(&self, st: &Self::State, msg: &ActionMsg) -> bool;
+
+    /// The action's work body. Runs to completion (never blocks); network
+    /// effects are requested via the returned [`Work::diffuse`] specs.
+    fn work(&self, st: &mut Self::State, msg: &ActionMsg, meta: &VertexMeta) -> Work;
+
+    /// Rhizome-link message (§5.1): a sibling shared its operand (BFS/SSSP
+    /// broadcast) or its partial (PageRank all-reduce into the AND gate).
+    fn on_rhizome_share(&self, st: &mut Self::State, msg: &ActionMsg, meta: &VertexMeta) -> Work;
+
+    /// A RelayDiffuse reached a ghost: refresh its state snapshot so queued
+    /// ghost diffusions can be pruned against newer operands.
+    fn apply_relay(&self, st: &mut Self::State, payload: u32, aux: u32);
+
+    /// The diffuse clause's own `predicate` (Listing 6 line 9), evaluated
+    /// lazily each time the parked diffusion is considered.
+    fn diffuse_live(&self, st: &Self::State, payload: u32, aux: u32) -> bool;
+
+    /// Operands for the action propagated along one out-edge, given the
+    /// diffusion snapshot and the edge weight (BFS: lvl+1; SSSP: dist+w;
+    /// PageRank: score share unchanged).
+    fn edge_payload(&self, payload: u32, aux: u32, weight: u32) -> (u32, u32);
+}

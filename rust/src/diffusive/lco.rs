@@ -1,0 +1,94 @@
+//! Local Control Objects (§4.1): event-driven synchronization without
+//! barriers or blocking.
+//!
+//! The paper uses the **AND-gate LCO**: an object that locally executes its
+//! trigger-action once its value has been set N times. PageRank's
+//! `rhizome-collapse` (Fig. 3) feeds each member's partial score into an
+//! AND gate of width `rhizome_size`; when the gate fills, the score-update
+//! trigger runs locally and the gate resets for the next iteration.
+
+/// AND-gate LCO accumulating f32 contributions (the paper's
+/// `score : (AND Float)` exemplar, Fig. 3).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AndGate {
+    /// Contributions required before the trigger fires.
+    pub width: u32,
+    seen: u32,
+    acc: f32,
+}
+
+impl AndGate {
+    pub fn new(width: u32) -> Self {
+        AndGate { width, seen: 0, acc: 0.0 }
+    }
+
+    /// Set one input with an additive contribution. Returns `Some(total)`
+    /// when this set fills the gate — the caller runs the trigger-action
+    /// locally and the gate resets (as in Fig. 3 step 3).
+    #[must_use]
+    pub fn set(&mut self, value: f32) -> Option<f32> {
+        debug_assert!(self.seen < self.width, "AND gate over-set");
+        self.seen += 1;
+        self.acc += value;
+        if self.seen == self.width {
+            let total = self.acc;
+            self.reset();
+            Some(total)
+        } else {
+            None
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.seen = 0;
+        self.acc = 0.0;
+    }
+
+    pub fn pending(&self) -> u32 {
+        self.width - self.seen
+    }
+
+    pub fn seen(&self) -> u32 {
+        self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_at_width() {
+        let mut g = AndGate::new(3);
+        assert_eq!(g.set(1.0), None);
+        assert_eq!(g.set(2.0), None);
+        assert_eq!(g.set(3.0), Some(6.0));
+    }
+
+    #[test]
+    fn resets_after_fire() {
+        let mut g = AndGate::new(2);
+        assert_eq!(g.set(1.0), None);
+        assert_eq!(g.set(1.0), Some(2.0));
+        // next iteration reuses the same gate
+        assert_eq!(g.pending(), 2);
+        assert_eq!(g.set(5.0), None);
+        assert_eq!(g.set(5.0), Some(10.0));
+    }
+
+    #[test]
+    fn width_one_fires_immediately() {
+        let mut g = AndGate::new(1);
+        assert_eq!(g.set(4.5), Some(4.5));
+        assert_eq!(g.set(1.5), Some(1.5));
+    }
+
+    #[test]
+    fn pending_tracks_progress() {
+        let mut g = AndGate::new(4);
+        assert_eq!(g.pending(), 4);
+        let _ = g.set(0.0);
+        assert_eq!(g.pending(), 3);
+        assert_eq!(g.seen(), 1);
+    }
+}

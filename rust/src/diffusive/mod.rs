@@ -1,0 +1,8 @@
+//! The diffusive programming and execution model (§4, §5): actions,
+//! lazily-evaluated diffusions, LCOs, throttling, termination detection.
+
+pub mod action;
+pub mod handler;
+pub mod lco;
+pub mod terminator;
+pub mod throttle;

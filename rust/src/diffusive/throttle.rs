@@ -1,0 +1,69 @@
+//! Diffusion throttling (§6.2, Eq. 2).
+//!
+//! Unchecked diffusion ingress — dictated by the out-degree distribution —
+//! congests the NoC until compute cells can no longer inject (Fig. 5a).
+//! The paper's mechanism: before creating new messages, a cell checks
+//! whether any immediate neighbour reported congestion *in the previous
+//! cycle*; if so, it halts message creation for `T` cycles, where `T` is
+//! the chip hypotenuse (halved on the Torus-Mesh for its halved diameter).
+
+/// Per-cell throttle state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Throttle {
+    /// Cycle until which message creation is halted (exclusive).
+    until: u64,
+}
+
+impl Throttle {
+    /// Is message creation halted at `now`?
+    #[inline]
+    pub fn halted(&self, now: u64) -> bool {
+        now < self.until
+    }
+
+    /// A neighbour reported congestion: halt creation for `period` cycles.
+    /// Re-arming while already halted extends the window (the cell keeps
+    /// observing congestion, §6.2).
+    #[inline]
+    pub fn engage(&mut self, now: u64, period: u64) {
+        self.until = self.until.max(now + period);
+    }
+
+    /// Cycles remaining (diagnostics).
+    #[inline]
+    pub fn remaining(&self, now: u64) -> u64 {
+        self.until.saturating_sub(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engage_halts_for_period() {
+        let mut t = Throttle::default();
+        assert!(!t.halted(0));
+        t.engage(10, 5);
+        assert!(t.halted(10));
+        assert!(t.halted(14));
+        assert!(!t.halted(15));
+    }
+
+    #[test]
+    fn rearm_extends() {
+        let mut t = Throttle::default();
+        t.engage(0, 10);
+        t.engage(5, 10); // extends to 15
+        assert!(t.halted(12));
+        assert_eq!(t.remaining(12), 3);
+    }
+
+    #[test]
+    fn rearm_never_shortens() {
+        let mut t = Throttle::default();
+        t.engage(0, 100);
+        t.engage(1, 1);
+        assert_eq!(t.remaining(1), 99);
+    }
+}

@@ -1,0 +1,3 @@
+//! 7nm CMOS energy cost model (§6.1).
+
+pub mod model;

@@ -1,0 +1,146 @@
+//! Energy cost model (§6.1) — 7nm CMOS assumptions.
+//!
+//! The paper's cost model: execution logic comparable to zero_riscy /
+//! SiFive-class embedded RISC-V (<=13.5K gates) plus a non-pipelined FPU
+//! (~50K transistors); SRAM per Yokoyama et al. '20 (7nm FinFET macro,
+//! 64-bit word access + leakage); Cartesian Mesh vs 2D Torus-Mesh NoC with
+//! the torus consuming 50% more resources.
+//!
+//! Total energy = Σ message hop traversals + Σ SRAM accesses + Σ action
+//! execution cycles + leakage · cycles. The *constants* below are
+//! documented estimates at 7nm (DESIGN.md §Substitutions): Fig. 10's
+//! claim is a *relative* geomean (torus ≈ +26% energy for −46% time), which
+//! is driven by the ×1.5 link factor and hop-count ratio, not by the
+//! absolute pJ values.
+
+use crate::noc::topology::Topology;
+use crate::stats::metrics::Metrics;
+
+/// Per-event energies in picojoules.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    /// One flit (256 bit) traversing one mesh link + router stage.
+    pub hop_pj: f64,
+    /// Torus link/router overhead factor (§6.1: 50% more resources).
+    pub torus_link_factor: f64,
+    /// One 64-bit SRAM word access (read or write), 7nm macro.
+    pub sram_word_pj: f64,
+    /// One compute cycle of the RISC-V-class core + FPU share.
+    pub compute_cycle_pj: f64,
+    /// SRAM leakage per cell per cycle.
+    pub leak_cell_cycle_pj: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            // 256-bit flit, one hop = link wire + router stage at 7nm:
+            // ~0.05 pJ/bit/mm wire + buffer/crossbar => ~15 pJ/hop. Network
+            // energy dominating the budget is what produces the paper's
+            // Fig. 10 shape (torus: fewer hops x 1.5 cost/hop => net +%).
+            hop_pj: 15.0,
+            torus_link_factor: 1.5,
+            // ~5 pJ per 64-bit access (read/write averaged) per [31].
+            sram_word_pj: 5.0,
+            // 13.5K-gate core + FPU share, active cycle.
+            compute_cycle_pj: 1.2,
+            // Leakage of a small SRAM bank + idle logic, per cell-cycle.
+            leak_cell_cycle_pj: 0.05,
+        }
+    }
+}
+
+/// Energy breakdown of a run, in picojoules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub network_pj: f64,
+    pub sram_pj: f64,
+    pub compute_pj: f64,
+    pub leakage_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.network_pj + self.sram_pj + self.compute_pj + self.leakage_pj
+    }
+
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() / 1e6
+    }
+}
+
+/// Account a finished run.
+pub fn account(
+    m: &Metrics,
+    topology: Topology,
+    num_cells: u32,
+    params: &EnergyParams,
+) -> EnergyBreakdown {
+    let link = match topology {
+        Topology::Mesh => params.hop_pj,
+        Topology::TorusMesh => params.hop_pj * params.torus_link_factor,
+    };
+    EnergyBreakdown {
+        network_pj: m.hops as f64 * link,
+        sram_pj: (m.sram_reads + m.sram_writes) as f64 * params.sram_word_pj,
+        compute_pj: m.compute_cycles as f64 * params.compute_cycle_pj,
+        leakage_pj: m.cycles as f64 * num_cells as f64 * params.leak_cell_cycle_pj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Metrics {
+        Metrics {
+            cycles: 1000,
+            hops: 500,
+            sram_reads: 200,
+            sram_writes: 100,
+            compute_cycles: 400,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn torus_links_cost_more() {
+        let p = EnergyParams::default();
+        let mesh = account(&metrics(), Topology::Mesh, 256, &p);
+        let torus = account(&metrics(), Topology::TorusMesh, 256, &p);
+        assert!((torus.network_pj / mesh.network_pj - 1.5).abs() < 1e-12);
+        assert_eq!(mesh.sram_pj, torus.sram_pj);
+        assert_eq!(mesh.leakage_pj, torus.leakage_pj);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let p = EnergyParams::default();
+        let b = account(&metrics(), Topology::Mesh, 256, &p);
+        let total = b.network_pj + b.sram_pj + b.compute_pj + b.leakage_pj;
+        assert_eq!(b.total_pj(), total);
+        assert!(b.total_pj() > 0.0);
+        assert!((b.total_uj() - total / 1e6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn leakage_scales_with_chip_and_time() {
+        let p = EnergyParams::default();
+        let small = account(&metrics(), Topology::Mesh, 256, &p);
+        let big = account(&metrics(), Topology::Mesh, 1024, &p);
+        assert!((big.leakage_pj / small.leakage_pj - 4.0).abs() < 1e-12);
+    }
+
+    /// The shape behind Fig. 10: if torus halves hop counts, its energy rises
+    /// by less than 50% while its time falls — re-derived here from the model.
+    #[test]
+    fn fig10_shape_holds_in_model() {
+        let p = EnergyParams::default();
+        let mesh_m = Metrics { hops: 1000, ..metrics() };
+        let torus_m = Metrics { hops: 500, ..metrics() }; // fewer hops on torus
+        let mesh = account(&mesh_m, Topology::Mesh, 256, &p);
+        let torus = account(&torus_m, Topology::TorusMesh, 256, &p);
+        let increase = torus.network_pj / mesh.network_pj;
+        assert!(increase < 1.0, "halved hops at 1.5x link cost = 0.75x net energy");
+    }
+}

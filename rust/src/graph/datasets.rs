@@ -1,0 +1,188 @@
+//! Named dataset registry mirroring the paper's Table 1, at reproduction
+//! scale (DESIGN.md §Substitutions).
+//!
+//! The real-world graphs (language LN, amazon0302 AM, LiveJournal LJ,
+//! Wikipedia WK) are proprietary-download gated in this environment, so
+//! each gets a *scaled synthetic stand-in* whose degree-distribution shape
+//! (skew, max/mean ratio) matches the paper's reported statistics; the
+//! synthetic graphs (E18, R18, R22) are regenerated with the same recipes
+//! at reduced scale. Every name supports a `Scale` so benches can trade
+//! fidelity for wall-clock.
+
+use crate::graph::model::HostGraph;
+use crate::graph::{erdos, rmat};
+
+/// Reproduction scale: how big the stand-in graphs are.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scale {
+    /// Unit-test scale (2^10 vertices).
+    Tiny,
+    /// Bench default (2^14 vertices).
+    Small,
+    /// Slow-mode benches (2^16 vertices).
+    Medium,
+}
+
+impl Scale {
+    pub fn log_n(self) -> u32 {
+        match self {
+            Scale::Tiny => 10,
+            Scale::Small => 14,
+            Scale::Medium => 16,
+        }
+    }
+}
+
+/// The datasets of Table 1 (paper names kept; `s` suffix = scaled stand-in).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dataset {
+    /// language graph stand-in: moderate in-degree, extreme out-degree skew.
+    LN,
+    /// amazon0302 stand-in: tiny out-degree (<=5), moderate in-degree skew.
+    AM,
+    /// Erdős–Rényi, mean degree 9 (paper E18).
+    E18,
+    /// R-MAT a=.45 b=.25 c=.15, edge factor 18 (paper R18).
+    R18,
+    /// LiveJournal stand-in: R-MAT, symmetric heavy skew both directions.
+    LJ,
+    /// Wikipedia stand-in: hardest in-degree skew (max ~10% of |V|).
+    WK,
+    /// R-MAT edge factor ~30, undirected-as-directed (paper R22).
+    R22,
+}
+
+pub const ALL: [Dataset; 7] =
+    [Dataset::LN, Dataset::AM, Dataset::E18, Dataset::R18, Dataset::LJ, Dataset::WK, Dataset::R22];
+
+/// The four "small" datasets the paper uses across every chip size.
+pub const SMALL_SET: [Dataset; 4] = [Dataset::LN, Dataset::AM, Dataset::E18, Dataset::R18];
+
+/// The skewed pair driving the rhizome experiments (Figs. 7–9).
+pub const SKEWED_SET: [Dataset; 2] = [Dataset::WK, Dataset::R22];
+
+impl Dataset {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::LN => "LN",
+            Dataset::AM => "AM",
+            Dataset::E18 => "E18",
+            Dataset::R18 => "R18",
+            Dataset::LJ => "LJ",
+            Dataset::WK => "WK",
+            Dataset::R22 => "R22",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Dataset> {
+        ALL.into_iter().find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Build the dataset at the given scale. Deterministic per (self, scale).
+    pub fn build(self, scale: Scale) -> HostGraph {
+        let ln = scale.log_n();
+        let n = 1u32 << ln;
+        let seed = 0xDA7A_0000 + self as u64;
+        let mut g = match self {
+            // LN: mean degree ~3, out-degree max ~3% of V, low in-skew.
+            // Transposed WK-like R-MAT: extreme out-degree, tame in-degree.
+            Dataset::LN => transpose(rmat::generate(rmat::RmatParams::wk_like(ln, 3, seed))),
+            // AM: out-degree capped at 5, in-degree moderately skewed.
+            Dataset::AM => cap_out_degree(
+                rmat::generate(rmat::RmatParams::paper(ln, 5, seed)),
+                5,
+            ),
+            Dataset::E18 => erdos::generate(n, 9 * n as u64, seed),
+            Dataset::R18 => rmat::generate(rmat::RmatParams::paper(ln, 18, seed)),
+            Dataset::LJ => symmetrize(rmat::generate(rmat::RmatParams::paper(ln, 7, seed))),
+            Dataset::WK => rmat::generate(rmat::RmatParams::wk_like(ln, 24, seed)),
+            Dataset::R22 => symmetrize(rmat::generate(rmat::RmatParams::paper(ln, 15, seed))),
+        };
+        g.randomize_weights(64, seed ^ 0x57ED);
+        g
+    }
+}
+
+/// Swap edge directions (out-degree skew <-> in-degree skew).
+fn transpose(mut g: HostGraph) -> HostGraph {
+    for e in &mut g.edges {
+        std::mem::swap(&mut e.0, &mut e.1);
+    }
+    g
+}
+
+/// Keep at most `cap` out-edges per vertex (first-come order).
+fn cap_out_degree(mut g: HostGraph, cap: u32) -> HostGraph {
+    let mut count = vec![0u32; g.n as usize];
+    g.edges.retain(|&(s, _, _)| {
+        count[s as usize] += 1;
+        count[s as usize] <= cap
+    });
+    g
+}
+
+/// Add the reverse of every edge (paper: R22 is undirected represented as
+/// directed, hence symmetric in/out distributions).
+fn symmetrize(mut g: HostGraph) -> HostGraph {
+    let rev: Vec<(u32, u32, u32)> = g.edges.iter().map(|&(s, t, w)| (t, s, w)).collect();
+    g.edges.extend(rev);
+    g.dedup();
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        for d in ALL {
+            assert_eq!(Dataset::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Dataset::from_name("wk"), Some(Dataset::WK));
+        assert_eq!(Dataset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn am_out_degree_capped() {
+        let g = Dataset::AM.build(Scale::Tiny);
+        assert!(g.out_degrees().into_iter().max().unwrap() <= 5);
+    }
+
+    #[test]
+    fn r22_is_symmetric() {
+        let g = Dataset::R22.build(Scale::Tiny);
+        let din = g.in_degrees();
+        let dout = g.out_degrees();
+        assert_eq!(din, dout, "undirected-as-directed must have ki == ko");
+    }
+
+    #[test]
+    fn wk_is_most_in_skewed() {
+        let wk = Dataset::WK.build(Scale::Tiny);
+        let e = Dataset::E18.build(Scale::Tiny);
+        let skew = |g: &HostGraph| {
+            let din = g.in_degrees();
+            let mean = din.iter().map(|&d| d as f64).sum::<f64>() / din.len() as f64;
+            *din.iter().max().unwrap() as f64 / mean
+        };
+        assert!(skew(&wk) > 10.0 * skew(&e), "wk={} e18={}", skew(&wk), skew(&e));
+    }
+
+    #[test]
+    fn ln_is_out_skewed_not_in_skewed() {
+        let g = Dataset::LN.build(Scale::Tiny);
+        let din = g.in_degrees();
+        let dout = g.out_degrees();
+        let max_in = *din.iter().max().unwrap();
+        let max_out = *dout.iter().max().unwrap();
+        assert!(max_out > 4 * max_in, "out {max_out} vs in {max_in}");
+    }
+
+    #[test]
+    fn deterministic_builds() {
+        let a = Dataset::R18.build(Scale::Tiny);
+        let b = Dataset::R18.build(Scale::Tiny);
+        assert_eq!(a.edges, b.edges);
+    }
+}

@@ -1,0 +1,69 @@
+//! Erdős–Rényi G(n, m) generator — the paper's low-skew control dataset
+//! (E18, generated with NetworkX in §6.1). Degree distribution is binomial,
+//! so no rhizomes should ever be created for these graphs (the cutoff test
+//! in `rpvo::rhizome` relies on that).
+
+use crate::graph::model::HostGraph;
+use crate::util::rng::Rng;
+
+/// Directed G(n, m): m distinct directed edges chosen uniformly.
+pub fn generate(n: u32, m: u64, seed: u64) -> HostGraph {
+    assert!(n >= 2, "need at least 2 vertices");
+    let max_edges = n as u64 * (n as u64 - 1);
+    assert!(m <= max_edges, "m={m} exceeds simple-digraph capacity {max_edges}");
+    let mut rng = Rng::new(seed);
+    let mut g = HostGraph::new(n);
+    g.edges.reserve(m as usize);
+    // Rejection sampling over (s, t); fine for the sparse graphs we use.
+    let mut seen = std::collections::HashSet::with_capacity(m as usize * 2);
+    while (g.edges.len() as u64) < m {
+        let s = rng.below(n as u64) as u32;
+        let t = rng.below(n as u64) as u32;
+        if s == t {
+            continue;
+        }
+        let key = ((s as u64) << 32) | t as u64;
+        if seen.insert(key) {
+            g.edges.push((s, t, 1));
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_edge_count_no_dupes() {
+        let g = generate(512, 4096, 11);
+        assert_eq!(g.m(), 4096);
+        let mut keys: Vec<u64> =
+            g.edges.iter().map(|&(s, t, _)| ((s as u64) << 32) | t as u64).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 4096);
+        assert!(g.edges.iter().all(|&(s, t, _)| s != t));
+    }
+
+    #[test]
+    fn low_skew() {
+        let g = generate(4096, 40_960, 5);
+        let din = g.in_degrees();
+        let mean = 10.0;
+        let max = *din.iter().max().unwrap() as f64;
+        // Binomial tail: max should stay within a small factor of the mean.
+        assert!(max < 5.0 * mean, "max={max}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(64, 128, 9).edges, generate(64, 128, 9).edges);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_impossible_m() {
+        generate(4, 13, 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Host-side graphs: representation, generators (R-MAT, Erdős–Rényi),
+//! Table-1 statistics, and the named dataset registry.
+
+pub mod datasets;
+pub mod erdos;
+pub mod model;
+pub mod rmat;
+pub mod stats;

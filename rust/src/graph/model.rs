@@ -1,0 +1,172 @@
+//! Host-side graph representation: the directed, weighted edge list a
+//! dataset is generated/loaded into before being constructed onto the chip.
+
+use std::io::{BufRead, Write};
+
+use crate::util::rng::Rng;
+
+/// A directed graph with u32 edge weights (weights >= 1; §6.1: random
+/// weights are assigned to make SSSP meaningful).
+#[derive(Clone, Debug)]
+pub struct HostGraph {
+    pub n: u32,
+    /// (src, dst, weight) triples.
+    pub edges: Vec<(u32, u32, u32)>,
+}
+
+/// CSR view over out-edges (built on demand; the chip builder and the
+/// baselines both consume it).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub offsets: Vec<u32>,
+    /// (dst, weight), grouped by src in edge-insertion order.
+    pub adj: Vec<(u32, u32)>,
+}
+
+impl HostGraph {
+    pub fn new(n: u32) -> Self {
+        HostGraph { n, edges: Vec::new() }
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Assign uniform random weights in `[1, max_w]` (SSSP datasets, §6.1).
+    pub fn randomize_weights(&mut self, max_w: u32, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for e in &mut self.edges {
+            e.2 = rng.range_u32(1, max_w.max(1));
+        }
+    }
+
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.n as usize];
+        for &(s, _, _) in &self.edges {
+            d[s as usize] += 1;
+        }
+        d
+    }
+
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.n as usize];
+        for &(_, t, _) in &self.edges {
+            d[t as usize] += 1;
+        }
+        d
+    }
+
+    pub fn max_in_degree(&self) -> u32 {
+        self.in_degrees().into_iter().max().unwrap_or(0)
+    }
+
+    pub fn csr(&self) -> Csr {
+        let deg = self.out_degrees();
+        let mut offsets = vec![0u32; self.n as usize + 1];
+        for v in 0..self.n as usize {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut adj = vec![(0u32, 0u32); self.edges.len()];
+        for &(s, t, w) in &self.edges {
+            adj[cursor[s as usize] as usize] = (t, w);
+            cursor[s as usize] += 1;
+        }
+        Csr { offsets, adj }
+    }
+
+    /// Drop duplicate edges and self-loops (generators may produce both;
+    /// PaRMAT was run with distinct edges in the paper).
+    pub fn dedup(&mut self) {
+        self.edges.retain(|&(s, t, _)| s != t);
+        self.edges.sort_unstable_by_key(|&(s, t, _)| ((s as u64) << 32) | t as u64);
+        self.edges.dedup_by_key(|e| (e.0, e.1));
+    }
+
+    /// Load from whitespace-separated "src dst [weight]" lines ('#'/'%'
+    /// comments allowed) — the common SNAP / Matrix-Market-ish edge lists.
+    pub fn load_edgelist<R: BufRead>(reader: R) -> anyhow::Result<Self> {
+        let mut edges = Vec::new();
+        let mut max_v = 0u32;
+        for line in reader.lines() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let s: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
+            let t: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
+            let w: u32 = it.next().map(|w| w.parse()).transpose()?.unwrap_or(1);
+            max_v = max_v.max(s).max(t);
+            edges.push((s, t, w.max(1)));
+        }
+        Ok(HostGraph { n: max_v + 1, edges })
+    }
+
+    pub fn save_edgelist<W: Write>(&self, mut w: W) -> anyhow::Result<()> {
+        writeln!(w, "# amcca edge list: {} vertices {} edges", self.n, self.m())?;
+        for &(s, t, wt) in &self.edges {
+            writeln!(w, "{s} {t} {wt}")?;
+        }
+        Ok(())
+    }
+}
+
+impl Csr {
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[(u32, u32)] {
+        &self.adj[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tri() -> HostGraph {
+        HostGraph { n: 3, edges: vec![(0, 1, 5), (1, 2, 7), (0, 2, 9)] }
+    }
+
+    #[test]
+    fn csr_groups_by_source() {
+        let g = tri();
+        let c = g.csr();
+        assert_eq!(c.neighbors(0), &[(1, 5), (2, 9)]);
+        assert_eq!(c.neighbors(1), &[(2, 7)]);
+        assert_eq!(c.neighbors(2), &[]);
+    }
+
+    #[test]
+    fn degrees() {
+        let g = tri();
+        assert_eq!(g.out_degrees(), vec![2, 1, 0]);
+        assert_eq!(g.in_degrees(), vec![0, 1, 2]);
+        assert_eq!(g.max_in_degree(), 2);
+    }
+
+    #[test]
+    fn dedup_removes_loops_and_dupes() {
+        let mut g = HostGraph { n: 3, edges: vec![(0, 0, 1), (0, 1, 1), (0, 1, 2), (1, 2, 1)] };
+        g.dedup();
+        assert_eq!(g.m(), 2);
+        assert!(g.edges.iter().all(|&(s, t, _)| s != t));
+    }
+
+    #[test]
+    fn edgelist_roundtrip() {
+        let g = tri();
+        let mut buf = Vec::new();
+        g.save_edgelist(&mut buf).unwrap();
+        let g2 = HostGraph::load_edgelist(std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(g2.n, 3);
+        assert_eq!(g2.edges, g.edges);
+    }
+
+    #[test]
+    fn randomize_weights_in_range() {
+        let mut g = tri();
+        g.randomize_weights(10, 42);
+        assert!(g.edges.iter().all(|&(_, _, w)| (1..=10).contains(&w)));
+    }
+}

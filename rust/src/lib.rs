@@ -1,0 +1,24 @@
+//! # amcca — Rhizomes and Diffusions on a fine-grain message-driven system
+//!
+//! A reproduction of "Rhizomes and Diffusions for Processing Highly Skewed
+//! Graphs on Fine-Grain Message-Driven Systems" (ICPP 2024): a cycle-level
+//! simulator of the AM-CCA chip (PGAS many-core on a mesh/torus NoC), the
+//! diffusive programming model (actions, predicates, lazy diffusions,
+//! LCOs), the RPVO/Rhizome vertex-centric data structure, asynchronous
+//! BFS/SSSP/PageRank, and an AOT JAX/Pallas BSP baseline executed from the
+//! Rust coordinator via PJRT.
+//!
+//! See DESIGN.md for the system inventory and the experiment index.
+
+pub mod apps;
+pub mod arch;
+pub mod baseline;
+pub mod coordinator;
+pub mod diffusive;
+pub mod energy;
+pub mod graph;
+pub mod noc;
+pub mod rpvo;
+pub mod runtime;
+pub mod stats;
+pub mod util;

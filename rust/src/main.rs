@@ -1,0 +1,299 @@
+//! amcca — leader CLI for the AM-CCA reproduction.
+//!
+//! Subcommands:
+//!   run     simulate one app on one dataset/chip and print metrics+energy
+//!   stats   print the Table-1 statistics for the dataset registry
+//!   verify  run an app and check it against the pure-Rust BSP reference
+//!           and (with --xla) the AOT JAX/Pallas artifact via PJRT
+//!   info    print chip/config derivations (throttle period, cells, ...)
+//!
+//! Flag parsing is in-tree (offline build: no clap); see `Args`.
+
+use amcca::arch::config::{AllocPolicy, ChipConfig};
+use amcca::coordinator::experiment::{run, AppKind, Experiment};
+use amcca::coordinator::report::Table;
+use amcca::graph::datasets::{Dataset, Scale, ALL};
+use amcca::graph::model::HostGraph;
+use amcca::graph::stats::{table_row, TableRow};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--flag value` / `--flag` parser.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::HashMap::new();
+        let mut key: Option<String> = None;
+        for a in it {
+            if let Some(k) = a.strip_prefix("--") {
+                if let Some(prev) = key.take() {
+                    flags.insert(prev, "true".into());
+                }
+                key = Some(k.to_string());
+            } else if let Some(k) = key.take() {
+                flags.insert(k, a);
+            }
+        }
+        if let Some(prev) = key {
+            flags.insert(prev, "true".into());
+        }
+        Args { cmd, flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, k: &str, default: T) -> anyhow::Result<T> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad --{k} value: {v}")),
+        }
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
+    let dim: u32 = args.num("dim", 16)?;
+    let mut cfg = match args.get("topo").unwrap_or("torus") {
+        "mesh" => ChipConfig::mesh(dim),
+        "torus" => ChipConfig::torus(dim),
+        t => anyhow::bail!("unknown --topo {t} (mesh|torus)"),
+    };
+    cfg.rpvo_max = args.num("rpvo-max", 1u32)?;
+    cfg.throttling = !args.has("no-throttle");
+    cfg.seed = args.num("seed", 0x5EEDu64)?;
+    cfg.local_edgelist_size = args.num("chunk", 16usize)?;
+    cfg.ghost_arity = args.num("arity", 2usize)?;
+    cfg.vc_buffer = args.num("vc-buffer", 4usize)?;
+    if let Some(p) = args.get("alloc") {
+        cfg.alloc = match p {
+            "mixed" => AllocPolicy::Mixed,
+            "random" => AllocPolicy::Random,
+            "vicinity" => AllocPolicy::Vicinity,
+            _ => anyhow::bail!("unknown --alloc {p}"),
+        };
+    }
+    if args.has("heatmap") {
+        cfg.heatmap_every = args.num("heatmap", 1000u64)?;
+    }
+    Ok(cfg)
+}
+
+fn graph_from(args: &Args) -> anyhow::Result<(String, HostGraph)> {
+    if let Some(path) = args.get("graph-file") {
+        let f = std::fs::File::open(path)?;
+        let g = HostGraph::load_edgelist(std::io::BufReader::new(f))?;
+        return Ok((path.to_string(), g));
+    }
+    let name = args.get("dataset").unwrap_or("R18");
+    let scale = match args.get("scale").unwrap_or("tiny") {
+        "tiny" => Scale::Tiny,
+        "small" => Scale::Small,
+        "medium" => Scale::Medium,
+        s => anyhow::bail!("unknown --scale {s} (tiny|small|medium)"),
+    };
+    let ds = Dataset::from_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --dataset {name} (LN|AM|E18|R18|LJ|WK|R22)"))?;
+    Ok((format!("{name}@{scale:?}"), ds.build(scale)))
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "run" => cmd_run(&args),
+        "stats" => cmd_stats(&args),
+        "verify" => cmd_verify(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print!(
+                "amcca — Rhizomes and Diffusions on a simulated AM-CCA chip\n\n\
+                 usage: amcca <run|stats|verify|info> [flags]\n\n\
+                 common flags:\n\
+                 \x20 --app bfs|sssp|pagerank|cc  application (default bfs)\n\
+                 \x20 --dataset LN|AM|E18|R18|LJ|WK|R22   (default R18)\n\
+                 \x20 --scale tiny|small|medium   stand-in graph size (default tiny)\n\
+                 \x20 --graph-file PATH           load an edge list instead\n\
+                 \x20 --dim N                     chip is N x N cells (default 16)\n\
+                 \x20 --topo torus|mesh           NoC topology (default torus)\n\
+                 \x20 --rpvo-max N                max RPVOs per rhizome (default 1)\n\
+                 \x20 --no-throttle               disable diffusion throttling\n\
+                 \x20 --heatmap N                 sample congestion frames every N cycles\n\
+                 \x20 --root V  --iters K  --trials T  --seed S\n\
+                 \x20 --xla                       (verify) also check the PJRT oracle\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let (gname, g) = graph_from(args)?;
+    let app = AppKind::from_name(args.get("app").unwrap_or("bfs"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --app"))?;
+    let mut exp = Experiment::new(app, cfg.clone());
+    exp.root = args.num("root", 0u32)?;
+    exp.pr_iters = args.num("iters", 10u32)?;
+    exp.trials = args.num("trials", 1u32)?;
+    exp.verify = !args.has("no-verify");
+    let t0 = std::time::Instant::now();
+    let out = run(&exp, &g)?;
+    let wall = t0.elapsed();
+    println!(
+        "app={} graph={gname} ({} v, {} e) chip={}x{} {} rpvo_max={} throttle={}",
+        app.name(),
+        g.n,
+        g.m(),
+        cfg.dim_x,
+        cfg.dim_y,
+        cfg.topology,
+        cfg.rpvo_max,
+        cfg.throttling
+    );
+    println!("{}", out.metrics.summary());
+    println!(
+        "objects={} rhizomatic_vertices={} | energy: {:.2} uJ (net {:.2} sram {:.2} compute {:.2} leak {:.2})",
+        out.objects,
+        out.rhizomatic_vertices,
+        out.energy.total_uj(),
+        out.energy.network_pj / 1e6,
+        out.energy.sram_pj / 1e6,
+        out.energy.compute_pj / 1e6,
+        out.energy.leakage_pj / 1e6,
+    );
+    println!(
+        "wall={wall:.2?} ({:.1} Mcycles/s)",
+        out.metrics.cycles as f64 / wall.as_secs_f64() / 1e6
+    );
+    if cfg.heatmap_every > 0 {
+        if let Some(peak) = out.heatmap.frames.iter().max_by(|a, b| {
+            a.congested_fraction().partial_cmp(&b.congested_fraction()).unwrap()
+        }) {
+            println!(
+                "peak congestion {:.1}% at cycle {}:\n{}",
+                100.0 * peak.congested_fraction(),
+                peak.cycle,
+                peak.render(64)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> anyhow::Result<()> {
+    let scale = match args.get("scale").unwrap_or("tiny") {
+        "tiny" => Scale::Tiny,
+        "small" => Scale::Small,
+        "medium" => Scale::Medium,
+        s => anyhow::bail!("unknown --scale {s}"),
+    };
+    println!("{}", TableRow::header());
+    for ds in ALL {
+        let g = ds.build(scale);
+        let row = table_row(ds.name(), &g, args.num("samples", 20u32)?, 7);
+        println!("{}", row.format());
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    use amcca::apps::driver;
+    let cfg = config_from(args)?;
+    let (gname, g) = graph_from(args)?;
+    let app = AppKind::from_name(args.get("app").unwrap_or("bfs"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --app"))?;
+    let root = args.num("root", 0u32)?;
+    let iters = args.num("iters", 10u32)?;
+    println!("verifying {} on {gname} ...", app.name());
+    match app {
+        AppKind::Bfs => {
+            let (chip, built) = driver::run_bfs(cfg, &g, root)?;
+            let got = driver::bfs_levels(&chip, &built);
+            let bad = driver::verify_bfs(&g, root, &got);
+            println!("vs rust frontier BFS: {bad} mismatches / {} vertices", g.n);
+            anyhow::ensure!(bad == 0, "async BFS diverged");
+            if args.has("xla") {
+                let mut rt = amcca::runtime::pjrt::PjrtRuntime::cpu()?;
+                let want = amcca::runtime::oracle::to_u32(
+                    &amcca::runtime::oracle::relax_fixpoint(&mut rt, &g, root, true)?,
+                );
+                let bad = want.iter().zip(&got).filter(|&(w, g)| w != g).count();
+                println!("vs XLA relax_step oracle ({}): {bad} mismatches", rt.platform());
+                anyhow::ensure!(bad == 0, "async BFS diverged from XLA oracle");
+            }
+        }
+        AppKind::Sssp => {
+            let (chip, built) = driver::run_sssp(cfg, &g, root)?;
+            let got = driver::sssp_dists(&chip, &built);
+            let bad = driver::verify_sssp(&g, root, &got);
+            println!("vs rust Dijkstra: {bad} mismatches / {} vertices", g.n);
+            anyhow::ensure!(bad == 0, "async SSSP diverged");
+            if args.has("xla") {
+                let mut rt = amcca::runtime::pjrt::PjrtRuntime::cpu()?;
+                let want = amcca::runtime::oracle::to_u32(
+                    &amcca::runtime::oracle::relax_fixpoint(&mut rt, &g, root, false)?,
+                );
+                let bad = want.iter().zip(&got).filter(|&(w, g)| w != g).count();
+                println!("vs XLA relax_step oracle: {bad} mismatches");
+                anyhow::ensure!(bad == 0, "async SSSP diverged from XLA oracle");
+            }
+        }
+        AppKind::Cc => {
+            let (chip, built) = driver::run_cc(cfg, &g)?;
+            let got = driver::cc_labels(&chip, &built);
+            let want = amcca::apps::cc::reference_labels(&g);
+            let bad = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+            println!("vs min-label fixpoint: {bad} mismatches / {} vertices", g.n);
+            anyhow::ensure!(bad == 0, "async CC diverged");
+        }
+        AppKind::PageRank => {
+            let (chip, built) = driver::run_pagerank(cfg, &g, iters)?;
+            let got = driver::pagerank_scores(&chip, &built);
+            let (bad, max_rel) = driver::verify_pagerank(&g, iters, &got);
+            println!("vs rust power iteration: {bad} mismatches, max rel err {max_rel:.2e}");
+            anyhow::ensure!(bad == 0, "async PageRank diverged");
+            if args.has("xla") {
+                let mut rt = amcca::runtime::pjrt::PjrtRuntime::cpu()?;
+                let want = amcca::runtime::oracle::pagerank_iters(&mut rt, &g, iters)?;
+                let bad = want
+                    .iter()
+                    .zip(&got)
+                    .filter(|&(w, g)| (w - g).abs() / w.abs().max(1e-9) > 1e-3)
+                    .count();
+                println!("vs XLA pagerank_step oracle: {bad} mismatches");
+                anyhow::ensure!(bad == 0, "async PageRank diverged from XLA oracle");
+            }
+        }
+    }
+    println!("OK");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let mut t = Table::new(&["param", "value"]);
+    t.row(&["cells".into(), cfg.num_cells().to_string()]);
+    t.row(&["topology".into(), cfg.topology.to_string()]);
+    t.row(&["throttle period T (Eq.2)".into(), cfg.throttle_period().to_string()]);
+    t.row(&["VCs x buffer".into(), format!("{} x {}", cfg.num_vcs, cfg.vc_buffer)]);
+    t.row(&["local edge-list".into(), cfg.local_edgelist_size.to_string()]);
+    t.row(&["ghost arity".into(), cfg.ghost_arity.to_string()]);
+    t.row(&["rpvo_max".into(), cfg.rpvo_max.to_string()]);
+    print!("{}", t.render());
+    Ok(())
+}

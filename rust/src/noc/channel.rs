@@ -1,0 +1,144 @@
+//! Buffered router input units: per-(port, VC) bounded flit FIFOs.
+//!
+//! Each cell has five input units (N/E/S/W/Local-injection). A hop moves a
+//! flit from the head of one cell's input FIFO into the tail of the
+//! neighbour's input FIFO on the VC chosen by routing — one buffer stage per
+//! hop, one hop per cycle (§6.1). A full tail FIFO stalls the flit in place;
+//! stall cycles are the *contention* the paper histograms in Fig. 9.
+
+use std::collections::VecDeque;
+
+use crate::noc::message::Flit;
+
+/// One input unit: `num_vcs` bounded FIFOs (num_vcs <= 8).
+///
+/// A `live` bitmask tracks which VCs hold flits so the router's lane scan
+/// skips empty buffers without touching the VecDeques (hot path).
+#[derive(Clone, Debug)]
+pub struct InputUnit {
+    vcs: Vec<VecDeque<Flit>>,
+    cap: usize,
+    live: u8,
+    full: u8,
+}
+
+impl InputUnit {
+    pub fn new(num_vcs: u8, cap: usize) -> Self {
+        assert!(num_vcs <= 8, "live bitmask is u8");
+        InputUnit {
+            vcs: (0..num_vcs).map(|_| VecDeque::with_capacity(cap)).collect(),
+            cap,
+            live: 0,
+            full: 0,
+        }
+    }
+
+    #[inline]
+    pub fn num_vcs(&self) -> usize {
+        self.vcs.len()
+    }
+
+    /// Bitmask of VCs currently holding at least one flit.
+    #[inline]
+    pub fn live_mask(&self) -> u8 {
+        self.live
+    }
+
+    #[inline]
+    pub fn has_space(&self, vc: u8) -> bool {
+        self.vcs[vc as usize].len() < self.cap
+    }
+
+    /// Push a flit onto `vc`; returns false (flit unmoved) when full.
+    #[inline]
+    pub fn try_push(&mut self, vc: u8, flit: Flit) -> bool {
+        let q = &mut self.vcs[vc as usize];
+        if q.len() >= self.cap {
+            return false;
+        }
+        q.push_back(flit);
+        self.live |= 1 << vc;
+        if q.len() >= self.cap {
+            self.full |= 1 << vc;
+        }
+        true
+    }
+
+    #[inline]
+    pub fn head(&self, vc: u8) -> Option<&Flit> {
+        self.vcs[vc as usize].front()
+    }
+
+    #[inline]
+    pub fn pop(&mut self, vc: u8) -> Option<Flit> {
+        let f = self.vcs[vc as usize].pop_front();
+        self.full &= !(1 << vc);
+        if self.vcs[vc as usize].is_empty() {
+            self.live &= !(1 << vc);
+        }
+        f
+    }
+
+    /// Total buffered flits across VCs.
+    #[inline]
+    pub fn occupancy(&self) -> usize {
+        self.vcs.iter().map(|q| q.len()).sum()
+    }
+
+    /// Any VC at capacity? (the congestion signal cells export to their
+    /// neighbours for throttling, §6.2).
+    #[inline]
+    pub fn any_full(&self) -> bool {
+        self.full != 0
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::message::{ActionMsg, Flit};
+
+    fn flit() -> Flit {
+        Flit { dst: 1, src: 0, vc: 0, next_port: super::super::message::DELIVER, next_vc: 0, hops: 0, moved_at: 0, action: ActionMsg::app(0, 0, 0) }
+    }
+
+    #[test]
+    fn bounded_fifo() {
+        let mut u = InputUnit::new(2, 2);
+        assert!(u.try_push(0, flit()));
+        assert!(u.try_push(0, flit()));
+        assert!(!u.try_push(0, flit()), "third push must fail at cap 2");
+        assert!(u.try_push(1, flit()), "other VC unaffected");
+        assert_eq!(u.occupancy(), 3);
+        assert!(u.any_full());
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut u = InputUnit::new(1, 4);
+        for i in 0..3 {
+            let mut f = flit();
+            f.action.payload = i;
+            u.try_push(0, f);
+        }
+        assert_eq!(u.head(0).unwrap().action.payload, 0);
+        assert_eq!(u.pop(0).unwrap().action.payload, 0);
+        assert_eq!(u.pop(0).unwrap().action.payload, 1);
+        assert_eq!(u.pop(0).unwrap().action.payload, 2);
+        assert!(u.pop(0).is_none());
+        assert!(u.is_empty());
+    }
+
+    #[test]
+    fn empty_unit_not_full() {
+        let u = InputUnit::new(4, 4);
+        assert!(u.is_empty());
+        assert!(!u.any_full());
+        assert_eq!(u.occupancy(), 0);
+    }
+}

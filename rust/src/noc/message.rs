@@ -1,0 +1,167 @@
+//! Message (flit) format for the AM-CCA NoC.
+//!
+//! §6.1: channel links are 256 bits wide, so every application message of
+//! the tested workloads fits a single flit and traverses one hop per cycle.
+//! We model a message as one flit carrying an [`ActionMsg`] — the serialized
+//! *action* of the diffusive programming model (handler kind + target vertex
+//! object + operands).
+
+use crate::arch::addr::{Address, CellId, Slot};
+
+/// What the action carried by a message does at its destination.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum ActionKind {
+    /// The application action (bfs-action / sssp-action / pagerank-action),
+    /// invoked on the target vertex object (paper Listings 4, 9, 10).
+    App = 0,
+    /// Internal: a parent vertex object relaying a diffusion into a ghost
+    /// (the ghost diffuses its own local edge-list chunk), §3.1.
+    RelayDiffuse = 1,
+    /// Rhizome consistency traffic over rhizome-links (§5.1): BFS/SSSP
+    /// broadcast, PageRank partial-score all-reduce feeding the AND-gate LCO.
+    RhizomeShare = 2,
+    /// Graph mutation carried as a message (paper §7 future work): insert
+    /// an out-edge into the target vertex object's local edge-list, or
+    /// relay deeper into the RPVO when the chunk is full. The packed
+    /// [`crate::arch::addr::Address`] of the edge destination travels in
+    /// (payload, aux); weight is 1 (weighted inserts use the host-side
+    /// `rpvo::dynamic` API).
+    InsertEdge = 3,
+}
+
+/// An action in flight (or queued): the unit of work of the diffusive model.
+///
+/// `payload`/`aux` are app-interpreted 32-bit operands (BFS level, SSSP
+/// distance, PageRank score bits + iteration index).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActionMsg {
+    pub kind: ActionKind,
+    /// Target vertex object slot on the destination cell.
+    pub target: Slot,
+    pub payload: u32,
+    pub aux: u32,
+}
+
+impl ActionMsg {
+    #[inline]
+    pub fn app(target: Slot, payload: u32, aux: u32) -> Self {
+        ActionMsg { kind: ActionKind::App, target, payload, aux }
+    }
+
+    /// f32 operand view (PageRank scores travel as raw bits).
+    #[inline]
+    pub fn payload_f32(&self) -> f32 {
+        f32::from_bits(self.payload)
+    }
+}
+
+/// `Flit::next_port` sentinel: the flit is at its destination cell.
+pub const DELIVER: u8 = 0xFF;
+
+/// One flit: an [`ActionMsg`] en route to the cell owning its target object.
+#[derive(Clone, Copy, Debug)]
+pub struct Flit {
+    pub dst: CellId,
+    pub src: CellId,
+    /// Current virtual channel (updated on turns / dateline crossings).
+    pub vc: u8,
+    /// Cached routing decision for the *next* hop out of the cell whose
+    /// buffer currently holds this flit ([`DELIVER`] at the destination).
+    /// Routing is deterministic per (cell, dst, vc), so computing it once
+    /// per hop — instead of once per cycle while blocked — is exact.
+    pub next_port: u8,
+    pub next_vc: u8,
+    /// Hops taken so far (energy accounting).
+    pub hops: u32,
+    /// Cycle at which the flit last moved — a flit moves at most one hop
+    /// per cycle regardless of cell-processing order within the cycle.
+    pub moved_at: u64,
+    pub action: ActionMsg,
+}
+
+impl Flit {
+    pub fn new(src: CellId, dst_addr: Address, action: ActionMsg, now: u64) -> Self {
+        Flit {
+            dst: dst_addr.cc,
+            src,
+            vc: 0,
+            next_port: DELIVER,
+            next_vc: 0,
+            hops: 0,
+            moved_at: now,
+            action,
+        }
+    }
+}
+
+/// Router ports. The four cardinal inputs plus the local injection port.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Port {
+    North = 0,
+    East = 1,
+    South = 2,
+    West = 3,
+    Local = 4,
+}
+
+pub const NUM_PORTS: usize = 5;
+pub const CARDINALS: [Port; 4] = [Port::North, Port::East, Port::South, Port::West];
+
+impl Port {
+    /// The port on the *neighbour* that receives a flit we send out of `self`.
+    #[inline]
+    pub fn opposite(self) -> Port {
+        match self {
+            Port::North => Port::South,
+            Port::East => Port::West,
+            Port::South => Port::North,
+            Port::West => Port::East,
+            Port::Local => Port::Local,
+        }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Port {
+        match i {
+            0 => Port::North,
+            1 => Port::East,
+            2 => Port::South,
+            3 => Port::West,
+            4 => Port::Local,
+            _ => panic!("bad port index {i}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opposite_is_involution() {
+        for p in CARDINALS {
+            assert_eq!(p.opposite().opposite(), p);
+            assert_ne!(p.opposite(), p);
+        }
+        assert_eq!(Port::Local.opposite(), Port::Local);
+    }
+
+    #[test]
+    fn port_index_roundtrip() {
+        for i in 0..NUM_PORTS {
+            assert_eq!(Port::from_index(i).index(), i);
+        }
+    }
+
+    #[test]
+    fn f32_payload_roundtrip() {
+        let m = ActionMsg::app(3, 1.25f32.to_bits(), 7);
+        assert_eq!(m.payload_f32(), 1.25);
+    }
+}

@@ -1,0 +1,7 @@
+//! Network-on-chip: flits, topologies, turn-restricted routing, buffered
+//! router input units.
+
+pub mod channel;
+pub mod message;
+pub mod routing;
+pub mod topology;

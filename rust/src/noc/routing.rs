@@ -1,0 +1,225 @@
+//! Turn-restricted minimal routing (§6.1 Routing).
+//!
+//! X-Y dimension-order: a message first resolves its X displacement, then
+//! its Y displacement — the static turn restriction that makes the mesh
+//! deadlock-free without extra circuitry [Glass & Ni '92]. On the
+//! Torus-Mesh, wrap-around links close rings, so virtual channels act as
+//! *distance classes* [Dally & Towles]: a flit starts in the low VC of its
+//! current dimension and moves to the high VC after crossing the dateline
+//! (the wrap link); with every turn the message changes its virtual channel
+//! (paper wording), here: entering the Y dimension switches VC group.
+//!
+//! VC map (num_vcs >= 4, torus):  vc = dim_phase * 2 + dateline_bit
+//! VC map (mesh, num_vcs >= 2):   vc = dim_phase
+//! where dim_phase = 0 while routing X, 1 while routing Y.
+
+use crate::arch::addr::CellId;
+use crate::noc::message::Port;
+use crate::noc::topology::{Geometry, Topology};
+
+/// Routing decision for one hop.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Hop {
+    /// Output port to take.
+    pub port: Port,
+    /// VC the flit occupies on that link.
+    pub vc: u8,
+    /// Whether this hop crosses a wrap-around (dateline) link.
+    pub wraps: bool,
+}
+
+/// Compute the next hop for a flit at `cur` headed to `dst`.
+///
+/// `cur_vc` is the VC the flit currently holds (carries the dateline bit of
+/// the dimension in progress). Returns `None` when `cur == dst` (deliver).
+pub fn route(geo: &Geometry, cur: CellId, dst: CellId, cur_vc: u8, num_vcs: u8) -> Option<Hop> {
+    if cur == dst {
+        return None;
+    }
+    let (cx, cy) = geo.coords(cur);
+    let (dx, dy) = geo.coords(dst);
+
+    let ddx = geo.delta(cx, dx, geo.dim_x);
+    if ddx != 0 {
+        // X phase.
+        let port = if ddx > 0 { Port::East } else { Port::West };
+        let wraps = wraps_edge(cx, geo.dim_x, ddx > 0, geo.topology);
+        let dateline = dateline_bit(cur_vc, 0, wraps, num_vcs);
+        return Some(Hop { port, vc: vc_for(0, dateline, num_vcs), wraps });
+    }
+    let ddy = geo.delta(cy, dy, geo.dim_y);
+    debug_assert_ne!(ddy, 0);
+    // Y phase: the X→Y turn resets to the Y VC group (new distance class).
+    let port = if ddy > 0 { Port::South } else { Port::North };
+    let wraps = wraps_edge(cy, geo.dim_y, ddy > 0, geo.topology);
+    let in_y = vc_phase(cur_vc, num_vcs) == 1;
+    let prev_bit = if in_y { cur_vc & dateline_mask(num_vcs) } else { 0 };
+    let dateline = if wraps { 1 } else { prev_bit };
+    Some(Hop { port, vc: vc_for(1, dateline, num_vcs), wraps })
+}
+
+#[inline]
+fn dateline_mask(num_vcs: u8) -> u8 {
+    if num_vcs >= 4 {
+        1
+    } else {
+        0
+    }
+}
+
+#[inline]
+fn vc_phase(vc: u8, num_vcs: u8) -> u8 {
+    if num_vcs >= 4 {
+        vc / 2
+    } else if num_vcs >= 2 {
+        vc
+    } else {
+        0
+    }
+}
+
+#[inline]
+fn dateline_bit(cur_vc: u8, phase: u8, wraps_now: bool, num_vcs: u8) -> u8 {
+    let prev = if vc_phase(cur_vc, num_vcs) == phase { cur_vc & dateline_mask(num_vcs) } else { 0 };
+    if wraps_now {
+        1
+    } else {
+        prev
+    }
+}
+
+#[inline]
+fn vc_for(phase: u8, dateline: u8, num_vcs: u8) -> u8 {
+    if num_vcs >= 4 {
+        phase * 2 + dateline
+    } else if num_vcs >= 2 {
+        phase
+    } else {
+        0
+    }
+}
+
+/// Does moving one step in +/- direction from coordinate `c` cross the wrap link?
+#[inline]
+fn wraps_edge(c: u32, dim: u32, positive: bool, topo: Topology) -> bool {
+    match topo {
+        Topology::Mesh => false,
+        Topology::TorusMesh => {
+            if positive {
+                c == dim - 1
+            } else {
+                c == 0
+            }
+        }
+    }
+}
+
+/// Full path trace (for tests / analysis): hops from `src` to `dst`.
+pub fn trace(geo: &Geometry, src: CellId, dst: CellId, num_vcs: u8) -> Vec<(CellId, Hop)> {
+    let mut path = Vec::new();
+    let mut cur = src;
+    let mut vc = 0u8;
+    while let Some(hop) = route(geo, cur, dst, vc, num_vcs) {
+        path.push((cur, hop));
+        cur = geo.neighbor(cur, hop.port).expect("route returned an edge port");
+        vc = hop.vc;
+        assert!(path.len() <= (geo.dim_x + geo.dim_y) as usize * 2, "routing loop");
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo(t: Topology) -> Geometry {
+        Geometry::new(8, 8, t)
+    }
+
+    #[test]
+    fn routes_are_minimal_mesh() {
+        let g = geo(Topology::Mesh);
+        for src in 0..64 {
+            for dst in 0..64 {
+                let path = trace(&g, src, dst, 4);
+                assert_eq!(path.len() as u32, g.distance(src, dst), "{src}->{dst}");
+            }
+        }
+    }
+
+    #[test]
+    fn routes_are_minimal_torus() {
+        let g = geo(Topology::TorusMesh);
+        for src in 0..64 {
+            for dst in 0..64 {
+                let path = trace(&g, src, dst, 4);
+                assert_eq!(path.len() as u32, g.distance(src, dst), "{src}->{dst}");
+            }
+        }
+    }
+
+    #[test]
+    fn x_before_y_dimension_order() {
+        let g = geo(Topology::Mesh);
+        let path = trace(&g, g.cell_at(1, 1), g.cell_at(5, 6), 4);
+        let mut seen_y = false;
+        for (_, hop) in path {
+            match hop.port {
+                Port::East | Port::West => assert!(!seen_y, "X hop after Y hop"),
+                Port::North | Port::South => seen_y = true,
+                Port::Local => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn torus_dateline_changes_vc() {
+        let g = geo(Topology::TorusMesh);
+        // 6 -> 1 goes east through the wrap: VC must switch to class 1.
+        let path = trace(&g, g.cell_at(6, 0), g.cell_at(1, 0), 4);
+        assert_eq!(path.len(), 3);
+        assert!(path[path.len() - 1].1.vc & 1 == 1, "dateline bit set after wrap");
+        assert!(path.iter().any(|(_, h)| h.wraps));
+    }
+
+    #[test]
+    fn y_phase_uses_upper_vcs() {
+        let g = geo(Topology::TorusMesh);
+        let path = trace(&g, g.cell_at(2, 2), g.cell_at(2, 5), 4);
+        for (_, hop) in path {
+            assert!(hop.vc >= 2, "Y-phase flits ride VC group 1 (vc={})", hop.vc);
+        }
+    }
+
+    #[test]
+    fn mesh_never_wraps() {
+        let g = geo(Topology::Mesh);
+        for src in 0..64 {
+            for dst in 0..64 {
+                assert!(trace(&g, src, dst, 4).iter().all(|(_, h)| !h.wraps));
+            }
+        }
+    }
+
+    /// Turn-restriction deadlock-freedom argument, checked structurally:
+    /// enumerate every (in-port -> out-port) turn the router can produce and
+    /// assert the forbidden Y->X turns never occur.
+    #[test]
+    fn no_y_to_x_turns() {
+        for topo in [Topology::Mesh, Topology::TorusMesh] {
+            let g = geo(topo);
+            for src in 0..64 {
+                for dst in 0..64 {
+                    let path = trace(&g, src, dst, 4);
+                    for w in path.windows(2) {
+                        let a = w[0].1.port;
+                        let b = w[1].1.port;
+                        let a_is_y = matches!(a, Port::North | Port::South);
+                        let b_is_x = matches!(b, Port::East | Port::West);
+                        assert!(!(a_is_y && b_is_x), "Y->X turn {a:?}->{b:?}");
+                    }
+                }
+            }
+        }
+    }
+}

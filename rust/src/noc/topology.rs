@@ -1,0 +1,172 @@
+//! NoC topologies: 2D Cartesian Mesh and 2D Torus-Mesh (§6.1, §6.4).
+//!
+//! Cells are laid out row-major on a `dim_x x dim_y` grid. The Torus-Mesh
+//! adds wrap-around links in both dimensions, halving the average hop count
+//! at the cost of ~50% more network resources (energy model, §6.1).
+
+use crate::arch::addr::CellId;
+use crate::noc::message::Port;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Topology {
+    Mesh,
+    TorusMesh,
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Topology::Mesh => write!(f, "mesh"),
+            Topology::TorusMesh => write!(f, "torus"),
+        }
+    }
+}
+
+/// Geometry helper bound to a chip size + topology.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    pub dim_x: u32,
+    pub dim_y: u32,
+    pub topology: Topology,
+    /// log2(dim_x) when dim_x is a power of two — `coords` is on the
+    /// router hot path and a shift beats a div (chips are usually 2^k).
+    x_shift: u8,
+}
+
+impl Geometry {
+    pub fn new(dim_x: u32, dim_y: u32, topology: Topology) -> Self {
+        let x_shift = if dim_x.is_power_of_two() { dim_x.trailing_zeros() as u8 } else { u8::MAX };
+        Geometry { dim_x, dim_y, topology, x_shift }
+    }
+
+    #[inline]
+    pub fn coords(&self, cc: CellId) -> (u32, u32) {
+        if self.x_shift != u8::MAX {
+            (cc & (self.dim_x - 1), cc >> self.x_shift)
+        } else {
+            (cc % self.dim_x, cc / self.dim_x)
+        }
+    }
+
+    #[inline]
+    pub fn cell_at(&self, x: u32, y: u32) -> CellId {
+        y * self.dim_x + x
+    }
+
+    /// Neighbour cell through `port`, or `None` at a mesh edge.
+    pub fn neighbor(&self, cc: CellId, port: Port) -> Option<CellId> {
+        let (x, y) = self.coords(cc);
+        let (dx, dy) = self.dims();
+        match (port, self.topology) {
+            (Port::North, Topology::Mesh) => (y > 0).then(|| self.cell_at(x, y - 1)),
+            (Port::South, Topology::Mesh) => (y + 1 < dy).then(|| self.cell_at(x, y + 1)),
+            (Port::West, Topology::Mesh) => (x > 0).then(|| self.cell_at(x - 1, y)),
+            (Port::East, Topology::Mesh) => (x + 1 < dx).then(|| self.cell_at(x + 1, y)),
+            (Port::North, Topology::TorusMesh) => Some(self.cell_at(x, (y + dy - 1) % dy)),
+            (Port::South, Topology::TorusMesh) => Some(self.cell_at(x, (y + 1) % dy)),
+            (Port::West, Topology::TorusMesh) => Some(self.cell_at((x + dx - 1) % dx, y)),
+            (Port::East, Topology::TorusMesh) => Some(self.cell_at((x + 1) % dx, y)),
+            (Port::Local, _) => Some(cc),
+        }
+    }
+
+    #[inline]
+    fn dims(&self) -> (u32, u32) {
+        (self.dim_x, self.dim_y)
+    }
+
+    /// Signed minimal displacement along one dimension (torus picks the
+    /// shorter way round; ties resolve to the positive direction).
+    #[inline]
+    pub fn delta(&self, from: u32, to: u32, dim: u32) -> i64 {
+        let straight = to as i64 - from as i64;
+        match self.topology {
+            Topology::Mesh => straight,
+            Topology::TorusMesh => {
+                let d = dim as i64;
+                let wrapped = ((straight % d) + d + d / 2) % d - d / 2;
+                // `wrapped` is in [-dim/2, dim/2): ties (|Δ| == dim/2) come
+                // out negative; flip them positive for a fixed convention.
+                if wrapped * 2 == -d {
+                    d / 2
+                } else {
+                    wrapped
+                }
+            }
+        }
+    }
+
+    /// Minimal hop distance between two cells under this topology.
+    pub fn distance(&self, a: CellId, b: CellId) -> u32 {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        (self.delta(ax, bx, self.dim_x).unsigned_abs()
+            + self.delta(ay, by, self.dim_y).unsigned_abs()) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_edges_have_no_neighbors() {
+        let g = Geometry::new(4, 4, Topology::Mesh);
+        assert_eq!(g.neighbor(0, Port::North), None);
+        assert_eq!(g.neighbor(0, Port::West), None);
+        assert_eq!(g.neighbor(0, Port::East), Some(1));
+        assert_eq!(g.neighbor(0, Port::South), Some(4));
+        assert_eq!(g.neighbor(15, Port::South), None);
+        assert_eq!(g.neighbor(15, Port::East), None);
+    }
+
+    #[test]
+    fn torus_wraps() {
+        let g = Geometry::new(4, 4, Topology::TorusMesh);
+        assert_eq!(g.neighbor(0, Port::North), Some(12));
+        assert_eq!(g.neighbor(0, Port::West), Some(3));
+        assert_eq!(g.neighbor(12, Port::South), Some(0));
+        assert_eq!(g.neighbor(3, Port::East), Some(0));
+    }
+
+    #[test]
+    fn neighbor_is_symmetric() {
+        for topo in [Topology::Mesh, Topology::TorusMesh] {
+            let g = Geometry::new(5, 3, topo);
+            for cc in 0..15 {
+                for p in crate::noc::message::CARDINALS {
+                    if let Some(n) = g.neighbor(cc, p) {
+                        assert_eq!(g.neighbor(n, p.opposite()), Some(cc), "{topo:?} {cc} {p:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torus_distance_uses_wrap() {
+        let g = Geometry::new(8, 8, Topology::TorusMesh);
+        assert_eq!(g.distance(g.cell_at(0, 0), g.cell_at(7, 0)), 1);
+        assert_eq!(g.distance(g.cell_at(0, 0), g.cell_at(4, 4)), 8);
+        let m = Geometry::new(8, 8, Topology::Mesh);
+        assert_eq!(m.distance(m.cell_at(0, 0), m.cell_at(7, 0)), 7);
+    }
+
+    #[test]
+    fn distance_zero_iff_same() {
+        let g = Geometry::new(6, 6, Topology::TorusMesh);
+        for a in 0..36 {
+            for b in 0..36 {
+                assert_eq!(g.distance(a, b) == 0, a == b);
+            }
+        }
+    }
+
+    #[test]
+    fn delta_tie_is_positive() {
+        let g = Geometry::new(8, 8, Topology::TorusMesh);
+        assert_eq!(g.delta(0, 4, 8), 4);
+        assert_eq!(g.delta(4, 0, 8), 4);
+        assert_eq!(g.delta(0, 5, 8), -3);
+    }
+}

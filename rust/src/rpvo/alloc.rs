@@ -1,0 +1,167 @@
+//! Vertex-object allocation policies (§6.1 "Affinity of Object Allocation",
+//! Fig. 4).
+//!
+//! *Random Allocator*: uniform over all compute cells — used for root RPVOs
+//! and for rhizome members, dispersing hot vertices across chip regions
+//! (Valiant-flavoured hot-spot avoidance).
+//!
+//! *Vicinity Allocator*: random among the nearest cells with space, in
+//! growing Manhattan rings around an anchor — used for ghost vertices to
+//! bound intra-vertex (root->ghost) latency.
+
+use crate::arch::addr::CellId;
+use crate::noc::topology::Geometry;
+use crate::util::rng::Rng;
+
+/// Tracks per-cell arena occupancy during graph construction.
+pub struct Allocator {
+    geo: Geometry,
+    /// Objects installed per cell.
+    pub counts: Vec<u32>,
+    /// Max objects per cell (models the small local SRAM).
+    pub capacity: u32,
+    rng: Rng,
+}
+
+impl Allocator {
+    pub fn new(geo: Geometry, capacity: u32, seed: u64) -> Self {
+        let n = (geo.dim_x * geo.dim_y) as usize;
+        Allocator { geo, counts: vec![0; n], capacity, rng: Rng::new(seed) }
+    }
+
+    fn has_space(&self, c: CellId) -> bool {
+        self.counts[c as usize] < self.capacity
+    }
+
+    fn take(&mut self, c: CellId) -> CellId {
+        self.counts[c as usize] += 1;
+        c
+    }
+
+    /// Uniform-random cell with space (Fig. 4b). Bounded retries, then a
+    /// deterministic scan so allocation only fails when the chip is full.
+    pub fn random(&mut self) -> anyhow::Result<CellId> {
+        let n = self.counts.len() as u64;
+        for _ in 0..64 {
+            let c = self.rng.below(n) as CellId;
+            if self.has_space(c) {
+                return Ok(self.take(c));
+            }
+        }
+        let start = self.rng.below(n) as usize;
+        for i in 0..n as usize {
+            let c = ((start + i) % n as usize) as CellId;
+            if self.has_space(c) {
+                return Ok(self.take(c));
+            }
+        }
+        anyhow::bail!("chip out of object memory ({} cells full)", n)
+    }
+
+    /// Nearest-ring random cell with space around `anchor` (Fig. 4a).
+    pub fn vicinity(&mut self, anchor: CellId) -> anyhow::Result<CellId> {
+        if self.has_space(anchor) {
+            return Ok(self.take(anchor));
+        }
+        let max_r = (self.geo.dim_x + self.geo.dim_y) as i64;
+        let (ax, ay) = self.geo.coords(anchor);
+        let mut ring: Vec<CellId> = Vec::new();
+        for r in 1..=max_r {
+            ring.clear();
+            // All cells at Manhattan radius r (respecting topology wrap).
+            for dx in -r..=r {
+                let dy = r - dx.abs();
+                for dy in if dy == 0 { vec![0] } else { vec![dy, -dy] } {
+                    if let Some(c) = self.offset(ax, ay, dx, dy) {
+                        if self.has_space(c) {
+                            ring.push(c);
+                        }
+                    }
+                }
+            }
+            if !ring.is_empty() {
+                ring.sort_unstable();
+                ring.dedup();
+                let pick = ring[self.rng.usize_below(ring.len())];
+                return Ok(self.take(pick));
+            }
+        }
+        anyhow::bail!("no space within any ring of {anchor}")
+    }
+
+    fn offset(&self, x: u32, y: u32, dx: i64, dy: i64) -> Option<CellId> {
+        use crate::noc::topology::Topology;
+        let (w, h) = (self.geo.dim_x as i64, self.geo.dim_y as i64);
+        let (nx, ny) = (x as i64 + dx, y as i64 + dy);
+        match self.geo.topology {
+            Topology::Mesh => {
+                if nx < 0 || ny < 0 || nx >= w || ny >= h {
+                    None
+                } else {
+                    Some(self.geo.cell_at(nx as u32, ny as u32))
+                }
+            }
+            Topology::TorusMesh => {
+                Some(self.geo.cell_at(((nx % w + w) % w) as u32, ((ny % h + h) % h) as u32))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::topology::Topology;
+
+    fn alloc(cap: u32) -> Allocator {
+        Allocator::new(Geometry::new(8, 8, Topology::Mesh), cap, 42)
+    }
+
+    #[test]
+    fn vicinity_prefers_anchor_then_rings() {
+        let mut a = alloc(2);
+        assert_eq!(a.vicinity(27).unwrap(), 27);
+        assert_eq!(a.vicinity(27).unwrap(), 27);
+        // anchor full: next picks must be at distance 1
+        let third = a.vicinity(27).unwrap();
+        assert_eq!(a.geo.distance(27, third), 1);
+    }
+
+    #[test]
+    fn random_fills_whole_chip_before_failing() {
+        let mut a = alloc(1);
+        for _ in 0..64 {
+            a.random().unwrap();
+        }
+        assert!(a.random().is_err(), "65th object cannot fit 8x8 cap 1");
+        assert!(a.counts.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn vicinity_respects_capacity_strictly() {
+        let mut a = alloc(1);
+        for _ in 0..64 {
+            a.vicinity(0).unwrap();
+        }
+        assert!(a.vicinity(0).is_err());
+    }
+
+    #[test]
+    fn torus_vicinity_wraps() {
+        let mut a = Allocator::new(Geometry::new(4, 4, Topology::TorusMesh), 1, 7);
+        a.counts[0] = 1; // anchor full
+        // ring 1 of cell 0 on a torus: 1, 4, 3 (west wrap), 12 (north wrap)
+        let c = a.vicinity(0).unwrap();
+        assert!([1u32, 3, 4, 12].contains(&c), "got {c}");
+    }
+
+    #[test]
+    fn random_spreads() {
+        let mut a = alloc(u32::MAX);
+        let mut picks = std::collections::HashSet::new();
+        for _ in 0..64 {
+            picks.insert(a.random().unwrap());
+        }
+        assert!(picks.len() > 30, "random allocator should spread: {}", picks.len());
+    }
+}

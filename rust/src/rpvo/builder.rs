@@ -1,0 +1,356 @@
+//! Graph construction onto the chip (§6.1 "Graph Construction").
+//!
+//! 1. Root RPVOs are allocated first (randomly, dispersing load); skewed
+//!    in-degree vertices get up to `rpvo_max` rhizome members (Eq. 1), each
+//!    member a full RPVO with its own random-allocated root (Fig. 4c).
+//! 2. Edges are then inserted: each in-edge of `v` points at the rhizome
+//!    member chosen by the cutoff cycling; each out-edge of `u` is stored
+//!    in one of `u`'s members (round-robin) — inside that member's RPVO
+//!    tree, spilling into vicinity-allocated ghosts whenever the local
+//!    edge-list fills (§3.1).
+//! 3. Metadata (degrees, rhizome width) and initial app state are fixed up
+//!    once the structure is complete.
+
+use crate::arch::addr::Address;
+use crate::arch::chip::Chip;
+use crate::arch::config::AllocPolicy;
+use crate::diffusive::handler::{Application, VertexMeta};
+use crate::graph::model::HostGraph;
+use crate::noc::topology::Geometry;
+use crate::rpvo::alloc::Allocator;
+use crate::rpvo::object::{Edge, Object};
+use crate::rpvo::rhizome;
+
+/// Host-side handle to the constructed graph.
+#[derive(Clone, Debug)]
+pub struct BuiltGraph {
+    /// `roots[vid][member]` = address of that rhizome member's root object.
+    pub roots: Vec<Vec<Address>>,
+    pub n: u32,
+    /// Total objects (roots + ghosts) installed.
+    pub objects: u64,
+    /// Vertices with more than one rhizome member.
+    pub rhizomatic_vertices: u64,
+    pub cutoff_chunk: u32,
+}
+
+impl BuiltGraph {
+    /// The user-visible address of a vertex (member-0 root), Listing 1.
+    pub fn addr_of(&self, vid: u32) -> Address {
+        self.roots[vid as usize][0]
+    }
+}
+
+/// Construct `g` onto `chip` per the chip's configured policies.
+pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Result<BuiltGraph> {
+    let cfg = chip.cfg.clone();
+    let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
+    let mut alloc = Allocator::new(geo, cfg.cell_mem_objects as u32, cfg.seed);
+
+    let in_deg = g.in_degrees();
+    let out_deg = g.out_degrees();
+    let max_in = in_deg.iter().copied().max().unwrap_or(0);
+    // Eq. 1, floored: §6.1 deploys rhizomes for the *highly skewed*
+    // in-degree vertices. On low-skew graphs (E18) Eq. 1 alone would give a
+    // cutoff near 1 and split every vertex; a member is only worth creating
+    // when it absorbs at least a few local edge-lists worth of in-edges.
+    let min_cutoff = (4 * cfg.local_edgelist_size) as u32;
+    let cutoff = rhizome::cutoff_chunk(max_in, cfg.rpvo_max).max(min_cutoff);
+
+    // -- 1. allocate member roots ---------------------------------------
+    let n = g.n as usize;
+    let mut roots: Vec<Vec<Address>> = Vec::with_capacity(n);
+    let mut rhizomatic = 0u64;
+    for vid in 0..g.n {
+        let members = if cfg.rpvo_max > 1 {
+            rhizome::members_for(in_deg[vid as usize], cutoff, cfg.rpvo_max)
+        } else {
+            1
+        };
+        if members > 1 {
+            rhizomatic += 1;
+        }
+        let mut addrs = Vec::with_capacity(members as usize);
+        for m in 0..members {
+            let cc = match cfg.alloc {
+                // Rhizome/root dispersal is the point of Fig. 4b/4c.
+                AllocPolicy::Mixed | AllocPolicy::Random => alloc.random()?,
+                AllocPolicy::Vicinity => {
+                    if let Some(prev) = addrs.last() {
+                        let prev: &Address = prev;
+                        alloc.vicinity(prev.cc)?
+                    } else {
+                        alloc.random()?
+                    }
+                }
+            };
+            // State is re-initialized after metadata fixup; init with a
+            // placeholder meta for now.
+            let state = chip.app.init(&VertexMeta { vid, ..Default::default() });
+            let mut obj = Object::new_root(vid, m, state);
+            obj.meta.vid = vid;
+            addrs.push(chip.install(cc, obj));
+        }
+        roots.push(addrs);
+    }
+
+    // -- 2. insert edges --------------------------------------------------
+    // Per-member RPVO trees, breadth-balanced: `tree[vid][member]` lists the
+    // member's objects in creation order; insertion fills the first object
+    // with edge space, else creates a ghost under the first with child space.
+    let mut trees: Vec<Vec<Vec<Address>>> =
+        roots.iter().map(|ms| ms.iter().map(|&a| vec![a]).collect()).collect();
+    let mut in_seq = vec![0u32; n];
+    let mut out_seq = vec![0u32; n];
+    let mut objects = roots.iter().map(|m| m.len() as u64).sum::<u64>();
+
+    for &(u, v, w) in &g.edges {
+        let (u_us, v_us) = (u as usize, v as usize);
+        // Destination: rhizome member of v chosen by in-edge cycling (Eq. 1).
+        let v_members = roots[v_us].len() as u32;
+        let dst_member = rhizome::member_for_in_edge(in_seq[v_us], cutoff, v_members);
+        in_seq[v_us] += 1;
+        let to = roots[v_us][dst_member as usize];
+        // Source: u's member, round-robin across members for balance.
+        let u_members = roots[u_us].len() as u32;
+        let src_member = (out_seq[u_us] % u_members) as usize;
+        out_seq[u_us] += 1;
+
+        insert_edge(
+            chip,
+            &mut alloc,
+            &mut trees[u_us][src_member],
+            Edge { to, weight: w },
+            &cfg,
+            u,
+            src_member as u32,
+            &mut objects,
+        )?;
+    }
+
+    // -- 3. metadata + state fixup ----------------------------------------
+    for vid in 0..g.n {
+        let members = &roots[vid as usize];
+        let width = members.len() as u32;
+        // In-degree share per member from the same cycling the edges used.
+        let mut shares = vec![0u32; members.len()];
+        for s in 0..in_deg[vid as usize] {
+            shares[rhizome::member_for_in_edge(s, cutoff, width) as usize] += 1;
+        }
+        for (m, &addr) in members.iter().enumerate() {
+            let meta = VertexMeta {
+                vid,
+                out_degree: out_deg[vid as usize],
+                in_degree_share: shares[m],
+                rhizome_size: width,
+                total_vertices: g.n,
+            };
+            // Rhizome links: full sibling list (excluding self), §3.2.
+            let siblings: Vec<Address> =
+                members.iter().enumerate().filter(|&(i, _)| i != m).map(|(_, &a)| a).collect();
+            // Fix up every object in this member's tree.
+            for &oaddr in &trees[vid as usize][m] {
+                let state = chip.app.init(&meta);
+                let obj = chip.object_mut(oaddr);
+                obj.meta = meta;
+                obj.state = state;
+            }
+            let root = chip.object_mut(addr);
+            root.rhizome = siblings;
+        }
+    }
+
+    Ok(BuiltGraph { roots, n: g.n, objects, rhizomatic_vertices: rhizomatic, cutoff_chunk: cutoff })
+}
+
+/// Insert one out-edge into a member's RPVO tree (§3.1 semantics: when the
+/// local edge-list is full, the edge goes into a ghost, growing the tree).
+#[allow(clippy::too_many_arguments)]
+fn insert_edge<A: Application>(
+    chip: &mut Chip<A>,
+    alloc: &mut Allocator,
+    tree: &mut Vec<Address>,
+    edge: Edge,
+    cfg: &crate::arch::config::ChipConfig,
+    vid: u32,
+    member: u32,
+    objects: &mut u64,
+) -> anyhow::Result<()> {
+    // First object with edge space, in creation (breadth) order.
+    for &addr in tree.iter() {
+        let obj = chip.object_mut(addr);
+        if obj.edges.len() < cfg.local_edgelist_size {
+            obj.edges.push(edge);
+            return Ok(());
+        }
+    }
+    // All full: grow a ghost under the shallowest object with child space.
+    let parent = *tree
+        .iter()
+        .find(|&&a| chip.object(a).ghosts.len() < cfg.ghost_arity)
+        .ok_or_else(|| anyhow::anyhow!("RPVO tree saturated (arity too small?)"))?;
+    let cc = match cfg.alloc {
+        AllocPolicy::Random => alloc.random()?,
+        AllocPolicy::Mixed | AllocPolicy::Vicinity => alloc.vicinity(parent.cc)?,
+    };
+    let state = chip.app.init(&VertexMeta { vid, ..Default::default() });
+    let mut ghost = Object::new_ghost(vid, member, state);
+    ghost.edges.push(edge);
+    let gaddr = chip.install(cc, ghost);
+    chip.object_mut(parent).ghosts.push(gaddr);
+    tree.push(gaddr);
+    *objects += 1;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ChipConfig;
+    use crate::diffusive::action::Work;
+    use crate::noc::message::ActionMsg;
+
+    /// State-less probe app for structural tests.
+    struct Probe;
+    impl Application for Probe {
+        type State = ();
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn init(&self, _m: &VertexMeta) {}
+        fn predicate(&self, _s: &(), _m: &ActionMsg) -> bool {
+            false
+        }
+        fn work(&self, _s: &mut (), _m: &ActionMsg, _meta: &VertexMeta) -> Work {
+            Work::none(0)
+        }
+        fn on_rhizome_share(&self, _s: &mut (), _m: &ActionMsg, _meta: &VertexMeta) -> Work {
+            Work::none(0)
+        }
+        fn apply_relay(&self, _s: &mut (), _p: u32, _a: u32) {}
+        fn diffuse_live(&self, _s: &(), _p: u32, _a: u32) -> bool {
+            false
+        }
+        fn edge_payload(&self, p: u32, a: u32, _w: u32) -> (u32, u32) {
+            (p, a)
+        }
+    }
+
+    fn star(n_leaves: u32) -> HostGraph {
+        // leaves -> hub (vertex 0): hub in-degree = n_leaves.
+        let edges = (1..=n_leaves).map(|v| (v, 0, 1)).collect();
+        HostGraph { n: n_leaves + 1, edges }
+    }
+
+    fn count_edges<A: Application>(chip: &Chip<A>) -> usize {
+        chip.cells.iter().flat_map(|c| &c.objects).map(|o| o.edges.len()).sum()
+    }
+
+    #[test]
+    fn every_edge_lands_exactly_once() {
+        let g = crate::graph::rmat::generate(crate::graph::rmat::RmatParams::paper(8, 8, 3));
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 4;
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        assert_eq!(count_edges(&chip), g.m());
+        assert_eq!(built.n, g.n);
+    }
+
+    #[test]
+    fn hub_vertex_gets_rhizome_members() {
+        let g = star(1000);
+        let mut cfg = ChipConfig::torus(8);
+        cfg.rpvo_max = 8;
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        assert_eq!(built.roots[0].len(), 8, "hub splits into rpvo_max members");
+        assert!(built.roots[1..].iter().all(|m| m.len() == 1), "leaves stay plain");
+        assert_eq!(built.rhizomatic_vertices, 1);
+        // in-degree shares sum to the hub's in-degree
+        let share_sum: u32 =
+            built.roots[0].iter().map(|&a| chip.object(a).meta.in_degree_share).sum();
+        assert_eq!(share_sum, 1000);
+        // siblings fully linked
+        for &a in &built.roots[0] {
+            assert_eq!(chip.object(a).rhizome.len(), 7);
+        }
+    }
+
+    #[test]
+    fn rpvo_max_one_never_creates_members() {
+        let g = star(500);
+        let cfg = ChipConfig::torus(8); // rpvo_max = 1
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        assert!(built.roots.iter().all(|m| m.len() == 1));
+        assert_eq!(built.rhizomatic_vertices, 0);
+    }
+
+    #[test]
+    fn big_out_degree_spills_into_ghosts() {
+        // hub -> 100 leaves, chunk 8: needs ceil(100/8)=13 objects.
+        let edges = (1..=100).map(|v| (0, v, 1)).collect();
+        let g = HostGraph { n: 101, edges };
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 8;
+        cfg.ghost_arity = 2;
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        let ghost_count = chip
+            .cells
+            .iter()
+            .flat_map(|c| &c.objects)
+            .filter(|o| !o.is_root() && o.vid == 0)
+            .count();
+        assert_eq!(ghost_count, 12, "13 chunks = root + 12 ghosts");
+        assert_eq!(count_edges(&chip), 100);
+        assert!(built.objects >= 101 + 12);
+        // tree reachable from root covers all ghosts
+        let root = chip.object(built.addr_of(0));
+        assert!(!root.ghosts.is_empty());
+    }
+
+    #[test]
+    fn meta_fixup_consistent() {
+        let g = star(100);
+        let mut cfg = ChipConfig::torus(8);
+        cfg.rpvo_max = 4;
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        for vid in 1..=100u32 {
+            let o = chip.object(built.addr_of(vid));
+            assert_eq!(o.meta.out_degree, 1);
+            assert_eq!(o.meta.rhizome_size, 1);
+            assert_eq!(o.meta.total_vertices, 101);
+        }
+        let hub = chip.object(built.addr_of(0));
+        assert_eq!(hub.meta.out_degree, 0);
+        assert_eq!(hub.meta.rhizome_size, built.roots[0].len() as u32);
+    }
+
+    #[test]
+    fn vicinity_keeps_ghosts_near_root() {
+        let edges = (1..=200).map(|v| (0, v, 1)).collect();
+        let g = HostGraph { n: 201, edges };
+        let mut cfg = ChipConfig::torus(16);
+        cfg.local_edgelist_size = 8;
+        cfg.cell_mem_objects = 4; // force spreading
+        let mut chip = Chip::new(cfg.clone(), Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
+        let root = built.addr_of(0);
+        // mean distance of vertex-0 ghosts from the root should be small
+        let mut dists = vec![];
+        for (ci, cell) in chip.cells.iter().enumerate() {
+            for o in &cell.objects {
+                if o.vid == 0 && !o.is_root() {
+                    dists.push(geo.distance(root.cc, ci as u32) as f64);
+                }
+            }
+        }
+        assert!(!dists.is_empty());
+        let mean = crate::util::mean(&dists);
+        assert!(mean < 6.0, "vicinity ghosts too far: mean {mean}");
+    }
+}

@@ -1,0 +1,8 @@
+//! The Recursively Parallel Vertex Object and its rhizomatic extension
+//! (§3): vertex objects, allocation policies, sizing math, graph builder.
+
+pub mod alloc;
+pub mod builder;
+pub mod dynamic;
+pub mod object;
+pub mod rhizome;

@@ -1,0 +1,101 @@
+//! Vertex objects: the building blocks of the RPVO (§3.1).
+//!
+//! A vertex is represented by one or more RPVOs (rhizome members, §3.2);
+//! each RPVO is a tree of vertex objects — a *root* holding program data
+//! plus a chunk of out-edges (the *local edge-list*), and *ghost* objects
+//! holding further chunks. Edges are PGAS pointers ([`Address`]) to the
+//! root objects of other vertices' RPVOs, so structure mutations are
+//! pointer surgery, not matrix rewrites.
+
+use crate::arch::addr::Address;
+use crate::diffusive::handler::VertexMeta;
+
+/// An out-edge: PGAS pointer + weight (§3, Listing 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub to: Address,
+    pub weight: u32,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ObjKind {
+    /// User-addressable root of an RPVO; holds program data. One per
+    /// rhizome member.
+    Root,
+    /// Holds an out-edge chunk + child pointers only (§3.1).
+    Ghost,
+}
+
+/// One vertex object in a cell's arena.
+#[derive(Clone, Debug)]
+pub struct Object<S> {
+    pub kind: ObjKind,
+    /// Global vertex id this object belongs to.
+    pub vid: u32,
+    /// Which rhizome member of the vertex this object belongs to.
+    pub member: u32,
+    /// Local edge-list chunk (bounded by `ChipConfig::local_edgelist_size`).
+    pub edges: Vec<Edge>,
+    /// Ghost children (bounded by `ChipConfig::ghost_arity`).
+    pub ghosts: Vec<Address>,
+    /// Rhizome siblings — addresses of the vertex's *other* member roots
+    /// (roots only; ghosts leave it empty).
+    pub rhizome: Vec<Address>,
+    /// Runtime metadata (degrees, rhizome width, |V|).
+    pub meta: VertexMeta,
+    /// Application state (ghosts carry a relayed snapshot).
+    pub state: S,
+}
+
+impl<S> Object<S> {
+    pub fn new_root(vid: u32, member: u32, state: S) -> Self {
+        Object {
+            kind: ObjKind::Root,
+            vid,
+            member,
+            edges: Vec::new(),
+            ghosts: Vec::new(),
+            rhizome: Vec::new(),
+            meta: VertexMeta { vid, ..Default::default() },
+            state,
+        }
+    }
+
+    pub fn new_ghost(vid: u32, member: u32, state: S) -> Self {
+        Object { kind: ObjKind::Ghost, ..Object::new_root(vid, member, state) }
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.kind == ObjKind::Root
+    }
+
+    /// SRAM footprint model: header + edges + child/sibling pointers, in
+    /// 64-bit words (energy accounting + capacity checks).
+    pub fn words(&self) -> usize {
+        4 + self.edges.len() + self.ghosts.len() + self.rhizome.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_vs_ghost() {
+        let r: Object<u32> = Object::new_root(7, 0, 0);
+        let g: Object<u32> = Object::new_ghost(7, 0, 0);
+        assert!(r.is_root());
+        assert!(!g.is_root());
+        assert_eq!(g.vid, 7);
+        assert_eq!(g.kind, ObjKind::Ghost);
+    }
+
+    #[test]
+    fn words_scale_with_content() {
+        let mut o: Object<u32> = Object::new_root(1, 0, 0);
+        let base = o.words();
+        o.edges.push(Edge { to: Address::new(0, 0), weight: 1 });
+        o.ghosts.push(Address::new(1, 0));
+        assert_eq!(o.words(), base + 2);
+    }
+}

@@ -1,0 +1,84 @@
+//! Rhizome sizing (§3.2, §6.1 "Graph Construction", Eq. 1).
+//!
+//! Highly skewed in-degree vertices are split into up to `rpvo_max` RPVOs
+//! joined by rhizome-links. In-edges are assigned in runs of
+//! `cutoff_chunk = indegree_max / rpvo_max`: the first chunk points at
+//! member 0, the next at member 1, …, cycling after `rpvo_max` members.
+//! Deriving the cutoff from the graph's max in-degree keeps the method
+//! uniform across inputs (no per-graph tuning).
+
+/// Eq. 1: `cutoff_chunk = indegree_max / rpvo_max` (at least 1).
+pub fn cutoff_chunk(indegree_max: u32, rpvo_max: u32) -> u32 {
+    debug_assert!(rpvo_max >= 1);
+    (indegree_max / rpvo_max.max(1)).max(1)
+}
+
+/// Number of rhizome members a vertex with `in_degree` gets.
+///
+/// Members are created on demand as in-edge chunks fill: a vertex needs
+/// `ceil(in_degree / cutoff)` members, capped at `rpvo_max`.
+pub fn members_for(in_degree: u32, cutoff: u32, rpvo_max: u32) -> u32 {
+    if in_degree == 0 {
+        return 1;
+    }
+    in_degree.div_ceil(cutoff).clamp(1, rpvo_max)
+}
+
+/// Which member the `seq`-th in-edge of a vertex points at (0-based),
+/// cycling back to member 0 after `members` chunks (§6.1).
+pub fn member_for_in_edge(seq: u32, cutoff: u32, members: u32) -> u32 {
+    (seq / cutoff) % members.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_cutoff() {
+        assert_eq!(cutoff_chunk(1600, 16), 100);
+        assert_eq!(cutoff_chunk(7, 16), 1, "cutoff is floored at 1");
+        assert_eq!(cutoff_chunk(100, 1), 100);
+    }
+
+    #[test]
+    fn members_scale_with_in_degree() {
+        let cutoff = cutoff_chunk(1000, 10); // 100
+        assert_eq!(members_for(0, cutoff, 10), 1);
+        assert_eq!(members_for(99, cutoff, 10), 1);
+        assert_eq!(members_for(100, cutoff, 10), 1);
+        assert_eq!(members_for(101, cutoff, 10), 2);
+        assert_eq!(members_for(1000, cutoff, 10), 10);
+        assert_eq!(members_for(100_000, cutoff, 10), 10, "capped at rpvo_max");
+    }
+
+    #[test]
+    fn rpvo_max_one_means_no_rhizomes() {
+        let cutoff = cutoff_chunk(50_000, 1);
+        for deg in [0u32, 1, 100, 50_000] {
+            assert_eq!(members_for(deg, cutoff, 1), 1);
+        }
+    }
+
+    #[test]
+    fn in_edges_cycle_over_members() {
+        // cutoff 2, 3 members: seq 0,1 -> m0; 2,3 -> m1; 4,5 -> m2; 6,7 -> m0
+        let assignments: Vec<u32> = (0..8).map(|s| member_for_in_edge(s, 2, 3)).collect();
+        assert_eq!(assignments, vec![0, 0, 1, 1, 2, 2, 0, 0]);
+    }
+
+    #[test]
+    fn max_in_degree_vertex_uses_all_members() {
+        let max_in = 1234u32;
+        let rpvo_max = 16;
+        let cutoff = cutoff_chunk(max_in, rpvo_max);
+        let members = members_for(max_in, cutoff, rpvo_max);
+        assert_eq!(members, rpvo_max);
+        // every member receives at least one in-edge
+        let mut seen = vec![false; members as usize];
+        for s in 0..max_in {
+            seen[member_for_in_edge(s, cutoff, members) as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,88 @@
+//! Artifact registry: locate `artifacts/*.hlo.txt` and pick the right
+//! padded size for a graph (`python/compile/aot.py` emits sizes 256, 1024,
+//! 2048 by default; names are `{step}_{N}.hlo.txt`).
+
+use std::path::PathBuf;
+
+/// Must match `python/compile/kernels/ref.py::INF`.
+pub const INF: f32 = 1.0e30;
+
+/// Must match `python/compile/model.py::DAMPING`.
+pub const DAMPING: f32 = 0.85;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Step {
+    PagerankStep,
+    RelaxStep,
+}
+
+impl Step {
+    pub fn stem(self) -> &'static str {
+        match self {
+            Step::PagerankStep => "pagerank_step",
+            Step::RelaxStep => "relax_step",
+        }
+    }
+}
+
+/// Artifact directory: `$AMCCA_ARTIFACTS` or `./artifacts`.
+pub fn dir() -> PathBuf {
+    std::env::var_os("AMCCA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|| "artifacts".into())
+}
+
+/// Padded sizes available for `step`, ascending.
+pub fn available_sizes(step: Step) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir()) else { return sizes };
+    let prefix = format!("{}_", step.stem());
+    for e in entries.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(rest) = name.strip_prefix(&prefix) {
+            if let Some(num) = rest.strip_suffix(".hlo.txt") {
+                if let Ok(n) = num.parse() {
+                    sizes.push(n);
+                }
+            }
+        }
+    }
+    sizes.sort_unstable();
+    sizes
+}
+
+/// Smallest artifact that fits `n` vertices (graphs are padded up to it).
+pub fn pick_size(step: Step, n: usize) -> anyhow::Result<usize> {
+    let sizes = available_sizes(step);
+    sizes.iter().copied().find(|&s| s >= n).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no {} artifact fits n={n} (available: {sizes:?}) — run `make artifacts`",
+            step.stem()
+        )
+    })
+}
+
+/// Full path of the artifact for (`step`, padded size).
+pub fn path(step: Step, size: usize) -> PathBuf {
+    dir().join(format!("{}_{}.hlo.txt", step.stem(), size))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_follow_naming_scheme() {
+        let p = path(Step::RelaxStep, 1024);
+        assert!(p.to_string_lossy().ends_with("relax_step_1024.hlo.txt"));
+        assert_eq!(Step::PagerankStep.stem(), "pagerank_step");
+    }
+
+    #[test]
+    fn pick_size_prefers_smallest_fit() {
+        // Only meaningful when artifacts exist (built by `make artifacts`);
+        // otherwise pick_size errors cleanly.
+        match pick_size(Step::RelaxStep, 100) {
+            Ok(s) => assert!(s >= 100),
+            Err(e) => assert!(e.to_string().contains("make artifacts")),
+        }
+    }
+}

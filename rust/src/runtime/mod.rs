@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (Layer-2 JAX step functions with Layer-1 Pallas kernels, lowered to HLO
+//! text) and executes them on the CPU PJRT client — the BSP oracle and
+//! comparator. Python never runs at this layer.
+
+pub mod artifacts;
+pub mod oracle;
+pub mod pjrt;

@@ -1,0 +1,124 @@
+//! BSP oracle/baseline executed through the AOT artifacts (Layer-2 JAX
+//! step functions with Layer-1 Pallas kernels inside, run on the PJRT CPU
+//! client). Rust owns the fixed-point loop; XLA owns each step.
+//!
+//! Two uses (DESIGN.md §2):
+//!   * independent correctness oracle for the asynchronous diffusive apps
+//!     (the paper verified against NetworkX),
+//!   * the bulk-synchronous comparator series in the benches and the
+//!     `bsp_vs_async` end-to-end example.
+
+use crate::graph::model::HostGraph;
+use crate::runtime::artifacts::{self, Step, DAMPING, INF};
+use crate::runtime::pjrt::PjrtRuntime;
+
+/// Dense min-plus weight matrix `w[i*size + j]`, padded to `size`.
+/// BFS: every edge weight 1. SSSP: real weights.
+fn weight_matrix(g: &HostGraph, size: usize, unit: bool) -> Vec<f32> {
+    let mut w = vec![INF; size * size];
+    for &(s, t, wt) in &g.edges {
+        let v = if unit { 1.0 } else { wt as f32 };
+        let cell = &mut w[s as usize * size + t as usize];
+        *cell = cell.min(v); // parallel edges keep the cheapest
+    }
+    w
+}
+
+/// Column-normalized PageRank transition matrix `m[j*size + i] = A[i,j] /
+/// outdeg(i)`, padded to `size` (padded slots are zero columns).
+fn transition_matrix(g: &HostGraph, size: usize) -> Vec<f32> {
+    let outdeg = g.out_degrees();
+    let mut m = vec![0.0f32; size * size];
+    for &(s, t, _) in &g.edges {
+        m[t as usize * size + s as usize] += 1.0 / outdeg[s as usize] as f32;
+    }
+    m
+}
+
+/// Run min-plus relaxation (BFS levels if `unit`, else SSSP distances) to
+/// the fixed point via the `relax_step` artifact. Returns per-vertex f32
+/// distances (INF = unreached).
+pub fn relax_fixpoint(
+    rt: &mut PjrtRuntime,
+    g: &HostGraph,
+    root: u32,
+    unit: bool,
+) -> anyhow::Result<Vec<f32>> {
+    let size = artifacts::pick_size(Step::RelaxStep, g.n as usize)?;
+    let exe = rt.load(&artifacts::path(Step::RelaxStep, size))?;
+    let w = weight_matrix(g, size, unit);
+    let mut dist = vec![INF; size];
+    dist[root as usize] = 0.0;
+    // n-1 steps suffice; stop early at the fixed point.
+    for _ in 0..g.n.max(2) {
+        let next = exe.run_f32(&[(&w, &[size, size]), (&dist, &[size, 1])])?;
+        if next == dist {
+            break;
+        }
+        dist = next;
+    }
+    dist.truncate(g.n as usize);
+    Ok(dist)
+}
+
+/// Run `iters` synchronous PageRank steps via the `pagerank_step` artifact.
+pub fn pagerank_iters(
+    rt: &mut PjrtRuntime,
+    g: &HostGraph,
+    iters: u32,
+) -> anyhow::Result<Vec<f32>> {
+    let size = artifacts::pick_size(Step::PagerankStep, g.n as usize)?;
+    let exe = rt.load(&artifacts::path(Step::PagerankStep, size))?;
+    let m = transition_matrix(g, size);
+    let teleport_v = (1.0 - DAMPING) / g.n as f32;
+    let mut teleport = vec![0.0f32; size];
+    teleport[..g.n as usize].fill(teleport_v);
+    let mut score = vec![0.0f32; size];
+    score[..g.n as usize].fill(1.0 / g.n as f32);
+    for _ in 0..iters {
+        score = exe.run_f32(&[
+            (&m, &[size, size]),
+            (&score, &[size, 1]),
+            (&teleport, &[size, 1]),
+        ])?;
+    }
+    score.truncate(g.n as usize);
+    Ok(score)
+}
+
+/// Convert the f32 relax result to u32 levels/distances (INF -> MAX).
+pub fn to_u32(dist: &[f32]) -> Vec<u32> {
+    dist.iter().map(|&d| if d >= INF * 0.5 { u32::MAX } else { d.round() as u32 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrices_are_padded_and_normalized() {
+        let g = HostGraph { n: 3, edges: vec![(0, 1, 5), (0, 2, 7), (1, 2, 2)] };
+        let w = weight_matrix(&g, 4, false);
+        assert_eq!(w[0 * 4 + 1], 5.0);
+        assert_eq!(w[1 * 4 + 2], 2.0);
+        assert_eq!(w[2 * 4 + 1], INF);
+        assert_eq!(w[3 * 4 + 3], INF, "padding stays INF");
+        let m = transition_matrix(&g, 4);
+        assert_eq!(m[1 * 4 + 0], 0.5, "v0 out-degree 2");
+        assert_eq!(m[2 * 4 + 1], 1.0);
+        let col0: f32 = (0..4).map(|j| m[j * 4 + 0]).sum();
+        assert!((col0 - 1.0).abs() < 1e-6, "columns of real vertices sum to 1");
+    }
+
+    #[test]
+    fn unit_weights_for_bfs() {
+        let g = HostGraph { n: 2, edges: vec![(0, 1, 9)] };
+        let w = weight_matrix(&g, 2, true);
+        assert_eq!(w[1], 1.0);
+    }
+
+    #[test]
+    fn to_u32_maps_inf() {
+        assert_eq!(to_u32(&[0.0, 2.0, INF]), vec![0, 2, u32::MAX]);
+    }
+}

@@ -1,0 +1,70 @@
+//! PJRT CPU runtime: load AOT-compiled HLO text artifacts and execute them
+//! from the Rust coordinator (the `xla` crate over xla_extension 0.5.1).
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax >= 0.5 emits that
+//! this XLA build rejects (see /opt/xla-example/README.md). Python never
+//! runs here: artifacts are produced once by `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 buffers (shape-checked by XLA); the artifact was
+    /// lowered with `return_tuple=True`, so unwrap a 1-tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// PJRT CPU client + executable cache keyed by artifact path.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> anyhow::Result<Self> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached per path).
+    pub fn load(&mut self, path: &Path) -> anyhow::Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(e.clone());
+        }
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let name = path.file_stem().unwrap_or_default().to_string_lossy().into_owned();
+        let rc = std::rc::Rc::new(Executable { exe, name });
+        self.cache.insert(path.to_path_buf(), rc.clone());
+        Ok(rc)
+    }
+}

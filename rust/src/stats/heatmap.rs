@@ -1,0 +1,123 @@
+//! Congestion heat-map frames (Fig. 5): per-cell status snapshots taken
+//! during a run, showing congested cells (any full VC buffer) spreading or
+//! dissipating with/without throttling.
+
+/// One snapshot of per-cell congestion state.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub cycle: u64,
+    pub dim_x: u32,
+    pub dim_y: u32,
+    /// Buffer occupancy fraction per cell (0 = empty, 1 = all buffers full).
+    pub occupancy: Vec<f32>,
+    /// Cells whose congestion flag was raised (exported to neighbours).
+    pub congested: Vec<bool>,
+}
+
+impl Frame {
+    /// Fraction of congested cells — the scalar the bench report prints
+    /// per frame (the paper shows this as a colored chip plot).
+    pub fn congested_fraction(&self) -> f64 {
+        self.congested.iter().filter(|&&c| c).count() as f64 / self.congested.len().max(1) as f64
+    }
+
+    /// ASCII chip plot (Fig. 5-style), one char per cell, downsampled to at
+    /// most `max_dim` columns: ' ' idle, '.' light, 'o' busy, '#' congested.
+    pub fn render(&self, max_dim: u32) -> String {
+        let step = (self.dim_x.max(self.dim_y) + max_dim - 1) / max_dim;
+        let step = step.max(1);
+        let mut out = String::new();
+        let mut y = 0;
+        while y < self.dim_y {
+            let mut x = 0;
+            while x < self.dim_x {
+                // aggregate the step x step tile
+                let mut occ: f32 = 0.0;
+                let mut cong = false;
+                let mut cnt = 0;
+                for yy in y..(y + step).min(self.dim_y) {
+                    for xx in x..(x + step).min(self.dim_x) {
+                        let i = (yy * self.dim_x + xx) as usize;
+                        occ += self.occupancy[i];
+                        cong |= self.congested[i];
+                        cnt += 1;
+                    }
+                }
+                occ /= cnt as f32;
+                out.push(if cong {
+                    '#'
+                } else if occ > 0.5 {
+                    'o'
+                } else if occ > 0.0 {
+                    '.'
+                } else {
+                    ' '
+                });
+                x += step;
+            }
+            out.push('\n');
+            y += step;
+        }
+        out
+    }
+}
+
+/// Collected frames for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Heatmap {
+    pub frames: Vec<Frame>,
+}
+
+impl Heatmap {
+    /// Peak congested fraction across the run (headline scalar for Fig. 5).
+    pub fn peak_congestion(&self) -> f64 {
+        self.frames.iter().map(|f| f.congested_fraction()).fold(0.0, f64::max)
+    }
+
+    /// Mean congested fraction across frames.
+    pub fn mean_congestion(&self) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        self.frames.iter().map(|f| f.congested_fraction()).sum::<f64>() / self.frames.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(cong: &[bool]) -> Frame {
+        Frame {
+            cycle: 0,
+            dim_x: 2,
+            dim_y: 2,
+            occupancy: vec![0.0, 0.3, 0.8, 1.0],
+            congested: cong.to_vec(),
+        }
+    }
+
+    #[test]
+    fn congested_fraction() {
+        let f = frame(&[true, false, false, true]);
+        assert!((f.congested_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_shape_and_symbols() {
+        let f = frame(&[true, false, false, false]);
+        let s = f.render(4);
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.starts_with('#'));
+        assert!(s.contains('o') || s.contains('.'));
+    }
+
+    #[test]
+    fn heatmap_peak_and_mean() {
+        let h = Heatmap {
+            frames: vec![frame(&[false; 4]), frame(&[true, true, false, false])],
+        };
+        assert!((h.peak_congestion() - 0.5).abs() < 1e-12);
+        assert!((h.mean_congestion() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,114 @@
+//! Contention histograms (Fig. 9) and generic binned counting.
+//!
+//! The paper plots, for a 128×128 chip, the histogram (25 bins) of
+//! contention experienced per channel (N/E/S/W) over all compute cells,
+//! showing that rhizomes flatten the tail — and that X-Y routing loads the
+//! horizontal channels hardest.
+
+/// Fixed-bin histogram over f64 samples.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub bins: Vec<u64>,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Histogram {
+    /// Build with `nbins` equal-width bins over [lo, hi] (hi inclusive in
+    /// the last bin). Paper Fig. 9 uses 25 bins.
+    pub fn build(samples: &[f64], nbins: usize, lo: f64, hi: f64) -> Self {
+        assert!(nbins >= 1 && hi > lo);
+        let mut bins = vec![0u64; nbins];
+        let w = (hi - lo) / nbins as f64;
+        for &s in samples {
+            let idx = (((s - lo) / w) as usize).min(nbins - 1);
+            bins[idx] += 1;
+        }
+        Histogram { bins, lo, hi }
+    }
+
+    /// Range auto-fit from the data.
+    pub fn auto(samples: &[f64], nbins: usize) -> Self {
+        let hi = samples.iter().cloned().fold(f64::MIN, f64::max).max(1.0);
+        Self::build(samples, nbins, 0.0, hi)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// Mass in the upper half of the range — the congestion tail that
+    /// rhizomes are supposed to cut (Fig. 9 comparison metric).
+    pub fn tail_mass(&self) -> f64 {
+        let half = self.bins.len() / 2;
+        let tail: u64 = self.bins[half..].iter().sum();
+        tail as f64 / self.total().max(1) as f64
+    }
+
+    /// Terminal sparkline for reports.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        self.bins
+            .iter()
+            .map(|&b| {
+                let h = (b as f64 / max as f64 * width as f64).round() as usize;
+                format!("{:>8} |{}\n", b, "#".repeat(h))
+            })
+            .collect()
+    }
+}
+
+/// Per-channel contention samples for a whole chip: one f64 per (cell,
+/// channel) = stall cycles observed on that output link.
+#[derive(Clone, Debug, Default)]
+pub struct ChannelContention {
+    /// N/E/S/W sample vectors (one entry per cell).
+    pub per_channel: [Vec<f64>; 4],
+}
+
+impl ChannelContention {
+    pub fn histogram(&self, channel: usize, nbins: usize) -> Histogram {
+        Histogram::auto(&self.per_channel[channel], nbins)
+    }
+
+    /// Aggregate across all four channels.
+    pub fn all(&self) -> Vec<f64> {
+        let mut v = Vec::new();
+        for c in &self.per_channel {
+            v.extend_from_slice(c);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_cover_range() {
+        let h = Histogram::build(&[0.0, 1.0, 2.0, 3.0, 4.0], 5, 0.0, 5.0);
+        assert_eq!(h.bins, vec![1, 1, 1, 1, 1]);
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn last_bin_inclusive() {
+        let h = Histogram::build(&[5.0], 5, 0.0, 5.0);
+        assert_eq!(h.bins[4], 1);
+    }
+
+    #[test]
+    fn tail_mass_flags_skew() {
+        let flat = Histogram::build(&[0.1, 0.2, 0.3], 10, 0.0, 1.0);
+        assert_eq!(flat.tail_mass(), 0.0);
+        let skew = Histogram::build(&[0.9, 0.95, 0.1], 10, 0.0, 1.0);
+        assert!((skew.tail_mass() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_has_one_line_per_bin() {
+        let h = Histogram::build(&[1.0, 2.0], 4, 0.0, 4.0);
+        assert_eq!(h.render(10).lines().count(), 4);
+    }
+}

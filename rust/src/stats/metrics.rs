@@ -1,0 +1,179 @@
+//! Run metrics: every counter the evaluation section reports.
+//!
+//! Fig. 6 needs action/diffusion accounting (overlapped, pruned); Fig. 7/8
+//! need cycles-to-solution; Fig. 9 per-channel contention (see
+//! `stats::histogram`); Fig. 10 time + energy; §6.2 text needs the
+//! "% of actions that perform work" breakdown.
+
+/// Global counters for one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Simulated cycles until termination was reported.
+    pub cycles: u64,
+    // -- actions --------------------------------------------------------
+    /// Actions whose predicate resolved true and performed work.
+    pub actions_work: u64,
+    /// Actions pruned by predicate at invocation (resolved false).
+    pub actions_pruned: u64,
+    /// Actions executed while this cell's head diffusion was blocked on
+    /// the network/throttle — the *overlap* of Fig. 6.
+    pub actions_overlapped: u64,
+    /// RelayDiffuse system actions handled (ghost tree traffic).
+    pub relays: u64,
+    /// RhizomeShare actions handled (§5.1 consistency traffic).
+    pub rhizome_shares: u64,
+    // -- diffusions ------------------------------------------------------
+    /// Diffuse closures enqueued.
+    pub diffusions_created: u64,
+    /// Diffusions that ran to completion (all sends staged).
+    pub diffusions_executed: u64,
+    /// Diffusions pruned when their lazy predicate resolved false at the
+    /// head of the queue.
+    pub diffusions_pruned: u64,
+    /// Diffusions pruned by filter passes while the head was blocked
+    /// (the "implicit reduction" of §6.2).
+    pub diffusions_pruned_filter: u64,
+    /// Cycles a head diffusion spent blocked (inject full or throttled).
+    pub diffusion_blocked_cycles: u64,
+    // -- messages --------------------------------------------------------
+    /// Messages staged into the network (remote destinations).
+    pub messages_sent: u64,
+    /// Same-cell actions that skipped the network.
+    pub messages_local: u64,
+    /// Total link traversals (energy; Fig. 10).
+    pub hops: u64,
+    /// Flit-move attempts that stalled on a full downstream buffer.
+    pub contention_stalls: u64,
+    // -- throttle ---------------------------------------------------------
+    /// Times a cell engaged its throttle window.
+    pub throttle_engaged: u64,
+    /// Message-creation cycles lost to throttling.
+    pub throttle_cycles: u64,
+    // -- memory/energy inputs ---------------------------------------------
+    /// 64-bit SRAM words read (state + edge reads).
+    pub sram_reads: u64,
+    /// 64-bit SRAM words written.
+    pub sram_writes: u64,
+    /// Cycles cells spent executing action work (compute energy).
+    pub compute_cycles: u64,
+    // -- sizing ------------------------------------------------------------
+    /// High-water mark across cells of the action queue.
+    pub action_q_hwm: u64,
+    /// High-water mark across cells of the diffuse queue.
+    pub diffuse_q_hwm: u64,
+}
+
+impl Metrics {
+    pub fn actions_total(&self) -> u64 {
+        self.actions_work + self.actions_pruned
+    }
+
+    /// §6.2: "about 3%–10% of the actions perform work".
+    pub fn work_fraction(&self) -> f64 {
+        let t = self.actions_total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.actions_work as f64 / t as f64
+    }
+
+    /// Fig. 6 series: fraction of executed actions that were overlapped
+    /// with a blocked diffusion.
+    pub fn overlap_fraction(&self) -> f64 {
+        let t = self.actions_total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.actions_overlapped as f64 / t as f64
+    }
+
+    /// Fig. 6 series: fraction of created diffusions that were pruned
+    /// (either lazily at the head or by a filter pass).
+    pub fn prune_fraction(&self) -> f64 {
+        if self.diffusions_created == 0 {
+            return 0.0;
+        }
+        (self.diffusions_pruned + self.diffusions_pruned_filter) as f64
+            / self.diffusions_created as f64
+    }
+
+    /// Merge per-thread partials (campaign runner).
+    pub fn merge(&mut self, o: &Metrics) {
+        self.cycles = self.cycles.max(o.cycles);
+        self.actions_work += o.actions_work;
+        self.actions_pruned += o.actions_pruned;
+        self.actions_overlapped += o.actions_overlapped;
+        self.relays += o.relays;
+        self.rhizome_shares += o.rhizome_shares;
+        self.diffusions_created += o.diffusions_created;
+        self.diffusions_executed += o.diffusions_executed;
+        self.diffusions_pruned += o.diffusions_pruned;
+        self.diffusions_pruned_filter += o.diffusions_pruned_filter;
+        self.diffusion_blocked_cycles += o.diffusion_blocked_cycles;
+        self.messages_sent += o.messages_sent;
+        self.messages_local += o.messages_local;
+        self.hops += o.hops;
+        self.contention_stalls += o.contention_stalls;
+        self.throttle_engaged += o.throttle_engaged;
+        self.throttle_cycles += o.throttle_cycles;
+        self.sram_reads += o.sram_reads;
+        self.sram_writes += o.sram_writes;
+        self.compute_cycles += o.compute_cycles;
+        self.action_q_hwm = self.action_q_hwm.max(o.action_q_hwm);
+        self.diffuse_q_hwm = self.diffuse_q_hwm.max(o.diffuse_q_hwm);
+    }
+
+    /// Compact one-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "cycles={} actions={} (work {:.1}% overlap {:.1}%) diffusions={} (pruned {:.1}%) msgs={} hops={} stalls={}",
+            self.cycles,
+            self.actions_total(),
+            100.0 * self.work_fraction(),
+            100.0 * self.overlap_fraction(),
+            self.diffusions_created,
+            100.0 * self.prune_fraction(),
+            self.messages_sent,
+            self.hops,
+            self.contention_stalls,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions() {
+        let m = Metrics {
+            actions_work: 10,
+            actions_pruned: 90,
+            actions_overlapped: 5,
+            diffusions_created: 10,
+            diffusions_pruned: 2,
+            diffusions_pruned_filter: 3,
+            ..Default::default()
+        };
+        assert!((m.work_fraction() - 0.1).abs() < 1e-12);
+        assert!((m.overlap_fraction() - 0.05).abs() < 1e-12);
+        assert!((m.prune_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fractions_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.work_fraction(), 0.0);
+        assert_eq!(m.prune_fraction(), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_and_maxes() {
+        let mut a = Metrics { cycles: 10, hops: 5, action_q_hwm: 3, ..Default::default() };
+        let b = Metrics { cycles: 20, hops: 7, action_q_hwm: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 20);
+        assert_eq!(a.hops, 12);
+        assert_eq!(a.action_q_hwm, 3);
+    }
+}

@@ -1,0 +1,5 @@
+//! Run metrics, contention histograms (Fig. 9), congestion heat-maps (Fig. 5).
+
+pub mod heatmap;
+pub mod histogram;
+pub mod metrics;

@@ -1,0 +1,72 @@
+//! Minimal property-based testing harness (offline stand-in for `proptest`).
+//!
+//! `proptest` cannot be vendored in this environment, so invariant tests use
+//! this runner: a property is checked over `cases` randomized inputs drawn
+//! from a generator; on failure the offending seed is reported so the case
+//! reproduces exactly (`QCHECK_SEED=<n> cargo test ...` re-runs just it).
+//! No shrinking — generators are asked to keep inputs small instead.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with env `QCHECK_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("QCHECK_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Check `prop(rng)` over `cases` seeds; panic with the failing seed.
+///
+/// If env `QCHECK_SEED` is set, run only that seed (reproduction mode).
+pub fn qcheck<F: FnMut(&mut Rng)>(name: &str, mut prop: F) {
+    if let Ok(s) = std::env::var("QCHECK_SEED") {
+        let seed: u64 = s.parse().expect("QCHECK_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    let cases = default_cases();
+    for case in 0..cases {
+        // Stable per-(property, case) seed: same inputs on every run.
+        let seed = fxhash(name) ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("qcheck property '{name}' failed at case {case} (QCHECK_SEED={seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0u64;
+        qcheck("count", |_| n += 1);
+        assert_eq!(n, default_cases());
+    }
+
+    #[test]
+    fn deterministic_inputs_per_case() {
+        let mut first: Vec<u64> = vec![];
+        qcheck("det", |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = vec![];
+        qcheck("det", |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        qcheck("fail", |rng| assert!(rng.below(10) < 5));
+    }
+}

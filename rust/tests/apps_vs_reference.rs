@@ -1,0 +1,120 @@
+//! Integration: every diffusive app, across datasets / topologies /
+//! throttling / rhizome configurations, must exactly reproduce the
+//! bulk-synchronous references (the paper's NetworkX verification, §6.1).
+
+use amcca::apps::driver;
+use amcca::arch::config::{AllocPolicy, ChipConfig};
+use amcca::graph::datasets::{Dataset, Scale};
+use amcca::graph::{erdos, rmat};
+
+fn all_configs(dim: u32) -> Vec<(String, ChipConfig)> {
+    let mut cfgs = Vec::new();
+    for (tname, base) in [("torus", ChipConfig::torus(dim)), ("mesh", ChipConfig::mesh(dim))] {
+        for throttling in [true, false] {
+            for rpvo in [1u32, 4] {
+                let mut c = base.clone();
+                c.throttling = throttling;
+                c.rpvo_max = rpvo;
+                cfgs.push((format!("{tname}/throttle={throttling}/rpvo={rpvo}"), c));
+            }
+        }
+    }
+    cfgs
+}
+
+#[test]
+fn bfs_matches_reference_across_configs() {
+    let g = rmat::generate(rmat::RmatParams::paper(9, 8, 5));
+    for (name, cfg) in all_configs(8) {
+        let (chip, built) = driver::run_bfs(cfg, &g, 1).unwrap();
+        let got = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 1, &got), 0, "bfs diverged on {name}");
+    }
+}
+
+#[test]
+fn sssp_matches_dijkstra_across_configs() {
+    let mut g = rmat::generate(rmat::RmatParams::paper(9, 8, 6));
+    g.randomize_weights(32, 1);
+    for (name, cfg) in all_configs(8) {
+        let (chip, built) = driver::run_sssp(cfg, &g, 2).unwrap();
+        let got = driver::sssp_dists(&chip, &built);
+        assert_eq!(driver::verify_sssp(&g, 2, &got), 0, "sssp diverged on {name}");
+    }
+}
+
+#[test]
+fn pagerank_matches_power_iteration_across_configs() {
+    let g = erdos::generate(256, 1536, 9);
+    for (name, cfg) in all_configs(8) {
+        let (chip, built) = driver::run_pagerank(cfg, &g, 6).unwrap();
+        let got = driver::pagerank_scores(&chip, &built);
+        let (bad, max_rel) = driver::verify_pagerank(&g, 6, &got);
+        assert_eq!(bad, 0, "pagerank diverged on {name} (max_rel={max_rel})");
+    }
+}
+
+#[test]
+fn every_dataset_runs_bfs_correctly() {
+    for ds in amcca::graph::datasets::ALL {
+        let g = ds.build(Scale::Tiny);
+        let mut cfg = ChipConfig::torus(16);
+        cfg.rpvo_max = 8;
+        let (chip, built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        let got = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &got), 0, "bfs diverged on {}", ds.name());
+        assert!(chip.metrics.cycles > 0);
+    }
+}
+
+#[test]
+fn skewed_dataset_gets_rhizomes_uniform_does_not() {
+    let wk = Dataset::WK.build(Scale::Tiny);
+    let er = Dataset::E18.build(Scale::Tiny);
+    let mut cfg = ChipConfig::torus(16);
+    cfg.rpvo_max = 16;
+    let (_, built_wk) = driver::run_bfs(cfg.clone(), &wk, 0).unwrap();
+    let (_, built_er) = driver::run_bfs(cfg, &er, 0).unwrap();
+    assert!(built_wk.rhizomatic_vertices > 0, "WK skew must trigger rhizomes");
+    assert_eq!(built_er.rhizomatic_vertices, 0, "ER must not trigger rhizomes");
+}
+
+#[test]
+fn alloc_policies_all_correct() {
+    let g = rmat::generate(rmat::RmatParams::paper(9, 8, 13));
+    for policy in [AllocPolicy::Mixed, AllocPolicy::Random, AllocPolicy::Vicinity] {
+        let mut cfg = ChipConfig::torus(8);
+        cfg.alloc = policy;
+        cfg.rpvo_max = 4;
+        let (chip, built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        let got = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &got), 0, "bfs diverged under {policy:?}");
+    }
+}
+
+#[test]
+fn disconnected_source_terminates_immediately() {
+    // Vertex with no out-edges: the diffusion dies instantly; termination
+    // detection must still fire.
+    let g = amcca::graph::model::HostGraph { n: 16, edges: vec![(1, 2, 1)] };
+    let (chip, built) = driver::run_bfs(ChipConfig::torus(4), &g, 0).unwrap();
+    let got = driver::bfs_levels(&chip, &built);
+    assert_eq!(got[0], 0);
+    assert!(got[1..].iter().all(|&l| l == amcca::apps::bfs::UNREACHED));
+    assert!(chip.metrics.cycles < 100);
+}
+
+#[test]
+fn throttling_reduces_contention_on_skewed_load() {
+    let g = Dataset::WK.build(Scale::Tiny);
+    let mut on = ChipConfig::torus(16);
+    on.throttling = true;
+    let mut off = on.clone();
+    off.throttling = false;
+    let (chip_on, b_on) = driver::run_bfs(on, &g, 0).unwrap();
+    let (chip_off, b_off) = driver::run_bfs(off, &g, 0).unwrap();
+    // both correct
+    assert_eq!(driver::verify_bfs(&g, 0, &driver::bfs_levels(&chip_on, &b_on)), 0);
+    assert_eq!(driver::verify_bfs(&g, 0, &driver::bfs_levels(&chip_off, &b_off)), 0);
+    assert!(chip_on.metrics.throttle_engaged > 0, "skewed load must trip the throttle");
+}

@@ -1,0 +1,92 @@
+//! Integration: the AOT bridge. HLO-text artifacts produced by
+//! `python/compile/aot.py` (Layer-2 JAX calling Layer-1 Pallas kernels)
+//! must load, compile, and execute on the PJRT CPU client from Rust, and
+//! their numerics must match the pure-Rust BSP baselines.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use amcca::baseline::bsp;
+use amcca::graph::{erdos, rmat};
+use amcca::runtime::{artifacts, oracle, pjrt::PjrtRuntime};
+
+fn artifacts_present() -> bool {
+    !artifacts::available_sizes(artifacts::Step::RelaxStep).is_empty()
+}
+
+#[test]
+fn relax_step_fixpoint_equals_rust_bfs() {
+    if !artifacts_present() {
+        panic!("artifacts missing — run `make artifacts` (Makefile test target does)");
+    }
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let g = rmat::generate(rmat::RmatParams::paper(8, 8, 3));
+    let got = oracle::to_u32(&oracle::relax_fixpoint(&mut rt, &g, 0, true).unwrap());
+    let want = bsp::bfs_levels(&g, 0);
+    assert_eq!(got, want, "XLA min-plus fixpoint != frontier BFS");
+}
+
+#[test]
+fn relax_step_fixpoint_equals_dijkstra() {
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let mut g = rmat::generate(rmat::RmatParams::paper(8, 8, 4));
+    g.randomize_weights(16, 5);
+    let got = oracle::to_u32(&oracle::relax_fixpoint(&mut rt, &g, 7, false).unwrap());
+    let want: Vec<u32> = bsp::sssp_dists(&g, 7)
+        .into_iter()
+        .map(|d| if d == u64::MAX { u32::MAX } else { d as u32 })
+        .collect();
+    assert_eq!(got, want, "XLA min-plus fixpoint != Dijkstra");
+}
+
+#[test]
+fn pagerank_step_equals_rust_power_iteration() {
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let g = erdos::generate(200, 1200, 8);
+    let got = oracle::pagerank_iters(&mut rt, &g, 8).unwrap();
+    let want = bsp::pagerank(&g, 8, 0.85);
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() / b.abs().max(1e-9) < 1e-4,
+            "v{i}: xla={a} rust={b}"
+        );
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let size = artifacts::pick_size(artifacts::Step::RelaxStep, 100).unwrap();
+    let p = artifacts::path(artifacts::Step::RelaxStep, size);
+    let a = rt.load(&p).unwrap();
+    let b = rt.load(&p).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b), "second load must hit the cache");
+}
+
+#[test]
+fn missing_artifact_fails_with_guidance() {
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let err = match rt.load(std::path::Path::new("artifacts/nope_999.hlo.txt")) {
+        Ok(_) => panic!("loading a missing artifact must fail"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn padded_slots_do_not_leak_into_results() {
+    // A graph much smaller than the artifact size: padding must not change
+    // real vertices' results.
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let g = amcca::graph::model::HostGraph {
+        n: 5,
+        edges: vec![(0, 1, 2), (1, 2, 3), (2, 3, 4), (0, 4, 20)],
+    };
+    let got = oracle::to_u32(&oracle::relax_fixpoint(&mut rt, &g, 0, false).unwrap());
+    assert_eq!(got, vec![0, 2, 5, 9, 20]);
+    let pr = oracle::pagerank_iters(&mut rt, &g, 4).unwrap();
+    assert_eq!(pr.len(), 5);
+    let rust = bsp::pagerank(&g, 4, 0.85);
+    for (a, b) in pr.iter().zip(&rust) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}

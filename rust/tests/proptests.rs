@@ -1,0 +1,191 @@
+//! Property-based invariants over randomized inputs (in-tree qcheck
+//! harness — `proptest` is unavailable offline; see util::qcheck for the
+//! seed-reproduction protocol).
+
+use amcca::apps::driver;
+use amcca::arch::config::ChipConfig;
+use amcca::graph::model::HostGraph;
+use amcca::noc::routing::trace;
+use amcca::noc::topology::{Geometry, Topology};
+use amcca::rpvo::rhizome;
+use amcca::util::qcheck::qcheck;
+use amcca::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng, max_n: u32) -> HostGraph {
+    let n = 8 + rng.below(max_n as u64 - 8) as u32;
+    let m = (n as u64) * (1 + rng.below(6));
+    let mut g = HostGraph::new(n);
+    for _ in 0..m {
+        let s = rng.below(n as u64) as u32;
+        let t = rng.below(n as u64) as u32;
+        if s != t {
+            g.edges.push((s, t, 1 + rng.below(31) as u32));
+        }
+    }
+    g
+}
+
+fn random_cfg(rng: &mut Rng) -> ChipConfig {
+    let dim = [2u32, 4, 6, 8][rng.usize_below(4)];
+    let mut cfg = if rng.chance(0.5) { ChipConfig::torus(dim) } else { ChipConfig::mesh(dim) };
+    cfg.rpvo_max = [1u32, 2, 4, 16][rng.usize_below(4)];
+    cfg.throttling = rng.chance(0.5);
+    cfg.local_edgelist_size = 2 + rng.usize_below(14);
+    cfg.ghost_arity = 1 + rng.usize_below(3);
+    cfg.vc_buffer = 1 + rng.usize_below(4);
+    cfg.seed = rng.next_u64();
+    cfg
+}
+
+/// Async BFS == frontier BFS, for any graph, chip, and policy mix.
+#[test]
+fn prop_bfs_equals_reference() {
+    qcheck("bfs_equals_reference", |rng| {
+        let g = random_graph(rng, 200);
+        let cfg = random_cfg(rng);
+        let root = rng.below(g.n as u64) as u32;
+        let (chip, built) = driver::run_bfs(cfg, &g, root).unwrap();
+        let got = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, root, &got), 0);
+    });
+}
+
+/// Async SSSP == Dijkstra under random weights.
+#[test]
+fn prop_sssp_equals_dijkstra() {
+    qcheck("sssp_equals_dijkstra", |rng| {
+        let g = random_graph(rng, 150);
+        let cfg = random_cfg(rng);
+        let root = rng.below(g.n as u64) as u32;
+        let (chip, built) = driver::run_sssp(cfg, &g, root).unwrap();
+        let got = driver::sssp_dists(&chip, &built);
+        assert_eq!(driver::verify_sssp(&g, root, &got), 0);
+    });
+}
+
+/// Async PageRank == synchronous power iteration (f32 tolerance).
+#[test]
+fn prop_pagerank_equals_power_iteration() {
+    qcheck("pagerank_equals_power", |rng| {
+        let g = random_graph(rng, 100);
+        let cfg = random_cfg(rng);
+        let iters = 1 + rng.below(6) as u32;
+        let (chip, built) = driver::run_pagerank(cfg, &g, iters).unwrap();
+        let got = driver::pagerank_scores(&chip, &built);
+        let (bad, max_rel) = driver::verify_pagerank(&g, iters, &got);
+        assert_eq!(bad, 0, "max_rel={max_rel}");
+    });
+}
+
+/// Routing is minimal, dimension-ordered, and never turns Y->X, on any
+/// geometry (deadlock-freedom structure).
+#[test]
+fn prop_routing_minimal_and_turn_restricted() {
+    qcheck("routing_minimal", |rng| {
+        let dx = 2 + rng.below(15) as u32;
+        let dy = 2 + rng.below(15) as u32;
+        let topo = if rng.chance(0.5) { Topology::TorusMesh } else { Topology::Mesh };
+        let g = Geometry::new(dx, dy, topo);
+        let n = dx * dy;
+        for _ in 0..16 {
+            let src = rng.below(n as u64) as u32;
+            let dst = rng.below(n as u64) as u32;
+            let path = trace(&g, src, dst, 4);
+            assert_eq!(path.len() as u32, g.distance(src, dst), "non-minimal {src}->{dst}");
+            let mut seen_y = false;
+            for (_, hop) in &path {
+                match hop.port {
+                    amcca::noc::message::Port::East | amcca::noc::message::Port::West => {
+                        assert!(!seen_y, "Y->X turn")
+                    }
+                    amcca::noc::message::Port::North | amcca::noc::message::Port::South => {
+                        seen_y = true
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    });
+}
+
+/// Graph construction conserves edges exactly, for any policies.
+#[test]
+fn prop_builder_conserves_edges() {
+    qcheck("builder_conserves_edges", |rng| {
+        let g = random_graph(rng, 300);
+        let cfg = random_cfg(rng);
+        let mut chip =
+            amcca::arch::chip::Chip::new(cfg, amcca::apps::bfs::Bfs).unwrap();
+        let built = amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+        let placed: usize = chip.cells.iter().flat_map(|c| &c.objects).map(|o| o.edges.len()).sum();
+        assert_eq!(placed, g.m(), "edges lost or duplicated");
+        // every object respects the local edge-list bound
+        for cell in &chip.cells {
+            for o in &cell.objects {
+                assert!(o.edges.len() <= chip.cfg.local_edgelist_size);
+                assert!(o.ghosts.len() <= chip.cfg.ghost_arity);
+            }
+        }
+        // member counts respect Eq. 1 bounds
+        for members in &built.roots {
+            assert!((1..=chip.cfg.rpvo_max as usize).contains(&members.len()));
+        }
+    });
+}
+
+/// Rhizome sizing math: members never exceed rpvo_max, every in-edge maps
+/// to a valid member, and the cycling touches every member of a max-degree
+/// vertex.
+#[test]
+fn prop_rhizome_sizing() {
+    qcheck("rhizome_sizing", |rng| {
+        let max_in = 1 + rng.below(100_000) as u32;
+        let rpvo_max = 1 + rng.below(32) as u32;
+        let cutoff = rhizome::cutoff_chunk(max_in, rpvo_max);
+        assert!(cutoff >= 1);
+        let deg = rng.below(max_in as u64 + 1) as u32;
+        let members = rhizome::members_for(deg, cutoff, rpvo_max);
+        assert!((1..=rpvo_max).contains(&members));
+        for s in 0..deg.min(500) {
+            assert!(rhizome::member_for_in_edge(s, cutoff, members) < members);
+        }
+    });
+}
+
+/// Dynamic insertion then incremental BFS equals from-scratch BFS.
+#[test]
+fn prop_dynamic_insert_incremental_bfs() {
+    qcheck("dynamic_incremental_bfs", |rng| {
+        let mut g = random_graph(rng, 120);
+        let cfg = random_cfg(rng);
+        let root = rng.below(g.n as u64) as u32;
+        let (mut chip, mut built) = driver::run_bfs(cfg, &g, root).unwrap();
+        for _ in 0..5 {
+            let u = rng.below(g.n as u64) as u32;
+            let v = rng.below(g.n as u64) as u32;
+            if u == v {
+                continue;
+            }
+            amcca::rpvo::dynamic::insert_and_update_bfs(&mut chip, &mut built, u, v).unwrap();
+            g.edges.push((u, v, 1));
+        }
+        let got = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, root, &got), 0);
+    });
+}
+
+/// The simulator is deterministic: same config + same graph => identical
+/// cycle counts and message counts.
+#[test]
+fn prop_determinism() {
+    qcheck("determinism", |rng| {
+        let g = random_graph(rng, 100);
+        let cfg = random_cfg(rng);
+        let root = rng.below(g.n as u64) as u32;
+        let (a, _) = driver::run_bfs(cfg.clone(), &g, root).unwrap();
+        let (b, _) = driver::run_bfs(cfg, &g, root).unwrap();
+        assert_eq!(a.metrics.cycles, b.metrics.cycles);
+        assert_eq!(a.metrics.messages_sent, b.metrics.messages_sent);
+        assert_eq!(a.metrics.hops, b.metrics.hops);
+    });
+}

@@ -1,0 +1,117 @@
+//! Integration: rhizome behaviour end-to-end — consistency across members,
+//! load distribution, and the performance shape the paper claims (Figs. 7–9
+//! in miniature).
+
+use amcca::apps::driver;
+use amcca::arch::config::ChipConfig;
+use amcca::graph::datasets::{Dataset, Scale};
+use amcca::graph::model::HostGraph;
+
+/// A hub-and-spokes graph plus a ring, so everything is reachable and the
+/// hub is extremely in-skewed.
+fn hub_graph(n: u32) -> HostGraph {
+    let mut edges: Vec<(u32, u32, u32)> = (1..n).map(|v| (v, 0, 1)).collect();
+    edges.extend((0..n - 1).map(|v| (v, v + 1, 1)));
+    HostGraph { n, edges }
+}
+
+#[test]
+fn members_stay_consistent_after_bfs() {
+    let g = hub_graph(400);
+    let mut cfg = ChipConfig::torus(8);
+    cfg.rpvo_max = 16;
+    let (chip, built) = driver::run_bfs(cfg, &g, 5).unwrap();
+    assert!(built.roots[0].len() > 1, "hub must be rhizomatic");
+    // every member of every vertex must agree on the level
+    for members in &built.roots {
+        let levels: Vec<u32> = members.iter().map(|&a| chip.object(a).state.level).collect();
+        assert!(levels.windows(2).all(|w| w[0] == w[1]), "members disagree: {levels:?}");
+    }
+    assert_eq!(driver::verify_bfs(&g, 5, &driver::bfs_levels(&chip, &built)), 0);
+}
+
+#[test]
+fn members_share_in_degree_load() {
+    let g = hub_graph(1000);
+    let mut cfg = ChipConfig::torus(8);
+    cfg.rpvo_max = 8;
+    let (chip, built) = driver::run_bfs(cfg, &g, 0).unwrap();
+    let shares: Vec<u32> =
+        built.roots[0].iter().map(|&a| chip.object(a).meta.in_degree_share).collect();
+    assert_eq!(shares.len(), 8);
+    assert_eq!(shares.iter().sum::<u32>(), 999);
+    let max = *shares.iter().max().unwrap() as f64;
+    let min = *shares.iter().min().unwrap() as f64;
+    assert!(max / min.max(1.0) < 2.5, "in-degree shares unbalanced: {shares:?}");
+}
+
+#[test]
+fn rhizomes_cut_cycles_and_contention_on_skewed_graph() {
+    // The Fig. 7/9 shape at test scale: on the WK stand-in at 16x16, the
+    // rhizomatic build must beat the plain RPVO and flatten contention.
+    let g = Dataset::WK.build(Scale::Tiny);
+    let mut plain = ChipConfig::torus(16);
+    plain.rpvo_max = 1;
+    let mut rhiz = plain.clone();
+    rhiz.rpvo_max = 16;
+    let (chip_p, b_p) = driver::run_bfs(plain, &g, 0).unwrap();
+    let (chip_r, b_r) = driver::run_bfs(rhiz, &g, 0).unwrap();
+    assert_eq!(driver::verify_bfs(&g, 0, &driver::bfs_levels(&chip_p, &b_p)), 0);
+    assert_eq!(driver::verify_bfs(&g, 0, &driver::bfs_levels(&chip_r, &b_r)), 0);
+    assert!(
+        chip_r.metrics.cycles < chip_p.metrics.cycles,
+        "rhizomes must win on skew: {} vs {}",
+        chip_r.metrics.cycles,
+        chip_p.metrics.cycles
+    );
+    assert!(
+        chip_r.metrics.contention_stalls < chip_p.metrics.contention_stalls,
+        "rhizomes must lower contention (Fig. 9): {} vs {}",
+        chip_r.metrics.contention_stalls,
+        chip_p.metrics.contention_stalls
+    );
+}
+
+#[test]
+fn rhizomes_are_harmless_on_uniform_graphs() {
+    // ER graphs never cross the cutoff: rhizome config must be a no-op.
+    let g = Dataset::E18.build(Scale::Tiny);
+    let mut plain = ChipConfig::torus(8);
+    plain.rpvo_max = 1;
+    let mut rhiz = plain.clone();
+    rhiz.rpvo_max = 16;
+    let (chip_p, b_p) = driver::run_bfs(plain, &g, 0).unwrap();
+    let (chip_r, b_r) = driver::run_bfs(rhiz, &g, 0).unwrap();
+    assert_eq!(b_r.rhizomatic_vertices, 0);
+    assert_eq!(b_p.objects, b_r.objects);
+    assert_eq!(chip_p.metrics.cycles, chip_r.metrics.cycles, "identical construction");
+}
+
+#[test]
+fn pagerank_allreduce_converges_across_members() {
+    let g = hub_graph(300);
+    let mut cfg = ChipConfig::torus(8);
+    cfg.rpvo_max = 8;
+    let (chip, built) = driver::run_pagerank(cfg, &g, 6).unwrap();
+    assert!(built.roots[0].len() > 1);
+    // members' scores agree (AND-gate collapse) and match the reference
+    let scores: Vec<f32> = built.roots[0].iter().map(|&a| chip.object(a).state.score).collect();
+    for w in scores.windows(2) {
+        assert!((w[0] - w[1]).abs() < 1e-5 * w[0].abs().max(1e-3), "{scores:?}");
+    }
+    let (bad, max_rel) = driver::verify_pagerank(&g, 6, &driver::pagerank_scores(&chip, &built));
+    assert_eq!(bad, 0, "max_rel={max_rel}");
+    assert!(chip.metrics.rhizome_shares > 0, "collapse must exchange partials");
+}
+
+#[test]
+fn cutoff_respects_rpvo_max_bound() {
+    let g = hub_graph(5000);
+    for rpvo_max in [2u32, 4, 8, 16] {
+        let mut cfg = ChipConfig::torus(16);
+        cfg.rpvo_max = rpvo_max;
+        let (_, built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        assert!(built.roots.iter().all(|m| m.len() as u32 <= rpvo_max));
+        assert_eq!(built.roots[0].len() as u32, rpvo_max, "max-degree hub uses all members");
+    }
+}
