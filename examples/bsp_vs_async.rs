@@ -22,6 +22,10 @@ use amcca::runtime::{oracle, pjrt::PjrtRuntime};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
+    if !PjrtRuntime::available() {
+        eprintln!("bsp_vs_async needs the XLA backend: rebuild with `--features xla` and run `make artifacts`");
+        return Ok(());
+    }
     let mut rt = PjrtRuntime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     let g = Dataset::R18.build(Scale::Tiny);

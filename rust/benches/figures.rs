@@ -41,6 +41,23 @@ fn dims() -> Vec<u32> {
         .unwrap_or_else(|| vec![16, 32, 64])
 }
 
+
+/// Campaign configs pin `shards = 1`: the campaign runner already
+/// parallelizes across configurations, so nesting engine workers inside
+/// each job would oversubscribe the machine. Engine results are identical
+/// either way (determinism across shard counts).
+fn torus_1shard(dim: u32) -> ChipConfig {
+    let mut cfg = ChipConfig::torus(dim);
+    cfg.shards = 1;
+    cfg
+}
+
+fn mesh_1shard(dim: u32) -> ChipConfig {
+    let mut cfg = ChipConfig::mesh(dim);
+    cfg.shards = 1;
+    cfg
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
     let all = ["table1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "ablations"];
@@ -125,7 +142,7 @@ fn fig5() -> anyhow::Result<()> {
     let dim = *dims().last().unwrap_or(&32);
     let mut t = Table::new(&["throttle", "cycles", "peak_congested", "mean_congested", "stalls"]);
     for throttle in [false, true] {
-        let mut cfg = ChipConfig::torus(dim);
+        let mut cfg = torus_1shard(dim);
         cfg.throttling = throttle;
         cfg.heatmap_every = 64;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);
@@ -167,7 +184,7 @@ fn fig6() -> anyhow::Result<()> {
     for ds in ALL {
         let g = Arc::new(ds.build(scale()));
         for dim in dims() {
-            let mut cfg = ChipConfig::torus(dim);
+            let mut cfg = torus_1shard(dim);
             cfg.rpvo_max = 16;
             let mut exp = Experiment::new(AppKind::Bfs, cfg);
             exp.verify = false;
@@ -212,7 +229,7 @@ fn fig7() -> anyhow::Result<()> {
                     if rh && !SKEWED_SET.contains(ds) {
                         continue; // paper only deploys rhizomes on WK/R22
                     }
-                    let mut cfg = ChipConfig::torus(dim);
+                    let mut cfg = torus_1shard(dim);
                     cfg.rpvo_max = if rh { 16 } else { 1 };
                     let mut exp = Experiment::new(app, cfg);
                     exp.pr_iters = 5;
@@ -264,7 +281,7 @@ fn fig8() -> anyhow::Result<()> {
         let g = Arc::new(ds.build(scale()));
         for &dim in &fig_dims {
             for rpvo in rpvos {
-                let mut cfg = ChipConfig::torus(dim);
+                let mut cfg = torus_1shard(dim);
                 cfg.rpvo_max = rpvo;
                 let mut exp = Experiment::new(AppKind::Bfs, cfg);
                 exp.trials = 2;
@@ -314,7 +331,7 @@ fn fig9() -> anyhow::Result<()> {
     let dim = *dims().last().unwrap_or(&32);
     let mut rows = Table::new(&["rpvo_max", "channel", "max_stalls", "tail_mass", "total_stalls"]);
     for rpvo in [1u32, 16] {
-        let mut cfg = ChipConfig::torus(dim);
+        let mut cfg = torus_1shard(dim);
         cfg.rpvo_max = rpvo;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);
         exp.verify = false;
@@ -352,9 +369,9 @@ fn fig10() -> anyhow::Result<()> {
         for dim in dims() {
             for topo in ["mesh", "torus"] {
                 let cfg = if topo == "mesh" {
-                    ChipConfig::mesh(dim)
+                    mesh_1shard(dim)
                 } else {
-                    ChipConfig::torus(dim)
+                    torus_1shard(dim)
                 };
                 let mut exp = Experiment::new(AppKind::Bfs, cfg);
                 exp.verify = false;
@@ -420,7 +437,7 @@ fn ablations() -> anyhow::Result<()> {
         ("random", AllocPolicy::Random),
         ("vicinity", AllocPolicy::Vicinity),
     ] {
-        let mut cfg = ChipConfig::torus(dim);
+        let mut cfg = torus_1shard(dim);
         cfg.alloc = policy;
         cfg.rpvo_max = 16;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);
@@ -429,7 +446,7 @@ fn ablations() -> anyhow::Result<()> {
     }
     // ghost chunk size
     for chunk in [4usize, 16, 64] {
-        let mut cfg = ChipConfig::torus(dim);
+        let mut cfg = torus_1shard(dim);
         cfg.local_edgelist_size = chunk;
         cfg.rpvo_max = 16;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);

@@ -3,6 +3,13 @@
 //! L3 simulator: cell-cycle throughput, routing, graph construction.
 //!
 //!     cargo bench --bench hotpath
+//!
+//! Besides the human-readable table (and `results/hotpath.csv`), this
+//! bench writes `BENCH_hotpath.json` at the repository root — a flat
+//! `{"bench name": median Mcycles/s}` map — so the perf trajectory is
+//! machine-trackable across PRs. The headline entries compare the serial
+//! engine (`shards = 1`) against the sharded engine on the same workload;
+//! both are bit-identical in results, so the ratio is pure speedup.
 
 use amcca::apps::driver;
 use amcca::arch::config::ChipConfig;
@@ -26,35 +33,77 @@ fn median_time<F: FnMut() -> u64>(n: usize, mut f: F) -> (std::time::Duration, u
     (times[times.len() / 2], units)
 }
 
+/// Median sim-loop throughput (Mcycles/s) for BFS on `ds` over a `dim x
+/// dim` torus with an explicit engine shard count.
+fn sim_loop_mcps(dim: u32, ds: Dataset, rpvo_max: u32, shards: usize) -> (f64, std::time::Duration, u64) {
+    let g = ds.build(Scale::Tiny);
+    let mut cfg = ChipConfig::torus(dim);
+    cfg.rpvo_max = rpvo_max;
+    cfg.shards = shards;
+    let mut samples = Vec::new();
+    let mut cycles = 0u64;
+    for _ in 0..5 {
+        let mut chip = amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
+        let built = amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+        chip.germinate(built.addr_of(0), amcca::noc::message::ActionKind::App, 0, 0);
+        let t0 = Instant::now();
+        chip.run().unwrap();
+        let el = t0.elapsed();
+        cycles = chip.metrics.cycles;
+        samples.push((chip.metrics.cycles as f64 / el.as_secs_f64() / 1e6, el));
+    }
+    samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (mcps, dur) = samples[samples.len() / 2];
+    (mcps, dur, cycles)
+}
+
+/// Minimal JSON emitter for the flat `name -> value` perf map.
+fn write_bench_json(entries: &[(String, f64)]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    let mut out = String::from("{\n");
+    for (i, (name, v)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        // bench names are plain ASCII; only quotes would need escaping
+        out.push_str(&format!("  \"{}\": {:.4}{}\n", name.replace('"', "\\\""), v, comma));
+    }
+    out.push_str("}\n");
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let mut t = Table::new(&["bench", "median", "throughput"]);
+    let mut json: Vec<(String, f64)> = Vec::new();
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16);
 
     // --- end-to-end simulation throughput (the headline §Perf metric) ----
-    for (name, dim, ds) in [
-        ("bfs R18 16x16", 16u32, Dataset::R18),
-        ("bfs R18 64x64", 64, Dataset::R18),
-        ("bfs WK-Rh 64x64", 64, Dataset::WK),
+    // Serial vs sharded on the same workloads; determinism makes cycle
+    // counts identical, so Mcycles/s ratios are pure engine speedup.
+    for (name, dim, ds, rpvo) in [
+        ("bfs R18 16x16", 16u32, Dataset::R18, 1u32),
+        ("bfs R18 64x64", 64, Dataset::R18, 1),
+        ("bfs WK-Rh 64x64", 64, Dataset::WK, 16),
     ] {
-        let g = ds.build(Scale::Tiny);
-        let mut cfg = ChipConfig::torus(dim);
-        if name.contains("Rh") {
-            cfg.rpvo_max = 16;
+        let (serial, sdur, cycles) = sim_loop_mcps(dim, ds, rpvo, 1);
+        t.row(&[
+            format!("{name} [serial]"),
+            format!("{sdur:?}"),
+            format!("{serial:.2} Mcycles/s (sim loop, {cycles} cyc)"),
+        ]);
+        json.push((format!("{name} [serial]"), serial));
+        if auto > 1 && dim >= 32 {
+            let shards = auto.min(dim as usize);
+            let (par, pdur, pcycles) = sim_loop_mcps(dim, ds, rpvo, shards);
+            assert_eq!(cycles, pcycles, "sharded engine must be cycle-identical");
+            t.row(&[
+                format!("{name} [shards={shards}]"),
+                format!("{pdur:?}"),
+                format!("{par:.2} Mcycles/s ({:.2}x vs serial)", par / serial),
+            ]);
+            json.push((format!("{name} [shards={shards}]"), par));
         }
-        // measure the simulation loop only (build excluded)
-        let mut samples = Vec::new();
-        for _ in 0..5 {
-            let mut chip =
-                amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
-            let built = amcca::rpvo::builder::build(&mut chip, &g).unwrap();
-            chip.germinate(built.addr_of(0), amcca::noc::message::ActionKind::App, 0, 0);
-            let t0 = Instant::now();
-            chip.run().unwrap();
-            let el = t0.elapsed();
-            samples.push((chip.metrics.cycles as f64 / el.as_secs_f64() / 1e6, el));
-        }
-        samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let (mcps, dur) = samples[samples.len() / 2];
-        t.row(&[name.into(), format!("{dur:?}"), format!("{mcps:.2} Mcycles/s (sim loop only)")]);
     }
 
     // --- per-cycle engine step cost on an idle-ish chip -------------------
@@ -71,11 +120,13 @@ fn main() {
             }
             2000
         });
+        let msps = steps as f64 / dur.as_secs_f64() / 1e6;
         t.row(&[
             "engine step (32x32, live BFS)".into(),
             format!("{dur:?} / 2000 steps"),
-            format!("{:.2} Msteps/s", steps as f64 / dur.as_secs_f64() / 1e6),
+            format!("{msps:.2} Msteps/s"),
         ]);
+        json.push(("engine step (32x32, live BFS)".into(), msps));
     }
 
     // --- routing ----------------------------------------------------------
@@ -90,11 +141,13 @@ fn main() {
             }
             total
         });
+        let mhps = hops as f64 / dur.as_secs_f64() / 1e6;
         t.row(&[
             "routing trace 64x64 torus".into(),
             format!("{dur:?}"),
-            format!("{:.1} Mhops/s", hops as f64 / dur.as_secs_f64() / 1e6),
+            format!("{mhps:.1} Mhops/s"),
         ]);
+        json.push(("routing trace 64x64 torus".into(), mhps));
     }
 
     // --- graph construction ------------------------------------------------
@@ -115,8 +168,9 @@ fn main() {
     }
 
     // --- PJRT artifact execution (L1/L2 path) ------------------------------
-    if !amcca::runtime::artifacts::available_sizes(amcca::runtime::artifacts::Step::RelaxStep)
-        .is_empty()
+    if amcca::runtime::pjrt::PjrtRuntime::available()
+        && !amcca::runtime::artifacts::available_sizes(amcca::runtime::artifacts::Step::RelaxStep)
+            .is_empty()
     {
         let mut rt = amcca::runtime::pjrt::PjrtRuntime::cpu().unwrap();
         let g = Dataset::R18.build(Scale::Tiny);
@@ -144,6 +198,7 @@ fn main() {
 
     print!("{}", t.render());
     t.save_csv("hotpath.csv");
+    write_bench_json(&json);
 }
 
 fn driver_relax(rt: &mut amcca::runtime::pjrt::PjrtRuntime, g: &amcca::graph::model::HostGraph) {

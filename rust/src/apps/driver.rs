@@ -1,6 +1,13 @@
 //! App drivers: build a graph onto a chip, germinate, run to termination,
 //! extract per-vertex results, and verify against the BSP references —
 //! the Listing-1 host program, shared by the CLI, examples, and benches.
+//!
+//! The engine behind `chip.run()` is the sharded parallel cycle loop
+//! (`cfg.shards`, see [`crate::arch::chip`]); because it is bit-for-bit
+//! deterministic across shard counts, every driver here returns identical
+//! metrics and per-vertex results whether it ran serial or parallel — the
+//! `engine_shards_do_not_change_results` test and the `determinism`
+//! integration suite pin that contract.
 
 use crate::apps::bfs::{Bfs, UNREACHED};
 use crate::apps::pagerank::{PageRank, KICKOFF};
@@ -175,6 +182,21 @@ mod tests {
         let mut cfg = ChipConfig::torus(4);
         cfg.seed = 1;
         cfg
+    }
+
+    #[test]
+    fn engine_shards_do_not_change_results() {
+        // Same graph, same chip, shards 1 vs 2: identical metrics and
+        // identical levels (the chip is 4x4 = 2 rows per shard).
+        let g = erdos::generate(128, 512, 3);
+        let mut serial_cfg = small_cfg();
+        serial_cfg.shards = 1;
+        let (chip1, built1) = run_bfs(serial_cfg, &g, 0).unwrap();
+        let mut sharded_cfg = small_cfg();
+        sharded_cfg.shards = 2;
+        let (chip2, built2) = run_bfs(sharded_cfg, &g, 0).unwrap();
+        assert_eq!(chip1.metrics, chip2.metrics, "engine must be shard-invariant");
+        assert_eq!(bfs_levels(&chip1, &built1), bfs_levels(&chip2, &built2));
     }
 
     #[test]

@@ -11,6 +11,11 @@ use crate::noc::message::{ActionMsg, NUM_PORTS};
 use crate::rpvo::object::Object;
 
 /// A compute cell parameterized by the application's per-vertex state.
+///
+/// Everything in here is owned by exactly one engine shard; cross-shard
+/// effects (flit pushes from a neighbouring shard) arrive via the outbox
+/// merge at the cycle barrier, never by direct mutation (see
+/// [`crate::arch::chip`] module docs for the determinism argument).
 #[derive(Clone, Debug)]
 pub struct Cell<S> {
     /// Router input units indexed by [`crate::noc::message::Port`]
@@ -29,12 +34,12 @@ pub struct Cell<S> {
     pub busy_until: u64,
     /// Diffusion-throttle state (§6.2).
     pub throttle: Throttle,
-    /// Congestion flag exported to neighbours (computed last cycle).
-    pub congested: bool,
     /// Round-robin arbitration cursor for output-port allocation.
     pub arb: u8,
     /// Epoch marker for the active-list (see `Chip`).
     pub active_epoch: u64,
+    /// Head diffusion observed blocked (for Fig. 6 overlap accounting).
+    pub diff_blocked: bool,
     /// Stall cycles per output channel N/E/S/W (Fig. 9).
     pub contention: [u64; 4],
 }
@@ -49,9 +54,9 @@ impl<S> Cell<S> {
             mem_words: 0,
             busy_until: 0,
             throttle: Throttle::default(),
-            congested: false,
             arb: 0,
             active_epoch: 0,
+            diff_blocked: false,
             contention: [0; 4],
         }
     }
@@ -85,6 +90,18 @@ impl<S> Cell<S> {
     pub fn compute_congested(&self) -> bool {
         self.inputs.iter().any(|u| u.any_full())
     }
+
+    /// Free-slot snapshot over the four cardinal input units, as published
+    /// to `Chip::space` at each cycle barrier: bit `port * 8 + vc` is set
+    /// when that (port, VC) FIFO can accept a flit. The Local injection
+    /// port is excluded — only the owning cell ever pushes to it.
+    pub fn space_snapshot(&self) -> u32 {
+        let mut mask = 0u32;
+        for (p, unit) in self.inputs[..4].iter().enumerate() {
+            mask |= (unit.space_mask() as u32) << (p * 8);
+        }
+        mask
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +117,7 @@ mod tests {
         assert!(!c.has_flits());
         assert_eq!(c.occupancy(), 0);
         assert!(!c.compute_congested());
+        assert_eq!(c.space_snapshot(), 0x03_03_03_03, "2 VCs free on each cardinal port");
     }
 
     #[test]
@@ -111,7 +129,11 @@ mod tests {
         c.action_q.push_back(ActionMsg::app(0, 0, 0));
         assert!(c.pending(5));
         c.action_q.clear();
-        let f = Flit { dst: 0, src: 0, vc: 0, next_port: crate::noc::message::DELIVER, next_vc: 0, hops: 0, moved_at: 0, action: ActionMsg::app(0, 0, 0) };
+        let f = Flit {
+            next_port: crate::noc::message::DELIVER,
+            action: ActionMsg::app(0, 0, 0),
+            ..Flit::default()
+        };
         c.inputs[Port::North.index()].try_push(0, f);
         assert!(c.pending(5));
     }
@@ -123,5 +145,14 @@ mod tests {
         let s1 = c.alloc_object(Object::new_root(1, 0, 0));
         assert_eq!((s0, s1), (0, 1));
         assert!(c.mem_words >= 8);
+    }
+
+    #[test]
+    fn space_snapshot_tracks_full_vcs() {
+        let mut c: Cell<u32> = Cell::new(1, 1);
+        let f = Flit { action: ActionMsg::app(0, 0, 0), ..Flit::default() };
+        assert_eq!(c.space_snapshot(), 0x01_01_01_01);
+        c.inputs[Port::East.index()].try_push(0, f);
+        assert_eq!(c.space_snapshot(), 0x01_01_00_01, "East (port 1) VC0 now full");
     }
 }

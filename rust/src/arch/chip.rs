@@ -14,6 +14,61 @@
 //!
 //! The engine is event-driven for speed: only *active* cells (those with
 //! buffered flits, queued work, or busy timers) are visited each cycle.
+//!
+//! # Sharded parallel engine
+//!
+//! `Chip::run` executes the cycle loop across `cfg.effective_shards()`
+//! worker threads while staying **bit-for-bit deterministic**: every shard
+//! count (including 1) produces identical `Metrics`, identical per-cell
+//! state, and identical final cycle counts.
+//!
+//! **Shard layout.** The grid is partitioned into contiguous *row bands*,
+//! one per worker. X-Y dimension-order routing resolves X displacement
+//! first, so East/West hops never leave a band; the only cross-shard
+//! traffic is North/South hops into the adjacent band (or the wrap band on
+//! a torus) — each shard exchanges flits with at most two neighbours.
+//!
+//! **Determinism argument.** The serial seed engine was order-dependent in
+//! exactly one place: the live `has_space` check against a neighbour's
+//! input buffer, whose outcome depended on whether the neighbour had
+//! already popped this cycle. The engine now uses *credit semantics*: a
+//! forward succeeds iff the destination FIFO had a free slot at the
+//! **start of the cycle** (the `space` snapshot, republished at each cycle
+//! barrier). With that, every remaining intra-cycle interaction is
+//! conflict-free by construction:
+//!   * each (cell, input-port) FIFO has exactly one producer (the
+//!     neighbour on that side, which serves each output direction at most
+//!     once per cycle), so FIFO order and capacity outcomes are
+//!     independent of cell visit order;
+//!   * action/diffuse queues, objects, and busy timers are only ever
+//!     mutated by the owning cell's own route/compute steps;
+//!   * flits that arrive during a cycle are frozen until the next cycle by
+//!     the `moved_at` gate, so it is irrelevant whether a same-shard push
+//!     lands immediately or a cross-shard push lands at the barrier.
+//! Cross-shard pushes and their activation marks are staged into
+//! per-(source, destination) outboxes and merged at the cycle barrier in
+//! fixed source order; per-shard `Metrics` are pure sums/maxes merged in
+//! fixed shard order at the end of the run. Hence serial and sharded
+//! execution are observationally identical.
+//!
+//! **Idle fast-forward.** When a cycle performs no work at all — every
+//! active cell is merely waiting out a multi-cycle busy timer — the engine
+//! jumps `now` straight to the earliest `busy_until` instead of grinding
+//! through no-op cycles; and once the chip is globally quiescent the
+//! idle-tree latency is added arithmetically instead of stepped. Both
+//! shortcuts skip only cycles that provably change nothing, so reported
+//! cycle counts match the fully-stepped engine exactly. (Disabled while
+//! heat-map sampling is on, which wants the per-cycle frame cadence.)
+//!
+//! **Zero-allocation hot path.** Router FIFOs are flat pooled slabs
+//! ([`crate::noc::channel::InputUnit`]), active lists are epoch-stamped
+//! per-shard vectors that are swapped rather than rebuilt, outbox vectors
+//! ping-pong between producer and mailbox so steady-state cycles allocate
+//! nothing, and the blocked-diffusion filter pass uses a fixed scratch
+//! array instead of a per-call `Vec`.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
 
 use crate::arch::addr::{Address, CellId};
 use crate::arch::cell::Cell;
@@ -21,16 +76,59 @@ use crate::arch::config::ChipConfig;
 use crate::diffusive::action::Diffusion;
 use crate::diffusive::handler::Application;
 use crate::diffusive::terminator::Terminator;
-use crate::noc::message::{ActionKind, ActionMsg, Flit, Port, CARDINALS};
-use crate::noc::routing::route;
+use crate::noc::message::{ActionKind, ActionMsg, Flit, Port, CARDINALS, DELIVER, NUM_PORTS};
+use crate::noc::routing::route_to;
 use crate::noc::topology::Geometry;
 use crate::stats::heatmap::{Frame, Heatmap};
 use crate::stats::histogram::ChannelContention;
 use crate::stats::metrics::Metrics;
+use crate::util::sync::{PoisonGuard, SpinBarrier};
 
 /// How many queued diffusions (behind the head) a blocked cell inspects per
 /// filter pass (§6.2 "filter passes on action queue and diffuse queue").
 const FILTER_SCAN: usize = 4;
+
+/// A cross-shard flit push staged during the parallel phase and applied by
+/// the destination shard at the cycle barrier.
+#[derive(Clone, Copy)]
+struct Staged {
+    dst: CellId,
+    in_port: u8,
+    vc: u8,
+    flit: Flit,
+}
+
+/// Per-shard scheduling state (the serial engine is the 1-shard instance).
+struct Shard {
+    /// First cell id owned by this shard (cells are contiguous row bands).
+    base: u32,
+    /// Cells to visit this cycle.
+    active: Vec<CellId>,
+    /// Cells already marked for the *next* cycle (epoch-deduplicated).
+    next: Vec<CellId>,
+    /// Own cells that received a flit this cycle (snapshot refresh set).
+    pushed: Vec<CellId>,
+    /// Cross-shard pushes staged this cycle, keyed by destination shard.
+    per_dest: Vec<Vec<Staged>>,
+    /// Did this shard change any state this cycle? (vetoes fast-forward)
+    advanced: bool,
+    /// Earliest `busy_until` among busy-waiting cells visited this cycle.
+    min_due: u64,
+}
+
+impl Shard {
+    fn new(base: u32, len: u32, nshards: usize) -> Self {
+        Shard {
+            base,
+            active: Vec::with_capacity(len as usize),
+            next: Vec::with_capacity(len as usize),
+            pushed: Vec::new(),
+            per_dest: (0..nshards).map(|_| Vec::new()).collect(),
+            advanced: false,
+            min_due: u64::MAX,
+        }
+    }
+}
 
 pub struct Chip<A: Application> {
     pub cfg: ChipConfig,
@@ -40,14 +138,17 @@ pub struct Chip<A: Application> {
     pub now: u64,
     pub metrics: Metrics,
     pub heatmap: Heatmap,
-    /// Cells to visit this cycle.
-    active: Vec<CellId>,
-    /// Cells already marked for the *next* cycle.
-    next_active: Vec<CellId>,
+    /// Serial-engine scheduling state. Host-side activations (germinates)
+    /// always land in `serial.next`; a sharded run distributes them to the
+    /// workers on entry and returns leftovers on abort.
+    serial: Shard,
+    /// Published free-slot snapshot per cell (bit `port * 8 + vc`), valid
+    /// for the duration of one cycle. See the module docs.
+    space: Vec<AtomicU32>,
+    /// Published congestion flag per cell (end of previous cycle, §6.2).
+    congested: Vec<AtomicBool>,
     terminator: Terminator,
     throttle_period: u64,
-    /// Per-cell flag: head diffusion observed blocked (for Fig. 6 overlap).
-    diff_blocked: Vec<bool>,
 }
 
 impl<A: Application> Chip<A> {
@@ -55,36 +156,34 @@ impl<A: Application> Chip<A> {
         cfg.validate()?;
         let n = cfg.num_cells();
         let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
-        let cells = (0..n).map(|_| Cell::new(cfg.num_vcs, cfg.vc_buffer)).collect();
+        let cells: Vec<Cell<A::State>> =
+            (0..n).map(|_| Cell::new(cfg.num_vcs, cfg.vc_buffer)).collect();
+        let free = cells[0].space_snapshot();
         Ok(Chip {
             geo,
             app,
-            cells,
             now: 0,
             metrics: Metrics::default(),
             heatmap: Heatmap::default(),
-            active: Vec::with_capacity(n as usize),
-            next_active: Vec::with_capacity(n as usize),
+            serial: Shard::new(0, n, 1),
+            space: (0..n).map(|_| AtomicU32::new(free)).collect(),
+            congested: (0..n).map(|_| AtomicBool::new(false)).collect(),
             terminator: Terminator::new(n),
             throttle_period: cfg.throttle_period(),
-            diff_blocked: vec![false; n as usize],
+            cells,
             cfg,
         })
     }
 
     /// Mark a cell for processing next cycle (dedup via epoch stamps).
     #[inline]
-    fn mark(next_active: &mut Vec<CellId>, cell: &mut Cell<A::State>, id: CellId, epoch: u64) {
+    fn mark_host(&mut self, id: CellId) {
+        let epoch = self.now + 1;
+        let cell = &mut self.cells[id as usize];
         if cell.active_epoch != epoch {
             cell.active_epoch = epoch;
-            next_active.push(id);
+            self.serial.next.push(id);
         }
-    }
-
-    #[inline]
-    fn mark_id(&mut self, id: CellId) {
-        let epoch = self.now + 1;
-        Self::mark(&mut self.next_active, &mut self.cells[id as usize], id, epoch);
     }
 
     /// Inject an action at the cell owning `addr` (host `germinate`,
@@ -92,18 +191,55 @@ impl<A: Application> Chip<A> {
     pub fn germinate(&mut self, addr: Address, kind: ActionKind, payload: u32, aux: u32) {
         let msg = ActionMsg { kind, target: addr.slot, payload, aux };
         self.cells[addr.cc as usize].action_q.push_back(msg);
-        self.mark_id(addr.cc);
+        self.mark_host(addr.cc);
+    }
+
+    /// Send an InsertEdge mutation action into the chip (host side of §7;
+    /// it traverses the NoC like any other action). The follow-up compute
+    /// (e.g. an incremental bfs-action) is the caller's to germinate.
+    pub fn germinate_insert_edge(&mut self, src_root: Address, to: Address) {
+        let packed = to.pack();
+        let msg = ActionMsg {
+            kind: ActionKind::InsertEdge,
+            target: src_root.slot,
+            payload: (packed >> 32) as u32,
+            aux: packed as u32,
+        };
+        self.cells[src_root.cc as usize].action_q.push_back(msg);
+        self.mark_host(src_root.cc);
     }
 
     /// Run until the termination detector reports, or `max_cycles`.
     pub fn run(&mut self) -> anyhow::Result<&Metrics> {
+        // A quiet window left over from a previous run must not count
+        // toward this run's idle-tree latency (keeps serial stepped mode,
+        // serial fast mode, and the sharded engine in exact agreement).
+        self.terminator.reset();
+        let nshards = self.cfg.effective_shards();
+        if nshards > 1 {
+            return self.run_sharded(nshards);
+        }
+        // Fast-forward shortcuts are exact but skip heat-map frames, so
+        // fall back to fully-stepped no-op cycles while sampling.
+        let fast = self.cfg.heatmap_every == 0;
         loop {
-            if let Some(done_at) = self.terminator.observe(
-                self.now,
-                0,
-                self.next_active.len() as u64,
-            ) {
-                self.metrics.cycles = done_at;
+            let pending = self.serial.next.len() as u64;
+            if fast {
+                if pending == 0 {
+                    let done = self.terminator.report_at(self.now);
+                    // The fully-stepped loop would hit the max_cycles
+                    // ensure before the idle tree reports; match it.
+                    anyhow::ensure!(
+                        done <= self.cfg.max_cycles,
+                        "exceeded max_cycles={} (livelock or undersized budget)",
+                        self.cfg.max_cycles
+                    );
+                    self.metrics.cycles = done;
+                    self.now = done;
+                    return Ok(&self.metrics);
+                }
+            } else if let Some(done) = self.terminator.observe(self.now, 0, pending) {
+                self.metrics.cycles = done;
                 return Ok(&self.metrics);
             }
             anyhow::ensure!(
@@ -111,67 +247,503 @@ impl<A: Application> Chip<A> {
                 "exceeded max_cycles={} (livelock or undersized budget)",
                 self.cfg.max_cycles
             );
-            self.step();
+            let (advanced, min_due) = self.step_inner();
+            if fast && !advanced && min_due != u64::MAX && min_due > self.now + 1 {
+                // Idle fast-forward: every active cell is merely waiting
+                // out its busy timer; skip straight to the first due cycle.
+                self.now = (min_due - 1).min(self.cfg.max_cycles);
+            }
         }
     }
 
-    /// Advance one cycle.
+    /// Advance one cycle (serial engine; the sharded runner drives the
+    /// same per-cycle logic through its workers).
     pub fn step(&mut self) {
+        self.step_inner();
+    }
+
+    /// One serial cycle; returns `(advanced, min_due)` for fast-forward.
+    fn step_inner(&mut self) -> (bool, u64) {
         self.now += 1;
-        std::mem::swap(&mut self.active, &mut self.next_active);
-        self.next_active.clear();
-        // Visit order rotates with the cycle so no cell gets permanent
-        // arbitration priority chipwide.
-        if self.now & 1 == 0 {
-            self.active.reverse();
+        std::mem::swap(&mut self.serial.active, &mut self.serial.next);
+        self.serial.next.clear();
+        self.serial.advanced = false;
+        self.serial.min_due = u64::MAX;
+        {
+            let mut lane = Lane {
+                app: &self.app,
+                geo: &self.geo,
+                cfg: &self.cfg,
+                now: self.now,
+                throttle_period: self.throttle_period,
+                cells: &mut self.cells,
+                space: &self.space,
+                congested: &self.congested,
+                row_shard: &[],
+                st: &mut self.serial,
+                metrics: &mut self.metrics,
+            };
+            lane.run_phase1();
+            // Serial engine: nothing was staged (one shard owns every
+            // cell), so the barrier merge reduces to the snapshot refresh.
+            lane.finish_cycle();
         }
-        let active = std::mem::take(&mut self.active);
+        if self.cfg.heatmap_every > 0 && self.now % self.cfg.heatmap_every == 0 {
+            self.sample_frame();
+        }
+        (self.serial.advanced, self.serial.min_due)
+    }
+
+    fn sample_frame(&mut self) {
+        let cap =
+            (NUM_PORTS * self.cfg.num_vcs as usize * self.cfg.vc_buffer) as f32;
+        let frame = Frame {
+            cycle: self.now,
+            dim_x: self.cfg.dim_x,
+            dim_y: self.cfg.dim_y,
+            occupancy: self.cells.iter().map(|c| c.occupancy() as f32 / cap).collect(),
+            congested: self
+                .congested
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+        };
+        self.heatmap.frames.push(frame);
+    }
+
+    /// Per-channel contention samples for Fig. 9.
+    pub fn contention(&self) -> ChannelContention {
+        let mut cc = ChannelContention::default();
+        for ch in 0..4 {
+            cc.per_channel[ch] = self.cells.iter().map(|c| c.contention[ch] as f64).collect();
+        }
+        cc
+    }
+
+    /// Visit every root object (including rhizome members) with its state.
+    pub fn for_each_root<F: FnMut(u32, u32, &A::State)>(&self, mut f: F) {
+        for cell in &self.cells {
+            for obj in &cell.objects {
+                if obj.is_root() {
+                    f(obj.vid, obj.member, &obj.state);
+                }
+            }
+        }
+    }
+
+    /// Look up an object (tests / verification).
+    pub fn object(&self, addr: Address) -> &crate::rpvo::object::Object<A::State> {
+        &self.cells[addr.cc as usize].objects[addr.slot as usize]
+    }
+
+    pub fn object_mut(&mut self, addr: Address) -> &mut crate::rpvo::object::Object<A::State> {
+        &mut self.cells[addr.cc as usize].objects[addr.slot as usize]
+    }
+
+    /// Slot-installing helper used by the graph builder.
+    pub fn install(&mut self, cc: CellId, obj: crate::rpvo::object::Object<A::State>) -> Address {
+        let slot = self.cells[cc as usize].alloc_object(obj);
+        Address::new(cc, slot)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Sharded runner
+// ------------------------------------------------------------------------
+
+/// Leader commands, published between the decision barriers each cycle.
+const CMD_RUN: u8 = 0;
+const CMD_JUMP: u8 = 1;
+const CMD_STOP: u8 = 2;
+const CMD_ABORT: u8 = 3;
+
+/// Everything the shard workers share by reference.
+struct Ctx<'e, A: Application> {
+    app: &'e A,
+    geo: &'e Geometry,
+    cfg: &'e ChipConfig,
+    space: &'e [AtomicU32],
+    congested: &'e [AtomicBool],
+    row_shard: &'e [u16],
+    /// Mailboxes indexed `dst_shard * nshards + src_shard`.
+    mail: &'e [Mutex<Vec<Staged>>],
+    mail_flag: &'e [AtomicBool],
+    barrier: &'e SpinBarrier,
+    next_counts: &'e [AtomicU64],
+    min_dues: &'e [AtomicU64],
+    advanced: &'e [AtomicBool],
+    cmd: &'e AtomicU8,
+    cmd_arg: &'e AtomicU64,
+    nshards: usize,
+    throttle_period: u64,
+    start_now: u64,
+    tree_depth: u64,
+    fast: bool,
+}
+
+/// What each worker hands back for deterministic merging (shard order).
+struct ShardOut {
+    metrics: Metrics,
+    /// (cycle, own-range occupancy, own-range congestion) heat-map rows.
+    frames: Vec<(u64, Vec<f32>, Vec<bool>)>,
+    /// Marks pending at exit (non-empty only on abort).
+    leftover: Vec<CellId>,
+}
+
+fn shard_worker<A: Application>(
+    ctx: &Ctx<'_, A>,
+    k: usize,
+    mut st: Shard,
+    cells: &mut [Cell<A::State>],
+) -> ShardOut {
+    let _guard = PoisonGuard(ctx.barrier);
+    let mut sense = false;
+    let mut metrics = Metrics::default();
+    let mut frames: Vec<(u64, Vec<f32>, Vec<bool>)> = Vec::new();
+    let mut now = ctx.start_now;
+    // Leader-only quiescence tracking for the fully-stepped (heat-map) mode.
+    let mut quiet_since: Option<u64> = None;
+    loop {
+        // (1) publish this shard's view of the coming cycle
+        ctx.next_counts[k].store(st.next.len() as u64, Ordering::Relaxed);
+        ctx.min_dues[k].store(st.min_due, Ordering::Relaxed);
+        ctx.advanced[k].store(st.advanced, Ordering::Relaxed);
+        ctx.barrier.wait(&mut sense);
+        // (2) leader decides; mirrors the serial `run` loop exactly
+        if k == 0 {
+            let total: u64 =
+                (0..ctx.nshards).map(|s| ctx.next_counts[s].load(Ordering::Relaxed)).sum();
+            let any_adv = (0..ctx.nshards).any(|s| ctx.advanced[s].load(Ordering::Relaxed));
+            let min_due = (0..ctx.nshards)
+                .map(|s| ctx.min_dues[s].load(Ordering::Relaxed))
+                .min()
+                .unwrap_or(u64::MAX);
+            let decision = if total == 0 && ctx.fast {
+                // Mirror the stepped loop: the idle-tree report lands
+                // inside the cycle budget or the run aborts.
+                if now + ctx.tree_depth <= ctx.cfg.max_cycles {
+                    (CMD_STOP, now + ctx.tree_depth)
+                } else {
+                    (CMD_ABORT, now)
+                }
+            } else if total == 0 {
+                let since = *quiet_since.get_or_insert(now);
+                if now >= since + ctx.tree_depth {
+                    (CMD_STOP, now)
+                } else if now >= ctx.cfg.max_cycles {
+                    (CMD_ABORT, now)
+                } else {
+                    (CMD_RUN, 0)
+                }
+            } else {
+                quiet_since = None;
+                if now >= ctx.cfg.max_cycles {
+                    (CMD_ABORT, now)
+                } else if ctx.fast && !any_adv && min_due != u64::MAX && min_due > now + 1 {
+                    (CMD_JUMP, (min_due - 1).min(ctx.cfg.max_cycles))
+                } else {
+                    (CMD_RUN, 0)
+                }
+            };
+            ctx.cmd_arg.store(decision.1, Ordering::Relaxed);
+            ctx.cmd.store(decision.0, Ordering::Relaxed);
+        }
+        ctx.barrier.wait(&mut sense);
+        // (3) act on the decision
+        match ctx.cmd.load(Ordering::Relaxed) {
+            CMD_STOP | CMD_ABORT => {
+                return ShardOut { metrics, frames, leftover: std::mem::take(&mut st.next) };
+            }
+            CMD_JUMP => now = ctx.cmd_arg.load(Ordering::Relaxed),
+            _ => {}
+        }
+        // (4) the cycle proper: shard-local NoC + CC phases
+        now += 1;
+        std::mem::swap(&mut st.active, &mut st.next);
+        st.next.clear();
+        st.advanced = false;
+        st.min_due = u64::MAX;
+        {
+            let mut lane = Lane {
+                app: ctx.app,
+                geo: ctx.geo,
+                cfg: ctx.cfg,
+                now,
+                throttle_period: ctx.throttle_period,
+                cells: &mut *cells,
+                space: ctx.space,
+                congested: ctx.congested,
+                row_shard: ctx.row_shard,
+                st: &mut st,
+                metrics: &mut metrics,
+            };
+            lane.run_phase1();
+        }
+        // hand staged cross-shard pushes to their destination mailboxes
+        for dest in 0..ctx.nshards {
+            if dest != k && !st.per_dest[dest].is_empty() {
+                let slot = dest * ctx.nshards + k;
+                {
+                    let mut guard = ctx.mail[slot].lock().unwrap();
+                    std::mem::swap(&mut *guard, &mut st.per_dest[dest]);
+                }
+                ctx.mail_flag[slot].store(true, Ordering::Release);
+            }
+        }
+        ctx.barrier.wait(&mut sense);
+        // (5) merge inbound (fixed source order) + snapshot refresh
+        {
+            let mut lane = Lane {
+                app: ctx.app,
+                geo: ctx.geo,
+                cfg: ctx.cfg,
+                now,
+                throttle_period: ctx.throttle_period,
+                cells: &mut *cells,
+                space: ctx.space,
+                congested: ctx.congested,
+                row_shard: ctx.row_shard,
+                st: &mut st,
+                metrics: &mut metrics,
+            };
+            for src in 0..ctx.nshards {
+                if src == k {
+                    continue;
+                }
+                let slot = k * ctx.nshards + src;
+                if ctx.mail_flag[slot].load(Ordering::Acquire) {
+                    {
+                        let mut guard = ctx.mail[slot].lock().unwrap();
+                        lane.apply_staged(&mut guard);
+                    }
+                    ctx.mail_flag[slot].store(false, Ordering::Relaxed);
+                }
+            }
+            lane.finish_cycle();
+            if ctx.cfg.heatmap_every > 0 && now % ctx.cfg.heatmap_every == 0 {
+                let (occ, cong) = lane.sample_segment();
+                frames.push((now, occ, cong));
+            }
+        }
+    }
+}
+
+impl<A: Application> Chip<A> {
+    fn run_sharded(&mut self, nshards: usize) -> anyhow::Result<&Metrics> {
+        let dim_x = self.cfg.dim_x;
+        let dim_y = self.cfg.dim_y;
+        // Contiguous row bands, as even as possible; row -> owning shard.
+        let bounds: Vec<u32> =
+            (0..=nshards).map(|s| (s as u32 * dim_y) / nshards as u32).collect();
+        let mut row_shard = vec![0u16; dim_y as usize];
+        for s in 0..nshards {
+            for r in bounds[s]..bounds[s + 1] {
+                row_shard[r as usize] = s as u16;
+            }
+        }
+        // Seed per-shard schedulers with the host-side marks.
+        let mut shards: Vec<Shard> = (0..nshards)
+            .map(|s| Shard::new(bounds[s] * dim_x, (bounds[s + 1] - bounds[s]) * dim_x, nshards))
+            .collect();
+        for c in self.serial.next.drain(..) {
+            let s = row_shard[(c / dim_x) as usize] as usize;
+            shards[s].next.push(c);
+        }
+        self.serial.active.clear();
+
+        let mail: Vec<Mutex<Vec<Staged>>> =
+            (0..nshards * nshards).map(|_| Mutex::new(Vec::new())).collect();
+        let mail_flag: Vec<AtomicBool> =
+            (0..nshards * nshards).map(|_| AtomicBool::new(false)).collect();
+        let barrier = SpinBarrier::new(nshards);
+        let next_counts: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(0)).collect();
+        let min_dues: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(u64::MAX)).collect();
+        let advanced: Vec<AtomicBool> = (0..nshards).map(|_| AtomicBool::new(false)).collect();
+        let cmd = AtomicU8::new(CMD_RUN);
+        let cmd_arg = AtomicU64::new(0);
+
+        let mut outs: Vec<ShardOut> = Vec::with_capacity(nshards);
+        {
+            // Split the cell grid into per-shard contiguous slices.
+            let mut slices: Vec<&mut [Cell<A::State>]> = Vec::with_capacity(nshards);
+            let mut rest: &mut [Cell<A::State>] = &mut self.cells;
+            for s in 0..nshards {
+                let take = ((bounds[s + 1] - bounds[s]) * dim_x) as usize;
+                let (mine, r) = rest.split_at_mut(take);
+                slices.push(mine);
+                rest = r;
+            }
+            debug_assert!(rest.is_empty());
+
+            let ctx = Ctx {
+                app: &self.app,
+                geo: &self.geo,
+                cfg: &self.cfg,
+                space: &self.space,
+                congested: &self.congested,
+                row_shard: &row_shard,
+                mail: &mail,
+                mail_flag: &mail_flag,
+                barrier: &barrier,
+                next_counts: &next_counts,
+                min_dues: &min_dues,
+                advanced: &advanced,
+                cmd: &cmd,
+                cmd_arg: &cmd_arg,
+                nshards,
+                throttle_period: self.throttle_period,
+                start_now: self.now,
+                tree_depth: self.terminator.tree_depth(),
+                fast: self.cfg.heatmap_every == 0,
+            };
+
+            let mut work: Vec<(usize, Shard, &mut [Cell<A::State>])> = shards
+                .into_iter()
+                .zip(slices)
+                .enumerate()
+                .map(|(k, (st, sl))| (k, st, sl))
+                .collect();
+            let (k0, st0, sl0) = work.remove(0);
+            let ctx_ref = &ctx;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = work
+                    .into_iter()
+                    .map(|(k, st, sl)| scope.spawn(move || shard_worker(ctx_ref, k, st, sl)))
+                    .collect();
+                // This thread runs shard 0 (the leader).
+                outs.push(shard_worker(ctx_ref, k0, st0, sl0));
+                for h in handles {
+                    outs.push(h.join().expect("shard worker panicked"));
+                }
+            });
+        }
+
+        // Deterministic merge, fixed shard order.
+        for o in &outs {
+            self.metrics.merge(&o.metrics);
+        }
+        if self.cfg.heatmap_every > 0 && !outs[0].frames.is_empty() {
+            let count = outs[0].frames.len();
+            debug_assert!(outs.iter().all(|o| o.frames.len() == count));
+            for idx in 0..count {
+                let cycle = outs[0].frames[idx].0;
+                let mut occupancy = Vec::with_capacity(self.cells.len());
+                let mut cong = Vec::with_capacity(self.cells.len());
+                for o in &outs {
+                    occupancy.extend_from_slice(&o.frames[idx].1);
+                    cong.extend_from_slice(&o.frames[idx].2);
+                }
+                self.heatmap.frames.push(Frame {
+                    cycle,
+                    dim_x,
+                    dim_y,
+                    occupancy,
+                    congested: cong,
+                });
+            }
+        }
+        let final_cmd = cmd.load(Ordering::Relaxed);
+        let final_arg = cmd_arg.load(Ordering::Relaxed);
+        self.now = final_arg;
+        if final_cmd == CMD_ABORT {
+            // Preserve pending marks so chip state stays inspectable.
+            for o in &mut outs {
+                self.serial.next.append(&mut o.leftover);
+            }
+            anyhow::bail!(
+                "exceeded max_cycles={} (livelock or undersized budget)",
+                self.cfg.max_cycles
+            );
+        }
+        self.metrics.cycles = final_arg;
+        Ok(&self.metrics)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Per-cycle engine logic, shared by the serial engine and every worker
+// ------------------------------------------------------------------------
+
+/// A shard's view of one cycle: its own cells (mutable), the global
+/// read-only snapshots, and its scheduling state.
+struct Lane<'a, A: Application> {
+    app: &'a A,
+    geo: &'a Geometry,
+    cfg: &'a ChipConfig,
+    now: u64,
+    throttle_period: u64,
+    cells: &'a mut [Cell<A::State>],
+    space: &'a [AtomicU32],
+    congested: &'a [AtomicBool],
+    /// Row -> owning shard (empty for the serial engine, which owns all).
+    row_shard: &'a [u16],
+    st: &'a mut Shard,
+    metrics: &'a mut Metrics,
+}
+
+impl<'a, A: Application> Lane<'a, A> {
+    #[inline]
+    fn idx(&self, c: CellId) -> usize {
+        (c - self.st.base) as usize
+    }
+
+    #[inline]
+    fn owns(&self, c: CellId) -> bool {
+        c >= self.st.base && ((c - self.st.base) as usize) < self.cells.len()
+    }
+
+    /// Mark a cell for processing next cycle (dedup via epoch stamps).
+    #[inline]
+    fn mark(next: &mut Vec<CellId>, cell: &mut Cell<A::State>, id: CellId, epoch: u64) {
+        if cell.active_epoch != epoch {
+            cell.active_epoch = epoch;
+            next.push(id);
+        }
+    }
+
+    /// NoC then CC phase over this shard's active cells.
+    fn run_phase1(&mut self) {
+        let active = std::mem::take(&mut self.st.active);
         for &c in &active {
             self.route_cell(c);
         }
         for &c in &active {
             self.compute_cell(c);
         }
-        // Refresh congestion flags for cells that were touched.
-        for &c in &active {
-            let cell = &mut self.cells[c as usize];
-            cell.congested = cell.compute_congested();
-        }
-        self.active = active;
-        if self.cfg.heatmap_every > 0 && self.now % self.cfg.heatmap_every == 0 {
-            self.sample_frame();
-        }
+        self.st.active = active;
     }
 
-    // ------------------------------------------------------------ NoC --
+    // ---------------------------------------------------------- NoC --
 
     fn route_cell(&mut self, c: CellId) {
         let now = self.now;
         let epoch = now + 1;
+        let i = self.idx(c);
         // Fast path: compute-only cells have an empty router.
-        if !self.cells[c as usize].has_flits() {
+        if !self.cells[i].has_flits() {
             return;
         }
+        self.st.advanced = true;
         let num_vcs = self.cfg.num_vcs;
         let mut popped_ports: u8 = 0; // one pop per input port per cycle
         // Deliveries: head flits addressed to this cell drain into the
         // action queue (one per input port per cycle).
-        for p in 0..crate::noc::message::NUM_PORTS {
-            let cell = &mut self.cells[c as usize];
+        for p in 0..NUM_PORTS {
+            let cell = &mut self.cells[i];
             let unit = &mut cell.inputs[p];
             let mut mask = unit.live_mask();
             while mask != 0 {
                 let vc = mask.trailing_zeros() as u8;
                 mask &= mask - 1;
                 let deliverable = matches!(unit.head(vc),
-                    Some(f) if f.next_port == crate::noc::message::DELIVER && f.moved_at < now);
+                    Some(f) if f.next_port == DELIVER && f.moved_at < now);
                 if deliverable {
                     let f = unit.pop(vc).unwrap();
                     cell.action_q.push_back(f.action);
                     self.metrics.action_q_hwm =
                         self.metrics.action_q_hwm.max(cell.action_q.len() as u64);
                     popped_ports |= 1 << p;
-                    Self::mark(&mut self.next_active, cell, c, epoch);
+                    Self::mark(&mut self.st.next, cell, c, epoch);
                     break;
                 }
             }
@@ -181,8 +753,8 @@ impl<A: Application> Chip<A> {
         // lanes computes each head's route exactly once (the candidate
         // first in rotation order wins its output — same arbitration as a
         // per-direction rescan, ~5x cheaper).
-        let arb = self.cells[c as usize].arb;
-        let lanes = (crate::noc::message::NUM_PORTS as u8 * num_vcs) as usize;
+        let arb = self.cells[i].arb;
+        let lanes = NUM_PORTS * num_vcs as usize;
         let mut served_dirs: u8 = 0;
         let mut blocked_dirs: u8 = 0;
         let start = (arb as usize) % lanes;
@@ -195,7 +767,7 @@ impl<A: Application> Chip<A> {
             if vc == num_vcs {
                 vc = 0;
                 p += 1;
-                if p == crate::noc::message::NUM_PORTS {
+                if p == NUM_PORTS {
                     p = 0;
                 }
             }
@@ -203,15 +775,11 @@ impl<A: Application> Chip<A> {
             if popped_ports & (1 << p) != 0 {
                 continue;
             }
-            if self.cells[c as usize].inputs[p].live_mask() & (1 << vc) == 0 {
-                continue; // empty VC: skip without touching the deque
+            if self.cells[i].inputs[p].live_mask() & (1 << vc) == 0 {
+                continue; // empty VC: skip without touching the buffer
             }
-            let head = match self.cells[c as usize].inputs[p].head(vc) {
-                Some(f)
-                    if f.moved_at < now && f.next_port != crate::noc::message::DELIVER =>
-                {
-                    *f
-                }
+            let head = match self.cells[i].inputs[p].head(vc) {
+                Some(f) if f.moved_at < now && f.next_port != DELIVER => *f,
                 _ => continue,
             };
             // The hop was cached when the flit entered this cell's buffer.
@@ -223,34 +791,51 @@ impl<A: Application> Chip<A> {
             let out_vc = head.next_vc;
             let n = self.geo.neighbor(c, port).expect("minimal route exits the chip");
             let in_port = port.opposite().index();
-            if self.cells[n as usize].inputs[in_port].has_space(out_vc) {
-                let mut f = self.cells[c as usize].inputs[p].pop(vc).unwrap();
+            // Credit check against the *start-of-cycle* space snapshot —
+            // one-cycle credit delay, identical for every shard count.
+            let bit = 1u32 << (in_port * 8 + out_vc as usize);
+            if self.space[n as usize].load(Ordering::Relaxed) & bit != 0 {
+                let mut f = self.cells[i].inputs[p].pop(vc).unwrap();
                 f.vc = out_vc;
                 f.hops += 1;
                 f.moved_at = now;
-                // Pre-route the following hop out of `n`.
+                // Pre-route the following hop out of `n` using the
+                // flit-header destination coordinates (no re-division).
                 if n == f.dst {
-                    f.next_port = crate::noc::message::DELIVER;
+                    f.next_port = DELIVER;
                 } else {
-                    let hop2 = route(&self.geo, n, f.dst, f.vc, num_vcs)
+                    let hop2 = route_to(self.geo, n, f.dst, f.dst_xy(), f.vc, num_vcs)
                         .expect("undelivered flit must route");
                     f.next_port = hop2.port.index() as u8;
                     f.next_vc = hop2.vc;
                 }
-                let ncell = &mut self.cells[n as usize];
-                let ok = ncell.inputs[in_port].try_push(out_vc, f);
-                debug_assert!(ok);
-                Self::mark(&mut self.next_active, ncell, n, epoch);
                 self.metrics.hops += 1;
                 popped_ports |= 1 << p;
                 served_dirs |= 1 << d;
+                if self.owns(n) {
+                    let ni = (n - self.st.base) as usize;
+                    let ncell = &mut self.cells[ni];
+                    let ok = ncell.inputs[in_port].try_push(out_vc, f);
+                    debug_assert!(ok, "space snapshot guaranteed a free slot");
+                    Self::mark(&mut self.st.next, ncell, n, epoch);
+                    self.st.pushed.push(n);
+                } else {
+                    let (_, ny) = self.geo.coords(n);
+                    let dest = self.row_shard[ny as usize] as usize;
+                    self.st.per_dest[dest].push(Staged {
+                        dst: n,
+                        in_port: in_port as u8,
+                        vc: out_vc,
+                        flit: f,
+                    });
+                }
             } else {
                 blocked_dirs |= 1 << d;
             }
         }
         let stalled = blocked_dirs & !served_dirs;
         if stalled != 0 {
-            let cell = &mut self.cells[c as usize];
+            let cell = &mut self.cells[i];
             for d in 0..4u8 {
                 if stalled & (1 << d) != 0 {
                     cell.contention[d as usize] += 1;
@@ -258,40 +843,45 @@ impl<A: Application> Chip<A> {
                 }
             }
         }
-        let cell = &mut self.cells[c as usize];
+        let cell = &mut self.cells[i];
         cell.arb = cell.arb.wrapping_add(1);
         if cell.has_flits() {
-            Self::mark(&mut self.next_active, cell, c, epoch);
+            Self::mark(&mut self.st.next, cell, c, epoch);
         }
     }
 
-    // ------------------------------------------------------------- CC --
+    // ----------------------------------------------------------- CC --
 
     fn compute_cell(&mut self, c: CellId) {
         let now = self.now;
         let epoch = now + 1;
-        if self.cells[c as usize].busy_until > now {
-            let cell = &mut self.cells[c as usize];
-            Self::mark(&mut self.next_active, cell, c, epoch);
+        let i = self.idx(c);
+        if self.cells[i].busy_until > now {
+            self.st.min_due = self.st.min_due.min(self.cells[i].busy_until);
+            let cell = &mut self.cells[i];
+            Self::mark(&mut self.st.next, cell, c, epoch);
             return;
         }
-        if !self.cells[c as usize].action_q.is_empty() {
+        if !self.cells[i].action_q.is_empty() {
+            self.st.advanced = true;
             self.execute_action(c);
-        } else if !self.cells[c as usize].diffuse_q.is_empty() {
+        } else if !self.cells[i].diffuse_q.is_empty() {
+            self.st.advanced = true;
             self.progress_diffusion(c);
         }
-        let cell = &mut self.cells[c as usize];
+        let cell = &mut self.cells[i];
         if cell.pending(now) {
-            Self::mark(&mut self.next_active, cell, c, epoch);
+            Self::mark(&mut self.st.next, cell, c, epoch);
         }
     }
 
     fn execute_action(&mut self, c: CellId) {
         let now = self.now;
-        let msg = self.cells[c as usize].action_q.pop_front().unwrap();
+        let i = self.idx(c);
+        let msg = self.cells[i].action_q.pop_front().unwrap();
         // Overlap accounting (Fig. 6): an action runs while this cell's
         // head diffusion is blocked on the network or throttle.
-        if self.diff_blocked[c as usize] && !self.cells[c as usize].diffuse_q.is_empty() {
+        if self.cells[i].diff_blocked && !self.cells[i].diffuse_q.is_empty() {
             self.metrics.actions_overlapped += 1;
         }
         let mut busy = 1u32; // predicate resolution / dispatch
@@ -299,7 +889,7 @@ impl<A: Application> Chip<A> {
         let slot = msg.target as usize;
         match msg.kind {
             ActionKind::App => {
-                let cell = &mut self.cells[c as usize];
+                let cell = &mut self.cells[i];
                 let obj = &mut cell.objects[slot];
                 if self.app.predicate(&obj.state, &msg) {
                     let meta = obj.meta;
@@ -318,7 +908,7 @@ impl<A: Application> Chip<A> {
                 }
             }
             ActionKind::RelayDiffuse => {
-                let cell = &mut self.cells[c as usize];
+                let cell = &mut self.cells[i];
                 let obj = &mut cell.objects[slot];
                 self.app.apply_relay(&mut obj.state, msg.payload, msg.aux);
                 self.metrics.relays += 1;
@@ -330,7 +920,7 @@ impl<A: Application> Chip<A> {
                 self.metrics.diffusions_created += 1;
             }
             ActionKind::RhizomeShare => {
-                let cell = &mut self.cells[c as usize];
+                let cell = &mut self.cells[i];
                 let obj = &mut cell.objects[slot];
                 let meta = obj.meta;
                 let work = self.app.on_rhizome_share(&mut obj.state, &msg, &meta);
@@ -346,7 +936,7 @@ impl<A: Application> Chip<A> {
                 busy += self.handle_insert_edge(c, &msg);
             }
         }
-        let cell = &mut self.cells[c as usize];
+        let cell = &mut self.cells[i];
         cell.busy_until = now + busy as u64;
         self.metrics.compute_cycles += busy as u64;
     }
@@ -363,95 +953,105 @@ impl<A: Application> Chip<A> {
         let chunk = self.cfg.local_edgelist_size;
         let arity = self.cfg.ghost_arity;
         self.metrics.sram_writes += 1;
-        let cell = &mut self.cells[c as usize];
-        let obj = &mut cell.objects[slot];
-        if obj.edges.len() < chunk {
-            obj.edges.push(crate::rpvo::object::Edge { to, weight: 1 });
-            return 2;
+        let i = self.idx(c);
+        {
+            let obj = &mut self.cells[i].objects[slot];
+            if obj.edges.len() < chunk {
+                obj.edges.push(crate::rpvo::object::Edge { to, weight: 1 });
+                return 2;
+            }
         }
-        if obj.ghosts.len() < arity {
+        if self.cells[i].objects[slot].ghosts.len() < arity {
             // Grow a ghost locally (the message already paid the transit
             // to this locality; vicinity-0 allocation).
-            let vid = obj.vid;
-            let member = obj.member;
-            let meta = obj.meta;
+            let (vid, member, meta) = {
+                let obj = &self.cells[i].objects[slot];
+                (obj.vid, obj.member, obj.meta)
+            };
             let state = self.app.init(&meta);
             let mut ghost = crate::rpvo::object::Object::new_ghost(vid, member, state);
             ghost.meta = meta;
             ghost.edges.push(crate::rpvo::object::Edge { to, weight: 1 });
-            let gaddr = self.install(c, ghost);
-            self.cells[c as usize].objects[slot].ghosts.push(gaddr);
+            let gslot = self.cells[i].alloc_object(ghost);
+            let gaddr = Address::new(c, gslot);
+            self.cells[i].objects[slot].ghosts.push(gaddr);
             return 3;
         }
-        // Relay to a ghost child, rotating on current edge count for
-        // balance; the action re-executes at the child's locality.
-        let g = obj.ghosts[obj.edges.len() % obj.ghosts.len()];
+        // Relay to a ghost child, round-robin via a per-object cursor so
+        // overflow inserts spread across the subtrees (edge count alone
+        // freezes once the chunk is full); the action re-executes at the
+        // child's locality.
+        let g = {
+            let obj = &mut self.cells[i].objects[slot];
+            let pick = obj.ghosts[(obj.relay_rr as usize) % obj.ghosts.len()];
+            obj.relay_rr = obj.relay_rr.wrapping_add(1);
+            pick
+        };
         let relay = ActionMsg { kind: ActionKind::InsertEdge, target: g.slot, ..*msg };
+        let epoch = self.now + 1;
         if g.cc == c {
-            self.cells[c as usize].action_q.push_back(relay);
+            let cell = &mut self.cells[i];
+            cell.action_q.push_back(relay);
             self.metrics.messages_local += 1;
-            self.mark_id(c);
+            Self::mark(&mut self.st.next, cell, c, epoch);
         } else {
             // Mutation messages bypass the diffuse queue (they are single
             // sends, not fan-outs); inject directly, retrying next cycle
             // via re-enqueue if the local port is full.
-            let hop = route(&self.geo, c, g.cc, 0, self.cfg.num_vcs).expect("remote relays route");
-            let mut flit = Flit::new(c, g, relay, self.now);
-            flit.next_port = hop.port.index() as u8;
-            flit.next_vc = hop.vc;
-            let cell = &mut self.cells[c as usize];
-            if cell.inputs[Port::Local.index()].try_push(hop.vc, flit) {
+            if self.inject(c, g, relay) {
                 self.metrics.messages_sent += 1;
             } else {
-                cell.action_q.push_back(relay); // retry later
+                self.cells[i].action_q.push_back(relay); // retry later
             }
-            self.mark_id(c);
+            let cell = &mut self.cells[i];
+            Self::mark(&mut self.st.next, cell, c, epoch);
         }
         2
     }
 
-    /// Send an InsertEdge mutation action into the chip (host side of §7;
-    /// it traverses the NoC like any other action). The follow-up compute
-    /// (e.g. an incremental bfs-action) is the caller's to germinate.
-    pub fn germinate_insert_edge(&mut self, src_root: Address, to: Address) {
-        let packed = to.pack();
-        let msg = ActionMsg {
-            kind: ActionKind::InsertEdge,
-            target: src_root.slot,
-            payload: (packed >> 32) as u32,
-            aux: packed as u32,
-        };
-        self.cells[src_root.cc as usize].action_q.push_back(msg);
-        self.mark_id(src_root.cc);
+    /// Build + stage a remote-bound flit into this cell's Local injection
+    /// port (live check: the owning cell is this port's only producer).
+    fn inject(&mut self, c: CellId, target: Address, msg: ActionMsg) -> bool {
+        let num_vcs = self.cfg.num_vcs;
+        let dst_xy = self.geo.coords(target.cc);
+        let hop = route_to(self.geo, c, target.cc, dst_xy, 0, num_vcs)
+            .expect("remote target must route");
+        let mut flit = Flit::new(c, target, dst_xy, msg, self.now);
+        flit.next_port = hop.port.index() as u8;
+        flit.next_vc = hop.vc;
+        let i = self.idx(c);
+        self.cells[i].inputs[Port::Local.index()].try_push(hop.vc, flit)
     }
 
     /// Progress the head diffusion by one `propagate` (or prune it).
     fn progress_diffusion(&mut self, c: CellId) {
         let now = self.now;
-        let d = *self.cells[c as usize].diffuse_q.front().unwrap();
+        let i = self.idx(c);
+        let d = *self.cells[i].diffuse_q.front().unwrap();
         // The diffuse clause's own predicate, evaluated lazily (Listing 6).
         let live = {
-            let obj = &self.cells[c as usize].objects[d.slot as usize];
+            let obj = &self.cells[i].objects[d.slot as usize];
             self.app.diffuse_live(&obj.state, d.payload, d.aux)
         };
         self.metrics.sram_reads += 1;
         if !live {
-            self.cells[c as usize].diffuse_q.pop_front();
+            let cell = &mut self.cells[i];
+            cell.diffuse_q.pop_front();
+            cell.diff_blocked = false;
             self.metrics.diffusions_pruned += 1;
-            self.diff_blocked[c as usize] = false;
             self.charge(c, 1);
             return;
         }
         // Throttling (§6.2): before creating a message, consult neighbour
         // congestion from the previous cycle.
         if self.cfg.throttling {
-            if self.cells[c as usize].throttle.halted(now) {
+            if self.cells[i].throttle.halted(now) {
                 self.metrics.throttle_cycles += 1;
                 self.blocked_filter_pass(c);
                 return;
             }
             if self.neighbors_congested(c) {
-                self.cells[c as usize].throttle.engage(now, self.throttle_period);
+                self.cells[i].throttle.engage(now, self.throttle_period);
                 self.metrics.throttle_engaged += 1;
                 self.metrics.throttle_cycles += 1;
                 self.blocked_filter_pass(c);
@@ -460,7 +1060,7 @@ impl<A: Application> Chip<A> {
         }
         // Stage the next propagate of this diffusion.
         let (target_addr, msg) = {
-            let obj = &self.cells[c as usize].objects[d.slot as usize];
+            let obj = &self.cells[i].objects[d.slot as usize];
             if d.edges && (d.e_idx as usize) < obj.edges.len() {
                 let e = obj.edges[d.e_idx as usize];
                 let (p, a) = self.app.edge_payload(d.payload, d.aux, e.weight);
@@ -501,38 +1101,31 @@ impl<A: Application> Chip<A> {
         self.metrics.sram_reads += 1; // edge/link fetch
         if target_addr.cc == c {
             // Same-cell action: skips the network (§4).
-            let cell = &mut self.cells[c as usize];
+            let cell = &mut self.cells[i];
             cell.action_q.push_back(msg);
             self.metrics.messages_local += 1;
             self.advance_cursor(c);
-            self.diff_blocked[c as usize] = false;
+            self.cells[i].diff_blocked = false;
+            self.charge(c, 1);
+        } else if self.inject(c, target_addr, msg) {
+            self.metrics.messages_sent += 1;
+            self.advance_cursor(c);
+            self.cells[i].diff_blocked = false;
             self.charge(c, 1);
         } else {
-            let hop = route(&self.geo, c, target_addr.cc, 0, self.cfg.num_vcs)
-                .expect("remote target must route");
-            let mut flit = Flit::new(c, target_addr, msg, now);
-            flit.next_port = hop.port.index() as u8;
-            flit.next_vc = hop.vc;
-            let cell = &mut self.cells[c as usize];
-            if cell.inputs[Port::Local.index()].try_push(hop.vc, flit) {
-                self.metrics.messages_sent += 1;
-                self.advance_cursor(c);
-                self.diff_blocked[c as usize] = false;
-                self.charge(c, 1);
-            } else {
-                // Injection blocked on a congested network: overlap with
-                // pruning instead of stalling (§6.2).
-                self.metrics.diffusion_blocked_cycles += 1;
-                self.blocked_filter_pass(c);
-            }
+            // Injection blocked on a congested network: overlap with
+            // pruning instead of stalling (§6.2).
+            self.metrics.diffusion_blocked_cycles += 1;
+            self.blocked_filter_pass(c);
         }
     }
 
     /// Move the head diffusion's cursor past the send just staged; retire
     /// the diffusion when all phases are done.
     fn advance_cursor(&mut self, c: CellId) {
+        let i = self.idx(c);
         let done = {
-            let cell = &mut self.cells[c as usize];
+            let cell = &mut self.cells[i];
             let obj_edges;
             let obj_ghosts;
             let obj_rhiz;
@@ -561,29 +1154,38 @@ impl<A: Application> Chip<A> {
     }
 
     fn finish_diffusion(&mut self, c: CellId) {
-        self.cells[c as usize].diffuse_q.pop_front();
+        let i = self.idx(c);
+        let cell = &mut self.cells[i];
+        cell.diffuse_q.pop_front();
+        cell.diff_blocked = false;
         self.metrics.diffusions_executed += 1;
-        self.diff_blocked[c as usize] = false;
     }
 
     /// The head diffusion is blocked: mark it, and spend the cycle pruning
     /// queued diffusions whose predicates have gone stale (§6.2 "Lazy
-    /// Diffuse as Implicit Reduction").
+    /// Diffuse as Implicit Reduction"). Fixed scratch array: the hot path
+    /// never allocates.
     fn blocked_filter_pass(&mut self, c: CellId) {
-        self.diff_blocked[c as usize] = true;
-        let cell = &mut self.cells[c as usize];
-        let len = cell.diffuse_q.len();
+        let i = self.idx(c);
+        self.cells[i].diff_blocked = true;
+        let len = self.cells[i].diffuse_q.len();
         let scan = len.min(1 + FILTER_SCAN);
-        let mut dead: Vec<usize> = Vec::new();
-        for i in 1..scan {
-            let d = cell.diffuse_q[i];
-            let obj = &cell.objects[d.slot as usize];
-            if !self.app.diffuse_live(&obj.state, d.payload, d.aux) {
-                dead.push(i);
+        let mut dead = [0usize; FILTER_SCAN];
+        let mut ndead = 0usize;
+        {
+            let cell = &self.cells[i];
+            for j in 1..scan {
+                let d = cell.diffuse_q[j];
+                let obj = &cell.objects[d.slot as usize];
+                if !self.app.diffuse_live(&obj.state, d.payload, d.aux) {
+                    dead[ndead] = j;
+                    ndead += 1;
+                }
             }
         }
-        for &i in dead.iter().rev() {
-            cell.diffuse_q.remove(i);
+        let cell = &mut self.cells[i];
+        for k in (0..ndead).rev() {
+            cell.diffuse_q.remove(dead[k]);
             self.metrics.diffusions_pruned_filter += 1;
         }
         self.charge(c, 1);
@@ -591,66 +1193,68 @@ impl<A: Application> Chip<A> {
 
     #[inline]
     fn charge(&mut self, c: CellId, cycles: u32) {
-        self.cells[c as usize].busy_until = self.now + cycles as u64;
+        let i = self.idx(c);
+        self.cells[i].busy_until = self.now + cycles as u64;
         self.metrics.compute_cycles += cycles as u64;
     }
 
     /// Any immediate neighbour flagged congested last cycle? (§6.2 check.)
+    /// Reads the published snapshot, so it is race-free across shards.
     fn neighbors_congested(&self, c: CellId) -> bool {
         CARDINALS.iter().any(|&p| {
             self.geo
                 .neighbor(c, p)
-                .map(|n| self.cells[n as usize].congested)
+                .map(|n| self.congested[n as usize].load(Ordering::Relaxed))
                 .unwrap_or(false)
         })
     }
 
-    fn sample_frame(&mut self) {
-        let cap = (crate::noc::message::NUM_PORTS * self.cfg.num_vcs as usize
-            * self.cfg.vc_buffer) as f32;
-        let frame = Frame {
-            cycle: self.now,
-            dim_x: self.cfg.dim_x,
-            dim_y: self.cfg.dim_y,
-            occupancy: self.cells.iter().map(|c| c.occupancy() as f32 / cap).collect(),
-            congested: self.cells.iter().map(|c| c.congested).collect(),
-        };
-        self.heatmap.frames.push(frame);
-    }
+    // ------------------------------------------------- barrier merge --
 
-    /// Per-channel contention samples for Fig. 9.
-    pub fn contention(&self) -> ChannelContention {
-        let mut cc = ChannelContention::default();
-        for ch in 0..4 {
-            cc.per_channel[ch] = self.cells.iter().map(|c| c.contention[ch] as f64).collect();
-        }
-        cc
-    }
-
-    /// Visit every root object (including rhizome members) with its state.
-    pub fn for_each_root<F: FnMut(u32, u32, &A::State)>(&self, mut f: F) {
-        for cell in &self.cells {
-            for obj in &cell.objects {
-                if obj.is_root() {
-                    f(obj.vid, obj.member, &obj.state);
-                }
-            }
+    /// Apply pushes staged by another shard for cells this shard owns.
+    fn apply_staged(&mut self, items: &mut Vec<Staged>) {
+        let epoch = self.now + 1;
+        for s in items.drain(..) {
+            let i = (s.dst - self.st.base) as usize;
+            let cell = &mut self.cells[i];
+            let ok = cell.inputs[s.in_port as usize].try_push(s.vc, s.flit);
+            debug_assert!(ok, "outbox push must fit (single producer + credit)");
+            Self::mark(&mut self.st.next, cell, s.dst, epoch);
+            self.st.pushed.push(s.dst);
         }
     }
 
-    /// Look up an object (tests / verification).
-    pub fn object(&self, addr: Address) -> &crate::rpvo::object::Object<A::State> {
-        &self.cells[addr.cc as usize].objects[addr.slot as usize]
+    /// Republish the space/congestion snapshots for every cell whose
+    /// router buffers changed this cycle: visited cells (pops) and push
+    /// recipients. Runs after `apply_staged`, i.e. at end-of-cycle ==
+    /// start-of-next-cycle.
+    fn finish_cycle(&mut self) {
+        for k in 0..self.st.active.len() {
+            let c = self.st.active[k];
+            self.refresh(c);
+        }
+        while let Some(c) = self.st.pushed.pop() {
+            self.refresh(c);
+        }
     }
 
-    pub fn object_mut(&mut self, addr: Address) -> &mut crate::rpvo::object::Object<A::State> {
-        &mut self.cells[addr.cc as usize].objects[addr.slot as usize]
+    #[inline]
+    fn refresh(&mut self, c: CellId) {
+        let i = (c - self.st.base) as usize;
+        let cell = &self.cells[i];
+        self.space[c as usize].store(cell.space_snapshot(), Ordering::Relaxed);
+        self.congested[c as usize].store(cell.compute_congested(), Ordering::Relaxed);
     }
 
-    /// Slot-installing helper used by the graph builder.
-    pub fn install(&mut self, cc: CellId, obj: crate::rpvo::object::Object<A::State>) -> Address {
-        let slot = self.cells[cc as usize].alloc_object(obj);
-        Address::new(cc, slot)
+    /// Heat-map sample over this shard's own cell range (call after
+    /// `finish_cycle` so congestion flags are fresh).
+    fn sample_segment(&self) -> (Vec<f32>, Vec<bool>) {
+        let cap = (NUM_PORTS * self.cfg.num_vcs as usize * self.cfg.vc_buffer) as f32;
+        let occ = self.cells.iter().map(|cl| cl.occupancy() as f32 / cap).collect();
+        let cong = (0..self.cells.len())
+            .map(|i| self.congested[self.st.base as usize + i].load(Ordering::Relaxed))
+            .collect();
+        (occ, cong)
     }
 }
 
@@ -895,5 +1499,71 @@ mod tests {
         assert_eq!(chip.object(g).state, 4, "relay refreshed ghost snapshot");
         assert_eq!(chip.object(far).state, 3, "edge held by ghost delivered");
         assert_eq!(chip.metrics.relays, 1);
+    }
+
+    // ---------------------------------------------- engine regression --
+
+    /// Build the same multi-hop flood chip under a given shard count.
+    fn flood_chip(shards: usize) -> Chip<Flood> {
+        let mut cfg = ChipConfig::torus(4);
+        cfg.shards = shards;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        // A hub on cell 0 fanning out to every other cell, plus a chain so
+        // traffic crosses every row band in both directions.
+        let targets: Vec<_> =
+            (1..16).map(|i| chip.install(i, Object::new_root(i, 0, 0))).collect();
+        let mut hub = Object::new_root(0, 0, 0);
+        for &t in &targets {
+            hub.edges.push(Edge { to: t, weight: 1 });
+        }
+        let a = chip.install(0, hub);
+        chip.germinate(a, ActionKind::App, 6, 0);
+        chip
+    }
+
+    #[test]
+    fn sharded_engine_matches_serial_bitwise() {
+        let mut serial = flood_chip(1);
+        serial.run().unwrap();
+        for shards in [2, 4] {
+            let mut sharded = flood_chip(shards);
+            sharded.run().unwrap();
+            assert_eq!(
+                serial.metrics, sharded.metrics,
+                "metrics diverged at shards={shards}"
+            );
+            for (i, (cs, cp)) in serial.cells.iter().zip(&sharded.cells).enumerate() {
+                for (os, op) in cs.objects.iter().zip(&cp.objects) {
+                    assert_eq!(os.state, op.state, "cell {i} state diverged");
+                }
+                assert_eq!(cs.contention, cp.contention, "cell {i} contention diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_forward_matches_fully_stepped_run() {
+        // heatmap_every != 0 disables both fast-forward shortcuts, forcing
+        // the fully-stepped loop; results must be identical either way.
+        let mut fast = flood_chip(1);
+        fast.run().unwrap();
+        let mut slow = flood_chip(1);
+        slow.cfg.heatmap_every = u64::MAX; // never samples, never shortcuts
+        slow.run().unwrap();
+        assert_eq!(fast.metrics, slow.metrics);
+        assert_eq!(fast.now, slow.now);
+    }
+
+    #[test]
+    fn germinate_after_sharded_run_continues() {
+        // Back-to-back runs (the dynamic-graph pattern) across engines.
+        let mut chip = flood_chip(2);
+        chip.run().unwrap();
+        let first_cycles = chip.metrics.cycles;
+        let a = Address::new(0, 0);
+        chip.germinate(a, ActionKind::App, 9, 0);
+        chip.run().unwrap();
+        assert!(chip.metrics.cycles > first_cycles);
+        assert_eq!(chip.object(a).state, 9);
     }
 }

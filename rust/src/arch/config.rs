@@ -55,6 +55,11 @@ pub struct ChipConfig {
     pub max_cycles: u64,
     /// Record per-cell congestion frames every N cycles (0 = off, Fig. 5).
     pub heatmap_every: u64,
+    /// Engine worker shards (contiguous row bands of the grid). `0` = auto:
+    /// available parallelism for chips of >= 1024 cells, serial below that
+    /// (tiny chips lose more to the cycle barrier than they gain). Results
+    /// are bit-identical for every shard count — see `arch::chip` docs.
+    pub shards: usize,
 }
 
 impl ChipConfig {
@@ -77,6 +82,7 @@ impl ChipConfig {
             seed: 0x5EED,
             max_cycles: 200_000_000,
             heatmap_every: 0,
+            shards: 0,
         }
     }
 
@@ -88,6 +94,28 @@ impl ChipConfig {
     #[inline]
     pub fn num_cells(&self) -> u32 {
         self.dim_x * self.dim_y
+    }
+
+    /// Resolve the engine shard count actually used for a run.
+    ///
+    /// Shards are contiguous row bands, so the count is clamped to `dim_y`
+    /// (every shard needs at least one row) and to a fixed ceiling (the
+    /// cycle barrier stops scaling long before that). `shards == 0` picks
+    /// the machine's available parallelism for chips of >= 1024 cells and
+    /// stays serial below — a 16x16 chip's cycles are too cheap to amortize
+    /// even a spin barrier.
+    pub fn effective_shards(&self) -> usize {
+        const MAX_SHARDS: usize = 16;
+        let requested = if self.shards == 0 {
+            if self.num_cells() >= 1024 {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            } else {
+                1
+            }
+        } else {
+            self.shards
+        };
+        requested.min(self.dim_y as usize).clamp(1, MAX_SHARDS)
     }
 
     /// Throttle period `T` (paper Eq. 2): chip hypotenuse, halved on torus.
@@ -115,12 +143,19 @@ impl ChipConfig {
     /// Validate invariants (call before constructing a chip).
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.dim_x >= 2 && self.dim_y >= 2, "chip must be at least 2x2");
+        anyhow::ensure!(
+            self.dim_x <= u16::MAX as u32 && self.dim_y <= u16::MAX as u32,
+            "chip dimensions must fit u16 (flit headers cache destination coordinates)"
+        );
         anyhow::ensure!(self.num_vcs >= 1, "need at least one VC");
         anyhow::ensure!(
             self.topology == Topology::Mesh || self.num_vcs >= 2,
             "torus needs >= 2 VCs for deadlock freedom (distance classes)"
         );
-        anyhow::ensure!(self.vc_buffer >= 1, "vc_buffer must be >= 1");
+        anyhow::ensure!(
+            (1..=255).contains(&self.vc_buffer),
+            "vc_buffer must be in 1..=255 (router ring cursors are u8)"
+        );
         anyhow::ensure!(self.local_edgelist_size >= 1, "local edge-list must hold >= 1 edge");
         anyhow::ensure!(self.ghost_arity >= 1, "ghost arity must be >= 1");
         anyhow::ensure!(self.rpvo_max >= 1, "rpvo_max must be >= 1");
@@ -148,6 +183,36 @@ mod tests {
             let (x, y) = c.coords(cc);
             assert_eq!(c.cell_at(x, y), cc);
         }
+    }
+
+    #[test]
+    fn validate_bounds_dims_to_u16() {
+        let mut c = ChipConfig::mesh(4);
+        c.dim_x = 70_000;
+        assert!(c.validate().is_err(), "dims beyond the flit coord cache must be an Err");
+    }
+
+    #[test]
+    fn validate_bounds_vc_buffer() {
+        let mut c = ChipConfig::torus(4);
+        c.vc_buffer = 256;
+        assert!(c.validate().is_err(), "deeper than u8 ring cursors must be an Err, not a panic");
+        c.vc_buffer = 255;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn effective_shards_clamps() {
+        let mut c = ChipConfig::torus(64);
+        c.shards = 9999;
+        assert_eq!(c.effective_shards(), 16, "hard ceiling");
+        c.shards = 4;
+        assert_eq!(c.effective_shards(), 4);
+        let mut tiny = ChipConfig::torus(2);
+        tiny.shards = 8;
+        assert_eq!(tiny.effective_shards(), 2, "one row per shard minimum");
+        tiny.shards = 0;
+        assert_eq!(tiny.effective_shards(), 1, "auto stays serial on tiny chips");
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Campaign runner: sweep experiment grids across OS threads (the leader
-//! process of the Makefile/bench targets). Each simulation is
-//! single-threaded and deterministic; campaigns parallelize across
-//! configurations.
+//! process of the Makefile/bench targets). Campaigns parallelize across
+//! configurations; when running multi-threaded, `run_all` pins every job
+//! to `cfg.shards = 1` so the (deterministic, shard-invariant) chip
+//! engine does not nest its own workers inside an already-saturated
+//! sweep. Results are unaffected: the engine is bit-identical for every
+//! shard count.
 
 use crate::coordinator::experiment::{run, Experiment, Outcome};
 use crate::graph::model::HostGraph;
@@ -14,8 +17,17 @@ pub struct Job {
 }
 
 /// Run all jobs, up to `threads` at a time, preserving input order.
-pub fn run_all(jobs: Vec<Job>, threads: usize) -> Vec<(String, anyhow::Result<Outcome>)> {
+///
+/// With `threads > 1` every job's engine is forced serial (`shards = 1`):
+/// the sweep itself saturates the cores, and engine results are
+/// shard-invariant so this only avoids oversubscription.
+pub fn run_all(mut jobs: Vec<Job>, threads: usize) -> Vec<(String, anyhow::Result<Outcome>)> {
     let threads = threads.max(1);
+    if threads > 1 {
+        for job in &mut jobs {
+            job.exp.cfg.shards = 1;
+        }
+    }
     let jobs: Vec<_> = jobs.into_iter().enumerate().collect();
     let queue = std::sync::Mutex::new(jobs.into_iter().collect::<std::collections::VecDeque<_>>());
     let results = std::sync::Mutex::new(Vec::new());

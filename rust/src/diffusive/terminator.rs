@@ -47,6 +47,25 @@ impl Terminator {
     pub fn tree_depth(&self) -> u64 {
         self.tree_depth
     }
+
+    /// Forget any quiescence observed in a previous run. The engine calls
+    /// this at every `run()` entry so a stale quiet window from run N
+    /// cannot short-circuit the idle tree at the start of run N+1 (the
+    /// tree would have been re-armed by run N+1's germinates in hardware).
+    pub fn reset(&mut self) {
+        self.quiet_since = None;
+    }
+
+    /// Idle fast-forward entry point: the engine observed global
+    /// quiescence at `now` (no pending cells, no flits in flight) and —
+    /// since nothing can re-activate without host input — the idle tree's
+    /// report time is simply `now + depth`. Stepping the interim no-op
+    /// cycles through [`Terminator::observe`] yields the same value; the
+    /// engine skips them. Resets quiescence tracking for the next run.
+    pub fn report_at(&mut self, now: u64) -> u64 {
+        self.quiet_since = None;
+        now + self.tree_depth
+    }
 }
 
 /// Software Dijkstra–Scholten termination detection overhead model.
@@ -114,6 +133,23 @@ mod tests {
         let mut t = Terminator::new(4);
         for c in 0..100 {
             assert_eq!(t.observe(c, 0, 1), None);
+        }
+    }
+
+    #[test]
+    fn report_at_equals_stepped_observation() {
+        // The fast-forward shortcut must agree with stepping observe()
+        // through the quiet tail, for any quiescence start cycle.
+        for start in [0u64, 3, 17, 1000] {
+            let mut stepped = Terminator::new(64);
+            let mut arrived = None;
+            let mut c = start;
+            while arrived.is_none() {
+                arrived = stepped.observe(c, 0, 0);
+                c += 1;
+            }
+            let mut fast = Terminator::new(64);
+            assert_eq!(arrived.unwrap(), fast.report_at(start));
         }
     }
 

@@ -91,6 +91,9 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
     if args.has("heatmap") {
         cfg.heatmap_every = args.num("heatmap", 1000u64)?;
     }
+    // Engine parallelism: 0 = auto (available cores on big chips). The
+    // result is identical for every shard count; this only trades speed.
+    cfg.shards = args.num("shards", 0usize)?;
     Ok(cfg)
 }
 
@@ -133,6 +136,8 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --rpvo-max N                max RPVOs per rhizome (default 1)\n\
                  \x20 --no-throttle               disable diffusion throttling\n\
                  \x20 --heatmap N                 sample congestion frames every N cycles\n\
+                 \x20 --shards N                  engine worker threads (0 = auto; results\n\
+                 \x20                             are identical for every shard count)\n\
                  \x20 --root V  --iters K  --trials T  --seed S\n\
                  \x20 --xla                       (verify) also check the PJRT oracle\n"
             );

@@ -5,29 +5,42 @@
 //! neighbour's input FIFO on the VC chosen by routing — one buffer stage per
 //! hop, one hop per cycle (§6.1). A full tail FIFO stalls the flit in place;
 //! stall cycles are the *contention* the paper histograms in Fig. 9.
-
-use std::collections::VecDeque;
+//!
+//! Storage is a single flat slab of `num_vcs * cap` pooled flit slots with
+//! per-VC ring cursors — no per-VC `VecDeque`, no allocation after
+//! construction, and one pointer indirection per access instead of two.
+//! This is the zero-allocation hot path of the sharded engine: every flit
+//! ever "created" is a copy into a pre-existing slot.
 
 use crate::noc::message::Flit;
 
-/// One input unit: `num_vcs` bounded FIFOs (num_vcs <= 8).
+/// Upper bound on VCs per link (the live/full bitmasks are `u8`).
+pub const MAX_VCS: usize = 8;
+
+/// One input unit: `num_vcs` bounded ring FIFOs in one flat slab.
 ///
-/// A `live` bitmask tracks which VCs hold flits so the router's lane scan
-/// skips empty buffers without touching the VecDeques (hot path).
+/// VC `v` owns slots `[v * cap, (v + 1) * cap)`; `head[v]`/`len[v]` are its
+/// ring cursors. A `live` bitmask tracks which VCs hold flits so the
+/// router's lane scan skips empty buffers without touching the slab.
 #[derive(Clone, Debug)]
 pub struct InputUnit {
-    vcs: Vec<VecDeque<Flit>>,
-    cap: usize,
+    slots: Box<[Flit]>,
+    head: [u8; MAX_VCS],
+    len: [u8; MAX_VCS],
+    cap: u8,
     live: u8,
     full: u8,
 }
 
 impl InputUnit {
     pub fn new(num_vcs: u8, cap: usize) -> Self {
-        assert!(num_vcs <= 8, "live bitmask is u8");
+        assert!((num_vcs as usize) <= MAX_VCS, "live bitmask is u8");
+        assert!((1..=255).contains(&cap), "per-VC buffer depth must fit u8 cursors");
         InputUnit {
-            vcs: (0..num_vcs).map(|_| VecDeque::with_capacity(cap)).collect(),
-            cap,
+            slots: vec![Flit::default(); num_vcs as usize * cap].into_boxed_slice(),
+            head: [0; MAX_VCS],
+            len: [0; MAX_VCS],
+            cap: cap as u8,
             live: 0,
             full: 0,
         }
@@ -35,7 +48,7 @@ impl InputUnit {
 
     #[inline]
     pub fn num_vcs(&self) -> usize {
-        self.vcs.len()
+        self.slots.len() / self.cap as usize
     }
 
     /// Bitmask of VCs currently holding at least one flit.
@@ -46,19 +59,33 @@ impl InputUnit {
 
     #[inline]
     pub fn has_space(&self, vc: u8) -> bool {
-        self.vcs[vc as usize].len() < self.cap
+        self.len[vc as usize] < self.cap
+    }
+
+    /// Slab index of the slot `off` positions past `vc`'s head.
+    #[inline]
+    fn slot(&self, vc: usize, off: u8) -> usize {
+        // usize arithmetic: head + off can exceed u8 at cap = 255.
+        let mut pos = self.head[vc] as usize + off as usize;
+        let cap = self.cap as usize;
+        if pos >= cap {
+            pos -= cap;
+        }
+        vc * cap + pos
     }
 
     /// Push a flit onto `vc`; returns false (flit unmoved) when full.
     #[inline]
     pub fn try_push(&mut self, vc: u8, flit: Flit) -> bool {
-        let q = &mut self.vcs[vc as usize];
-        if q.len() >= self.cap {
+        let v = vc as usize;
+        if self.len[v] >= self.cap {
             return false;
         }
-        q.push_back(flit);
+        let idx = self.slot(v, self.len[v]);
+        self.slots[idx] = flit;
+        self.len[v] += 1;
         self.live |= 1 << vc;
-        if q.len() >= self.cap {
+        if self.len[v] == self.cap {
             self.full |= 1 << vc;
         }
         true
@@ -66,23 +93,36 @@ impl InputUnit {
 
     #[inline]
     pub fn head(&self, vc: u8) -> Option<&Flit> {
-        self.vcs[vc as usize].front()
+        let v = vc as usize;
+        if self.len[v] == 0 {
+            return None;
+        }
+        Some(&self.slots[self.slot(v, 0)])
     }
 
     #[inline]
     pub fn pop(&mut self, vc: u8) -> Option<Flit> {
-        let f = self.vcs[vc as usize].pop_front();
+        let v = vc as usize;
+        if self.len[v] == 0 {
+            return None;
+        }
+        let f = self.slots[self.slot(v, 0)];
+        self.head[v] += 1;
+        if self.head[v] == self.cap {
+            self.head[v] = 0;
+        }
+        self.len[v] -= 1;
         self.full &= !(1 << vc);
-        if self.vcs[vc as usize].is_empty() {
+        if self.len[v] == 0 {
             self.live &= !(1 << vc);
         }
-        f
+        Some(f)
     }
 
     /// Total buffered flits across VCs.
     #[inline]
     pub fn occupancy(&self) -> usize {
-        self.vcs.iter().map(|q| q.len()).sum()
+        self.len[..self.num_vcs()].iter().map(|&l| l as usize).sum()
     }
 
     /// Any VC at capacity? (the congestion signal cells export to their
@@ -96,6 +136,15 @@ impl InputUnit {
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }
+
+    /// Bitmask of VCs with at least one free slot, over the low `num_vcs`
+    /// bits — the per-cell space snapshot the sharded engine publishes at
+    /// each cycle barrier.
+    #[inline]
+    pub fn space_mask(&self) -> u8 {
+        let all = if self.num_vcs() == MAX_VCS { u8::MAX } else { (1u8 << self.num_vcs()) - 1 };
+        all & !self.full
+    }
 }
 
 #[cfg(test)]
@@ -104,7 +153,12 @@ mod tests {
     use crate::noc::message::{ActionMsg, Flit};
 
     fn flit() -> Flit {
-        Flit { dst: 1, src: 0, vc: 0, next_port: super::super::message::DELIVER, next_vc: 0, hops: 0, moved_at: 0, action: ActionMsg::app(0, 0, 0) }
+        Flit {
+            dst: 1,
+            next_port: super::super::message::DELIVER,
+            action: ActionMsg::app(0, 0, 0),
+            ..Flit::default()
+        }
     }
 
     #[test]
@@ -116,6 +170,7 @@ mod tests {
         assert!(u.try_push(1, flit()), "other VC unaffected");
         assert_eq!(u.occupancy(), 3);
         assert!(u.any_full());
+        assert_eq!(u.space_mask(), 0b10, "VC0 full, VC1 has room");
     }
 
     #[test]
@@ -140,5 +195,28 @@ mod tests {
         assert!(u.is_empty());
         assert!(!u.any_full());
         assert_eq!(u.occupancy(), 0);
+        assert_eq!(u.space_mask(), 0b1111);
+    }
+
+    #[test]
+    fn ring_wraps_without_mixing_vcs() {
+        // Push/pop around the ring several times; order and VC isolation
+        // must survive cursor wrap-around.
+        let mut u = InputUnit::new(2, 3);
+        let mut seq = 0u32;
+        for round in 0..5u32 {
+            for _ in 0..3 {
+                let mut f = flit();
+                f.action.payload = seq;
+                f.action.aux = round;
+                assert!(u.try_push((round % 2) as u8, f));
+                seq += 1;
+            }
+            for _ in 0..3 {
+                let f = u.pop((round % 2) as u8).unwrap();
+                assert_eq!(f.action.aux, round);
+            }
+            assert!(u.is_empty());
+        }
     }
 }

@@ -43,6 +43,12 @@ pub struct ActionMsg {
     pub aux: u32,
 }
 
+impl Default for ActionMsg {
+    fn default() -> Self {
+        ActionMsg { kind: ActionKind::App, target: 0, payload: 0, aux: 0 }
+    }
+}
+
 impl ActionMsg {
     #[inline]
     pub fn app(target: Slot, payload: u32, aux: u32) -> Self {
@@ -60,10 +66,15 @@ impl ActionMsg {
 pub const DELIVER: u8 = 0xFF;
 
 /// One flit: an [`ActionMsg`] en route to the cell owning its target object.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct Flit {
     pub dst: CellId,
     pub src: CellId,
+    /// Destination (x, y) grid coordinates, cached at injection so the
+    /// per-hop route computation never re-divides the destination id
+    /// (chips up to 65535 cells per side).
+    pub dst_x: u16,
+    pub dst_y: u16,
     /// Current virtual channel (updated on turns / dateline crossings).
     pub vc: u8,
     /// Cached routing decision for the *next* hop out of the cell whose
@@ -81,10 +92,14 @@ pub struct Flit {
 }
 
 impl Flit {
-    pub fn new(src: CellId, dst_addr: Address, action: ActionMsg, now: u64) -> Self {
+    /// `dst_xy` are the destination's grid coordinates (the injection site
+    /// computes them once; every later hop reuses the cached pair).
+    pub fn new(src: CellId, dst_addr: Address, dst_xy: (u32, u32), action: ActionMsg, now: u64) -> Self {
         Flit {
             dst: dst_addr.cc,
             src,
+            dst_x: dst_xy.0 as u16,
+            dst_y: dst_xy.1 as u16,
             vc: 0,
             next_port: DELIVER,
             next_vc: 0,
@@ -92,6 +107,12 @@ impl Flit {
             moved_at: now,
             action,
         }
+    }
+
+    /// Cached destination coordinates as `(x, y)`.
+    #[inline]
+    pub fn dst_xy(&self) -> (u32, u32) {
+        (self.dst_x as u32, self.dst_y as u32)
     }
 }
 
@@ -157,6 +178,15 @@ mod tests {
         for i in 0..NUM_PORTS {
             assert_eq!(Port::from_index(i).index(), i);
         }
+    }
+
+    #[test]
+    fn flit_caches_destination_coords() {
+        let f = Flit::new(0, Address::new(7, 3), (3, 1), ActionMsg::app(3, 0, 0), 5);
+        assert_eq!(f.dst_xy(), (3, 1));
+        assert_eq!(f.dst, 7);
+        assert_eq!(f.moved_at, 5);
+        assert_eq!(f.next_port, DELIVER, "unrouted flit defaults to deliver");
     }
 
     #[test]

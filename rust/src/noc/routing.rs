@@ -33,11 +33,27 @@ pub struct Hop {
 /// `cur_vc` is the VC the flit currently holds (carries the dateline bit of
 /// the dimension in progress). Returns `None` when `cur == dst` (deliver).
 pub fn route(geo: &Geometry, cur: CellId, dst: CellId, cur_vc: u8, num_vcs: u8) -> Option<Hop> {
+    route_to(geo, cur, dst, geo.coords(dst), cur_vc, num_vcs)
+}
+
+/// [`route`] with the destination's coordinates supplied by the caller.
+///
+/// The engine caches `(dst_x, dst_y)` in the flit header at injection
+/// ([`crate::noc::message::Flit::dst_xy`]), so the per-hop path never
+/// re-derives them from the cell id (a div/mod on non-power-of-two chips).
+pub fn route_to(
+    geo: &Geometry,
+    cur: CellId,
+    dst: CellId,
+    dst_xy: (u32, u32),
+    cur_vc: u8,
+    num_vcs: u8,
+) -> Option<Hop> {
     if cur == dst {
         return None;
     }
     let (cx, cy) = geo.coords(cur);
-    let (dx, dy) = geo.coords(dst);
+    let (dx, dy) = dst_xy;
 
     let ddx = geo.delta(cx, dx, geo.dim_x);
     if ddx != 0 {
@@ -197,6 +213,25 @@ mod tests {
         for src in 0..64 {
             for dst in 0..64 {
                 assert!(trace(&g, src, dst, 4).iter().all(|(_, h)| !h.wraps));
+            }
+        }
+    }
+
+    /// The coord-cached entry point must agree with the id-based one for
+    /// every (src, dst, vc) — the engine feeds it flit-header coordinates.
+    #[test]
+    fn route_to_matches_route() {
+        for topo in [Topology::Mesh, Topology::TorusMesh] {
+            let g = geo(topo);
+            for src in 0..64 {
+                for dst in 0..64 {
+                    for vc in 0..4 {
+                        assert_eq!(
+                            route(&g, src, dst, vc, 4),
+                            route_to(&g, src, dst, g.coords(dst), vc, 4)
+                        );
+                    }
+                }
             }
         }
     }

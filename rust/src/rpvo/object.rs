@@ -45,6 +45,9 @@ pub struct Object<S> {
     pub meta: VertexMeta,
     /// Application state (ghosts carry a relayed snapshot).
     pub state: S,
+    /// Round-robin cursor over `ghosts` for overflow InsertEdge relays
+    /// (packs into the header word; not counted separately by `words`).
+    pub relay_rr: u32,
 }
 
 impl<S> Object<S> {
@@ -58,6 +61,7 @@ impl<S> Object<S> {
             rhizome: Vec::new(),
             meta: VertexMeta { vid, ..Default::default() },
             state,
+            relay_rr: 0,
         }
     }
 

@@ -6,7 +6,14 @@
 //! "% of actions that perform work" breakdown.
 
 /// Global counters for one simulation run.
-#[derive(Clone, Debug, Default)]
+///
+/// The sharded engine keeps one `Metrics` per worker (no cross-thread
+/// contention on the hot path) and folds them with [`Metrics::merge`] in
+/// fixed shard order when the run ends. Every field is either a pure sum
+/// or a max, so the fold is order-insensitive and the merged totals are
+/// bit-identical to a serial run — the determinism regression tests
+/// compare whole structs via `PartialEq`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Metrics {
     /// Simulated cycles until termination was reported.
     pub cycles: u64,
@@ -97,7 +104,8 @@ impl Metrics {
             / self.diffusions_created as f64
     }
 
-    /// Merge per-thread partials (campaign runner).
+    /// Merge per-shard/per-thread partials (engine workers, campaign
+    /// runner): counters add, high-water marks and cycle counts max.
     pub fn merge(&mut self, o: &Metrics) {
         self.cycles = self.cycles.max(o.cycles);
         self.actions_work += o.actions_work;

@@ -3,6 +3,7 @@
 
 pub mod qcheck;
 pub mod rng;
+pub mod sync;
 
 /// Geometric mean of strictly-positive values (used by Fig. 10 reporting).
 pub fn geomean(xs: &[f64]) -> f64 {

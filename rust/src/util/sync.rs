@@ -1,0 +1,140 @@
+//! Synchronization primitives for the sharded chip engine.
+//!
+//! The engine synchronizes worker threads at two points per simulated
+//! cycle plus one leader-decision point. `std::sync::Barrier` parks
+//! threads on a futex — microseconds per wait, which would dominate a
+//! cycle loop that otherwise costs well under a microsecond. The
+//! [`SpinBarrier`] here is a classic sense-reversing centralized barrier:
+//! ~100ns per rendezvous for a handful of threads, degrading gracefully
+//! to `yield_now` when the machine is oversubscribed.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Sense-reversing spin barrier with panic poisoning.
+///
+/// Every participating thread keeps a local sense flag (initially
+/// `false`) and passes it to [`SpinBarrier::wait`]. If any participant
+/// panics, it must call [`SpinBarrier::poison`] (see [`PoisonGuard`]) so
+/// the remaining participants panic out of their spin instead of hanging.
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    sense: AtomicBool,
+    poisoned: AtomicBool,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            sense: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Block until all `n` participants have arrived.
+    ///
+    /// The last arriver resets the count *before* flipping the shared
+    /// sense, so waiters cannot re-enter the next rendezvous early.
+    pub fn wait(&self, local_sense: &mut bool) {
+        let target = !*local_sense;
+        *local_sense = target;
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.count.store(0, Ordering::Relaxed);
+            self.sense.store(target, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.sense.load(Ordering::Acquire) != target {
+                if self.poisoned.load(Ordering::Relaxed) {
+                    panic!("SpinBarrier poisoned: a sharded-engine worker panicked");
+                }
+                spins = spins.wrapping_add(1);
+                if spins < 128 {
+                    std::hint::spin_loop();
+                } else {
+                    // Oversubscribed (e.g. a campaign running many chips):
+                    // hand the core back instead of burning it.
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Mark the barrier broken; spinning waiters will panic out.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+}
+
+/// RAII guard that poisons the barrier when its thread unwinds.
+pub struct PoisonGuard<'a>(pub &'a SpinBarrier);
+
+impl Drop for PoisonGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn barrier_synchronizes_phases() {
+        // Each of 4 threads increments a phase counter 100 times; after
+        // every barrier all participants must have identical phase views.
+        let n = 4;
+        let barrier = SpinBarrier::new(n);
+        let phase = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                s.spawn(|| {
+                    let mut sense = false;
+                    for i in 0..100u64 {
+                        phase.fetch_add(1, Ordering::Relaxed);
+                        barrier.wait(&mut sense);
+                        // All n increments of round i are visible here.
+                        assert_eq!(phase.load(Ordering::Relaxed), (i + 1) * n as u64);
+                        barrier.wait(&mut sense);
+                    }
+                });
+            }
+        });
+        assert_eq!(phase.load(Ordering::Relaxed), 400);
+    }
+
+    #[test]
+    fn single_participant_never_blocks() {
+        let b = SpinBarrier::new(1);
+        let mut sense = false;
+        for _ in 0..10 {
+            b.wait(&mut sense);
+        }
+    }
+
+    #[test]
+    fn poison_releases_waiters() {
+        let b = SpinBarrier::new(2);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let mut sense = false;
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    b.wait(&mut sense);
+                }));
+                assert!(r.is_err(), "waiter must panic out of a poisoned barrier");
+            });
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            b.poison();
+            h.join().unwrap();
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Determinism regression: the sharded parallel engine must be
+//! bit-for-bit identical to the serial engine — same `Metrics` (cycles,
+//! flit hops, action counts, every counter), same per-vertex results —
+//! for 1, 2, and 4 shards, on a real skewed dataset (R18 @ Tiny).
+//!
+//! This is the contract that makes the parallel engine safe to enable by
+//! default: arbitration, credit-based flow control, and the outbox merge
+//! order are all defined so that cell-visit order and thread interleaving
+//! are unobservable (see `arch::chip` module docs for the argument).
+
+use amcca::apps::driver;
+use amcca::arch::config::ChipConfig;
+use amcca::graph::datasets::{Dataset, Scale};
+use amcca::stats::metrics::Metrics;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn cfg(shards: usize) -> ChipConfig {
+    let mut cfg = ChipConfig::torus(16);
+    cfg.seed = 7;
+    cfg.shards = shards;
+    cfg
+}
+
+#[test]
+fn bfs_identical_across_shard_counts() {
+    let g = Dataset::R18.build(Scale::Tiny);
+    let mut reference: Option<(Metrics, Vec<u32>)> = None;
+    for shards in SHARD_COUNTS {
+        let (chip, built) = driver::run_bfs(cfg(shards), &g, 0).unwrap();
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &levels), 0, "shards={shards} wrong BFS");
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), levels)),
+            Some((m, l)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
+                assert_eq!(l, &levels, "levels diverged at shards={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sssp_identical_across_shard_counts() {
+    let mut g = Dataset::R18.build(Scale::Tiny);
+    g.randomize_weights(32, 11);
+    let mut reference: Option<(Metrics, Vec<u32>)> = None;
+    for shards in SHARD_COUNTS {
+        let (chip, built) = driver::run_sssp(cfg(shards), &g, 3).unwrap();
+        let dists = driver::sssp_dists(&chip, &built);
+        assert_eq!(driver::verify_sssp(&g, 3, &dists), 0, "shards={shards} wrong SSSP");
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), dists)),
+            Some((m, d)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
+                assert_eq!(d, &dists, "distances diverged at shards={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn rhizomes_and_throttling_identical_across_shard_counts() {
+    // The hardest engine paths together: rhizome consistency traffic plus
+    // congestion throttling (which reads neighbour state across shard
+    // boundaries through the published snapshots).
+    let g = Dataset::WK.build(Scale::Tiny);
+    let mut reference: Option<Metrics> = None;
+    for shards in SHARD_COUNTS {
+        let mut c = cfg(shards);
+        c.rpvo_max = 8;
+        let (chip, built) = driver::run_bfs(c, &g, 0).unwrap();
+        assert!(built.rhizomatic_vertices >= 1, "WK hub must be rhizomatic");
+        match &reference {
+            None => reference = Some(chip.metrics.clone()),
+            Some(m) => assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}"),
+        }
+    }
+}

@@ -9,15 +9,28 @@ use amcca::baseline::bsp;
 use amcca::graph::{erdos, rmat};
 use amcca::runtime::{artifacts, oracle, pjrt::PjrtRuntime};
 
-fn artifacts_present() -> bool {
-    !artifacts::available_sizes(artifacts::Step::RelaxStep).is_empty()
+/// The AOT bridge is exercisable only when the XLA backend is compiled in
+/// (`--features xla`) AND `make artifacts` has produced the HLO files. The
+/// default offline build has neither; every test here skips cleanly then
+/// (tier-1 stays green without the optional toolchain).
+fn bridge_ready() -> bool {
+    PjrtRuntime::available()
+        && !artifacts::available_sizes(artifacts::Step::RelaxStep).is_empty()
+        && !artifacts::available_sizes(artifacts::Step::PagerankStep).is_empty()
+}
+
+macro_rules! skip_unless_ready {
+    () => {
+        if !bridge_ready() {
+            eprintln!("skipping: xla feature/artifacts unavailable");
+            return;
+        }
+    };
 }
 
 #[test]
 fn relax_step_fixpoint_equals_rust_bfs() {
-    if !artifacts_present() {
-        panic!("artifacts missing — run `make artifacts` (Makefile test target does)");
-    }
+    skip_unless_ready!();
     let mut rt = PjrtRuntime::cpu().unwrap();
     let g = rmat::generate(rmat::RmatParams::paper(8, 8, 3));
     let got = oracle::to_u32(&oracle::relax_fixpoint(&mut rt, &g, 0, true).unwrap());
@@ -27,6 +40,7 @@ fn relax_step_fixpoint_equals_rust_bfs() {
 
 #[test]
 fn relax_step_fixpoint_equals_dijkstra() {
+    skip_unless_ready!();
     let mut rt = PjrtRuntime::cpu().unwrap();
     let mut g = rmat::generate(rmat::RmatParams::paper(8, 8, 4));
     g.randomize_weights(16, 5);
@@ -40,6 +54,7 @@ fn relax_step_fixpoint_equals_dijkstra() {
 
 #[test]
 fn pagerank_step_equals_rust_power_iteration() {
+    skip_unless_ready!();
     let mut rt = PjrtRuntime::cpu().unwrap();
     let g = erdos::generate(200, 1200, 8);
     let got = oracle::pagerank_iters(&mut rt, &g, 8).unwrap();
@@ -54,6 +69,7 @@ fn pagerank_step_equals_rust_power_iteration() {
 
 #[test]
 fn executable_cache_reuses_compilations() {
+    skip_unless_ready!();
     let mut rt = PjrtRuntime::cpu().unwrap();
     let size = artifacts::pick_size(artifacts::Step::RelaxStep, 100).unwrap();
     let p = artifacts::path(artifacts::Step::RelaxStep, size);
@@ -64,6 +80,12 @@ fn executable_cache_reuses_compilations() {
 
 #[test]
 fn missing_artifact_fails_with_guidance() {
+    // Only needs the XLA backend, NOT the artifacts — this is exactly the
+    // error path a pre-`make artifacts` build hits.
+    if !PjrtRuntime::available() {
+        eprintln!("skipping: xla feature unavailable");
+        return;
+    }
     let mut rt = PjrtRuntime::cpu().unwrap();
     let err = match rt.load(std::path::Path::new("artifacts/nope_999.hlo.txt")) {
         Ok(_) => panic!("loading a missing artifact must fail"),
@@ -74,6 +96,7 @@ fn missing_artifact_fails_with_guidance() {
 
 #[test]
 fn padded_slots_do_not_leak_into_results() {
+    skip_unless_ready!();
     // A graph much smaller than the artifact size: padding must not change
     // real vertices' results.
     let mut rt = PjrtRuntime::cpu().unwrap();
