@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         if u == v {
             continue;
         }
-        chip.germinate_insert_edge(built.addr_of(u), built.addr_of(v));
+        chip.germinate_insert_edge(built.addr_of(u), built.addr_of(v), 1);
         chip.run()?; // the mutation diffuses to its locality
         let u_level = chip.object(built.addr_of(u)).state.level;
         if u_level != UNREACHED {

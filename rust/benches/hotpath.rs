@@ -35,7 +35,12 @@ fn median_time<F: FnMut() -> u64>(n: usize, mut f: F) -> (std::time::Duration, u
 
 /// Median sim-loop throughput (Mcycles/s) for BFS on `ds` over a `dim x
 /// dim` torus with an explicit engine shard count.
-fn sim_loop_mcps(dim: u32, ds: Dataset, rpvo_max: u32, shards: usize) -> (f64, std::time::Duration, u64) {
+fn sim_loop_mcps(
+    dim: u32,
+    ds: Dataset,
+    rpvo_max: u32,
+    shards: usize,
+) -> (f64, std::time::Duration, u64) {
     let g = ds.build(Scale::Tiny);
     let mut cfg = ChipConfig::torus(dim);
     cfg.rpvo_max = rpvo_max;
@@ -150,21 +155,30 @@ fn main() {
         json.push(("routing trace 64x64 torus".into(), mhps));
     }
 
-    // --- graph construction ------------------------------------------------
+    // --- ingest throughput: host-side vs on-chip construction --------------
+    // Same graph, same chip; `build_mode` flips the builder between the
+    // host fast path and message-driven InsertEdge actions (edges/s is
+    // the §7 ingest-as-a-workload headline).
     {
         let g = Dataset::R18.build(Scale::Tiny);
-        let cfg = ChipConfig::torus(32);
-        let (dur, edges) = median_time(5, || {
-            let mut chip =
-                amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
-            amcca::rpvo::builder::build(&mut chip, &g).unwrap();
-            g.m() as u64
-        });
-        t.row(&[
-            "builder R18@Tiny onto 32x32".into(),
-            format!("{dur:?}"),
-            format!("{:.2} Medges/s", edges as f64 / dur.as_secs_f64() / 1e6),
-        ]);
+        use amcca::arch::config::BuildMode;
+        for (label, mode) in [("host", BuildMode::Host), ("onchip", BuildMode::OnChip)] {
+            let mut cfg = ChipConfig::torus(32);
+            cfg.build_mode = mode;
+            let (dur, edges) = median_time(3, || {
+                let mut chip =
+                    amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
+                amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+                g.m() as u64
+            });
+            let meps = edges as f64 / dur.as_secs_f64() / 1e6;
+            t.row(&[
+                format!("ingest R18@Tiny 32x32 [{label}]"),
+                format!("{dur:?}"),
+                format!("{meps:.2} Medges/s"),
+            ]);
+            json.push((format!("ingest R18@Tiny 32x32 [{label}]"), meps));
+        }
     }
 
     // --- PJRT artifact execution (L1/L2 path) ------------------------------

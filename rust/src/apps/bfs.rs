@@ -8,7 +8,7 @@
 //! also broadcast over the rhizome-links (Listing 9) so every member
 //! diffuses its own out-edge chunk.
 
-use crate::diffusive::action::{DiffuseSpec, Work};
+use crate::diffusive::action::{DiffuseSpec, RepairSpec, Work};
 use crate::diffusive::handler::{Application, VertexMeta};
 use crate::noc::message::ActionMsg;
 
@@ -77,6 +77,21 @@ impl Application for Bfs {
     /// `inform-neighbors` sends `lvl + 1` (Listing 5).
     fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
         (payload + 1, aux)
+    }
+
+    fn can_repair(&self) -> bool {
+        true
+    }
+
+    /// §7 incremental repair: a new edge `(u → v)` can only improve `v`
+    /// to `level(u) + 1`; one germinate ripples the rest. Unreached
+    /// sources change nothing, so no action is needed.
+    fn repair(&self, src: &BfsState, _weight: u32) -> Option<RepairSpec> {
+        if src.level == UNREACHED {
+            None
+        } else {
+            Some(RepairSpec { payload: src.level + 1, aux: 0 })
+        }
     }
 }
 

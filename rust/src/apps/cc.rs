@@ -9,7 +9,7 @@
 //! graphs (e.g. R22) exactly the connected components. Kickoff germinates
 //! every vertex once, so the computation is frontier-free from the start.
 
-use crate::diffusive::action::{DiffuseSpec, Work};
+use crate::diffusive::action::{DiffuseSpec, RepairSpec, Work};
 use crate::diffusive::handler::{Application, VertexMeta};
 use crate::noc::message::ActionMsg;
 
@@ -76,6 +76,16 @@ impl Application for Cc {
 
     fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
         (payload, 0.min(aux))
+    }
+
+    fn can_repair(&self) -> bool {
+        true
+    }
+
+    /// §7 incremental repair: the new edge `(u → v)` offers `v` the label
+    /// of `u`; the min-label relaxation ripples it downstream.
+    fn repair(&self, src: &CcState, _weight: u32) -> Option<RepairSpec> {
+        Some(RepairSpec { payload: src.label, aux: 0 })
     }
 }
 

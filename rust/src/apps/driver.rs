@@ -15,9 +15,11 @@ use crate::apps::sssp::Sssp;
 use crate::arch::chip::Chip;
 use crate::arch::config::ChipConfig;
 use crate::baseline::bsp;
+use crate::diffusive::handler::Application;
 use crate::graph::model::HostGraph;
 use crate::noc::message::ActionKind;
 use crate::rpvo::builder::{build, BuiltGraph};
+use crate::rpvo::mutate::{self, MutationBatch};
 
 /// Rhizome consistency tolerance for f32 all-reduce ordering differences.
 const PR_TOL: f32 = 1e-4;
@@ -136,6 +138,45 @@ pub fn cc_labels(chip: &Chip<crate::apps::cc::Cc>, built: &BuiltGraph) -> Vec<u3
         labels[vid] = min;
     }
     labels
+}
+
+// ----------------------------------------------------------- mutation --
+
+/// Stream a mutation batch through a live chip: per edge, insert through
+/// the unified ingest engine (host fast path, or as `InsertEdge` /
+/// `MetaBump` actions when `cfg.build_mode == OnChip`) and run the app's
+/// incremental repair to quiescence. Returns `false` when the app cannot
+/// repair incrementally (PageRank) — follow with [`recompute_pagerank`].
+pub fn apply_mutations<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    batch: &MutationBatch,
+) -> anyhow::Result<bool> {
+    mutate::apply_batch(chip, built, batch)
+}
+
+/// §7 for non-monotonic apps: recompute PageRank on the live, mutated
+/// structure — no CSR rebuild, no re-placement. Every object's state is
+/// re-initialized from its (already bumped) metadata and the kickoff is
+/// re-germinated at every member root; the result is exactly what a
+/// fresh run on the same on-chip structure would produce.
+pub fn recompute_pagerank(
+    chip: &mut Chip<PageRank>,
+    built: &BuiltGraph,
+) -> anyhow::Result<()> {
+    let app = &chip.app;
+    for cell in &mut chip.cells {
+        for obj in &mut cell.objects {
+            obj.state = app.init(&obj.meta);
+        }
+    }
+    for members in &built.roots {
+        for &addr in members {
+            chip.germinate(addr, ActionKind::App, 0, KICKOFF);
+        }
+    }
+    chip.run()?;
+    Ok(())
 }
 
 // -------------------------------------------------------------- verify --

@@ -214,6 +214,14 @@ impl Application for PageRank {
     fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
         (payload, aux)
     }
+
+    /// PageRank is not a monotonic relaxation: one new edge perturbs
+    /// every score, so no single ripple repairs it. The mutation driver
+    /// recomputes on the live (already mutated) structure instead —
+    /// still rebuild-free ([`crate::apps::driver::recompute_pagerank`]).
+    fn can_repair(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +336,7 @@ mod tests {
                 target: 0,
                 payload: shares[0].rhizome.unwrap().0,
                 aux: 0,
+                ext: 0,
             },
             &m0,
         );
@@ -338,6 +347,7 @@ mod tests {
                 target: 0,
                 payload: bits,
                 aux: 0,
+                ext: 0,
             },
             &m1,
         );

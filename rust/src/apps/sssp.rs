@@ -3,7 +3,7 @@
 //! v.dist`, writes it, and diffuses `dist + w(e)` along each out-edge.
 //! Like BFS it relaxes monotonically, so stale diffusions prune.
 
-use crate::diffusive::action::{DiffuseSpec, Work};
+use crate::diffusive::action::{DiffuseSpec, RepairSpec, Work};
 use crate::diffusive::handler::{Application, VertexMeta};
 use crate::noc::message::ActionMsg;
 
@@ -67,6 +67,20 @@ impl Application for Sssp {
     /// Relaxation over the (min, +) semiring: neighbour gets dist + w(e).
     fn edge_payload(&self, payload: u32, aux: u32, weight: u32) -> (u32, u32) {
         (payload.saturating_add(weight), aux)
+    }
+
+    fn can_repair(&self) -> bool {
+        true
+    }
+
+    /// §7 incremental repair: the new edge offers `v` the distance
+    /// `dist(u) + w`; monotone relaxation ripples the improvement.
+    fn repair(&self, src: &SsspState, weight: u32) -> Option<RepairSpec> {
+        if src.dist == UNREACHED {
+            None
+        } else {
+            Some(RepairSpec { payload: src.dist.saturating_add(weight), aux: 0 })
+        }
     }
 }
 

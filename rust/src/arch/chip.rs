@@ -15,12 +15,31 @@
 //! The engine is event-driven for speed: only *active* cells (those with
 //! buffered flits, queued work, or busy timers) are visited each cycle.
 //!
+//! Besides application actions, the engine executes the *ingest
+//! subsystem*'s mutation actions (§6.1 construction, §7 dynamic graphs):
+//! an `InsertEdge` lands an out-edge in the target vertex object's chunk,
+//! relaying deeper into the RPVO (and growing ghosts at the locality it
+//! reached) when chunks are full, and a `MetaBump` keeps degree metadata
+//! consistent. Host-side member selection and the shared tree-walk live
+//! in [`crate::rpvo::mutate`]; graph construction with
+//! `ChipConfig::build_mode == OnChip` is nothing but a batch of these
+//! actions followed by `run`.
+//!
 //! # Sharded parallel engine
 //!
 //! `Chip::run` executes the cycle loop across `cfg.effective_shards()`
 //! worker threads while staying **bit-for-bit deterministic**: every shard
 //! count (including 1) produces identical `Metrics`, identical per-cell
 //! state, and identical final cycle counts.
+//!
+//! **Adaptive serial fallback.** The run loop is a hybrid: each cycle
+//! executes on whichever engine is cheaper for its live active set. The
+//! sharded leader yields the loop back to the serial engine when fewer
+//! than ~100 cells are active (the spin barrier dominates below that),
+//! and the serial loop hands off to the workers again once the set
+//! regrows (with hysteresis against thrashing). Because the two engines
+//! are bit-identical per cycle, the switch points are unobservable in
+//! metrics or state — the determinism tests run the hybrid as-is.
 //!
 //! **Shard layout.** The grid is partitioned into contiguous *row bands*,
 //! one per worker. X-Y dimension-order routing resolves X displacement
@@ -189,41 +208,79 @@ impl<A: Application> Chip<A> {
     /// Inject an action at the cell owning `addr` (host `germinate`,
     /// Listing 1). Free at cycle 0; models the accelerator-style kickoff.
     pub fn germinate(&mut self, addr: Address, kind: ActionKind, payload: u32, aux: u32) {
-        let msg = ActionMsg { kind, target: addr.slot, payload, aux };
+        let msg = ActionMsg { kind, target: addr.slot, payload, aux, ext: 0 };
         self.cells[addr.cc as usize].action_q.push_back(msg);
         self.mark_host(addr.cc);
     }
 
     /// Send an InsertEdge mutation action into the chip (host side of §7;
     /// it traverses the NoC like any other action). The follow-up compute
-    /// (e.g. an incremental bfs-action) is the caller's to germinate.
-    pub fn germinate_insert_edge(&mut self, src_root: Address, to: Address) {
+    /// (e.g. an incremental bfs-action) is the caller's to germinate —
+    /// [`crate::rpvo::mutate`] wraps both ends into the ingest subsystem.
+    pub fn germinate_insert_edge(&mut self, src_root: Address, to: Address, weight: u32) {
         let packed = to.pack();
         let msg = ActionMsg {
             kind: ActionKind::InsertEdge,
             target: src_root.slot,
             payload: (packed >> 32) as u32,
             aux: packed as u32,
+            ext: weight,
         };
         self.cells[src_root.cc as usize].action_q.push_back(msg);
         self.mark_host(src_root.cc);
     }
 
+    /// Send a MetaBump action: the degree-metadata companion of an
+    /// InsertEdge, keeping [`crate::diffusive::handler::VertexMeta`]
+    /// consistent when mutation runs entirely on-chip.
+    pub fn germinate_meta_bump(&mut self, root: Address, out_delta: u32, in_delta: u32) {
+        let msg = ActionMsg {
+            kind: ActionKind::MetaBump,
+            target: root.slot,
+            payload: out_delta,
+            aux: in_delta,
+            ext: 0,
+        };
+        self.cells[root.cc as usize].action_q.push_back(msg);
+        self.mark_host(root.cc);
+    }
+
     /// Run until the termination detector reports, or `max_cycles`.
+    ///
+    /// With `cfg.shards > 1` this is an *adaptive hybrid*: cycles whose
+    /// live active set is tiny run on the serial engine (the spin barrier
+    /// costs more than it buys below ~100 live cells), and the sharded
+    /// engine takes over whenever the set regrows. Both engines are
+    /// bit-for-bit identical per cycle, so the switch points are
+    /// unobservable in results.
     pub fn run(&mut self) -> anyhow::Result<&Metrics> {
         // A quiet window left over from a previous run must not count
         // toward this run's idle-tree latency (keeps serial stepped mode,
         // serial fast mode, and the sharded engine in exact agreement).
         self.terminator.reset();
         let nshards = self.cfg.effective_shards();
-        if nshards > 1 {
-            return self.run_sharded(nshards);
-        }
         // Fast-forward shortcuts are exact but skip heat-map frames, so
         // fall back to fully-stepped no-op cycles while sampling.
         let fast = self.cfg.heatmap_every == 0;
+        if nshards > 1 && !fast {
+            // Heat-map runs stay fully sharded: frame segments are
+            // collected per worker and merged once at the end.
+            self.run_sharded(nshards, 0)?;
+            return Ok(&self.metrics);
+        }
+        let cells = self.cfg.num_cells() as u64;
+        let serial_below = SERIAL_BELOW.min((cells / 4).max(1));
+        let sharded_above = SHARDED_ABOVE.min((cells / 2).max(1));
         loop {
             let pending = self.serial.next.len() as u64;
+            if nshards > 1 && pending >= sharded_above {
+                // Adaptive fallback, parallel half: hand the cycle loop
+                // to the workers until the active set shrinks again.
+                if self.run_sharded(nshards, serial_below)? {
+                    return Ok(&self.metrics);
+                }
+                continue;
+            }
             if fast {
                 if pending == 0 {
                     let done = self.terminator.report_at(self.now);
@@ -356,6 +413,18 @@ const CMD_RUN: u8 = 0;
 const CMD_JUMP: u8 = 1;
 const CMD_STOP: u8 = 2;
 const CMD_ABORT: u8 = 3;
+const CMD_YIELD: u8 = 4;
+
+/// Adaptive-fallback thresholds (ROADMAP perf item: the cycle barrier
+/// dominates when few cells are live). The sharded engine yields back to
+/// the serial loop when fewer than `SERIAL_BELOW` cells are active for
+/// the coming cycle; the serial loop hands off again once the set regrows
+/// past `SHARDED_ABOVE`. The gap is hysteresis so an active set
+/// oscillating near one threshold does not thrash thread spawns. Both
+/// are clamped to a fraction of the chip so small chips (tests) still
+/// exercise the sharded engine.
+const SERIAL_BELOW: u64 = 100;
+const SHARDED_ABOVE: u64 = 200;
 
 /// Everything the shard workers share by reference.
 struct Ctx<'e, A: Application> {
@@ -379,6 +448,9 @@ struct Ctx<'e, A: Application> {
     start_now: u64,
     tree_depth: u64,
     fast: bool,
+    /// Yield back to the serial engine when the total active set for the
+    /// coming cycle drops below this (0 = never; run to termination).
+    yield_below: u64,
 }
 
 /// What each worker hands back for deterministic merging (shard order).
@@ -386,7 +458,7 @@ struct ShardOut {
     metrics: Metrics,
     /// (cycle, own-range occupancy, own-range congestion) heat-map rows.
     frames: Vec<(u64, Vec<f32>, Vec<bool>)>,
-    /// Marks pending at exit (non-empty only on abort).
+    /// Marks pending at exit (non-empty only on abort or yield).
     leftover: Vec<CellId>,
 }
 
@@ -418,7 +490,11 @@ fn shard_worker<A: Application>(
                 .map(|s| ctx.min_dues[s].load(Ordering::Relaxed))
                 .min()
                 .unwrap_or(u64::MAX);
-            let decision = if total == 0 && ctx.fast {
+            let decision = if ctx.yield_below > 0 && total < ctx.yield_below {
+                // Adaptive fallback: the coming cycle is cheaper without
+                // the barrier; hand the loop back to the serial engine.
+                (CMD_YIELD, now)
+            } else if total == 0 && ctx.fast {
                 // Mirror the stepped loop: the idle-tree report lands
                 // inside the cycle budget or the run aborts.
                 if now + ctx.tree_depth <= ctx.cfg.max_cycles {
@@ -451,7 +527,7 @@ fn shard_worker<A: Application>(
         ctx.barrier.wait(&mut sense);
         // (3) act on the decision
         match ctx.cmd.load(Ordering::Relaxed) {
-            CMD_STOP | CMD_ABORT => {
+            CMD_STOP | CMD_ABORT | CMD_YIELD => {
                 return ShardOut { metrics, frames, leftover: std::mem::take(&mut st.next) };
             }
             CMD_JUMP => now = ctx.cmd_arg.load(Ordering::Relaxed),
@@ -529,7 +605,11 @@ fn shard_worker<A: Application>(
 }
 
 impl<A: Application> Chip<A> {
-    fn run_sharded(&mut self, nshards: usize) -> anyhow::Result<&Metrics> {
+    /// One sharded episode: runs until termination (`Ok(true)`), or —
+    /// when `yield_below > 0` — until the active set shrinks under the
+    /// threshold and the cycle loop should continue serially
+    /// (`Ok(false)`, pending marks restored to `serial.next`).
+    fn run_sharded(&mut self, nshards: usize, yield_below: u64) -> anyhow::Result<bool> {
         let dim_x = self.cfg.dim_x;
         let dim_y = self.cfg.dim_y;
         // Contiguous row bands, as even as possible; row -> owning shard.
@@ -595,6 +675,7 @@ impl<A: Application> Chip<A> {
                 start_now: self.now,
                 tree_depth: self.terminator.tree_depth(),
                 fast: self.cfg.heatmap_every == 0,
+                yield_below,
             };
 
             let mut work: Vec<(usize, Shard, &mut [Cell<A::State>])> = shards
@@ -655,8 +736,19 @@ impl<A: Application> Chip<A> {
                 self.cfg.max_cycles
             );
         }
+        if final_cmd == CMD_YIELD {
+            // Adaptive fallback: hand pending marks (stamped for cycle
+            // `now + 1`, exactly what the serial scheduler expects) back
+            // to the serial engine. Shard order keeps the hand-off
+            // deterministic; mark order is unobservable anyway (see the
+            // determinism argument in the module docs).
+            for o in &mut outs {
+                self.serial.next.append(&mut o.leftover);
+            }
+            return Ok(false);
+        }
         self.metrics.cycles = final_arg;
-        Ok(&self.metrics)
+        Ok(true)
     }
 }
 
@@ -935,6 +1027,13 @@ impl<'a, A: Application> Lane<'a, A> {
             ActionKind::InsertEdge => {
                 busy += self.handle_insert_edge(c, &msg);
             }
+            ActionKind::MetaBump => {
+                let obj = &mut self.cells[i].objects[slot];
+                obj.meta.out_degree += msg.payload;
+                obj.meta.in_degree_share += msg.aux;
+                self.metrics.meta_bumps += 1;
+                self.metrics.sram_writes += 1;
+            }
         }
         let cell = &mut self.cells[i];
         cell.busy_until = now + busy as u64;
@@ -949,6 +1048,7 @@ impl<'a, A: Application> Lane<'a, A> {
     /// compute cycles charged.
     fn handle_insert_edge(&mut self, c: CellId, msg: &ActionMsg) -> u32 {
         let to = Address::unpack(((msg.payload as u64) << 32) | msg.aux as u64);
+        let weight = msg.ext;
         let slot = msg.target as usize;
         let chunk = self.cfg.local_edgelist_size;
         let arity = self.cfg.ghost_arity;
@@ -957,13 +1057,25 @@ impl<'a, A: Application> Lane<'a, A> {
         {
             let obj = &mut self.cells[i].objects[slot];
             if obj.edges.len() < chunk {
-                obj.edges.push(crate::rpvo::object::Edge { to, weight: 1 });
+                obj.edges.push(crate::rpvo::object::Edge { to, weight });
+                self.metrics.edges_inserted += 1;
                 return 2;
             }
         }
-        if self.cells[i].objects[slot].ghosts.len() < arity {
-            // Grow a ghost locally (the message already paid the transit
-            // to this locality; vicinity-0 allocation).
+        // Grow a ghost locally (the message already paid the transit to
+        // this locality; vicinity-0 allocation) — but only while the
+        // cell's modeled SRAM arena has room. A full arena relays into an
+        // existing child instead (part of the subtree lives on another
+        // cell with space); a full arena with *no* child has nowhere to
+        // forward the action, so it grows anyway — the same pressure
+        // valve the host allocator expresses by erroring once every ring
+        // is full.
+        let can_alloc_here = self.cells[i].objects.len() < self.cfg.cell_mem_objects;
+        let n_ghosts = self.cells[i].objects[slot].ghosts.len();
+        if n_ghosts < arity && (can_alloc_here || n_ghosts == 0) {
+            if !can_alloc_here {
+                self.metrics.sram_overflows += 1;
+            }
             let (vid, member, meta) = {
                 let obj = &self.cells[i].objects[slot];
                 (obj.vid, obj.member, obj.meta)
@@ -971,10 +1083,11 @@ impl<'a, A: Application> Lane<'a, A> {
             let state = self.app.init(&meta);
             let mut ghost = crate::rpvo::object::Object::new_ghost(vid, member, state);
             ghost.meta = meta;
-            ghost.edges.push(crate::rpvo::object::Edge { to, weight: 1 });
+            ghost.edges.push(crate::rpvo::object::Edge { to, weight });
             let gslot = self.cells[i].alloc_object(ghost);
             let gaddr = Address::new(c, gslot);
             self.cells[i].objects[slot].ghosts.push(gaddr);
+            self.metrics.edges_inserted += 1;
             return 3;
         }
         // Relay to a ghost child, round-robin via a per-object cursor so
@@ -1064,7 +1177,14 @@ impl<'a, A: Application> Lane<'a, A> {
             if d.edges && (d.e_idx as usize) < obj.edges.len() {
                 let e = obj.edges[d.e_idx as usize];
                 let (p, a) = self.app.edge_payload(d.payload, d.aux, e.weight);
-                (e.to, ActionMsg { kind: ActionKind::App, target: e.to.slot, payload: p, aux: a })
+                let msg = ActionMsg {
+                    kind: ActionKind::App,
+                    target: e.to.slot,
+                    payload: p,
+                    aux: a,
+                    ext: 0,
+                };
+                (e.to, msg)
             } else if d.edges && (d.g_idx as usize) < obj.ghosts.len() {
                 let g = obj.ghosts[d.g_idx as usize];
                 (
@@ -1074,6 +1194,7 @@ impl<'a, A: Application> Lane<'a, A> {
                         target: g.slot,
                         payload: d.payload,
                         aux: d.aux,
+                        ext: 0,
                     },
                 )
             } else if let Some((rp, ra)) = d.rhizome {
@@ -1087,6 +1208,7 @@ impl<'a, A: Application> Lane<'a, A> {
                             target: s.slot,
                             payload: rp,
                             aux: ra,
+                            ext: 0,
                         },
                     )
                 } else {
@@ -1228,6 +1350,9 @@ impl<'a, A: Application> Lane<'a, A> {
     /// router buffers changed this cycle: visited cells (pops) and push
     /// recipients. Runs after `apply_staged`, i.e. at end-of-cycle ==
     /// start-of-next-cycle.
+    // Indexed loop on purpose: `refresh` needs `&mut self` while the
+    // active list is a field of `self`, so iterator-style borrows fail.
+    #[allow(clippy::needless_range_loop)]
     fn finish_cycle(&mut self) {
         for k in 0..self.st.active.len() {
             let c = self.st.active[k];
@@ -1364,7 +1489,8 @@ mod tests {
         cfg.vc_buffer = 1;
         cfg.throttling = false;
         let mut chip = Chip::new(cfg, Flood).unwrap();
-        let targets: Vec<_> = (0..8).map(|i| chip.install(8 + i, Object::new_root(i, 0, 0))).collect();
+        let targets: Vec<_> =
+            (0..8).map(|i| chip.install(8 + i, Object::new_root(i, 0, 0))).collect();
         let mut oa = Object::new_root(100, 0, 0);
         for &t in &targets {
             oa.edges.push(Edge { to: t, weight: 1 });
@@ -1444,7 +1570,7 @@ mod tests {
         oa.edges.push(Edge { to: b, weight: 1 }); // chunk now full
         let a = chip.install(0, oa);
         // mutate: a -> c, inserted via an InsertEdge action
-        chip.germinate_insert_edge(a, c);
+        chip.germinate_insert_edge(a, c, 1);
         chip.run().unwrap();
         let root = chip.object(a);
         assert_eq!(root.edges.len(), 1, "chunk stays at capacity");
@@ -1468,12 +1594,17 @@ mod tests {
             (0..4).map(|i| chip.install(12 + i, Object::new_root(1 + i, 0, 0))).collect();
         let a = chip.install(0, Object::new_root(0, 0, 0));
         for &t in &targets {
-            chip.germinate_insert_edge(a, t);
+            chip.germinate_insert_edge(a, t, 1);
             chip.run().unwrap();
         }
         // 4 edges, chunk 1, arity 1 => a chain of 3 ghosts under the root
-        let total_edges: usize =
-            chip.cells.iter().flat_map(|c| &c.objects).filter(|o| o.vid == 0).map(|o| o.edges.len()).sum();
+        let total_edges: usize = chip
+            .cells
+            .iter()
+            .flat_map(|c| &c.objects)
+            .filter(|o| o.vid == 0)
+            .map(|o| o.edges.len())
+            .sum();
         assert_eq!(total_edges, 4, "every mutation landed exactly once");
         chip.germinate(a, ActionKind::App, 9, 0);
         chip.run().unwrap();

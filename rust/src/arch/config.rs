@@ -18,6 +18,22 @@ pub enum AllocPolicy {
     Random,
 }
 
+/// How graph construction feeds edges onto the chip (§6.1 vs §7).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BuildMode {
+    /// Host-side fast path: the builder splices edges into the arenas
+    /// directly (no simulated traffic) — the apples-to-apples baseline
+    /// for ingest benchmarking.
+    Host,
+    /// Message-driven ingest: every edge is germinated as an `InsertEdge`
+    /// action and the chip runs until the mutations settle — construction
+    /// itself becomes a first-class on-chip workload. The resulting graph
+    /// is structurally equivalent to [`BuildMode::Host`] (same edge
+    /// multiset per vertex, same member counts); ghost placement differs
+    /// because spills allocate at the locality the action reached.
+    OnChip,
+}
+
 /// Full configuration of one simulated AM-CCA chip.
 #[derive(Clone, Debug)]
 pub struct ChipConfig {
@@ -46,6 +62,8 @@ pub struct ChipConfig {
     pub rpvo_max: u32,
     /// Allocation policy (Fig. 4).
     pub alloc: AllocPolicy,
+    /// Host-side vs message-driven graph construction (see [`BuildMode`]).
+    pub build_mode: BuildMode,
     /// Object-arena capacity per cell, in vertex objects. Models the small
     /// per-CC SRAM; allocation spills to neighbouring cells when full.
     pub cell_mem_objects: usize,
@@ -78,6 +96,7 @@ impl ChipConfig {
             ghost_arity: 2,
             rpvo_max: 1,
             alloc: AllocPolicy::Mixed,
+            build_mode: BuildMode::Host,
             cell_mem_objects: 8192,
             seed: 0x5EED,
             max_cycles: 200_000_000,

@@ -6,12 +6,20 @@
 //! every trial.
 
 use crate::apps::driver;
+use crate::arch::chip::Chip;
 use crate::arch::config::ChipConfig;
+use crate::diffusive::handler::Application;
 use crate::energy::model::{account, EnergyBreakdown, EnergyParams};
 use crate::graph::model::HostGraph;
+use crate::rpvo::builder::BuiltGraph;
+use crate::rpvo::mutate::MutationBatch;
 use crate::stats::heatmap::Heatmap;
 use crate::stats::histogram::ChannelContention;
 use crate::stats::metrics::Metrics;
+
+/// Seed perturbation for the mutation stream (so the streamed edges are
+/// not correlated with allocation randomness at the same `cfg.seed`).
+const MUTATION_SEED: u64 = 0x00D1_F0ED;
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum AppKind {
@@ -57,11 +65,17 @@ pub struct Experiment {
     /// Verify against the pure-Rust BSP reference (debug-costly on big
     /// graphs, invaluable everywhere else).
     pub verify: bool,
+    /// Streaming-mutation scenario (§7): after the initial solve, insert
+    /// this many random edges through the live chip, interleaving each
+    /// with the app's incremental repair (BFS/SSSP/CC) or a live-graph
+    /// recompute (PageRank). Verification then runs against the mutated
+    /// reference graph. 0 = static run.
+    pub mutations: u32,
 }
 
 impl Experiment {
     pub fn new(app: AppKind, cfg: ChipConfig) -> Self {
-        Experiment { app, cfg, root: 0, pr_iters: 10, trials: 1, verify: true }
+        Experiment { app, cfg, root: 0, pr_iters: 10, trials: 1, verify: true, mutations: 0 }
     }
 }
 
@@ -97,13 +111,38 @@ pub fn run(exp: &Experiment, g: &HostGraph) -> anyhow::Result<Outcome> {
     Ok(best.expect("at least one trial"))
 }
 
+/// Streaming-mutation phase shared by every app arm: stream the random
+/// edge batch through the live chip and return the mutated reference
+/// graph to verify against (`None` for static runs). The batch is seeded
+/// from the *experiment* seed, not the per-trial perturbed seed — trials
+/// vary allocation randomness only (§A.2), so every trial must solve the
+/// same mutated graph.
+fn mutate_phase<A: Application>(
+    exp: &Experiment,
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    g: &HostGraph,
+    max_w: u32,
+) -> anyhow::Result<Option<HostGraph>> {
+    if exp.mutations == 0 {
+        return Ok(None);
+    }
+    let batch = MutationBatch::random(g.n, exp.mutations, max_w, exp.cfg.seed ^ MUTATION_SEED);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    driver::apply_mutations(chip, built, &batch)?;
+    Ok(Some(gm))
+}
+
 fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<Outcome> {
     let params = EnergyParams::default();
     let (metrics, energy, contention, heatmap, rhiz, objects, mismatches) = match exp.app {
         AppKind::Bfs => {
-            let (chip, built) = driver::run_bfs(cfg.clone(), g, exp.root)?;
+            let (mut chip, mut built) = driver::run_bfs(cfg.clone(), g, exp.root)?;
+            let mutated = mutate_phase(exp, &mut chip, &mut built, g, 1)?;
+            let reference = mutated.as_ref().unwrap_or(g);
             let mism = if exp.verify {
-                driver::verify_bfs(g, exp.root, &driver::bfs_levels(&chip, &built))
+                driver::verify_bfs(reference, exp.root, &driver::bfs_levels(&chip, &built))
             } else {
                 0
             };
@@ -118,9 +157,11 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
             )
         }
         AppKind::Sssp => {
-            let (chip, built) = driver::run_sssp(cfg.clone(), g, exp.root)?;
+            let (mut chip, mut built) = driver::run_sssp(cfg.clone(), g, exp.root)?;
+            let mutated = mutate_phase(exp, &mut chip, &mut built, g, 16)?;
+            let reference = mutated.as_ref().unwrap_or(g);
             let mism = if exp.verify {
-                driver::verify_sssp(g, exp.root, &driver::sssp_dists(&chip, &built))
+                driver::verify_sssp(reference, exp.root, &driver::sssp_dists(&chip, &built))
             } else {
                 0
             };
@@ -135,9 +176,11 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
             )
         }
         AppKind::Cc => {
-            let (chip, built) = driver::run_cc(cfg.clone(), g)?;
+            let (mut chip, mut built) = driver::run_cc(cfg.clone(), g)?;
+            let mutated = mutate_phase(exp, &mut chip, &mut built, g, 1)?;
+            let reference = mutated.as_ref().unwrap_or(g);
             let mism = if exp.verify {
-                let want = crate::apps::cc::reference_labels(g);
+                let want = crate::apps::cc::reference_labels(reference);
                 driver::cc_labels(&chip, &built).iter().zip(&want).filter(|(a, b)| a != b).count()
             } else {
                 0
@@ -153,10 +196,21 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
             )
         }
         AppKind::PageRank => {
-            let (chip, built) = driver::run_pagerank(cfg.clone(), g, exp.pr_iters)?;
+            let (mut chip, mut built) = driver::run_pagerank(cfg.clone(), g, exp.pr_iters)?;
+            let mutated = mutate_phase(exp, &mut chip, &mut built, g, 1)?;
+            if mutated.is_some() {
+                // No incremental repair for a non-monotonic app: the
+                // structure is mutated; recompute on it (rebuild-free).
+                driver::recompute_pagerank(&mut chip, &built)?;
+            }
+            let reference = mutated.as_ref().unwrap_or(g);
             let mism = if exp.verify {
-                driver::verify_pagerank(g, exp.pr_iters, &driver::pagerank_scores(&chip, &built))
-                    .0
+                driver::verify_pagerank(
+                    reference,
+                    exp.pr_iters,
+                    &driver::pagerank_scores(&chip, &built),
+                )
+                .0
             } else {
                 0
             };

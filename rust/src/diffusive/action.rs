@@ -42,6 +42,19 @@ impl DiffuseSpec {
     }
 }
 
+/// Germinate operands for the *incremental repair* action that follows a
+/// graph mutation (§7: "when the action finishes modifying the graph it
+/// can invoke a computation … that recomputes from there without starting
+/// from scratch"). Produced by [`crate::diffusive::handler::Application::repair`]
+/// from the edge source's state; the ingest subsystem germinates an
+/// `ActionKind::App` with these operands at the member the new edge
+/// points to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RepairSpec {
+    pub payload: u32,
+    pub aux: u32,
+}
+
 /// Outcome of invoking an action's work on a vertex object.
 #[derive(Clone, Debug, Default)]
 pub struct Work {

@@ -16,7 +16,7 @@
 //! diffusions are evaluated lazily so their predicate can prune them long
 //! after the action that created them retired (§5, Listing 6 rationale).
 
-use crate::diffusive::action::Work;
+use crate::diffusive::action::{RepairSpec, Work};
 use crate::noc::message::ActionMsg;
 
 /// Static, per-object metadata the runtime hands to every invocation.
@@ -71,4 +71,23 @@ pub trait Application: Send + Sync + 'static {
     /// diffusion snapshot and the edge weight (BFS: lvl+1; SSSP: dist+w;
     /// PageRank: score share unchanged).
     fn edge_payload(&self, payload: u32, aux: u32, weight: u32) -> (u32, u32);
+
+    /// Can this app repair incrementally after an edge insert? Monotonic
+    /// relaxations (BFS, SSSP, CC) override this to `true` together with
+    /// [`Application::repair`]; the default is `false` so an app that
+    /// implements neither hook takes the safe recompute-on-live-structure
+    /// path instead of silently claiming its results were repaired.
+    fn can_repair(&self) -> bool {
+        false
+    }
+
+    /// Incremental-repair hook for dynamic mutation (§7): after inserting
+    /// an edge `(u → v, weight)`, return the operands of the repair action
+    /// to germinate at `v`, derived from `u`'s current state. `None`
+    /// means the insert cannot change any result (e.g. the source is
+    /// unreached) and no ripple is needed. Only consulted when
+    /// [`Application::can_repair`] is `true`.
+    fn repair(&self, _src_state: &Self::State, _weight: u32) -> Option<RepairSpec> {
+        None
+    }
 }

@@ -9,7 +9,7 @@
 //!
 //! Flag parsing is in-tree (offline build: no clap); see `Args`.
 
-use amcca::arch::config::{AllocPolicy, ChipConfig};
+use amcca::arch::config::{AllocPolicy, BuildMode, ChipConfig};
 use amcca::coordinator::experiment::{run, AppKind, Experiment};
 use amcca::coordinator::report::Table;
 use amcca::graph::datasets::{Dataset, Scale, ALL};
@@ -88,6 +88,13 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
             _ => anyhow::bail!("unknown --alloc {p}"),
         };
     }
+    if let Some(m) = args.get("build") {
+        cfg.build_mode = match m {
+            "host" => BuildMode::Host,
+            "onchip" => BuildMode::OnChip,
+            _ => anyhow::bail!("unknown --build {m} (host|onchip)"),
+        };
+    }
     if args.has("heatmap") {
         cfg.heatmap_every = args.num("heatmap", 1000u64)?;
     }
@@ -134,6 +141,10 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --dim N                     chip is N x N cells (default 16)\n\
                  \x20 --topo torus|mesh           NoC topology (default torus)\n\
                  \x20 --rpvo-max N                max RPVOs per rhizome (default 1)\n\
+                 \x20 --build host|onchip         graph construction path: host-side fast\n\
+                 \x20                             path or message-driven InsertEdge actions\n\
+                 \x20 --mutations N               (run) stream N random edge inserts through\n\
+                 \x20                             the live chip with incremental repair\n\
                  \x20 --no-throttle               disable diffusion throttling\n\
                  \x20 --heatmap N                 sample congestion frames every N cycles\n\
                  \x20 --shards N                  engine worker threads (0 = auto; results\n\
@@ -156,11 +167,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     exp.pr_iters = args.num("iters", 10u32)?;
     exp.trials = args.num("trials", 1u32)?;
     exp.verify = !args.has("no-verify");
+    exp.mutations = args.num("mutations", 0u32)?;
     let t0 = std::time::Instant::now();
     let out = run(&exp, &g)?;
     let wall = t0.elapsed();
     println!(
-        "app={} graph={gname} ({} v, {} e) chip={}x{} {} rpvo_max={} throttle={}",
+        "app={} graph={gname} ({} v, {} e) chip={}x{} {} rpvo_max={} throttle={} build={:?} mutations={}",
         app.name(),
         g.n,
         g.m(),
@@ -168,7 +180,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         cfg.dim_y,
         cfg.topology,
         cfg.rpvo_max,
-        cfg.throttling
+        cfg.throttling,
+        cfg.build_mode,
+        exp.mutations,
     );
     println!("{}", out.metrics.summary());
     println!(

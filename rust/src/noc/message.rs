@@ -21,19 +21,29 @@ pub enum ActionKind {
     /// Rhizome consistency traffic over rhizome-links (§5.1): BFS/SSSP
     /// broadcast, PageRank partial-score all-reduce feeding the AND-gate LCO.
     RhizomeShare = 2,
-    /// Graph mutation carried as a message (paper §7 future work): insert
-    /// an out-edge into the target vertex object's local edge-list, or
-    /// relay deeper into the RPVO when the chunk is full. The packed
-    /// [`crate::arch::addr::Address`] of the edge destination travels in
-    /// (payload, aux); weight is 1 (weighted inserts use the host-side
-    /// `rpvo::dynamic` API).
+    /// Graph mutation carried as a message (paper §7, the ingest
+    /// subsystem): insert an out-edge into the target vertex object's
+    /// local edge-list, or relay deeper into the RPVO when the chunk is
+    /// full. The packed [`crate::arch::addr::Address`] of the edge
+    /// destination travels in (payload, aux); the edge weight rides in
+    /// `ext`. Handled by the engine itself (`arch::chip`), not the
+    /// application.
     InsertEdge = 3,
+    /// Metadata companion of [`ActionKind::InsertEdge`]: bump the target
+    /// member root's degree counters (`payload` = out-degree delta,
+    /// `aux` = in-degree-share delta) so on-chip mutation keeps the
+    /// per-object [`crate::diffusive::handler::VertexMeta`] consistent
+    /// without a host-side fixup pass.
+    MetaBump = 4,
 }
 
 /// An action in flight (or queued): the unit of work of the diffusive model.
 ///
 /// `payload`/`aux` are app-interpreted 32-bit operands (BFS level, SSSP
-/// distance, PageRank score bits + iteration index).
+/// distance, PageRank score bits + iteration index). `ext` is a third
+/// operand used by the engine-level mutation actions (the edge weight of
+/// an [`ActionKind::InsertEdge`]); application actions leave it 0. A
+/// 256-bit flit (§6.1) has room for all three plus the header.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ActionMsg {
     pub kind: ActionKind,
@@ -41,18 +51,19 @@ pub struct ActionMsg {
     pub target: Slot,
     pub payload: u32,
     pub aux: u32,
+    pub ext: u32,
 }
 
 impl Default for ActionMsg {
     fn default() -> Self {
-        ActionMsg { kind: ActionKind::App, target: 0, payload: 0, aux: 0 }
+        ActionMsg { kind: ActionKind::App, target: 0, payload: 0, aux: 0, ext: 0 }
     }
 }
 
 impl ActionMsg {
     #[inline]
     pub fn app(target: Slot, payload: u32, aux: u32) -> Self {
-        ActionMsg { kind: ActionKind::App, target, payload, aux }
+        ActionMsg { kind: ActionKind::App, target, payload, aux, ext: 0 }
     }
 
     /// f32 operand view (PageRank scores travel as raw bits).
@@ -94,7 +105,13 @@ pub struct Flit {
 impl Flit {
     /// `dst_xy` are the destination's grid coordinates (the injection site
     /// computes them once; every later hop reuses the cached pair).
-    pub fn new(src: CellId, dst_addr: Address, dst_xy: (u32, u32), action: ActionMsg, now: u64) -> Self {
+    pub fn new(
+        src: CellId,
+        dst_addr: Address,
+        dst_xy: (u32, u32),
+        action: ActionMsg,
+        now: u64,
+    ) -> Self {
         Flit {
             dst: dst_addr.cc,
             src,

@@ -13,7 +13,11 @@ use crate::arch::addr::CellId;
 use crate::noc::topology::Geometry;
 use crate::util::rng::Rng;
 
-/// Tracks per-cell arena occupancy during graph construction.
+/// Tracks per-cell arena occupancy during graph construction — and, via
+/// the ingest state persisted in [`crate::rpvo::builder::BuiltGraph`],
+/// across every later dynamic insert (occupancy is never rebuilt from the
+/// arenas on the insert path).
+#[derive(Clone, Debug)]
 pub struct Allocator {
     geo: Geometry,
     /// Objects installed per cell.

@@ -1,27 +1,34 @@
-//! Graph construction onto the chip (§6.1 "Graph Construction").
+//! Graph construction onto the chip (§6.1 "Graph Construction") — a thin
+//! driver over the unified ingest engine in [`crate::rpvo::mutate`].
 //!
 //! 1. Root RPVOs are allocated first (randomly, dispersing load); skewed
 //!    in-degree vertices get up to `rpvo_max` rhizome members (Eq. 1), each
 //!    member a full RPVO with its own random-allocated root (Fig. 4c).
-//! 2. Edges are then inserted: each in-edge of `v` points at the rhizome
-//!    member chosen by the cutoff cycling; each out-edge of `u` is stored
-//!    in one of `u`'s members (round-robin) — inside that member's RPVO
-//!    tree, spilling into vicinity-allocated ghosts whenever the local
-//!    edge-list fills (§3.1).
+//! 2. Edges are inserted through the ingest engine. With the default
+//!    `BuildMode::Host` the host splices each edge directly (the
+//!    apples-to-apples fast path); with `BuildMode::OnChip` construction
+//!    *is* a workload — every edge is germinated as an `InsertEdge`
+//!    action and the chip runs until the mutations settle (§7's
+//!    message-driven mutation applied to §6.1 construction).
 //! 3. Metadata (degrees, rhizome width) and initial app state are fixed up
-//!    once the structure is complete.
+//!    once the structure is complete, walking each member's RPVO through
+//!    its live ghost pointers.
 
-use crate::arch::addr::Address;
 use crate::arch::chip::Chip;
-use crate::arch::config::AllocPolicy;
+use crate::arch::config::{AllocPolicy, BuildMode};
 use crate::diffusive::handler::{Application, VertexMeta};
 use crate::graph::model::HostGraph;
 use crate::noc::topology::Geometry;
 use crate::rpvo::alloc::Allocator;
-use crate::rpvo::object::{Edge, Object};
+use crate::rpvo::mutate::{self, Ingest};
 use crate::rpvo::rhizome;
 
-/// Host-side handle to the constructed graph.
+use crate::arch::addr::Address;
+
+/// Host-side handle to the constructed graph. Carries the persistent
+/// ingest state ([`Ingest`]) so dynamic inserts continue exactly where
+/// construction stopped — same allocator occupancy, same balance
+/// counters.
 #[derive(Clone, Debug)]
 pub struct BuiltGraph {
     /// `roots[vid][member]` = address of that rhizome member's root object.
@@ -32,6 +39,9 @@ pub struct BuiltGraph {
     /// Vertices with more than one rhizome member.
     pub rhizomatic_vertices: u64,
     pub cutoff_chunk: u32,
+    /// Persistent edge-ingest state (allocator occupancy + selection
+    /// counters) — see [`crate::rpvo::mutate`].
+    pub ingest: Ingest,
 }
 
 impl BuiltGraph {
@@ -57,7 +67,8 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
     let min_cutoff = (4 * cfg.local_edgelist_size) as u32;
     let cutoff = rhizome::cutoff_chunk(max_in, cfg.rpvo_max).max(min_cutoff);
 
-    // -- 1. allocate member roots ---------------------------------------
+    // -- 1. allocate member roots (host-side in both build modes: the
+    //       roots ARE the user-visible vertex addresses) -----------------
     let n = g.n as usize;
     let mut roots: Vec<Vec<Address>> = Vec::with_capacity(n);
     let mut rhizomatic = 0u64;
@@ -87,50 +98,46 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
             // State is re-initialized after metadata fixup; init with a
             // placeholder meta for now.
             let state = chip.app.init(&VertexMeta { vid, ..Default::default() });
-            let mut obj = Object::new_root(vid, m, state);
+            let mut obj = crate::rpvo::object::Object::new_root(vid, m, state);
             obj.meta.vid = vid;
             addrs.push(chip.install(cc, obj));
         }
         roots.push(addrs);
     }
 
-    // -- 2. insert edges --------------------------------------------------
-    // Per-member RPVO trees, breadth-balanced: `tree[vid][member]` lists the
-    // member's objects in creation order; insertion fills the first object
-    // with edge space, else creates a ghost under the first with child space.
-    let mut trees: Vec<Vec<Vec<Address>>> =
-        roots.iter().map(|ms| ms.iter().map(|&a| vec![a]).collect()).collect();
-    let mut in_seq = vec![0u32; n];
-    let mut out_seq = vec![0u32; n];
-    let mut objects = roots.iter().map(|m| m.len() as u64).sum::<u64>();
-
-    for &(u, v, w) in &g.edges {
-        let (u_us, v_us) = (u as usize, v as usize);
-        // Destination: rhizome member of v chosen by in-edge cycling (Eq. 1).
-        let v_members = roots[v_us].len() as u32;
-        let dst_member = rhizome::member_for_in_edge(in_seq[v_us], cutoff, v_members);
-        in_seq[v_us] += 1;
-        let to = roots[v_us][dst_member as usize];
-        // Source: u's member, round-robin across members for balance.
-        let u_members = roots[u_us].len() as u32;
-        let src_member = (out_seq[u_us] % u_members) as usize;
-        out_seq[u_us] += 1;
-
-        insert_edge(
-            chip,
-            &mut alloc,
-            &mut trees[u_us][src_member],
-            Edge { to, weight: w },
-            &cfg,
-            u,
-            src_member as u32,
-            &mut objects,
-        )?;
+    // -- 2. insert edges through the unified ingest engine ----------------
+    let objects = roots.iter().map(|m| m.len() as u64).sum::<u64>();
+    let mut built = BuiltGraph {
+        roots,
+        n: g.n,
+        objects,
+        rhizomatic_vertices: rhizomatic,
+        cutoff_chunk: cutoff,
+        ingest: Ingest::new(alloc, g.n),
+    };
+    match cfg.build_mode {
+        BuildMode::Host => {
+            for &(u, v, w) in &g.edges {
+                mutate::insert_edge(chip, &mut built, u, v, w, false)?;
+            }
+        }
+        BuildMode::OnChip => {
+            // Construction as a batch of InsertEdge actions (§6.1 meets
+            // §7): germinate them all, run the chip until the mutations
+            // settle. Metadata is fixed up wholesale below, so the batch
+            // needs no MetaBump companions.
+            for &(u, v, w) in &g.edges {
+                mutate::germinate_insert(chip, &mut built, u, v, w, false)?;
+            }
+            chip.run()?;
+            built.ingest.resync(chip);
+            built.objects = mutate::total_objects(chip);
+        }
     }
 
     // -- 3. metadata + state fixup ----------------------------------------
     for vid in 0..g.n {
-        let members = &roots[vid as usize];
+        let members = &built.roots[vid as usize];
         let width = members.len() as u32;
         // In-degree share per member from the same cycling the edges used.
         let mut shares = vec![0u32; members.len()];
@@ -148,8 +155,9 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
             // Rhizome links: full sibling list (excluding self), §3.2.
             let siblings: Vec<Address> =
                 members.iter().enumerate().filter(|&(i, _)| i != m).map(|(_, &a)| a).collect();
-            // Fix up every object in this member's tree.
-            for &oaddr in &trees[vid as usize][m] {
+            // Fix up every object in this member's tree (walked through
+            // the live ghost pointers — valid for both build modes).
+            for oaddr in mutate::member_tree(chip, addr) {
                 let state = chip.app.init(&meta);
                 let obj = chip.object_mut(oaddr);
                 obj.meta = meta;
@@ -160,47 +168,7 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
         }
     }
 
-    Ok(BuiltGraph { roots, n: g.n, objects, rhizomatic_vertices: rhizomatic, cutoff_chunk: cutoff })
-}
-
-/// Insert one out-edge into a member's RPVO tree (§3.1 semantics: when the
-/// local edge-list is full, the edge goes into a ghost, growing the tree).
-#[allow(clippy::too_many_arguments)]
-fn insert_edge<A: Application>(
-    chip: &mut Chip<A>,
-    alloc: &mut Allocator,
-    tree: &mut Vec<Address>,
-    edge: Edge,
-    cfg: &crate::arch::config::ChipConfig,
-    vid: u32,
-    member: u32,
-    objects: &mut u64,
-) -> anyhow::Result<()> {
-    // First object with edge space, in creation (breadth) order.
-    for &addr in tree.iter() {
-        let obj = chip.object_mut(addr);
-        if obj.edges.len() < cfg.local_edgelist_size {
-            obj.edges.push(edge);
-            return Ok(());
-        }
-    }
-    // All full: grow a ghost under the shallowest object with child space.
-    let parent = *tree
-        .iter()
-        .find(|&&a| chip.object(a).ghosts.len() < cfg.ghost_arity)
-        .ok_or_else(|| anyhow::anyhow!("RPVO tree saturated (arity too small?)"))?;
-    let cc = match cfg.alloc {
-        AllocPolicy::Random => alloc.random()?,
-        AllocPolicy::Mixed | AllocPolicy::Vicinity => alloc.vicinity(parent.cc)?,
-    };
-    let state = chip.app.init(&VertexMeta { vid, ..Default::default() });
-    let mut ghost = Object::new_ghost(vid, member, state);
-    ghost.edges.push(edge);
-    let gaddr = chip.install(cc, ghost);
-    chip.object_mut(parent).ghosts.push(gaddr);
-    tree.push(gaddr);
-    *objects += 1;
-    Ok(())
+    Ok(built)
 }
 
 #[cfg(test)]

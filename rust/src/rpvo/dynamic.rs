@@ -1,31 +1,27 @@
-//! Dynamic graph mutation (paper §7, future work): "messages carrying
-//! actions that mutate the graph structure … when the action finishes
-//! modifying the graph it can invoke a computation, such as BFS, that
-//! recomputes from there without starting from scratch."
+//! Dynamic graph mutation (paper §7): "messages carrying actions that
+//! mutate the graph structure … when the action finishes modifying the
+//! graph it can invoke a computation, such as BFS, that recomputes from
+//! there without starting from scratch."
 //!
-//! Since vertices and edges are PGAS pointers, insertion is pointer
-//! surgery on the RPVO (§3.1) — no CSR rebuild. `insert_edge` grows the
-//! source's RPVO tree exactly as construction did (vicinity ghosts);
-//! `insert_and_update_bfs` additionally germinates the incremental
-//! relaxation action so BFS levels repair themselves.
+//! This is now a thin compatibility driver over the unified ingest engine
+//! in [`crate::rpvo::mutate`] — the same member selection, RPVO tree walk,
+//! and vicinity ghost spill that construction uses, with the allocator
+//! occupancy and balance counters persisted in
+//! [`crate::rpvo::builder::BuiltGraph`] (no per-insert reconstruction).
 
 use crate::apps::bfs::Bfs;
 use crate::arch::addr::Address;
 use crate::arch::chip::Chip;
-use crate::arch::config::AllocPolicy;
 use crate::diffusive::handler::Application;
-use crate::noc::message::ActionKind;
-use crate::noc::topology::Geometry;
-use crate::rpvo::alloc::Allocator;
 use crate::rpvo::builder::BuiltGraph;
-use crate::rpvo::object::{Edge, Object};
+use crate::rpvo::mutate::{self, MutationBatch};
 
 /// Insert a directed edge `(u, v, w)` into the constructed graph.
 ///
-/// The edge lands in `u`'s least-loaded rhizome member (out-degree balance)
-/// and points at `v`'s member chosen round-robin (the static cutoff cycling
-/// needs global in-degree history; round-robin preserves balance for
-/// incremental inserts). Metadata (degrees) is updated on every member.
+/// The edge lands in `u`'s next member by out-degree round-robin and
+/// points at `v`'s member chosen by the same Eq.-1 in-edge cycling that
+/// static construction used (the counters continue where the build
+/// stopped). Degree metadata is updated on the member roots.
 pub fn insert_edge<A: Application>(
     chip: &mut Chip<A>,
     built: &mut BuiltGraph,
@@ -33,98 +29,21 @@ pub fn insert_edge<A: Application>(
     v: u32,
     w: u32,
 ) -> anyhow::Result<Address> {
-    anyhow::ensure!(u < built.n && v < built.n, "vertex out of range");
-    let cfg = chip.cfg.clone();
-    let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
-    // Reconstruct allocator occupancy from the live arenas.
-    let mut alloc = Allocator::new(geo, cfg.cell_mem_objects as u32, cfg.seed ^ 0xD15C);
-    for (ci, cell) in chip.cells.iter().enumerate() {
-        alloc.counts[ci] = cell.objects.len() as u32;
-    }
-
-    // Destination member: round-robin on current in-degree.
-    let v_members = built.roots[v as usize].clone();
-    let in_deg: u32 = v_members.iter().map(|&a| chip.object(a).meta.in_degree_share).sum();
-    let dst_idx = (in_deg as usize) % v_members.len();
-    let to = v_members[dst_idx];
-    // Source member: fewest local out-edges in its tree root.
-    let u_members = built.roots[u as usize].clone();
-    let src = *u_members
-        .iter()
-        .min_by_key(|&&a| chip.object(a).edges.len())
-        .expect("vertex has at least one member");
-
-    // Walk the RPVO for a slot; grow a ghost if every chunk is full.
-    let mut queue = vec![src];
-    let mut i = 0;
-    let mut parent_with_space: Option<Address> = None;
-    while i < queue.len() {
-        let addr = queue[i];
-        i += 1;
-        let obj = chip.object(addr);
-        if obj.edges.len() < cfg.local_edgelist_size {
-            chip.object_mut(addr).edges.push(Edge { to, weight: w });
-            bump_meta(chip, built, u, v, dst_idx);
-            return Ok(addr);
-        }
-        if parent_with_space.is_none() && obj.ghosts.len() < cfg.ghost_arity {
-            parent_with_space = Some(addr);
-        }
-        queue.extend(chip.object(addr).ghosts.iter().copied());
-    }
-    let parent =
-        parent_with_space.ok_or_else(|| anyhow::anyhow!("RPVO of v{u} saturated"))?;
-    let cc = match cfg.alloc {
-        AllocPolicy::Random => alloc.random()?,
-        AllocPolicy::Mixed | AllocPolicy::Vicinity => alloc.vicinity(parent.cc)?,
-    };
-    let meta = chip.object(src).meta;
-    let state = chip.app.init(&meta);
-    let mut ghost = Object::new_ghost(u, chip.object(src).member, state);
-    ghost.meta = meta;
-    ghost.edges.push(Edge { to, weight: w });
-    let gaddr = chip.install(cc, ghost);
-    chip.object_mut(parent).ghosts.push(gaddr);
-    built.objects += 1;
-    bump_meta(chip, built, u, v, dst_idx);
-    Ok(gaddr)
+    Ok(mutate::insert_edge(chip, built, u, v, w, true)?.landed)
 }
 
-fn bump_meta<A: Application>(
-    chip: &mut Chip<A>,
-    built: &BuiltGraph,
-    u: u32,
-    v: u32,
-    dst_idx: usize,
-) {
-    for &a in &built.roots[u as usize] {
-        chip.object_mut(a).meta.out_degree += 1;
-    }
-    let dst = built.roots[v as usize][dst_idx];
-    chip.object_mut(dst).meta.in_degree_share += 1;
-}
-
-/// Insert `(u, v, w)` and incrementally repair BFS levels: if `u` is
-/// reached, germinate `bfs-action(v, level(u)+1)` — the ripple repairs
-/// every downstream vertex without restarting from the BFS root (§7).
+/// Insert `(u, v, 1)` and incrementally repair BFS levels: if `u` is
+/// reached, the engine germinates `bfs-action(v, level(u)+1)` — the
+/// ripple repairs every downstream vertex without restarting from the
+/// BFS root (§7). Equivalent to a one-edge [`mutate::apply_batch`].
 pub fn insert_and_update_bfs(
     chip: &mut Chip<Bfs>,
     built: &mut BuiltGraph,
     u: u32,
     v: u32,
 ) -> anyhow::Result<()> {
-    insert_edge(chip, built, u, v, 1)?;
-    let u_level = chip.object(built.addr_of(u)).state.level;
-    if u_level != crate::apps::bfs::UNREACHED {
-        let in_deg: u32 = built.roots[v as usize]
-            .iter()
-            .map(|&a| chip.object(a).meta.in_degree_share)
-            .sum();
-        let dst_idx = (in_deg as usize - 1) % built.roots[v as usize].len();
-        let target = built.roots[v as usize][dst_idx];
-        chip.germinate(target, ActionKind::App, u_level + 1, 0);
-        chip.run()?;
-    }
+    let batch = MutationBatch { edges: vec![(u, v, 1)] };
+    mutate::apply_batch(chip, built, &batch)?;
     Ok(())
 }
 
@@ -184,5 +103,29 @@ mod tests {
         assert_eq!(root.meta.out_degree, 5);
         assert!(!root.ghosts.is_empty(), "5 edges with chunk 2 need ghosts");
         assert_eq!(built.objects, 3 + 2, "two ghosts grown");
+    }
+
+    #[test]
+    fn onchip_dynamic_insert_keeps_repair_exact() {
+        // The same stream, but with the mutation travelling as
+        // InsertEdge/MetaBump actions through the NoC (§7 verbatim).
+        let mut g = erdos::generate(96, 300, 13);
+        let mut cfg = ChipConfig::torus(4);
+        cfg.build_mode = crate::arch::config::BuildMode::OnChip;
+        let (mut chip, mut built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..8 {
+            let u = rng.below(96) as u32;
+            let v = rng.below(96) as u32;
+            if u == v {
+                continue;
+            }
+            insert_and_update_bfs(&mut chip, &mut built, u, v).unwrap();
+            g.edges.push((u, v, 1));
+        }
+        let got = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &got), 0, "on-chip mutation diverged");
+        assert!(chip.metrics.edges_inserted >= 300, "build + stream all on-chip");
+        assert!(chip.metrics.meta_bumps >= 8, "MetaBump companions applied");
     }
 }

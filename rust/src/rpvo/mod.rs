@@ -4,5 +4,6 @@
 pub mod alloc;
 pub mod builder;
 pub mod dynamic;
+pub mod mutate;
 pub mod object;
 pub mod rhizome;

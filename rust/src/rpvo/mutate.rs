@@ -1,0 +1,423 @@
+//! The unified edge-ingest engine — ONE edge-insertion implementation
+//! shared by graph construction ([`crate::rpvo::builder`]), dynamic
+//! mutation ([`crate::rpvo::dynamic`]), and the streaming-mutation
+//! drivers ([`crate::apps::driver`]).
+//!
+//! The paper's claim (§3.1, §6.1, §7) is that graph structure lives *on
+//! the chip* and is mutated by actions sent to where the data resides.
+//! This module is that subsystem's host half:
+//!
+//! * **Member selection** ([`select_members`]): in-edges cycle over the
+//!   destination's rhizome members in Eq.-1 cutoff chunks, out-edges
+//!   round-robin over the source's members — the same balance rule for
+//!   static construction and incremental inserts, driven by counters
+//!   persisted in [`Ingest`].
+//! * **Tree walk + ghost spill** ([`insert_into_tree`]): breadth-first
+//!   over the member's RPVO for a chunk with space; when every chunk is
+//!   full, a ghost grows under the shallowest object with child space,
+//!   placed by the configured allocation policy (vicinity of its parent
+//!   by default, §3.1).
+//! * **Metadata bump**: out-degree on every member root of the source,
+//!   in-degree share on the member the edge points at.
+//!
+//! Each step has an on-chip twin: [`germinate_insert`] ships the
+//! selection result as `InsertEdge`/`MetaBump` actions and the engine
+//! handler in [`crate::arch::chip`] performs the walk and spill at the
+//! data's locality. `ChipConfig::build_mode` picks the path; both yield
+//! structurally equivalent graphs (same edge multiset per vertex, same
+//! member counts — ghost *placement* differs because on-chip spills
+//! allocate where the action landed).
+//!
+//! [`Ingest`] — the allocator with its live occupancy plus the selection
+//! counters — persists inside [`BuiltGraph`], so dynamic inserts never
+//! rebuild occupancy from the arenas (the old `rpvo::dynamic` path was
+//! O(cells) per insert).
+
+use crate::arch::addr::Address;
+use crate::arch::chip::Chip;
+use crate::arch::config::{AllocPolicy, BuildMode};
+use crate::diffusive::handler::Application;
+use crate::noc::message::ActionKind;
+use crate::rpvo::alloc::Allocator;
+use crate::rpvo::builder::BuiltGraph;
+use crate::rpvo::object::{Edge, Object};
+use crate::rpvo::rhizome;
+
+/// Persistent ingest state: allocator occupancy + member-selection
+/// counters, carried inside [`BuiltGraph`] from construction through
+/// every later dynamic insert.
+#[derive(Clone, Debug)]
+pub struct Ingest {
+    /// Per-cell occupancy, live since construction (never rebuilt).
+    pub alloc: Allocator,
+    /// In-edges assigned so far per vertex (Eq.-1 member cycling).
+    in_seq: Vec<u32>,
+    /// Out-edges assigned so far per vertex (member round-robin).
+    out_seq: Vec<u32>,
+    /// Reused tree-walk queue (the insert hot path never allocates).
+    scratch: Vec<Address>,
+}
+
+impl Ingest {
+    pub fn new(alloc: Allocator, n: u32) -> Self {
+        Ingest {
+            alloc,
+            in_seq: vec![0; n as usize],
+            out_seq: vec![0; n as usize],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Re-read per-cell occupancy from the live arenas. Needed after an
+    /// on-chip mutation run: `InsertEdge` actions grow ghosts engine-side,
+    /// invisible to the host-side allocator until this resync.
+    pub fn resync<A: Application>(&mut self, chip: &Chip<A>) {
+        for (ci, cell) in chip.cells.iter().enumerate() {
+            self.alloc.counts[ci] = cell.objects.len() as u32;
+        }
+    }
+}
+
+/// Outcome of one host-path insert.
+#[derive(Clone, Copy, Debug)]
+pub struct Inserted {
+    /// Object the edge landed in (root or ghost of `u`'s member).
+    pub landed: Address,
+    /// `v`'s member root the edge points at (repair actions target it).
+    pub to: Address,
+}
+
+/// Pick the (source member root, destination member root) pair for a new
+/// edge `(u, v)` and advance the balance counters. The rule is identical
+/// for static construction and incremental inserts: in-edges cycle over
+/// `v`'s members in Eq.-1 cutoff chunks, out-edges round-robin over `u`'s
+/// members.
+pub fn select_members(built: &mut BuiltGraph, u: u32, v: u32) -> (Address, Address) {
+    let (ui, vi) = (u as usize, v as usize);
+    let v_members = built.roots[vi].len() as u32;
+    let dst_m =
+        rhizome::member_for_in_edge(built.ingest.in_seq[vi], built.cutoff_chunk, v_members);
+    built.ingest.in_seq[vi] += 1;
+    let u_members = built.roots[ui].len() as u32;
+    let src_m = built.ingest.out_seq[ui] % u_members;
+    built.ingest.out_seq[ui] += 1;
+    (built.roots[ui][src_m as usize], built.roots[vi][dst_m as usize])
+}
+
+/// THE edge-insertion implementation (§3.1 pointer surgery): walk the
+/// member's RPVO breadth-first for a chunk with space; when every chunk
+/// is full, grow a ghost under the shallowest object with child space.
+/// Returns the object the edge landed in and whether a ghost was grown.
+pub fn insert_into_tree<A: Application>(
+    chip: &mut Chip<A>,
+    alloc: &mut Allocator,
+    scratch: &mut Vec<Address>,
+    root: Address,
+    edge: Edge,
+) -> anyhow::Result<(Address, bool)> {
+    let chunk = chip.cfg.local_edgelist_size;
+    let arity = chip.cfg.ghost_arity;
+    let policy = chip.cfg.alloc;
+    scratch.clear();
+    scratch.push(root);
+    let mut i = 0;
+    let mut parent_with_space: Option<Address> = None;
+    while i < scratch.len() {
+        let addr = scratch[i];
+        i += 1;
+        let obj = chip.object(addr);
+        if obj.edges.len() < chunk {
+            chip.object_mut(addr).edges.push(edge);
+            return Ok((addr, false));
+        }
+        if parent_with_space.is_none() && obj.ghosts.len() < arity {
+            parent_with_space = Some(addr);
+        }
+        scratch.extend(chip.object(addr).ghosts.iter().copied());
+    }
+    let parent = parent_with_space
+        .ok_or_else(|| anyhow::anyhow!("RPVO at {root} saturated (ghost arity too small?)"))?;
+    let cc = match policy {
+        AllocPolicy::Random => alloc.random()?,
+        AllocPolicy::Mixed | AllocPolicy::Vicinity => alloc.vicinity(parent.cc)?,
+    };
+    let (vid, member, meta) = {
+        let o = chip.object(root);
+        (o.vid, o.member, o.meta)
+    };
+    let state = chip.app.init(&meta);
+    let mut ghost = Object::new_ghost(vid, member, state);
+    ghost.meta = meta;
+    ghost.edges.push(edge);
+    let gaddr = chip.install(cc, ghost);
+    chip.object_mut(parent).ghosts.push(gaddr);
+    Ok((gaddr, true))
+}
+
+/// Unified host-side edge insertion: member selection + tree walk +
+/// ghost spill + metadata bump. `bump_meta` updates degree metadata on
+/// the member roots (dynamic mutation wants it); construction leaves it
+/// off because the builder fixes up all metadata wholesale afterwards.
+pub fn insert_edge<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    u: u32,
+    v: u32,
+    w: u32,
+    bump_meta: bool,
+) -> anyhow::Result<Inserted> {
+    anyhow::ensure!(u < built.n && v < built.n, "vertex out of range");
+    let (src, to) = select_members(built, u, v);
+    let edge = Edge { to, weight: w };
+    let (landed, grew) = {
+        let ingest = &mut built.ingest;
+        insert_into_tree(chip, &mut ingest.alloc, &mut ingest.scratch, src, edge)?
+    };
+    if grew {
+        built.objects += 1;
+    }
+    if bump_meta {
+        for &a in &built.roots[u as usize] {
+            chip.object_mut(a).meta.out_degree += 1;
+        }
+        chip.object_mut(to).meta.in_degree_share += 1;
+    }
+    Ok(Inserted { landed, to })
+}
+
+/// Message-driven edge insertion (§7 verbatim): member selection happens
+/// host-side (it needs the global balance counters), then the mutation
+/// travels as an `InsertEdge` action to `u`'s member and performs the
+/// tree walk / ghost spill at the data. `MetaBump` companions keep the
+/// degree metadata consistent when `bump_meta` is set. The caller decides
+/// when to `chip.run()` — construction batches every edge before one run,
+/// streaming mutation runs per insert. Returns the member root the edge
+/// points at (repair actions target it).
+pub fn germinate_insert<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    u: u32,
+    v: u32,
+    w: u32,
+    bump_meta: bool,
+) -> anyhow::Result<Address> {
+    anyhow::ensure!(u < built.n && v < built.n, "vertex out of range");
+    let (src, to) = select_members(built, u, v);
+    chip.germinate_insert_edge(src, to, w);
+    if bump_meta {
+        for &a in &built.roots[u as usize] {
+            chip.germinate_meta_bump(a, 1, 0);
+        }
+        chip.germinate_meta_bump(to, 0, 1);
+    }
+    Ok(to)
+}
+
+/// All objects of one member's RPVO, breadth-first from the root. The
+/// builder's metadata fixup and tests walk trees through the live ghost
+/// pointers instead of bookkeeping a parallel structure.
+pub fn member_tree<A: Application>(chip: &Chip<A>, root: Address) -> Vec<Address> {
+    let mut tree = vec![root];
+    let mut i = 0;
+    while i < tree.len() {
+        let obj = chip.object(tree[i]);
+        tree.extend(obj.ghosts.iter().copied());
+        i += 1;
+    }
+    tree
+}
+
+/// Total objects installed across all arenas (roots + ghosts).
+pub fn total_objects<A: Application>(chip: &Chip<A>) -> u64 {
+    chip.cells.iter().map(|c| c.objects.len() as u64).sum()
+}
+
+/// A batch of edge insertions streamed through the live chip, with the
+/// app's incremental repair interleaved after each insert.
+#[derive(Clone, Debug, Default)]
+pub struct MutationBatch {
+    pub edges: Vec<(u32, u32, u32)>,
+}
+
+impl MutationBatch {
+    /// Exactly `count` random non-self-loop edges over `n` vertices
+    /// (weights `1..=max_w`), deterministic in `seed`; self-loop draws
+    /// are resampled. Returns an empty batch when `n < 2` (no non-loop
+    /// edge exists).
+    pub fn random(n: u32, count: u32, max_w: u32, seed: u64) -> Self {
+        if n < 2 {
+            return MutationBatch::default();
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut edges = Vec::with_capacity(count as usize);
+        while (edges.len() as u32) < count {
+            let u = rng.below(n as u64) as u32;
+            let v = rng.below(n as u64) as u32;
+            if u == v {
+                continue;
+            }
+            let w = 1 + rng.below(max_w.max(1) as u64) as u32;
+            edges.push((u, v, w));
+        }
+        MutationBatch { edges }
+    }
+
+    /// Mirror the batch into the host graph (reference verification).
+    pub fn mirror_into(&self, g: &mut crate::graph::model::HostGraph) {
+        g.edges.extend_from_slice(&self.edges);
+    }
+}
+
+/// Stream `batch` through the live chip: insert each edge (host fast
+/// path, or as `InsertEdge`/`MetaBump` actions when
+/// `cfg.build_mode == OnChip`), then germinate the app's incremental
+/// repair at the member the edge points to and run the ripple to
+/// quiescence (§7 mutate-then-recompute). Returns `false` when the app
+/// has no incremental repair (PageRank): the structure is mutated and
+/// metadata is consistent, but the caller must recompute on the live
+/// graph afterwards (`apps::driver::recompute_pagerank`).
+pub fn apply_batch<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    batch: &MutationBatch,
+) -> anyhow::Result<bool> {
+    let repairable = chip.app.can_repair();
+    let on_chip = chip.cfg.build_mode == BuildMode::OnChip;
+    for &(u, v, w) in &batch.edges {
+        let to = if on_chip {
+            let to = germinate_insert(chip, built, u, v, w, true)?;
+            chip.run()?; // the mutation settles before the repair reads state
+            to
+        } else {
+            insert_edge(chip, built, u, v, w, true)?.to
+        };
+        if repairable {
+            let src_state = chip.object(built.addr_of(u)).state.clone();
+            // `None` = the insert cannot change any result (unreached
+            // source); the structure is mutated, nothing to ripple.
+            if let Some(spec) = chip.app.repair(&src_state, w) {
+                chip.germinate(to, ActionKind::App, spec.payload, spec.aux);
+                chip.run()?;
+            }
+        }
+    }
+    if on_chip {
+        // One occupancy/object-count resync for the whole batch: nothing
+        // inside the loop reads either (selection uses the persisted
+        // counters; repair reads vertex state), so per-edge O(cells)
+        // sweeps would be pure waste.
+        built.ingest.resync(chip);
+        built.objects = total_objects(chip);
+    }
+    Ok(repairable)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::bfs::Bfs;
+    use crate::arch::config::ChipConfig;
+    use crate::graph::model::HostGraph;
+    use crate::noc::message::ActionKind;
+
+    /// (source vid, destination vid, weight) multiset of the whole chip.
+    fn edge_multiset(chip: &Chip<Bfs>) -> Vec<(u32, u32, u32)> {
+        let mut edges: Vec<(u32, u32, u32)> = chip
+            .cells
+            .iter()
+            .flat_map(|c| &c.objects)
+            .flat_map(|o| {
+                o.edges.iter().map(move |e| (o.vid, chip.object(e.to).vid, e.weight))
+            })
+            .collect();
+        edges.sort_unstable();
+        edges
+    }
+
+    fn skewed_graph() -> HostGraph {
+        // A hub with heavy in- and out-degree plus a chain, weighted.
+        let mut edges: Vec<(u32, u32, u32)> = (1..60).map(|v| (v, 0, v)).collect();
+        edges.extend((1..40).map(|v| (0, v, 2 * v)));
+        edges.extend((0..79).map(|v| (v, v + 1, 1)));
+        HostGraph { n: 80, edges }
+    }
+
+    #[test]
+    fn onchip_build_is_structurally_equivalent_to_host_build() {
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 4;
+        cfg.rpvo_max = 4;
+        let mut host_chip = Chip::new(cfg.clone(), Bfs).unwrap();
+        let host = crate::rpvo::builder::build(&mut host_chip, &g).unwrap();
+        cfg.build_mode = BuildMode::OnChip;
+        let mut chip = Chip::new(cfg, Bfs).unwrap();
+        let built = crate::rpvo::builder::build(&mut chip, &g).unwrap();
+
+        // Same member counts, same edge multiset.
+        let widths = |b: &BuiltGraph| b.roots.iter().map(|m| m.len()).collect::<Vec<_>>();
+        assert_eq!(widths(&host), widths(&built));
+        assert_eq!(edge_multiset(&host_chip), edge_multiset(&chip));
+        assert!(chip.metrics.edges_inserted as usize == g.m(), "every action landed once");
+
+        // And the graphs compute the same answers.
+        host_chip.germinate(host.addr_of(1), ActionKind::App, 0, 0);
+        host_chip.run().unwrap();
+        chip.germinate(built.addr_of(1), ActionKind::App, 0, 0);
+        chip.run().unwrap();
+        let levels = |c: &Chip<Bfs>, b: &BuiltGraph| {
+            b.roots.iter().map(|m| c.object(m[0]).state.level).collect::<Vec<_>>()
+        };
+        assert_eq!(levels(&host_chip, &host), levels(&chip, &built));
+    }
+
+    #[test]
+    fn ingest_occupancy_stays_in_sync_without_rebuild() {
+        let g = skewed_graph();
+        let cfg = ChipConfig::torus(4);
+        let mut chip = Chip::new(cfg, Bfs).unwrap();
+        let mut built = crate::rpvo::builder::build(&mut chip, &g).unwrap();
+        for k in 0..20u32 {
+            insert_edge(&mut chip, &mut built, k % 80, (k + 7) % 80, 1, true).unwrap();
+        }
+        for (ci, cell) in chip.cells.iter().enumerate() {
+            assert_eq!(
+                built.ingest.alloc.counts[ci],
+                cell.objects.len() as u32,
+                "occupancy drifted at cell {ci}"
+            );
+        }
+        assert_eq!(built.objects, total_objects(&chip));
+    }
+
+    #[test]
+    fn batch_repair_reaches_new_edges() {
+        // Two disconnected chains; the batch bridges them; repair ripples.
+        let g = HostGraph { n: 6, edges: vec![(0, 1, 1), (1, 2, 1), (3, 4, 1), (4, 5, 1)] };
+        let cfg = ChipConfig::torus(4);
+        let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+        let batch = MutationBatch { edges: vec![(2, 3, 1)] };
+        assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
+        let levels = crate::apps::driver::bfs_levels(&chip, &built);
+        assert_eq!(levels, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn selection_balances_members() {
+        // in-edges cycle members by cutoff chunks; out-edges round-robin.
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.rpvo_max = 4;
+        cfg.local_edgelist_size = 2; // low cutoff floor => hub splits
+        let mut chip = Chip::new(cfg, Bfs).unwrap();
+        let mut built = crate::rpvo::builder::build(&mut chip, &g).unwrap();
+        assert!(built.roots[0].len() > 1, "hub must be rhizomatic");
+        let before = built.roots[0].clone();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..(before.len() * 2) {
+            let (src, _) = select_members(&mut built, 0, 1);
+            seen.insert(src);
+        }
+        assert_eq!(seen.len(), before.len(), "round-robin touches every member");
+    }
+}

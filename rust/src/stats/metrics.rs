@@ -29,6 +29,15 @@ pub struct Metrics {
     pub relays: u64,
     /// RhizomeShare actions handled (§5.1 consistency traffic).
     pub rhizome_shares: u64,
+    /// InsertEdge mutation actions that landed an edge in an object
+    /// (relays along the RPVO are not counted; every insert lands once).
+    pub edges_inserted: u64,
+    /// MetaBump actions applied (degree metadata kept consistent on-chip).
+    pub meta_bumps: u64,
+    /// Ghosts grown past `cell_mem_objects` because a full arena had no
+    /// child to relay into (the on-chip ingest pressure valve; the host
+    /// allocator errors in the same situation).
+    pub sram_overflows: u64,
     // -- diffusions ------------------------------------------------------
     /// Diffuse closures enqueued.
     pub diffusions_created: u64,
@@ -113,6 +122,9 @@ impl Metrics {
         self.actions_overlapped += o.actions_overlapped;
         self.relays += o.relays;
         self.rhizome_shares += o.rhizome_shares;
+        self.edges_inserted += o.edges_inserted;
+        self.meta_bumps += o.meta_bumps;
+        self.sram_overflows += o.sram_overflows;
         self.diffusions_created += o.diffusions_created;
         self.diffusions_executed += o.diffusions_executed;
         self.diffusions_pruned += o.diffusions_pruned;

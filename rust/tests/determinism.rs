@@ -7,10 +7,19 @@
 //! default: arbitration, credit-based flow control, and the outbox merge
 //! order are all defined so that cell-visit order and thread interleaving
 //! are unobservable (see `arch::chip` module docs for the argument).
+//! These runs also exercise the adaptive serial fallback: shards > 1
+//! takes the hybrid path, which must not change a single counter.
+//!
+//! The mutation suite extends the contract to the ingest subsystem:
+//! interleaved dynamic inserts (with incremental repair or live-graph
+//! recompute) must stay whole-`Metrics`-equal across shard counts, and
+//! the repaired results must equal a from-scratch recompute on the
+//! mutated graph for BFS, SSSP, and PageRank.
 
 use amcca::apps::driver;
 use amcca::arch::config::ChipConfig;
 use amcca::graph::datasets::{Dataset, Scale};
+use amcca::rpvo::mutate::MutationBatch;
 use amcca::stats::metrics::Metrics;
 
 const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
@@ -54,6 +63,136 @@ fn sssp_identical_across_shard_counts() {
             Some((m, d)) => {
                 assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
                 assert_eq!(d, &dists, "distances diverged at shards={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn interleaved_mutations_identical_across_shard_counts_bfs() {
+    let g = Dataset::R18.build(Scale::Tiny);
+    let batch = MutationBatch::random(g.n, 12, 1, 0xFACE);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut reference: Option<(Metrics, Vec<u32>)> = None;
+    for shards in SHARD_COUNTS {
+        let (mut chip, mut built) = driver::run_bfs(cfg(shards), &g, 0).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(
+            driver::verify_bfs(&gm, 0, &levels),
+            0,
+            "shards={shards}: incremental repair != from-scratch recompute"
+        );
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), levels)),
+            Some((m, l)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
+                assert_eq!(l, &levels, "levels diverged at shards={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn interleaved_mutations_identical_across_shard_counts_sssp() {
+    let mut g = Dataset::R18.build(Scale::Tiny);
+    g.randomize_weights(32, 11);
+    let batch = MutationBatch::random(g.n, 12, 16, 0xBEEF);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut reference: Option<(Metrics, Vec<u32>)> = None;
+    for shards in SHARD_COUNTS {
+        let (mut chip, mut built) = driver::run_sssp(cfg(shards), &g, 3).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        let dists = driver::sssp_dists(&chip, &built);
+        assert_eq!(
+            driver::verify_sssp(&gm, 3, &dists),
+            0,
+            "shards={shards}: incremental repair != from-scratch recompute"
+        );
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), dists)),
+            Some((m, d)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
+                assert_eq!(d, &dists, "distances diverged at shards={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn interleaved_mutations_incremental_repair_cc() {
+    // CC's min-label ripple is the third monotonic repair path; pin it
+    // against the reference fixpoint on the mutated graph.
+    let g = Dataset::R22.build(Scale::Tiny);
+    let batch = MutationBatch::random(g.n, 10, 1, 0xCC00);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut reference: Option<(Metrics, Vec<u32>)> = None;
+    for shards in SHARD_COUNTS {
+        let (mut chip, mut built) = driver::run_cc(cfg(shards), &g).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        let labels = driver::cc_labels(&chip, &built);
+        let want = amcca::apps::cc::reference_labels(&gm);
+        assert_eq!(labels, want, "shards={shards}: CC repair != from-scratch fixpoint");
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), labels)),
+            Some((m, l)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
+                assert_eq!(l, &labels, "labels diverged at shards={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn mutations_then_recompute_identical_across_shard_counts_pagerank() {
+    // PageRank has no incremental ripple (non-monotonic); the driver
+    // mutates the live structure and recomputes on it. Scores must match
+    // the power iteration on the mutated graph and be bit-identical
+    // across shard counts.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let batch = MutationBatch::random(g.n, 8, 1, 0xD00D);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut reference: Option<(Metrics, Vec<f32>)> = None;
+    for shards in SHARD_COUNTS {
+        let (mut chip, mut built) = driver::run_pagerank(cfg(shards), &g, 5).unwrap();
+        let repaired = driver::apply_mutations(&mut chip, &mut built, &batch).unwrap();
+        assert!(!repaired, "PageRank must fall back to live-graph recompute");
+        driver::recompute_pagerank(&mut chip, &built).unwrap();
+        let scores = driver::pagerank_scores(&chip, &built);
+        let (bad, max_rel) = driver::verify_pagerank(&gm, 5, &scores);
+        assert_eq!(bad, 0, "shards={shards}: recompute diverged (max_rel={max_rel})");
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), scores)),
+            Some((m, s)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
+                assert_eq!(s, &scores, "scores diverged bitwise at shards={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn onchip_construction_identical_across_shard_counts() {
+    // Message-driven construction (BuildMode::OnChip) is itself a chip
+    // workload; its metrics and the graph it produces must be
+    // shard-invariant too.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let mut reference: Option<(Metrics, Vec<u32>)> = None;
+    for shards in SHARD_COUNTS {
+        let mut c = cfg(shards);
+        c.build_mode = amcca::arch::config::BuildMode::OnChip;
+        let (chip, built) = driver::run_bfs(c, &g, 0).unwrap();
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &levels), 0, "shards={shards} wrong BFS");
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), levels)),
+            Some((m, l)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
+                assert_eq!(l, &levels, "levels diverged at shards={shards}");
             }
         }
     }
