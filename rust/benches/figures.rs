@@ -152,7 +152,7 @@ fn fig5() -> anyhow::Result<()> {
             .heatmap
             .frames
             .iter()
-            .max_by(|a, b| a.congested_fraction().partial_cmp(&b.congested_fraction()).unwrap());
+            .max_by(|a, b| a.congested_fraction().total_cmp(&b.congested_fraction()));
         t.row(&[
             throttle.to_string(),
             out.metrics.cycles.to_string(),

@@ -57,7 +57,7 @@ fn sim_loop_mcps(
         cycles = chip.metrics.cycles;
         samples.push((chip.metrics.cycles as f64 / el.as_secs_f64() / 1e6, el));
     }
-    samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    samples.sort_by(|a, b| a.0.total_cmp(&b.0));
     let (mcps, dur) = samples[samples.len() / 2];
     (mcps, dur, cycles)
 }
@@ -178,6 +178,43 @@ fn main() {
                 format!("{meps:.2} Medges/s"),
             ]);
             json.push((format!("ingest R18@Tiny 32x32 [{label}]"), meps));
+        }
+    }
+
+    // --- streaming mutation: per-edge vs wave-batched ingest ----------------
+    // A live, already-solved BFS chip streams the same random edge batch
+    // through `apply_mutations` on the on-chip ingest path. `wave=1` is
+    // the per-edge baseline (one settle run + one repair run per edge);
+    // `auto` groups structurally independent edges per run. Results are
+    // bit-identical (pinned by tests/determinism.rs); Medges/s is the §7
+    // streaming-mutation headline.
+    {
+        use amcca::arch::config::BuildMode;
+        use amcca::rpvo::mutate::MutationBatch;
+        let g = Dataset::R18.build(Scale::Tiny);
+        let batch = MutationBatch::random(g.n, 512, 1, 0xB47C);
+        for (label, wave) in [("wave=1", 1usize), ("auto", 0usize)] {
+            let mut cfg = ChipConfig::torus(32);
+            cfg.build_mode = BuildMode::OnChip;
+            cfg.ingest_wave = wave;
+            let mut samples: Vec<std::time::Duration> = Vec::new();
+            let mut waves = 0u64;
+            for _ in 0..3 {
+                let (mut chip, mut built) = driver::run_bfs(cfg.clone(), &g, 0).unwrap();
+                let t0 = Instant::now();
+                driver::apply_mutations(&mut chip, &mut built, &batch).unwrap();
+                samples.push(t0.elapsed());
+                waves = chip.metrics.ingest_waves;
+            }
+            samples.sort();
+            let dur = samples[samples.len() / 2];
+            let meps = batch.edges.len() as f64 / dur.as_secs_f64() / 1e6;
+            t.row(&[
+                format!("ingest-batched R18@Tiny 32x32 [{label}]"),
+                format!("{dur:?}"),
+                format!("{meps:.3} Medges/s ({} edges, {waves} waves)", batch.edges.len()),
+            ]);
+            json.push((format!("ingest-batched R18@Tiny 32x32 [{label}]"), meps));
         }
     }
 

@@ -85,7 +85,10 @@ impl Application for Bfs {
 
     /// §7 incremental repair: a new edge `(u → v)` can only improve `v`
     /// to `level(u) + 1`; one germinate ripples the rest. Unreached
-    /// sources change nothing, so no action is needed.
+    /// sources change nothing, so no action is needed. Wave-safe: the
+    /// spec is a monotonic relaxation, so a stale (higher) level — or a
+    /// skipped unreached source that a wave-mate's ripple later reaches —
+    /// converges to the same fixpoint through the inserted edge itself.
     fn repair(&self, src: &BfsState, _weight: u32) -> Option<RepairSpec> {
         if src.level == UNREACHED {
             None

@@ -83,7 +83,9 @@ impl Application for Cc {
     }
 
     /// §7 incremental repair: the new edge `(u → v)` offers `v` the label
-    /// of `u`; the min-label relaxation ripples it downstream.
+    /// of `u`; the min-label relaxation ripples it downstream. Wave-safe:
+    /// min-label is a monotonic relaxation, so batched repairs reading a
+    /// one-wave-stale label converge to the same component fixpoint.
     fn repair(&self, src: &CcState, _weight: u32) -> Option<RepairSpec> {
         Some(RepairSpec { payload: src.label, aux: 0 })
     }

@@ -142,11 +142,15 @@ pub fn cc_labels(chip: &Chip<crate::apps::cc::Cc>, built: &BuiltGraph) -> Vec<u3
 
 // ----------------------------------------------------------- mutation --
 
-/// Stream a mutation batch through a live chip: per edge, insert through
-/// the unified ingest engine (host fast path, or as `InsertEdge` /
-/// `MetaBump` actions when `cfg.build_mode == OnChip`) and run the app's
-/// incremental repair to quiescence. Returns `false` when the app cannot
-/// repair incrementally (PageRank) — follow with [`recompute_pagerank`].
+/// Stream a mutation batch through a live chip in waves of structurally
+/// independent edges (see `rpvo::mutate`): per wave, insert every edge
+/// through the unified ingest engine (host fast path, or as `InsertEdge`
+/// / `MetaBump` actions settled in one run when `cfg.build_mode ==
+/// OnChip`) and ripple the app's batched incremental repairs to
+/// quiescence. `cfg.ingest_wave` caps the wave length (0 = auto, 1 =
+/// per-edge); results are identical for every setting. Returns `false`
+/// when the app cannot repair incrementally (PageRank) — follow with
+/// [`recompute_pagerank`].
 pub fn apply_mutations<A: Application>(
     chip: &mut Chip<A>,
     built: &mut BuiltGraph,

@@ -14,6 +14,13 @@
 //! Semantically this matches the synchronous power iteration
 //! (`baseline::bsp::pagerank` and the AOT-XLA `pagerank_step` artifact)
 //! up to f32 summation order — which is exactly how it is verified.
+//!
+//! PageRank is non-monotonic, so it implements no wave-safe `repair`
+//! hook: after a (wave-batched) mutation stream the driver recomputes on
+//! the live mutated structure (`apps::driver::recompute_pagerank`).
+//! Because wave batching is pinned to produce a bit-identical structure,
+//! the recomputed scores are bit-identical too, for every
+//! `ChipConfig::ingest_wave` setting.
 
 use std::collections::VecDeque;
 

@@ -75,6 +75,9 @@ impl Application for Sssp {
 
     /// §7 incremental repair: the new edge offers `v` the distance
     /// `dist(u) + w`; monotone relaxation ripples the improvement.
+    /// Wave-safe: a stale (larger) distance read under batched repair
+    /// still relaxes to the same (min, +) fixpoint, because any later
+    /// improvement at `u` re-diffuses `dist + w` through the edge itself.
     fn repair(&self, src: &SsspState, weight: u32) -> Option<RepairSpec> {
         if src.dist == UNREACHED {
             None

@@ -32,6 +32,11 @@ pub struct Cell<S> {
     pub mem_words: usize,
     /// Cell busy executing work until this cycle (exclusive).
     pub busy_until: u64,
+    /// Parked in the engine timing wheel until `busy_until` (set when the
+    /// scheduler defers the next compute visit to the expiry cycle instead
+    /// of re-marking every cycle; cleared when the wheel wakes the cell —
+    /// see [`crate::arch::chip`]).
+    pub wheel_armed: bool,
     /// Diffusion-throttle state (§6.2).
     pub throttle: Throttle,
     /// Round-robin arbitration cursor for output-port allocation.
@@ -53,6 +58,7 @@ impl<S> Cell<S> {
             objects: Vec::new(),
             mem_words: 0,
             busy_until: 0,
+            wheel_armed: false,
             throttle: Throttle::default(),
             arb: 0,
             active_epoch: 0,

@@ -70,14 +70,26 @@
 //! fixed shard order at the end of the run. Hence serial and sharded
 //! execution are observationally identical.
 //!
-//! **Idle fast-forward.** When a cycle performs no work at all — every
-//! active cell is merely waiting out a multi-cycle busy timer — the engine
-//! jumps `now` straight to the earliest `busy_until` instead of grinding
-//! through no-op cycles; and once the chip is globally quiescent the
-//! idle-tree latency is added arithmetically instead of stepped. Both
-//! shortcuts skip only cycles that provably change nothing, so reported
-//! cycle counts match the fully-stepped engine exactly. (Disabled while
-//! heat-map sampling is on, which wants the per-cycle frame cadence.)
+//! **Timing-wheel wakeups.** A cell busy past the next cycle is *parked*
+//! in a per-shard [`TimingWheel`] slot keyed by its `busy_until` and woken
+//! exactly there, instead of being re-marked active every cycle just to
+//! rediscover its timer (the old scheme made long multi-cycle actions —
+//! PageRank bodies, ingest walks — cost one scheduler visit per cell per
+//! cycle). Only the compute side sleeps: a parked cell that still holds
+//! router flits keeps its routing marks, and any flit arrival re-marks it
+//! as before. Entries travel with their shard across the serial/sharded
+//! hand-offs, so the hybrid stays bit-identical. `Metrics::wheel_wakeups`
+//! counts the parks.
+//!
+//! **Idle fast-forward.** When the active set is empty but cells are
+//! parked in the wheel, the engine jumps `now` straight to the cycle
+//! before the earliest wheel expiry instead of grinding through no-op
+//! cycles; and once the chip is globally quiescent (nothing active,
+//! nothing parked) the idle-tree latency is added arithmetically instead
+//! of stepped. Both shortcuts skip only cycles that provably change
+//! nothing, so reported cycle counts match the fully-stepped engine
+//! exactly. (Disabled while heat-map sampling is on, which wants the
+//! per-cycle frame cadence.)
 //!
 //! **Zero-allocation hot path.** Router FIFOs are flat pooled slabs
 //! ([`crate::noc::channel::InputUnit`]), active lists are epoch-stamped
@@ -117,6 +129,99 @@ struct Staged {
     flit: Flit,
 }
 
+/// Slot count of the per-shard timing wheel (power of two). Busy spans
+/// are short (1..~70 cycles, §6.1 work costs), so one lap is generous;
+/// rarer longer waits simply stay in their slot and are re-examined once
+/// per lap.
+const WHEEL_SLOTS: usize = 256;
+
+/// Timing wheel for multi-cycle-busy cells: instead of re-marking a busy
+/// cell active every cycle just to rediscover its timer, the scheduler
+/// parks it in the slot of its expiry cycle and wakes it exactly there
+/// (ROADMAP perf item). Entries carry their absolute due cycle, so a slot
+/// shared across laps — or reached via an idle fast-forward jump — wakes
+/// only the cells that are actually due.
+struct TimingWheel {
+    slots: Vec<Vec<(u64, CellId)>>,
+    len: usize,
+    /// Cached minimum due cycle (`u64::MAX` when empty): O(1) for the
+    /// per-cycle publish at the shard barrier, recomputed by full scan
+    /// only on the cycles where the earliest slot actually fires.
+    next_due: u64,
+}
+
+impl TimingWheel {
+    fn new() -> Self {
+        TimingWheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            len: 0,
+            next_due: u64::MAX,
+        }
+    }
+
+    #[inline]
+    fn slot_of(due: u64) -> usize {
+        (due as usize) & (WHEEL_SLOTS - 1)
+    }
+
+    fn schedule(&mut self, due: u64, cell: CellId) {
+        self.slots[Self::slot_of(due)].push((due, cell));
+        self.len += 1;
+        self.next_due = self.next_due.min(due);
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Earliest due cycle over all parked cells — the idle fast-forward
+    /// target and the worker's per-cycle publish.
+    fn earliest(&self) -> Option<u64> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.next_due)
+        }
+    }
+
+    /// Wake every cell due exactly at `now`. Lapped entries (due a wheel
+    /// lap or more away) stay parked for a later visit of this slot.
+    fn advance(&mut self, now: u64, mut wake: impl FnMut(CellId)) {
+        {
+            let slot = &mut self.slots[Self::slot_of(now)];
+            let mut i = 0;
+            while i < slot.len() {
+                if slot[i].0 == now {
+                    let (_, c) = slot.swap_remove(i);
+                    self.len -= 1;
+                    wake(c);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if self.next_due <= now {
+            // The earliest slot fired; rescan for the new minimum.
+            self.next_due = if self.len == 0 {
+                u64::MAX
+            } else {
+                self.slots.iter().flatten().map(|&(due, _)| due).min().unwrap_or(u64::MAX)
+            };
+        }
+    }
+
+    /// Drain every entry (serial <-> sharded engine hand-off, abort).
+    fn drain(&mut self) -> Vec<(u64, CellId)> {
+        self.len = 0;
+        self.next_due = u64::MAX;
+        let mut out = Vec::new();
+        for s in &mut self.slots {
+            out.append(s);
+        }
+        out
+    }
+}
+
 /// Per-shard scheduling state (the serial engine is the 1-shard instance).
 struct Shard {
     /// First cell id owned by this shard (cells are contiguous row bands).
@@ -129,10 +234,8 @@ struct Shard {
     pushed: Vec<CellId>,
     /// Cross-shard pushes staged this cycle, keyed by destination shard.
     per_dest: Vec<Vec<Staged>>,
-    /// Did this shard change any state this cycle? (vetoes fast-forward)
-    advanced: bool,
-    /// Earliest `busy_until` among busy-waiting cells visited this cycle.
-    min_due: u64,
+    /// Busy cells parked until their timer expiry (see [`TimingWheel`]).
+    wheel: TimingWheel,
 }
 
 impl Shard {
@@ -143,9 +246,25 @@ impl Shard {
             next: Vec::with_capacity(len as usize),
             pushed: Vec::new(),
             per_dest: (0..nshards).map(|_| Vec::new()).collect(),
-            advanced: false,
-            min_due: u64::MAX,
+            wheel: TimingWheel::new(),
         }
+    }
+
+    /// Move every parked cell whose busy timer expires at `now` onto this
+    /// cycle's active list (same epoch dedup as a regular mark). Called
+    /// right after the active/next swap, so woken cells are visited this
+    /// very cycle.
+    fn wake_due<S>(&mut self, cells: &mut [Cell<S>], now: u64) {
+        let base = self.base;
+        let active = &mut self.active;
+        self.wheel.advance(now, |c| {
+            let cell = &mut cells[(c - base) as usize];
+            cell.wheel_armed = false;
+            if cell.active_epoch != now {
+                cell.active_epoch = now;
+                active.push(c);
+            }
+        });
     }
 }
 
@@ -281,35 +400,42 @@ impl<A: Application> Chip<A> {
                 }
                 continue;
             }
-            if fast {
-                if pending == 0 {
-                    let done = self.terminator.report_at(self.now);
-                    // The fully-stepped loop would hit the max_cycles
-                    // ensure before the idle tree reports; match it.
-                    anyhow::ensure!(
-                        done <= self.cfg.max_cycles,
-                        "exceeded max_cycles={} (livelock or undersized budget)",
-                        self.cfg.max_cycles
-                    );
+            if fast && pending == 0 {
+                match self.serial.wheel.earliest() {
+                    // Globally quiescent: nothing active, nothing parked.
+                    None => {
+                        let done = self.terminator.report_at(self.now);
+                        // The fully-stepped loop would hit the max_cycles
+                        // ensure before the idle tree reports; match it.
+                        anyhow::ensure!(
+                            done <= self.cfg.max_cycles,
+                            "exceeded max_cycles={} (livelock or undersized budget)",
+                            self.cfg.max_cycles
+                        );
+                        self.metrics.cycles = done;
+                        self.now = done;
+                        return Ok(&self.metrics);
+                    }
+                    // Idle fast-forward: every live cell is parked in the
+                    // timing wheel; skip straight to the cycle before the
+                    // first expiry (the step below lands exactly on it).
+                    Some(due) => {
+                        self.now = (due - 1).min(self.cfg.max_cycles);
+                    }
+                }
+            } else if !fast {
+                let parked = self.serial.wheel.len() as u64;
+                if let Some(done) = self.terminator.observe(self.now, 0, pending + parked) {
                     self.metrics.cycles = done;
-                    self.now = done;
                     return Ok(&self.metrics);
                 }
-            } else if let Some(done) = self.terminator.observe(self.now, 0, pending) {
-                self.metrics.cycles = done;
-                return Ok(&self.metrics);
             }
             anyhow::ensure!(
                 self.now < self.cfg.max_cycles,
                 "exceeded max_cycles={} (livelock or undersized budget)",
                 self.cfg.max_cycles
             );
-            let (advanced, min_due) = self.step_inner();
-            if fast && !advanced && min_due != u64::MAX && min_due > self.now + 1 {
-                // Idle fast-forward: every active cell is merely waiting
-                // out its busy timer; skip straight to the first due cycle.
-                self.now = (min_due - 1).min(self.cfg.max_cycles);
-            }
+            self.step_inner();
         }
     }
 
@@ -319,13 +445,12 @@ impl<A: Application> Chip<A> {
         self.step_inner();
     }
 
-    /// One serial cycle; returns `(advanced, min_due)` for fast-forward.
-    fn step_inner(&mut self) -> (bool, u64) {
+    /// One serial cycle.
+    fn step_inner(&mut self) {
         self.now += 1;
         std::mem::swap(&mut self.serial.active, &mut self.serial.next);
         self.serial.next.clear();
-        self.serial.advanced = false;
-        self.serial.min_due = u64::MAX;
+        self.serial.wake_due(&mut self.cells, self.now);
         {
             let mut lane = Lane {
                 app: &self.app,
@@ -348,7 +473,6 @@ impl<A: Application> Chip<A> {
         if self.cfg.heatmap_every > 0 && self.now % self.cfg.heatmap_every == 0 {
             self.sample_frame();
         }
-        (self.serial.advanced, self.serial.min_due)
     }
 
     fn sample_frame(&mut self) {
@@ -439,8 +563,8 @@ struct Ctx<'e, A: Application> {
     mail_flag: &'e [AtomicBool],
     barrier: &'e SpinBarrier,
     next_counts: &'e [AtomicU64],
-    min_dues: &'e [AtomicU64],
-    advanced: &'e [AtomicBool],
+    /// Per-shard earliest timing-wheel expiry (`u64::MAX` = empty wheel).
+    wheel_dues: &'e [AtomicU64],
     cmd: &'e AtomicU8,
     cmd_arg: &'e AtomicU64,
     nshards: usize,
@@ -460,6 +584,9 @@ struct ShardOut {
     frames: Vec<(u64, Vec<f32>, Vec<bool>)>,
     /// Marks pending at exit (non-empty only on abort or yield).
     leftover: Vec<CellId>,
+    /// Timing-wheel entries parked at exit (non-empty only on abort or
+    /// yield; quiescence implies an empty wheel).
+    parked: Vec<(u64, CellId)>,
 }
 
 fn shard_worker<A: Application>(
@@ -478,23 +605,32 @@ fn shard_worker<A: Application>(
     loop {
         // (1) publish this shard's view of the coming cycle
         ctx.next_counts[k].store(st.next.len() as u64, Ordering::Relaxed);
-        ctx.min_dues[k].store(st.min_due, Ordering::Relaxed);
-        ctx.advanced[k].store(st.advanced, Ordering::Relaxed);
+        ctx.wheel_dues[k].store(st.wheel.earliest().unwrap_or(u64::MAX), Ordering::Relaxed);
         ctx.barrier.wait(&mut sense);
         // (2) leader decides; mirrors the serial `run` loop exactly
         if k == 0 {
             let total: u64 =
                 (0..ctx.nshards).map(|s| ctx.next_counts[s].load(Ordering::Relaxed)).sum();
-            let any_adv = (0..ctx.nshards).any(|s| ctx.advanced[s].load(Ordering::Relaxed));
-            let min_due = (0..ctx.nshards)
-                .map(|s| ctx.min_dues[s].load(Ordering::Relaxed))
+            let wheel_min = (0..ctx.nshards)
+                .map(|s| ctx.wheel_dues[s].load(Ordering::Relaxed))
                 .min()
                 .unwrap_or(u64::MAX);
-            let decision = if ctx.yield_below > 0 && total < ctx.yield_below {
+            let idle = total == 0 && wheel_min == u64::MAX;
+            // In-shard idle fast-forward is checked BEFORE the yield
+            // fallback: when every live cell is parked in a wheel, a jump
+            // keeps the workers alive for the wake cycle instead of
+            // bouncing the whole engine to serial and back.
+            let decision = if ctx.fast && total == 0 && wheel_min != u64::MAX {
+                if now >= ctx.cfg.max_cycles {
+                    (CMD_ABORT, now)
+                } else {
+                    (CMD_JUMP, (wheel_min - 1).min(ctx.cfg.max_cycles))
+                }
+            } else if ctx.yield_below > 0 && total < ctx.yield_below {
                 // Adaptive fallback: the coming cycle is cheaper without
                 // the barrier; hand the loop back to the serial engine.
                 (CMD_YIELD, now)
-            } else if total == 0 && ctx.fast {
+            } else if idle && ctx.fast {
                 // Mirror the stepped loop: the idle-tree report lands
                 // inside the cycle budget or the run aborts.
                 if now + ctx.tree_depth <= ctx.cfg.max_cycles {
@@ -502,7 +638,7 @@ fn shard_worker<A: Application>(
                 } else {
                     (CMD_ABORT, now)
                 }
-            } else if total == 0 {
+            } else if idle {
                 let since = *quiet_since.get_or_insert(now);
                 if now >= since + ctx.tree_depth {
                     (CMD_STOP, now)
@@ -515,8 +651,6 @@ fn shard_worker<A: Application>(
                 quiet_since = None;
                 if now >= ctx.cfg.max_cycles {
                     (CMD_ABORT, now)
-                } else if ctx.fast && !any_adv && min_due != u64::MAX && min_due > now + 1 {
-                    (CMD_JUMP, (min_due - 1).min(ctx.cfg.max_cycles))
                 } else {
                     (CMD_RUN, 0)
                 }
@@ -528,7 +662,12 @@ fn shard_worker<A: Application>(
         // (3) act on the decision
         match ctx.cmd.load(Ordering::Relaxed) {
             CMD_STOP | CMD_ABORT | CMD_YIELD => {
-                return ShardOut { metrics, frames, leftover: std::mem::take(&mut st.next) };
+                return ShardOut {
+                    metrics,
+                    frames,
+                    leftover: std::mem::take(&mut st.next),
+                    parked: st.wheel.drain(),
+                };
             }
             CMD_JUMP => now = ctx.cmd_arg.load(Ordering::Relaxed),
             _ => {}
@@ -537,8 +676,7 @@ fn shard_worker<A: Application>(
         now += 1;
         std::mem::swap(&mut st.active, &mut st.next);
         st.next.clear();
-        st.advanced = false;
-        st.min_due = u64::MAX;
+        st.wake_due(&mut *cells, now);
         {
             let mut lane = Lane {
                 app: ctx.app,
@@ -629,6 +767,10 @@ impl<A: Application> Chip<A> {
             let s = row_shard[(c / dim_x) as usize] as usize;
             shards[s].next.push(c);
         }
+        for (due, c) in self.serial.wheel.drain() {
+            let s = row_shard[(c / dim_x) as usize] as usize;
+            shards[s].wheel.schedule(due, c);
+        }
         self.serial.active.clear();
 
         let mail: Vec<Mutex<Vec<Staged>>> =
@@ -637,8 +779,7 @@ impl<A: Application> Chip<A> {
             (0..nshards * nshards).map(|_| AtomicBool::new(false)).collect();
         let barrier = SpinBarrier::new(nshards);
         let next_counts: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(0)).collect();
-        let min_dues: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(u64::MAX)).collect();
-        let advanced: Vec<AtomicBool> = (0..nshards).map(|_| AtomicBool::new(false)).collect();
+        let wheel_dues: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(u64::MAX)).collect();
         let cmd = AtomicU8::new(CMD_RUN);
         let cmd_arg = AtomicU64::new(0);
 
@@ -666,8 +807,7 @@ impl<A: Application> Chip<A> {
                 mail_flag: &mail_flag,
                 barrier: &barrier,
                 next_counts: &next_counts,
-                min_dues: &min_dues,
-                advanced: &advanced,
+                wheel_dues: &wheel_dues,
                 cmd: &cmd,
                 cmd_arg: &cmd_arg,
                 nshards,
@@ -727,9 +867,13 @@ impl<A: Application> Chip<A> {
         let final_arg = cmd_arg.load(Ordering::Relaxed);
         self.now = final_arg;
         if final_cmd == CMD_ABORT {
-            // Preserve pending marks so chip state stays inspectable.
+            // Preserve pending marks and parked wheel entries so chip
+            // state stays inspectable.
             for o in &mut outs {
                 self.serial.next.append(&mut o.leftover);
+                for (due, c) in o.parked.drain(..) {
+                    self.serial.wheel.schedule(due, c);
+                }
             }
             anyhow::bail!(
                 "exceeded max_cycles={} (livelock or undersized budget)",
@@ -738,12 +882,16 @@ impl<A: Application> Chip<A> {
         }
         if final_cmd == CMD_YIELD {
             // Adaptive fallback: hand pending marks (stamped for cycle
-            // `now + 1`, exactly what the serial scheduler expects) back
-            // to the serial engine. Shard order keeps the hand-off
-            // deterministic; mark order is unobservable anyway (see the
-            // determinism argument in the module docs).
+            // `now + 1`, exactly what the serial scheduler expects) and
+            // parked wheel entries back to the serial engine. Shard order
+            // keeps the hand-off deterministic; mark order is
+            // unobservable anyway (see the determinism argument in the
+            // module docs).
             for o in &mut outs {
                 self.serial.next.append(&mut o.leftover);
+                for (due, c) in o.parked.drain(..) {
+                    self.serial.wheel.schedule(due, c);
+                }
             }
             return Ok(false);
         }
@@ -815,7 +963,6 @@ impl<'a, A: Application> Lane<'a, A> {
         if !self.cells[i].has_flits() {
             return;
         }
-        self.st.advanced = true;
         let num_vcs = self.cfg.num_vcs;
         let mut popped_ports: u8 = 0; // one pop per input port per cycle
         // Deliveries: head flits addressed to this cell drain into the
@@ -946,23 +1093,42 @@ impl<'a, A: Application> Lane<'a, A> {
 
     fn compute_cell(&mut self, c: CellId) {
         let now = self.now;
-        let epoch = now + 1;
         let i = self.idx(c);
         if self.cells[i].busy_until > now {
-            self.st.min_due = self.st.min_due.min(self.cells[i].busy_until);
-            let cell = &mut self.cells[i];
-            Self::mark(&mut self.st.next, cell, c, epoch);
+            // Re-activated while busy (usually a flit arrival); the
+            // compute side stays parked until the timer expires.
+            self.park_or_mark(c);
             return;
         }
         if !self.cells[i].action_q.is_empty() {
-            self.st.advanced = true;
             self.execute_action(c);
         } else if !self.cells[i].diffuse_q.is_empty() {
-            self.st.advanced = true;
             self.progress_diffusion(c);
         }
+        self.park_or_mark(c);
+    }
+
+    /// Schedule the cell's next compute visit. A cell busy past the next
+    /// cycle parks in the timing wheel and is woken exactly at its expiry
+    /// (queued work cannot run before then anyway); everything else with
+    /// pending work is marked for the next cycle as usual. Only the
+    /// compute side sleeps: a parked cell that still holds flits keeps
+    /// its routing marks.
+    fn park_or_mark(&mut self, c: CellId) {
+        let now = self.now;
+        let epoch = now + 1;
+        let i = self.idx(c);
         let cell = &mut self.cells[i];
-        if cell.pending(now) {
+        if cell.busy_until > now + 1 {
+            if !cell.wheel_armed {
+                cell.wheel_armed = true;
+                self.st.wheel.schedule(cell.busy_until, c);
+                self.metrics.wheel_wakeups += 1;
+            }
+            if cell.has_flits() {
+                Self::mark(&mut self.st.next, cell, c, epoch);
+            }
+        } else if cell.pending(now) {
             Self::mark(&mut self.st.next, cell, c, epoch);
         }
     }

@@ -64,6 +64,15 @@ pub struct ChipConfig {
     pub alloc: AllocPolicy,
     /// Host-side vs message-driven graph construction (see [`BuildMode`]).
     pub build_mode: BuildMode,
+    /// Streaming-mutation wave cap: how many structurally independent edge
+    /// inserts `rpvo::mutate::apply_batch` may settle in one chip run
+    /// (followed by one batched repair run). `0` = auto — waves as long as
+    /// the independence planner allows; `1` = per-edge application, the
+    /// sequential baseline the determinism suite pins batched results
+    /// against. Results are identical for every setting (while no cell
+    /// arena is at `cell_mem_objects` capacity — see `rpvo::mutate`);
+    /// this only trades streaming throughput.
+    pub ingest_wave: usize,
     /// Object-arena capacity per cell, in vertex objects. Models the small
     /// per-CC SRAM; allocation spills to neighbouring cells when full.
     pub cell_mem_objects: usize,
@@ -97,6 +106,7 @@ impl ChipConfig {
             rpvo_max: 1,
             alloc: AllocPolicy::Mixed,
             build_mode: BuildMode::Host,
+            ingest_wave: 0,
             cell_mem_objects: 8192,
             seed: 0x5EED,
             max_cycles: 200_000_000,

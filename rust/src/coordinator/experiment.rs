@@ -66,8 +66,11 @@ pub struct Experiment {
     /// graphs, invaluable everywhere else).
     pub verify: bool,
     /// Streaming-mutation scenario (§7): after the initial solve, insert
-    /// this many random edges through the live chip, interleaving each
-    /// with the app's incremental repair (BFS/SSSP/CC) or a live-graph
+    /// this many random edges through the live chip in waves of
+    /// structurally independent edges (`cfg.ingest_wave` caps the wave
+    /// length; 0 = auto, 1 = per-edge — results are identical either
+    /// way), interleaving each wave with the app's batched incremental
+    /// repairs (BFS/SSSP/CC) or following the stream with a live-graph
     /// recompute (PageRank). Verification then runs against the mutated
     /// reference graph. 0 = static run.
     pub mutations: u32,

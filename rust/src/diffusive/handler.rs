@@ -87,6 +87,18 @@ pub trait Application: Send + Sync + 'static {
     /// means the insert cannot change any result (e.g. the source is
     /// unreached) and no ripple is needed. Only consulted when
     /// [`Application::can_repair`] is `true`.
+    ///
+    /// **Wave-safety contract.** The ingest subsystem batches independent
+    /// inserts into waves (`rpvo::mutate::apply_batch`): the repairs of a
+    /// whole wave are germinated together and rippled in one run, so
+    /// `src_state` may be staler than a strictly per-edge schedule would
+    /// read, and `None` may be returned for a source another wave-mate's
+    /// ripple is about to reach. Both are safe exactly when the repair is
+    /// a *monotonic relaxation* whose fixpoint depends only on the mutated
+    /// structure — any later improvement at `u` re-diffuses through the
+    /// already-inserted edge on its own. Repairs that encode
+    /// order-dependent state must not implement this hook; use the
+    /// recompute path instead.
     fn repair(&self, _src_state: &Self::State, _weight: u32) -> Option<RepairSpec> {
         None
     }

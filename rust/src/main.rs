@@ -101,6 +101,10 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
     // Engine parallelism: 0 = auto (available cores on big chips). The
     // result is identical for every shard count; this only trades speed.
     cfg.shards = args.num("shards", 0usize)?;
+    // Mutation-stream wave cap: 0 = auto (group structurally independent
+    // inserts per chip run), 1 = per-edge. Results are identical for
+    // every setting; this only trades streaming throughput.
+    cfg.ingest_wave = args.num("ingest-wave", 0usize)?;
     Ok(cfg)
 }
 
@@ -145,6 +149,9 @@ fn real_main() -> anyhow::Result<()> {
                  \x20                             path or message-driven InsertEdge actions\n\
                  \x20 --mutations N               (run) stream N random edge inserts through\n\
                  \x20                             the live chip with incremental repair\n\
+                 \x20 --ingest-wave N             mutation-stream wave cap: how many\n\
+                 \x20                             independent inserts settle per chip run\n\
+                 \x20                             (0 = auto, 1 = per-edge; same results)\n\
                  \x20 --no-throttle               disable diffusion throttling\n\
                  \x20 --heatmap N                 sample congestion frames every N cycles\n\
                  \x20 --shards N                  engine worker threads (0 = auto; results\n\
@@ -201,7 +208,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     );
     if cfg.heatmap_every > 0 {
         if let Some(peak) = out.heatmap.frames.iter().max_by(|a, b| {
-            a.congested_fraction().partial_cmp(&b.congested_fraction()).unwrap()
+            a.congested_fraction().total_cmp(&b.congested_fraction())
         }) {
             println!(
                 "peak congestion {:.1}% at cycle {}:\n{}",

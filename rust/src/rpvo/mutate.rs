@@ -32,6 +32,27 @@
 //! counters — persists inside [`BuiltGraph`], so dynamic inserts never
 //! rebuild occupancy from the arenas (the old `rpvo::dynamic` path was
 //! O(cells) per insert).
+//!
+//! # Wave-batched streaming mutation
+//!
+//! [`apply_batch`] no longer runs the chip to quiescence per inserted
+//! edge. A [`MutationBatch`] is split into contiguous *waves* of
+//! structurally independent edges: two edges conflict only when they land
+//! in the same **source member tree** — predicted exactly from the
+//! persisted [`Ingest`] balance counters, since member selection is the
+//! deterministic round-robin those counters drive. Edges of different
+//! members of one rhizome mutate disjoint RPVOs, so a skewed hub streams
+//! `rhizome_width` inserts per wave. Per wave, every `InsertEdge` /
+//! `MetaBump` germinates together and the chip runs **once**; then every
+//! repair ripple for the wave germinates together and the chip runs once
+//! more. Waves preserve batch order, so each member tree receives its
+//! edges in exactly the per-edge sequence — structure and results are
+//! bit-identical to sequential application (`ChipConfig::ingest_wave = 1`),
+//! which the determinism suite pins at 1/2/4 shards. Repair operands may
+//! be one wave staler than the sequential schedule would read; that is
+//! safe because repairs are monotonic-relaxation germinates whose
+//! fixpoint depends only on the mutated structure (see
+//! [`crate::diffusive::handler::Application::repair`]).
 
 use crate::arch::addr::Address;
 use crate::arch::chip::Chip;
@@ -240,24 +261,34 @@ pub struct MutationBatch {
 }
 
 impl MutationBatch {
-    /// Exactly `count` random non-self-loop edges over `n` vertices
-    /// (weights `1..=max_w`), deterministic in `seed`; self-loop draws
-    /// are resampled. Returns an empty batch when `n < 2` (no non-loop
-    /// edge exists).
+    /// Up to `count` distinct random non-self-loop edges over `n` vertices
+    /// (weights `1..=max_w`), deterministic in `seed`; self-loop and
+    /// duplicate-pair draws are resampled. The rejection sampling is
+    /// attempt-bounded: a tiny graph that cannot supply `count` distinct
+    /// pairs returns the edges found instead of spinning forever (the
+    /// seed version looped `while edges.len() < count` unconditionally).
+    /// Returns an empty batch when `n < 2` (no non-loop edge exists).
     pub fn random(n: u32, count: u32, max_w: u32, seed: u64) -> Self {
         if n < 2 {
             return MutationBatch::default();
         }
         let mut rng = crate::util::rng::Rng::new(seed);
         let mut edges = Vec::with_capacity(count as usize);
-        while (edges.len() as u32) < count {
+        let mut seen = std::collections::HashSet::new();
+        let budget = 64 * count as u64 + 256;
+        for _ in 0..budget {
+            if edges.len() as u32 >= count {
+                break;
+            }
             let u = rng.below(n as u64) as u32;
             let v = rng.below(n as u64) as u32;
             if u == v {
                 continue;
             }
             let w = 1 + rng.below(max_w.max(1) as u64) as u32;
-            edges.push((u, v, w));
+            if seen.insert((u, v)) {
+                edges.push((u, v, w));
+            }
         }
         MutationBatch { edges }
     }
@@ -268,14 +299,61 @@ impl MutationBatch {
     }
 }
 
-/// Stream `batch` through the live chip: insert each edge (host fast
-/// path, or as `InsertEdge`/`MetaBump` actions when
-/// `cfg.build_mode == OnChip`), then germinate the app's incremental
-/// repair at the member the edge points to and run the ripple to
-/// quiescence (§7 mutate-then-recompute). Returns `false` when the app
-/// has no incremental repair (PageRank): the structure is mutated and
-/// metadata is consistent, but the caller must recompute on the live
-/// graph afterwards (`apps::driver::recompute_pagerank`).
+/// Plan the next ingest wave: the longest contiguous run of
+/// `batch.edges[start..]` (capped at `cap` when non-zero) in which no two
+/// edges land in the same source member tree. The member each edge will
+/// select is predicted exactly from the persisted [`Ingest`] out-edge
+/// counters (selection is their deterministic round-robin), so edges
+/// fanning out of one skewed hub still batch `rhizome_width`-wide. Waves
+/// are contiguous — never reordered — so every member tree receives its
+/// edges in the sequential per-edge order and the resulting structure is
+/// bit-identical to `ingest_wave = 1` application.
+///
+/// Boundary: structural identity is guaranteed while no cell arena is at
+/// `cell_mem_objects` capacity. In the overflow pressure-valve regime two
+/// wave-mates' disjoint tree walks can race for the last arena slot of a
+/// shared cell, where per-edge application would give it to the earlier
+/// edge — the engine stays deterministic per wave setting (the
+/// determinism suite still pins 1/2/4 shards), but ghost placement may
+/// then differ between wave settings. Arenas that full already make the
+/// host path error out, so streaming that regime is out of contract.
+fn wave_end(built: &BuiltGraph, batch: &MutationBatch, start: usize, cap: usize) -> usize {
+    let n = batch.edges.len();
+    if cap == 1 {
+        return (start + 1).min(n);
+    }
+    let mut used: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
+    let mut planned: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut end = start;
+    while end < n && (cap == 0 || end - start < cap) {
+        let (u, _, _) = batch.edges[end];
+        if (u as usize) >= built.roots.len() {
+            break; // out-of-range source: surface the insert error itself
+        }
+        let width = built.roots[u as usize].len() as u32;
+        let ahead = planned.entry(u).or_insert(0);
+        let member = (built.ingest.out_seq[u as usize] + *ahead) % width;
+        if !used.insert((u, member)) {
+            break; // same source member tree twice: next wave
+        }
+        *ahead += 1;
+        end += 1;
+    }
+    end.max((start + 1).min(n))
+}
+
+/// Stream `batch` through the live chip in waves of structurally
+/// independent edges (see the module docs and [`wave_end`]): per wave,
+/// insert every edge (host fast path, or as `InsertEdge`/`MetaBump`
+/// actions when `cfg.build_mode == OnChip`, settled in **one** chip run),
+/// then germinate the app's incremental repair for every wave edge at the
+/// member it points to and run the ripple to quiescence once (§7
+/// mutate-then-recompute). `cfg.ingest_wave` caps the wave length (0 =
+/// auto, 1 = the sequential per-edge baseline); results are identical for
+/// every setting. Returns `false` when the app has no incremental repair
+/// (PageRank): the structure is mutated and metadata is consistent, but
+/// the caller must recompute on the live graph afterwards
+/// (`apps::driver::recompute_pagerank`).
 pub fn apply_batch<A: Application>(
     chip: &mut Chip<A>,
     built: &mut BuiltGraph,
@@ -283,28 +361,47 @@ pub fn apply_batch<A: Application>(
 ) -> anyhow::Result<bool> {
     let repairable = chip.app.can_repair();
     let on_chip = chip.cfg.build_mode == BuildMode::OnChip;
-    for &(u, v, w) in &batch.edges {
-        let to = if on_chip {
-            let to = germinate_insert(chip, built, u, v, w, true)?;
-            chip.run()?; // the mutation settles before the repair reads state
-            to
-        } else {
-            insert_edge(chip, built, u, v, w, true)?.to
-        };
+    let cap = chip.cfg.ingest_wave;
+    let mut repair_targets: Vec<Address> = Vec::new();
+    let mut start = 0usize;
+    while start < batch.edges.len() {
+        let end = wave_end(built, batch, start, cap);
+        chip.metrics.ingest_waves += 1;
+        // (1) structural mutation: the whole wave settles in one run.
+        repair_targets.clear();
+        for &(u, v, w) in &batch.edges[start..end] {
+            let to = if on_chip {
+                germinate_insert(chip, built, u, v, w, true)?
+            } else {
+                insert_edge(chip, built, u, v, w, true)?.to
+            };
+            repair_targets.push(to);
+        }
+        if on_chip {
+            chip.run()?; // the mutations settle before the repairs read state
+        }
+        // (2) repair ripples: germinated together, rippled in one run.
+        // `None` = that insert cannot change any result (unreached
+        // source); the structure is mutated, nothing to ripple.
         if repairable {
-            let src_state = chip.object(built.addr_of(u)).state.clone();
-            // `None` = the insert cannot change any result (unreached
-            // source); the structure is mutated, nothing to ripple.
-            if let Some(spec) = chip.app.repair(&src_state, w) {
-                chip.germinate(to, ActionKind::App, spec.payload, spec.aux);
+            let mut germinated = false;
+            for (&(u, _, w), &to) in batch.edges[start..end].iter().zip(&repair_targets) {
+                let src_state = chip.object(built.addr_of(u)).state.clone();
+                if let Some(spec) = chip.app.repair(&src_state, w) {
+                    chip.germinate(to, ActionKind::App, spec.payload, spec.aux);
+                    germinated = true;
+                }
+            }
+            if germinated {
                 chip.run()?;
             }
         }
+        start = end;
     }
     if on_chip {
         // One occupancy/object-count resync for the whole batch: nothing
         // inside the loop reads either (selection uses the persisted
-        // counters; repair reads vertex state), so per-edge O(cells)
+        // counters; repair reads vertex state), so per-wave O(cells)
         // sweeps would be pure waste.
         built.ingest.resync(chip);
         built.objects = total_objects(chip);
@@ -400,6 +497,107 @@ mod tests {
         assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
         let levels = crate::apps::driver::bfs_levels(&chip, &built);
         assert_eq!(levels, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn random_batch_terminates_on_tiny_graphs() {
+        // Regression: rejection sampling used to loop forever once `count`
+        // exceeded the number of distinct non-loop pairs. A 2-vertex graph
+        // has exactly two: (0, 1) and (1, 0).
+        let b = MutationBatch::random(2, 100, 4, 0x7E57);
+        assert_eq!(b.edges.len(), 2, "only two distinct non-loop pairs exist");
+        let mut pairs: Vec<(u32, u32)> = b.edges.iter().map(|&(u, v, _)| (u, v)).collect();
+        pairs.sort_unstable();
+        assert_eq!(pairs, vec![(0, 1), (1, 0)]);
+        assert!(b.edges.iter().all(|&(u, v, w)| u != v && w >= 1 && w <= 4));
+        assert!(MutationBatch::random(1, 10, 1, 1).edges.is_empty(), "no non-loop edge");
+        assert!(MutationBatch::random(0, 10, 1, 1).edges.is_empty());
+        // Ample supply still yields exactly `count` distinct edges.
+        let big = MutationBatch::random(1000, 64, 3, 9);
+        assert_eq!(big.edges.len(), 64);
+    }
+
+    #[test]
+    fn wave_planner_splits_on_shared_source_member() {
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.rpvo_max = 4;
+        cfg.local_edgelist_size = 2;
+        let mut chip = Chip::new(cfg, Bfs).unwrap();
+        let built = crate::rpvo::builder::build(&mut chip, &g).unwrap();
+        let hub_width = built.roots[0].len();
+        assert!(hub_width > 1, "hub must be rhizomatic");
+        // Distinct plain sources: one wave covers everything.
+        let indep = MutationBatch { edges: vec![(10, 20, 1), (11, 21, 1), (12, 22, 1)] };
+        assert_eq!(wave_end(&built, &indep, 0, 0), 3);
+        // A plain (width-1) source repeated: the wave breaks at the repeat.
+        let rep = MutationBatch { edges: vec![(10, 20, 1), (10, 21, 1), (11, 22, 1)] };
+        assert_eq!(wave_end(&built, &rep, 0, 0), 1, "repeat of a width-1 source splits");
+        assert_eq!(wave_end(&built, &rep, 1, 0), 3, "the remainder is conflict-free");
+        // A rhizomatic hub round-robins its members: width edges fit one
+        // wave, the wrap-around lands in the next.
+        let hub = MutationBatch { edges: (0..8).map(|k| (0, 20 + k, 1)).collect() };
+        assert_eq!(wave_end(&built, &hub, 0, 0), hub_width);
+        // An explicit cap truncates, and cap = 1 is per-edge mode.
+        assert_eq!(wave_end(&built, &indep, 0, 2), 2);
+        assert_eq!(wave_end(&built, &indep, 0, 1), 1);
+    }
+
+    #[test]
+    fn batched_waves_match_sequential_application() {
+        // The tentpole contract: `ingest_wave` auto vs 1 give the same
+        // structure (edge multiset) and the same results, on both ingest
+        // paths, while auto actually batches.
+        for mode in [BuildMode::Host, BuildMode::OnChip] {
+            let g = skewed_graph();
+            let batch = MutationBatch::random(g.n, 32, 1, 0xBA7C4);
+            let run = |wave: usize| {
+                let mut cfg = ChipConfig::torus(8);
+                cfg.build_mode = mode;
+                cfg.ingest_wave = wave;
+                let (mut chip, mut built) =
+                    crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+                apply_batch(&mut chip, &mut built, &batch).unwrap();
+                let levels = crate::apps::driver::bfs_levels(&chip, &built);
+                (edge_multiset(&chip), levels, chip.metrics.ingest_waves)
+            };
+            let (seq_edges, seq_levels, seq_waves) = run(1);
+            let (bat_edges, bat_levels, bat_waves) = run(0);
+            assert_eq!(seq_edges, bat_edges, "{mode:?}: structure diverged");
+            assert_eq!(seq_levels, bat_levels, "{mode:?}: results diverged");
+            assert_eq!(seq_waves as usize, batch.edges.len(), "wave=1 is per-edge");
+            assert!(bat_waves < seq_waves, "{mode:?}: auto mode must batch waves");
+        }
+    }
+
+    #[test]
+    fn objects_and_occupancy_pinned_after_batch_on_both_paths() {
+        // Audit for the host fast path (and the on-chip resync): after a
+        // mutation batch, the incrementally-maintained `built.objects` and
+        // allocator occupancy must equal a full recount of the live
+        // arenas, so the two ingest paths cannot drift apart.
+        for mode in [BuildMode::Host, BuildMode::OnChip] {
+            let g = skewed_graph();
+            let mut cfg = ChipConfig::torus(8);
+            cfg.local_edgelist_size = 2; // force ghost growth mid-stream
+            cfg.rpvo_max = 4;
+            cfg.build_mode = mode;
+            let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+            let batch = MutationBatch::random(g.n, 40, 1, 0xA11CE);
+            apply_batch(&mut chip, &mut built, &batch).unwrap();
+            assert_eq!(
+                built.objects,
+                total_objects(&chip),
+                "{mode:?}: built.objects drifted from the live arenas"
+            );
+            for (ci, cell) in chip.cells.iter().enumerate() {
+                assert_eq!(
+                    built.ingest.alloc.counts[ci],
+                    cell.objects.len() as u32,
+                    "{mode:?}: occupancy drifted at cell {ci}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -38,6 +38,15 @@ pub struct Metrics {
     /// child to relay into (the on-chip ingest pressure valve; the host
     /// allocator errors in the same situation).
     pub sram_overflows: u64,
+    /// Ingest waves executed by `rpvo::mutate::apply_batch`: groups of
+    /// structurally independent edge inserts settled in one chip run
+    /// (per-edge application reports one wave per edge).
+    pub ingest_waves: u64,
+    // -- scheduling --------------------------------------------------------
+    /// Cells parked in the engine timing wheel: a multi-cycle-busy cell is
+    /// scheduled to wake exactly at its busy-timer expiry instead of being
+    /// re-marked active every cycle (each park is one deferred wakeup).
+    pub wheel_wakeups: u64,
     // -- diffusions ------------------------------------------------------
     /// Diffuse closures enqueued.
     pub diffusions_created: u64,
@@ -125,6 +134,8 @@ impl Metrics {
         self.edges_inserted += o.edges_inserted;
         self.meta_bumps += o.meta_bumps;
         self.sram_overflows += o.sram_overflows;
+        self.ingest_waves += o.ingest_waves;
+        self.wheel_wakeups += o.wheel_wakeups;
         self.diffusions_created += o.diffusions_created;
         self.diffusions_executed += o.diffusions_executed;
         self.diffusions_pruned += o.diffusions_pruned;

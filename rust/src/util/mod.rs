@@ -23,11 +23,19 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len().max(1) as f64).sqrt()
 }
 
-/// p-th percentile (nearest-rank) of an unsorted slice.
+/// p-th percentile (nearest-rank) of an unsorted slice. NaN samples sort
+/// after every real number — regardless of their sign bit, which
+/// `f64::total_cmp` alone would order before `-inf` — instead of
+/// panicking, so a corrupt sample degrades the tail percentiles only.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => a.total_cmp(b),
+    });
     let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize - 1;
     v[rank.min(v.len() - 1)]
 }
@@ -54,5 +62,21 @@ mod tests {
         assert_eq!(percentile(&v, 99.0), 99.0);
         assert_eq!(percentile(&v, 50.0), 50.0);
         assert_eq!(percentile(&v, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: `partial_cmp(..).unwrap()` used to panic here. NaNs
+        // of either sign now sort past +inf (total_cmp alone would put a
+        // negative-sign NaN — what 0.0/0.0 produces on x86-64 — before
+        // -inf), so low/mid percentiles stay exact and only the top ranks
+        // degrade to NaN.
+        let v = vec![3.0, f64::NAN, 1.0, -f64::NAN, 2.0];
+        assert_eq!(percentile(&v, 20.0), 1.0);
+        assert_eq!(percentile(&v, 40.0), 2.0);
+        assert_eq!(percentile(&v, 60.0), 3.0);
+        assert!(percentile(&v, 80.0).is_nan());
+        assert!(percentile(&v, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 }

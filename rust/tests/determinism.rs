@@ -15,6 +15,14 @@
 //! recompute) must stay whole-`Metrics`-equal across shard counts, and
 //! the repaired results must equal a from-scratch recompute on the
 //! mutated graph for BFS, SSSP, and PageRank.
+//!
+//! The wave suite (`batched_ingest_*`) extends it to wave batching
+//! (`ChipConfig::ingest_wave`): for each app, streaming the same batch
+//! per-edge (`ingest_wave = 1`) and auto-batched (`ingest_wave = 0`)
+//! must give whole-`Metrics` equality across 1/2/4 shards *within* each
+//! wave mode, and bit-identical per-vertex results *between* the modes
+//! (for PageRank: bit-identical scores after `recompute_pagerank`, which
+//! pins that batching produced an identical on-chip structure).
 
 use amcca::apps::driver;
 use amcca::arch::config::ChipConfig;
@@ -170,6 +178,164 @@ fn mutations_then_recompute_identical_across_shard_counts_pagerank() {
             Some((m, s)) => {
                 assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
                 assert_eq!(s, &scores, "scores diverged bitwise at shards={shards}");
+            }
+        }
+    }
+}
+
+fn wave_cfg(shards: usize, wave: usize, on_chip: bool) -> ChipConfig {
+    let mut c = cfg(shards);
+    c.ingest_wave = wave;
+    if on_chip {
+        c.build_mode = amcca::arch::config::BuildMode::OnChip;
+    }
+    c
+}
+
+#[test]
+fn batched_ingest_equals_sequential_bfs_onchip() {
+    // The on-chip ingest path with wave batching: inserts of a wave settle
+    // in one run, repairs ripple in one run. Metrics must be shard
+    // invariant within each wave mode; levels must be bit-identical
+    // between per-edge and auto-batched application.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let batch = MutationBatch::random(g.n, 24, 1, 0x3A7E);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut across_modes: Option<Vec<u32>> = None;
+    for wave in [1usize, 0] {
+        let mut reference: Option<(Metrics, Vec<u32>)> = None;
+        for shards in SHARD_COUNTS {
+            let (mut chip, mut built) =
+                driver::run_bfs(wave_cfg(shards, wave, true), &g, 0).unwrap();
+            assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+            let levels = driver::bfs_levels(&chip, &built);
+            assert_eq!(
+                driver::verify_bfs(&gm, 0, &levels),
+                0,
+                "wave={wave} shards={shards}: repair != from-scratch recompute"
+            );
+            match &reference {
+                None => reference = Some((chip.metrics.clone(), levels.clone())),
+                Some((m, l)) => {
+                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
+                    assert_eq!(l, &levels, "levels diverged wave={wave} shards={shards}");
+                }
+            }
+            match &across_modes {
+                None => across_modes = Some(levels),
+                Some(l) => {
+                    assert_eq!(l, &levels, "batched != sequential at shards={shards}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_ingest_equals_sequential_sssp() {
+    let mut g = Dataset::R18.build(Scale::Tiny);
+    g.randomize_weights(32, 11);
+    let batch = MutationBatch::random(g.n, 24, 16, 0x5EA7);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut across_modes: Option<Vec<u32>> = None;
+    for wave in [1usize, 0] {
+        let mut reference: Option<(Metrics, Vec<u32>)> = None;
+        for shards in SHARD_COUNTS {
+            let (mut chip, mut built) =
+                driver::run_sssp(wave_cfg(shards, wave, false), &g, 3).unwrap();
+            assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+            let dists = driver::sssp_dists(&chip, &built);
+            assert_eq!(
+                driver::verify_sssp(&gm, 3, &dists),
+                0,
+                "wave={wave} shards={shards}: repair != from-scratch recompute"
+            );
+            match &reference {
+                None => reference = Some((chip.metrics.clone(), dists.clone())),
+                Some((m, d)) => {
+                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
+                    assert_eq!(d, &dists, "distances diverged wave={wave} shards={shards}");
+                }
+            }
+            match &across_modes {
+                None => across_modes = Some(dists),
+                Some(d) => {
+                    assert_eq!(d, &dists, "batched != sequential at shards={shards}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_ingest_equals_sequential_cc() {
+    let g = Dataset::R22.build(Scale::Tiny);
+    let batch = MutationBatch::random(g.n, 20, 1, 0xCC17);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let want = amcca::apps::cc::reference_labels(&gm);
+    let mut across_modes: Option<Vec<u32>> = None;
+    for wave in [1usize, 0] {
+        let mut reference: Option<(Metrics, Vec<u32>)> = None;
+        for shards in SHARD_COUNTS {
+            let (mut chip, mut built) =
+                driver::run_cc(wave_cfg(shards, wave, false), &g).unwrap();
+            assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+            let labels = driver::cc_labels(&chip, &built);
+            assert_eq!(labels, want, "wave={wave} shards={shards}: wrong components");
+            match &reference {
+                None => reference = Some((chip.metrics.clone(), labels.clone())),
+                Some((m, l)) => {
+                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
+                    assert_eq!(l, &labels, "labels diverged wave={wave} shards={shards}");
+                }
+            }
+            match &across_modes {
+                None => across_modes = Some(labels),
+                Some(l) => {
+                    assert_eq!(l, &labels, "batched != sequential at shards={shards}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_ingest_equals_sequential_pagerank_after_recompute() {
+    // PageRank pins the *structure*: scores after a live-graph recompute
+    // are a function of the exact on-chip placement and edge order, so
+    // bitwise-equal f32 scores between wave modes prove wave batching
+    // produced a bit-identical mutated graph.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let batch = MutationBatch::random(g.n, 10, 1, 0x9A9E);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut across_modes: Option<Vec<f32>> = None;
+    for wave in [1usize, 0] {
+        let mut reference: Option<(Metrics, Vec<f32>)> = None;
+        for shards in SHARD_COUNTS {
+            let (mut chip, mut built) =
+                driver::run_pagerank(wave_cfg(shards, wave, true), &g, 4).unwrap();
+            let repaired = driver::apply_mutations(&mut chip, &mut built, &batch).unwrap();
+            assert!(!repaired, "PageRank must fall back to live-graph recompute");
+            driver::recompute_pagerank(&mut chip, &built).unwrap();
+            let scores = driver::pagerank_scores(&chip, &built);
+            let (bad, max_rel) = driver::verify_pagerank(&gm, 4, &scores);
+            assert_eq!(bad, 0, "wave={wave} shards={shards}: diverged (max_rel={max_rel})");
+            match &reference {
+                None => reference = Some((chip.metrics.clone(), scores.clone())),
+                Some((m, s)) => {
+                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
+                    assert_eq!(s, &scores, "scores diverged bitwise wave={wave} shards={shards}");
+                }
+            }
+            match &across_modes {
+                None => across_modes = Some(scores),
+                Some(s) => {
+                    assert_eq!(s, &scores, "batched != sequential at shards={shards}");
+                }
             }
         }
     }
