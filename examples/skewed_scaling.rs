@@ -8,7 +8,7 @@
 //!     cargo run --release --example skewed_scaling
 
 use amcca::arch::config::ChipConfig;
-use amcca::coordinator::campaign::{default_threads, run_all, Job};
+use amcca::coordinator::campaign::{default_budget, run_all, Job};
 use amcca::coordinator::experiment::{AppKind, Experiment};
 use amcca::coordinator::report::Table;
 use amcca::graph::datasets::{Dataset, Scale};
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
             jobs.push(Job { label: format!("{dim}x{dim}/rpvo{rpvo}"), exp, graph: g.clone() });
         }
     }
-    let results = run_all(jobs, default_threads());
+    let results = run_all(jobs, default_budget());
 
     let mut t = Table::new(&["chip", "rpvo_max", "cycles", "speedup_vs_plain", "stalls", "msgs"]);
     let mut plain_cycles = 0u64;

@@ -16,7 +16,7 @@
 //!      AMCCA_BENCH_DIMS=8,16,32 to override chip sizes.
 
 use amcca::arch::config::{AllocPolicy, ChipConfig};
-use amcca::coordinator::campaign::{default_threads, run_all, Job};
+use amcca::coordinator::campaign::{default_budget, run_all, Job};
 use amcca::coordinator::experiment::{AppKind, Experiment, Outcome};
 use amcca::coordinator::report::{f2, pct, Table};
 use amcca::energy::model::{account, EnergyParams};
@@ -42,21 +42,11 @@ fn dims() -> Vec<u32> {
 }
 
 
-/// Campaign configs pin `shards = 1`: the campaign runner already
-/// parallelizes across configurations, so nesting engine workers inside
-/// each job would oversubscribe the machine. Engine results are identical
-/// either way (determinism across shard counts).
-fn torus_1shard(dim: u32) -> ChipConfig {
-    let mut cfg = ChipConfig::torus(dim);
-    cfg.shards = 1;
-    cfg
-}
-
-fn mesh_1shard(dim: u32) -> ChipConfig {
-    let mut cfg = ChipConfig::mesh(dim);
-    cfg.shards = 1;
-    cfg
-}
+// Campaign configs leave `cfg.shards = 0` (auto): `run_all` splits the
+// global thread budget between sweep workers and per-job engine shards
+// (`coordinator::campaign::plan_budget`), so an explicit `--shards`-style
+// pin is respected and everything else shares one thread pool. Engine
+// results are identical for every shard count and banding axis.
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
@@ -142,7 +132,7 @@ fn fig5() -> anyhow::Result<()> {
     let dim = *dims().last().unwrap_or(&32);
     let mut t = Table::new(&["throttle", "cycles", "peak_congested", "mean_congested", "stalls"]);
     for throttle in [false, true] {
-        let mut cfg = torus_1shard(dim);
+        let mut cfg = ChipConfig::torus(dim);
         cfg.throttling = throttle;
         cfg.heatmap_every = 64;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);
@@ -184,14 +174,14 @@ fn fig6() -> anyhow::Result<()> {
     for ds in ALL {
         let g = Arc::new(ds.build(scale()));
         for dim in dims() {
-            let mut cfg = torus_1shard(dim);
+            let mut cfg = ChipConfig::torus(dim);
             cfg.rpvo_max = 16;
             let mut exp = Experiment::new(AppKind::Bfs, cfg);
             exp.verify = false;
             jobs.push(Job { label: format!("{}/{dim}", ds.name()), exp, graph: g.clone() });
         }
     }
-    let results = run_all(jobs, default_threads());
+    let results = run_all(jobs, default_budget());
     let mut t =
         Table::new(&["dataset", "chip", "work%", "overlap%", "pruned%", "actions", "diffusions"]);
     for (label, out) in &results {
@@ -229,7 +219,7 @@ fn fig7() -> anyhow::Result<()> {
                     if rh && !SKEWED_SET.contains(ds) {
                         continue; // paper only deploys rhizomes on WK/R22
                     }
-                    let mut cfg = torus_1shard(dim);
+                    let mut cfg = ChipConfig::torus(dim);
                     cfg.rpvo_max = if rh { 16 } else { 1 };
                     let mut exp = Experiment::new(app, cfg);
                     exp.pr_iters = 5;
@@ -244,7 +234,7 @@ fn fig7() -> anyhow::Result<()> {
             }
         }
     }
-    let results = run_all(jobs, default_threads());
+    let results = run_all(jobs, default_budget());
     let mut t = Table::new(&["app", "dataset", "chip", "cycles", "scaling_vs_first"]);
     let mut first: std::collections::HashMap<String, u64> = std::collections::HashMap::new();
     for (label, out) in &results {
@@ -281,7 +271,7 @@ fn fig8() -> anyhow::Result<()> {
         let g = Arc::new(ds.build(scale()));
         for &dim in &fig_dims {
             for rpvo in rpvos {
-                let mut cfg = torus_1shard(dim);
+                let mut cfg = ChipConfig::torus(dim);
                 cfg.rpvo_max = rpvo;
                 let mut exp = Experiment::new(AppKind::Bfs, cfg);
                 exp.trials = 2;
@@ -294,7 +284,7 @@ fn fig8() -> anyhow::Result<()> {
             }
         }
     }
-    let results = run_all(jobs, default_threads());
+    let results = run_all(jobs, default_budget());
     let mut t = Table::new(&["dataset", "chip", "rpvo_max", "cycles", "speedup"]);
     let mut base: std::collections::HashMap<String, u64> = std::collections::HashMap::new();
     for (label, out) in &results {
@@ -331,7 +321,7 @@ fn fig9() -> anyhow::Result<()> {
     let dim = *dims().last().unwrap_or(&32);
     let mut rows = Table::new(&["rpvo_max", "channel", "max_stalls", "tail_mass", "total_stalls"]);
     for rpvo in [1u32, 16] {
-        let mut cfg = torus_1shard(dim);
+        let mut cfg = ChipConfig::torus(dim);
         cfg.rpvo_max = rpvo;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);
         exp.verify = false;
@@ -369,9 +359,9 @@ fn fig10() -> anyhow::Result<()> {
         for dim in dims() {
             for topo in ["mesh", "torus"] {
                 let cfg = if topo == "mesh" {
-                    mesh_1shard(dim)
+                    ChipConfig::mesh(dim)
                 } else {
-                    torus_1shard(dim)
+                    ChipConfig::torus(dim)
                 };
                 let mut exp = Experiment::new(AppKind::Bfs, cfg);
                 exp.verify = false;
@@ -383,7 +373,7 @@ fn fig10() -> anyhow::Result<()> {
             }
         }
     }
-    let results = run_all(jobs, default_threads());
+    let results = run_all(jobs, default_budget());
     let mut t = Table::new(&["dataset", "chip", "time_reduction", "energy_increase"]);
     let params = EnergyParams::default();
     let mut time_ratios = Vec::new();
@@ -437,7 +427,7 @@ fn ablations() -> anyhow::Result<()> {
         ("random", AllocPolicy::Random),
         ("vicinity", AllocPolicy::Vicinity),
     ] {
-        let mut cfg = torus_1shard(dim);
+        let mut cfg = ChipConfig::torus(dim);
         cfg.alloc = policy;
         cfg.rpvo_max = 16;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);
@@ -446,14 +436,14 @@ fn ablations() -> anyhow::Result<()> {
     }
     // ghost chunk size
     for chunk in [4usize, 16, 64] {
-        let mut cfg = torus_1shard(dim);
+        let mut cfg = ChipConfig::torus(dim);
         cfg.local_edgelist_size = chunk;
         cfg.rpvo_max = 16;
         let mut exp = Experiment::new(AppKind::Bfs, cfg);
         exp.verify = false;
         jobs.push(Job { label: format!("chunk/{chunk}"), exp, graph: g.clone() });
     }
-    let results = run_all(jobs, default_threads());
+    let results = run_all(jobs, default_budget());
     let mut t = Table::new(&["ablation", "cycles", "msgs", "hops", "stalls"]);
     for (label, out) in &results {
         let out = out.as_ref().map_err(|e| anyhow::anyhow!("{label}: {e}"))?;

@@ -12,7 +12,7 @@
 //! both are bit-identical in results, so the ratio is pure speedup.
 
 use amcca::apps::driver;
-use amcca::arch::config::ChipConfig;
+use amcca::arch::config::{ChipConfig, ShardAxis};
 use amcca::coordinator::report::Table;
 use amcca::graph::datasets::{Dataset, Scale};
 use amcca::noc::routing::trace;
@@ -109,6 +109,51 @@ fn main() {
             ]);
             json.push((format!("{name} [shards={shards}]"), par));
         }
+    }
+
+    // --- axis-adaptive banding: rows vs cols on a Y-heavy tall grid -------
+    // A 32x128 grid puts most NoC displacement on the Y axis — the worst
+    // case for row bands (every Y hop crosses a band boundary) and the
+    // motivating case for column bands. Cycle counts are identical across
+    // axes (bit-for-bit determinism), so the Mcycles/s ratio is pure
+    // banding effect.
+    if auto > 1 {
+        let g = Dataset::R18.build(Scale::Tiny);
+        let shards = auto.min(16);
+        let mut cycles_by_axis: Vec<u64> = Vec::new();
+        for (label, axis) in [("rows", ShardAxis::Rows), ("cols", ShardAxis::Cols)] {
+            let mut cfg = ChipConfig::torus(32);
+            cfg.dim_y = 128;
+            cfg.shards = shards;
+            cfg.shard_axis = axis;
+            let mut samples = Vec::new();
+            let mut cycles = 0u64;
+            for _ in 0..3 {
+                let mut chip =
+                    amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
+                let built = amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+                chip.germinate(built.addr_of(0), amcca::noc::message::ActionKind::App, 0, 0);
+                let t0 = Instant::now();
+                chip.run().unwrap();
+                let el = t0.elapsed();
+                cycles = chip.metrics.cycles;
+                samples.push((chip.metrics.cycles as f64 / el.as_secs_f64() / 1e6, el));
+            }
+            samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let (mcps, dur) = samples[samples.len() / 2];
+            cycles_by_axis.push(cycles);
+            let name = format!("bfs R18 32x128 [{label} shards={shards}]");
+            t.row(&[
+                name.clone(),
+                format!("{dur:?}"),
+                format!("{mcps:.2} Mcycles/s ({cycles} cyc)"),
+            ]);
+            json.push((name, mcps));
+        }
+        assert_eq!(
+            cycles_by_axis[0], cycles_by_axis[1],
+            "row and column banding must be cycle-identical"
+        );
     }
 
     // --- per-cycle engine step cost on an idle-ish chip -------------------

@@ -1,0 +1,312 @@
+//! Axis-adaptive shard banding: the partition of the cell grid that the
+//! sharded engine runs on.
+//!
+//! The engine divides the chip into `nshards` contiguous *bands* of grid
+//! lines, one worker thread each. Historically the bands were always row
+//! bands; that serializes all cross-band traffic onto the Y axis, which
+//! is exactly wrong for Y-heavy workloads (tall grids, column-major
+//! rhizome spines — the irregular-load argument of iPregel-style
+//! adaptive partitioning). [`BandMap`] abstracts the axis choice:
+//!
+//! * [`ShardAxis::Rows`] — bands of contiguous rows. A band owns a
+//!   contiguous row-major range of cell ids, so a worker's local index is
+//!   `cell - base` and its cells are a contiguous memory slice.
+//! * [`ShardAxis::Cols`] — bands of contiguous columns. Cell storage
+//!   stays row-major (cell ids are architectural), so a column band owns
+//!   a *scattered* set of cells; [`BandMap`] carries the cell→local-index
+//!   table the workers use instead of a base offset.
+//! * [`ShardAxis::Auto`] — resolved before the run from the built graph's
+//!   predicted traffic split (see `rpvo::builder`): pick the axis that
+//!   moves the smaller predicted hop volume across band boundaries,
+//!   breaking ties toward the axis with more lines (more parallelism).
+//!
+//! Engine results are **bit-identical across axes** (and shard counts):
+//! the determinism argument in `arch::chip` never appeals to which shard
+//! owns a cell, only to single-writer ownership — which any partition of
+//! the grid provides. The axis-invariance suite in `tests/determinism.rs`
+//! pins that contract.
+
+use crate::arch::addr::CellId;
+
+/// Which grid axis the sharded engine bands along (`ChipConfig::shard_axis`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ShardAxis {
+    /// Contiguous row bands (cross-band traffic = North/South hops).
+    Rows,
+    /// Contiguous column bands (cross-band traffic = East/West hops).
+    Cols,
+    /// Pick per run from the built graph's predicted traffic split.
+    Auto,
+}
+
+impl ShardAxis {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardAxis::Rows => "rows",
+            ShardAxis::Cols => "cols",
+            ShardAxis::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rows" | "row" => Some(ShardAxis::Rows),
+            "cols" | "col" | "columns" => Some(ShardAxis::Cols),
+            "auto" => Some(ShardAxis::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Partition of a `dim_x × dim_y` grid into `nshards` contiguous bands of
+/// lines (rows or columns), as even as possible (band line counts differ
+/// by at most one). Shard `k` owns lines `bounds()[k] .. bounds()[k+1]`.
+///
+/// The map is the single source of truth for cell ownership in the
+/// sharded engine: seeding, outbox destination lookup, local indexing,
+/// and heat-map segment merging all go through it.
+#[derive(Clone, Debug)]
+pub struct BandMap {
+    axis: ShardAxis,
+    nshards: usize,
+    dim_x: u32,
+    dim_y: u32,
+    /// Band boundaries in lines along the axis; `nshards + 1` entries.
+    bounds: Vec<u32>,
+    /// Cell id → owning shard. Empty when `nshards == 1` (everything 0).
+    cell_shard: Vec<u16>,
+    /// Cell id → index in the owner's local cell view. Empty for `Rows`
+    /// (row bands are contiguous: local index = cell − band base) and for
+    /// the single-shard map.
+    local_of: Vec<u32>,
+}
+
+impl BandMap {
+    /// Build the partition. `axis` must be resolved (`Auto` is treated as
+    /// `Rows` defensively — callers resolve it first). `nshards` is
+    /// clamped to the number of lines so no band is empty.
+    pub fn new(axis: ShardAxis, dim_x: u32, dim_y: u32, nshards: usize) -> BandMap {
+        let cols = matches!(axis, ShardAxis::Cols);
+        let axis = if cols { ShardAxis::Cols } else { ShardAxis::Rows };
+        let lines = if cols { dim_x } else { dim_y };
+        let nshards = nshards.clamp(1, lines.max(1) as usize);
+        let bounds: Vec<u32> =
+            (0..=nshards).map(|s| (s as u32 * lines) / nshards as u32).collect();
+        let n = (dim_x * dim_y) as usize;
+        let mut cell_shard = Vec::new();
+        let mut local_of = Vec::new();
+        if nshards > 1 {
+            let mut line_shard = vec![0u16; lines as usize];
+            for s in 0..nshards {
+                for l in bounds[s]..bounds[s + 1] {
+                    line_shard[l as usize] = s as u16;
+                }
+            }
+            if cols {
+                cell_shard = Vec::with_capacity(n);
+                local_of = Vec::with_capacity(n);
+                let mut counts = vec![0u32; nshards];
+                for c in 0..n as u32 {
+                    let x = c % dim_x;
+                    let s = line_shard[x as usize];
+                    cell_shard.push(s);
+                    local_of.push(counts[s as usize]);
+                    counts[s as usize] += 1;
+                }
+            } else {
+                cell_shard =
+                    (0..n as u32).map(|c| line_shard[(c / dim_x) as usize]).collect();
+            }
+        }
+        BandMap { axis, nshards, dim_x, dim_y, bounds, cell_shard, local_of }
+    }
+
+    pub fn axis(&self) -> ShardAxis {
+        self.axis
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.nshards
+    }
+
+    /// Band boundaries in lines along the axis (`nshards + 1` entries).
+    pub fn bounds(&self) -> &[u32] {
+        &self.bounds
+    }
+
+    /// Owning shard of a cell.
+    #[inline]
+    pub fn shard_of(&self, c: CellId) -> usize {
+        if self.cell_shard.is_empty() {
+            0
+        } else {
+            self.cell_shard[c as usize] as usize
+        }
+    }
+
+    /// Local index of a cell inside its owner's view. Row bands (and the
+    /// single-shard map) are contiguous, so the index is an offset from
+    /// the band base; column bands read the precomputed table.
+    #[inline]
+    pub fn local_of(&self, c: CellId) -> usize {
+        if self.local_of.is_empty() {
+            (c - self.base_of(self.shard_of(c))) as usize
+        } else {
+            self.local_of[c as usize] as usize
+        }
+    }
+
+    /// Whether local indexing is `cell − base` (contiguous bands). The
+    /// engine hot path uses this to skip the table load.
+    #[inline]
+    pub(crate) fn contiguous(&self) -> bool {
+        self.local_of.is_empty()
+    }
+
+    #[inline]
+    pub(crate) fn local_table(&self) -> &[u32] {
+        &self.local_of
+    }
+
+    /// First cell id of band `k` (meaningful for contiguous row bands;
+    /// column bands use [`BandMap::local_of`] and return 0 here).
+    pub fn base_of(&self, k: usize) -> u32 {
+        match self.axis {
+            ShardAxis::Cols => 0,
+            _ => self.bounds[k] * self.dim_x,
+        }
+    }
+
+    /// Number of cells owned by band `k`.
+    pub fn len_of(&self, k: usize) -> u32 {
+        let lines = self.bounds[k + 1] - self.bounds[k];
+        match self.axis {
+            ShardAxis::Cols => lines * self.dim_y,
+            _ => lines * self.dim_x,
+        }
+    }
+
+    /// Visit every cell of band `k` as `(local_index, cell_id)`, in the
+    /// band's canonical local order (ascending cell id — the same order
+    /// the engine builds its per-worker cell views in).
+    pub fn for_each_cell(&self, k: usize, mut f: impl FnMut(usize, CellId)) {
+        match self.axis {
+            ShardAxis::Cols if self.nshards > 1 => {
+                let mut local = 0usize;
+                for y in 0..self.dim_y {
+                    for x in self.bounds[k]..self.bounds[k + 1] {
+                        f(local, y * self.dim_x + x);
+                        local += 1;
+                    }
+                }
+            }
+            _ => {
+                let base = self.base_of(k);
+                for i in 0..self.len_of(k) {
+                    f(i as usize, base + i);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_names_roundtrip() {
+        for a in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+            assert_eq!(ShardAxis::from_name(a.name()), Some(a));
+        }
+        assert_eq!(ShardAxis::from_name("diagonal"), None);
+    }
+
+    #[test]
+    fn single_shard_owns_everything_in_order() {
+        for axis in [ShardAxis::Rows, ShardAxis::Cols] {
+            let bm = BandMap::new(axis, 5, 3, 1);
+            let mut seen = Vec::new();
+            bm.for_each_cell(0, |local, c| {
+                assert_eq!(local as u32, c, "identity layout for one shard");
+                assert_eq!(bm.shard_of(c), 0);
+                assert_eq!(bm.local_of(c), local);
+                seen.push(c);
+            });
+            assert_eq!(seen.len(), 15);
+        }
+    }
+
+    #[test]
+    fn row_bands_are_contiguous_cell_ranges() {
+        let bm = BandMap::new(ShardAxis::Rows, 4, 6, 3);
+        assert_eq!(bm.bounds(), &[0, 2, 4, 6]);
+        for k in 0..3 {
+            let base = bm.base_of(k);
+            assert_eq!(base, k as u32 * 8);
+            assert_eq!(bm.len_of(k), 8);
+            bm.for_each_cell(k, |local, c| {
+                assert_eq!(c, base + local as u32);
+                assert_eq!(bm.shard_of(c), k);
+                assert_eq!(bm.local_of(c), local);
+            });
+        }
+    }
+
+    #[test]
+    fn col_bands_scatter_but_cover_exactly_once() {
+        let (dim_x, dim_y) = (6u32, 4u32);
+        let bm = BandMap::new(ShardAxis::Cols, dim_x, dim_y, 4);
+        let mut owner = vec![usize::MAX; (dim_x * dim_y) as usize];
+        for k in 0..4 {
+            let mut count = 0u32;
+            bm.for_each_cell(k, |local, c| {
+                assert_eq!(local as u32, count, "local order is dense");
+                assert_eq!(bm.shard_of(c), k);
+                assert_eq!(bm.local_of(c), local);
+                assert_eq!(owner[c as usize], usize::MAX, "cell covered twice");
+                owner[c as usize] = k;
+                count += 1;
+            });
+            assert_eq!(count, bm.len_of(k));
+        }
+        assert!(owner.iter().all(|&o| o != usize::MAX), "cell never covered");
+        // column ownership: cell's x coordinate decides the band
+        for c in 0..dim_x * dim_y {
+            let x = c % dim_x;
+            let want = bm
+                .bounds()
+                .windows(2)
+                .position(|w| (w[0]..w[1]).contains(&x))
+                .unwrap();
+            assert_eq!(bm.shard_of(c), want);
+        }
+    }
+
+    #[test]
+    fn band_sizes_balance_within_one_line() {
+        for axis in [ShardAxis::Rows, ShardAxis::Cols] {
+            for lines in 2..20u32 {
+                for nshards in 1..=lines.min(16) as usize {
+                    let (dx, dy) =
+                        if axis == ShardAxis::Cols { (lines, 3) } else { (3, lines) };
+                    let bm = BandMap::new(axis, dx, dy, nshards);
+                    let sizes: Vec<u32> =
+                        bm.bounds().windows(2).map(|w| w[1] - w[0]).collect();
+                    let (min, max) =
+                        (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                    assert!(max - min <= 1, "{axis:?} {lines} lines / {nshards}: {sizes:?}");
+                    assert!(*min >= 1, "empty band");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_clamps_to_lines() {
+        let bm = BandMap::new(ShardAxis::Cols, 3, 64, 16);
+        assert_eq!(bm.nshards(), 3, "at least one column per band");
+        let bm = BandMap::new(ShardAxis::Rows, 64, 2, 16);
+        assert_eq!(bm.nshards(), 2, "at least one row per band");
+    }
+}

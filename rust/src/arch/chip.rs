@@ -27,8 +27,9 @@
 //!
 //! # Sharded parallel engine
 //!
-//! `Chip::run` executes the cycle loop across `cfg.effective_shards()`
-//! worker threads while staying **bit-for-bit deterministic**: every shard
+//! `Chip::run` executes the cycle loop across
+//! `cfg.effective_shards_on(axis)` worker threads while staying
+//! **bit-for-bit deterministic**: every shard
 //! count (including 1) produces identical `Metrics`, identical per-cell
 //! state, and identical final cycle counts.
 //!
@@ -41,11 +42,20 @@
 //! are bit-identical per cycle, the switch points are unobservable in
 //! metrics or state — the determinism tests run the hybrid as-is.
 //!
-//! **Shard layout.** The grid is partitioned into contiguous *row bands*,
-//! one per worker. X-Y dimension-order routing resolves X displacement
-//! first, so East/West hops never leave a band; the only cross-shard
-//! traffic is North/South hops into the adjacent band (or the wrap band on
-//! a torus) — each shard exchanges flits with at most two neighbours.
+//! **Shard layout (axis-adaptive banding).** The grid is partitioned into
+//! contiguous bands of grid *lines* — rows or columns — one band per
+//! worker, described by a [`crate::arch::band::BandMap`].
+//! `ChipConfig::shard_axis` picks the axis: `Rows` (cross-band traffic is
+//! North/South hops), `Cols` (cross-band traffic is East/West hops), or
+//! `Auto` (resolved from the built graph's predicted per-axis traffic
+//! split — see `rpvo::builder` — so a Y-heavy workload on a tall grid
+//! bands along columns instead of funnelling every hop across row
+//! boundaries). Hops advance one cell per cycle, so under either axis a
+//! shard exchanges flits only with its two neighbouring bands (or the
+//! wrap band on a torus). Row bands own contiguous row-major cell-id
+//! ranges and run on plain grid slices; column bands own a scattered cell
+//! set and run on per-cell reference views (the [`CellArena`] abstraction
+//! — monomorphized, so the row path keeps direct slice indexing).
 //!
 //! **Determinism argument.** The serial seed engine was order-dependent in
 //! exactly one place: the live `has_space` check against a neighbour's
@@ -102,6 +112,7 @@ use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
 
 use crate::arch::addr::{Address, CellId};
+use crate::arch::band::{BandMap, ShardAxis};
 use crate::arch::cell::Cell;
 use crate::arch::config::ChipConfig;
 use crate::diffusive::action::Diffusion;
@@ -118,6 +129,32 @@ use crate::util::sync::{PoisonGuard, SpinBarrier};
 /// How many queued diffusions (behind the head) a blocked cell inspects per
 /// filter pass (§6.2 "filter passes on action queue and diffuse queue").
 const FILTER_SCAN: usize = 4;
+
+/// Resolve a configured [`ShardAxis`] to a concrete banding axis. `Auto`
+/// falls back to a grid-aspect guess: on a stretched grid most random
+/// displacement lies along the long dimension, so band along the *short*
+/// one (tall => columns, wide => rows) — unless the short dimension has
+/// fewer than [`crate::arch::config::MAX_SHARDS`] lines, in which case
+/// parallelism wins and the long axis bands instead. The builder refines
+/// this guess from the constructed graph's actual predicted traffic via
+/// [`Chip::set_band_axis`].
+fn resolve_axis(axis: ShardAxis, dim_x: u32, dim_y: u32) -> ShardAxis {
+    match axis {
+        ShardAxis::Auto => {
+            let max = crate::arch::config::MAX_SHARDS as u32;
+            if dim_y > dim_x && dim_x >= max {
+                ShardAxis::Cols
+            } else if dim_x > dim_y && dim_y >= max {
+                ShardAxis::Rows
+            } else if dim_x > dim_y {
+                ShardAxis::Cols
+            } else {
+                ShardAxis::Rows
+            }
+        }
+        a => a,
+    }
+}
 
 /// A cross-shard flit push staged during the parallel phase and applied by
 /// the destination shard at the cycle barrier.
@@ -222,9 +259,48 @@ impl TimingWheel {
     }
 }
 
+/// Uniform indexed access to one engine worker's cells. The serial
+/// engine and row-band workers own a *contiguous slice* of the row-major
+/// grid; column-band workers own a *scattered* set of per-cell mutable
+/// references (a column band is not contiguous in memory). The engine's
+/// per-cycle logic ([`Lane`]) is generic over this, so each view
+/// monomorphizes separately and the serial/row hot path keeps direct
+/// slice indexing with no extra indirection.
+trait CellArena {
+    type S;
+    fn at(&self, i: usize) -> &Cell<Self::S>;
+    fn at_mut(&mut self, i: usize) -> &mut Cell<Self::S>;
+}
+
+impl<S> CellArena for [Cell<S>] {
+    type S = S;
+    #[inline(always)]
+    fn at(&self, i: usize) -> &Cell<S> {
+        &self[i]
+    }
+    #[inline(always)]
+    fn at_mut(&mut self, i: usize) -> &mut Cell<S> {
+        &mut self[i]
+    }
+}
+
+impl<'b, S> CellArena for [&'b mut Cell<S>] {
+    type S = S;
+    #[inline(always)]
+    fn at(&self, i: usize) -> &Cell<S> {
+        &*self[i]
+    }
+    #[inline(always)]
+    fn at_mut(&mut self, i: usize) -> &mut Cell<S> {
+        &mut *self[i]
+    }
+}
+
 /// Per-shard scheduling state (the serial engine is the 1-shard instance).
 struct Shard {
-    /// First cell id owned by this shard (cells are contiguous row bands).
+    /// First cell id owned by this shard (contiguous row bands and the
+    /// serial engine; column bands index through `BandMap::local_of` and
+    /// leave this 0).
     base: u32,
     /// Cells to visit this cycle.
     active: Vec<CellId>,
@@ -254,11 +330,18 @@ impl Shard {
     /// cycle's active list (same epoch dedup as a regular mark). Called
     /// right after the active/next swap, so woken cells are visited this
     /// very cycle.
-    fn wake_due<S>(&mut self, cells: &mut [Cell<S>], now: u64) {
+    fn wake_due<V: CellArena + ?Sized>(&mut self, cells: &mut V, band: &BandMap, now: u64) {
         let base = self.base;
+        let contiguous = band.contiguous();
+        let table = band.local_table();
         let active = &mut self.active;
         self.wheel.advance(now, |c| {
-            let cell = &mut cells[(c - base) as usize];
+            let i = if contiguous {
+                (c - base) as usize
+            } else {
+                table[c as usize] as usize
+            };
+            let cell = cells.at_mut(i);
             cell.wheel_armed = false;
             if cell.active_epoch != now {
                 cell.active_epoch = now;
@@ -280,6 +363,18 @@ pub struct Chip<A: Application> {
     /// always land in `serial.next`; a sharded run distributes them to the
     /// workers on entry and returns leftovers on abort.
     serial: Shard,
+    /// Banding axis used for sharded episodes — `cfg.shard_axis` resolved
+    /// to `Rows`/`Cols`. `Auto` starts as an aspect-ratio guess here and
+    /// is refined by `rpvo::builder` from the built graph's predicted
+    /// traffic split (results are identical either way).
+    band_axis: ShardAxis,
+    /// Trivial one-shard band map backing the serial engine's `Lane`s.
+    serial_band: BandMap,
+    /// Cached sharded-episode band map: the hybrid loop enters and exits
+    /// `run_sharded` many times per run (and per streaming-ingest wave),
+    /// and the map costs O(cells) to build. Rebuilt only when the axis or
+    /// shard count changes.
+    band_cache: Option<BandMap>,
     /// Published free-slot snapshot per cell (bit `port * 8 + vc`), valid
     /// for the duration of one cycle. See the module docs.
     space: Vec<AtomicU32>,
@@ -304,6 +399,9 @@ impl<A: Application> Chip<A> {
             metrics: Metrics::default(),
             heatmap: Heatmap::default(),
             serial: Shard::new(0, n, 1),
+            band_axis: resolve_axis(cfg.shard_axis, cfg.dim_x, cfg.dim_y),
+            serial_band: BandMap::new(ShardAxis::Rows, cfg.dim_x, cfg.dim_y, 1),
+            band_cache: None,
             space: (0..n).map(|_| AtomicU32::new(free)).collect(),
             congested: (0..n).map(|_| AtomicBool::new(false)).collect(),
             terminator: Terminator::new(n),
@@ -311,6 +409,21 @@ impl<A: Application> Chip<A> {
             cells,
             cfg,
         })
+    }
+
+    /// The resolved banding axis for sharded episodes (never `Auto`).
+    pub fn band_axis(&self) -> ShardAxis {
+        self.band_axis
+    }
+
+    /// Install the banding axis for sharded episodes. `rpvo::builder`
+    /// calls this when `cfg.shard_axis == Auto`, after predicting the
+    /// built graph's per-axis traffic split; tests and tools may pin an
+    /// axis directly. An `Auto` argument falls back to the aspect-ratio
+    /// guess. Results are bit-identical for every axis — this only
+    /// affects which hops cross band boundaries.
+    pub fn set_band_axis(&mut self, axis: ShardAxis) {
+        self.band_axis = resolve_axis(axis, self.cfg.dim_x, self.cfg.dim_y);
     }
 
     /// Mark a cell for processing next cycle (dedup via epoch stamps).
@@ -377,7 +490,7 @@ impl<A: Application> Chip<A> {
         // toward this run's idle-tree latency (keeps serial stepped mode,
         // serial fast mode, and the sharded engine in exact agreement).
         self.terminator.reset();
-        let nshards = self.cfg.effective_shards();
+        let nshards = self.cfg.effective_shards_on(self.band_axis);
         // Fast-forward shortcuts are exact but skip heat-map frames, so
         // fall back to fully-stepped no-op cycles while sampling.
         let fast = self.cfg.heatmap_every == 0;
@@ -450,7 +563,7 @@ impl<A: Application> Chip<A> {
         self.now += 1;
         std::mem::swap(&mut self.serial.active, &mut self.serial.next);
         self.serial.next.clear();
-        self.serial.wake_due(&mut self.cells, self.now);
+        self.serial.wake_due(self.cells.as_mut_slice(), &self.serial_band, self.now);
         {
             let mut lane = Lane {
                 app: &self.app,
@@ -458,10 +571,11 @@ impl<A: Application> Chip<A> {
                 cfg: &self.cfg,
                 now: self.now,
                 throttle_period: self.throttle_period,
-                cells: &mut self.cells,
+                cells: self.cells.as_mut_slice(),
                 space: &self.space,
                 congested: &self.congested,
-                row_shard: &[],
+                band: &self.serial_band,
+                k: 0,
                 st: &mut self.serial,
                 metrics: &mut self.metrics,
             };
@@ -557,7 +671,8 @@ struct Ctx<'e, A: Application> {
     cfg: &'e ChipConfig,
     space: &'e [AtomicU32],
     congested: &'e [AtomicBool],
-    row_shard: &'e [u16],
+    /// Band partition of the grid (axis, ownership, local indexing).
+    band: &'e BandMap,
     /// Mailboxes indexed `dst_shard * nshards + src_shard`.
     mail: &'e [Mutex<Vec<Staged>>],
     mail_flag: &'e [AtomicBool],
@@ -589,11 +704,11 @@ struct ShardOut {
     parked: Vec<(u64, CellId)>,
 }
 
-fn shard_worker<A: Application>(
+fn shard_worker<A: Application, V: CellArena<S = A::State> + ?Sized>(
     ctx: &Ctx<'_, A>,
     k: usize,
     mut st: Shard,
-    cells: &mut [Cell<A::State>],
+    cells: &mut V,
 ) -> ShardOut {
     let _guard = PoisonGuard(ctx.barrier);
     let mut sense = false;
@@ -676,7 +791,7 @@ fn shard_worker<A: Application>(
         now += 1;
         std::mem::swap(&mut st.active, &mut st.next);
         st.next.clear();
-        st.wake_due(&mut *cells, now);
+        st.wake_due(&mut *cells, ctx.band, now);
         {
             let mut lane = Lane {
                 app: ctx.app,
@@ -687,7 +802,8 @@ fn shard_worker<A: Application>(
                 cells: &mut *cells,
                 space: ctx.space,
                 congested: ctx.congested,
-                row_shard: ctx.row_shard,
+                band: ctx.band,
+                k,
                 st: &mut st,
                 metrics: &mut metrics,
             };
@@ -716,7 +832,8 @@ fn shard_worker<A: Application>(
                 cells: &mut *cells,
                 space: ctx.space,
                 congested: ctx.congested,
-                row_shard: ctx.row_shard,
+                band: ctx.band,
+                k,
                 st: &mut st,
                 metrics: &mut metrics,
             };
@@ -742,6 +859,30 @@ fn shard_worker<A: Application>(
     }
 }
 
+/// Spawn one worker per shard (the calling thread runs shard 0, the
+/// leader) and collect their outputs in shard order. Generic over the
+/// per-worker cell view: contiguous grid slices for row bands, scattered
+/// per-cell reference views for column bands.
+fn drive<A: Application, V: CellArena<S = A::State> + ?Sized + Send>(
+    ctx: &Ctx<'_, A>,
+    mut work: Vec<(usize, Shard, &mut V)>,
+) -> Vec<ShardOut> {
+    let mut outs: Vec<ShardOut> = Vec::with_capacity(work.len());
+    let (k0, st0, sl0) = work.remove(0);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = work
+            .into_iter()
+            .map(|(k, st, sl)| scope.spawn(move || shard_worker(ctx, k, st, sl)))
+            .collect();
+        // This thread runs shard 0 (the leader).
+        outs.push(shard_worker(ctx, k0, st0, sl0));
+        for h in handles {
+            outs.push(h.join().expect("shard worker panicked"));
+        }
+    });
+    outs
+}
+
 impl<A: Application> Chip<A> {
     /// One sharded episode: runs until termination (`Ok(true)`), or —
     /// when `yield_below > 0` — until the active set shrinks under the
@@ -750,26 +891,28 @@ impl<A: Application> Chip<A> {
     fn run_sharded(&mut self, nshards: usize, yield_below: u64) -> anyhow::Result<bool> {
         let dim_x = self.cfg.dim_x;
         let dim_y = self.cfg.dim_y;
-        // Contiguous row bands, as even as possible; row -> owning shard.
-        let bounds: Vec<u32> =
-            (0..=nshards).map(|s| (s as u32 * dim_y) / nshards as u32).collect();
-        let mut row_shard = vec![0u16; dim_y as usize];
-        for s in 0..nshards {
-            for r in bounds[s]..bounds[s + 1] {
-                row_shard[r as usize] = s as u16;
-            }
+        // Contiguous bands of grid lines along the resolved axis, as even
+        // as possible; the map owns every ownership/indexing decision.
+        // Cached across episodes: the hybrid loop re-enters here often and
+        // the map is O(cells) to build.
+        let stale = self
+            .band_cache
+            .as_ref()
+            .map_or(true, |b| b.axis() != self.band_axis || b.nshards() != nshards);
+        if stale {
+            self.band_cache = Some(BandMap::new(self.band_axis, dim_x, dim_y, nshards));
         }
+        let band = self.band_cache.as_ref().expect("band cache just filled");
+        let nshards = band.nshards();
         // Seed per-shard schedulers with the host-side marks.
         let mut shards: Vec<Shard> = (0..nshards)
-            .map(|s| Shard::new(bounds[s] * dim_x, (bounds[s + 1] - bounds[s]) * dim_x, nshards))
+            .map(|k| Shard::new(band.base_of(k), band.len_of(k), nshards))
             .collect();
         for c in self.serial.next.drain(..) {
-            let s = row_shard[(c / dim_x) as usize] as usize;
-            shards[s].next.push(c);
+            shards[band.shard_of(c)].next.push(c);
         }
         for (due, c) in self.serial.wheel.drain() {
-            let s = row_shard[(c / dim_x) as usize] as usize;
-            shards[s].wheel.schedule(due, c);
+            shards[band.shard_of(c)].wheel.schedule(due, c);
         }
         self.serial.active.clear();
 
@@ -783,26 +926,15 @@ impl<A: Application> Chip<A> {
         let cmd = AtomicU8::new(CMD_RUN);
         let cmd_arg = AtomicU64::new(0);
 
-        let mut outs: Vec<ShardOut> = Vec::with_capacity(nshards);
+        let mut outs: Vec<ShardOut>;
         {
-            // Split the cell grid into per-shard contiguous slices.
-            let mut slices: Vec<&mut [Cell<A::State>]> = Vec::with_capacity(nshards);
-            let mut rest: &mut [Cell<A::State>] = &mut self.cells;
-            for s in 0..nshards {
-                let take = ((bounds[s + 1] - bounds[s]) * dim_x) as usize;
-                let (mine, r) = rest.split_at_mut(take);
-                slices.push(mine);
-                rest = r;
-            }
-            debug_assert!(rest.is_empty());
-
             let ctx = Ctx {
                 app: &self.app,
                 geo: &self.geo,
                 cfg: &self.cfg,
                 space: &self.space,
                 congested: &self.congested,
-                row_shard: &row_shard,
+                band,
                 mail: &mail,
                 mail_flag: &mail_flag,
                 barrier: &barrier,
@@ -818,25 +950,46 @@ impl<A: Application> Chip<A> {
                 yield_below,
             };
 
-            let mut work: Vec<(usize, Shard, &mut [Cell<A::State>])> = shards
-                .into_iter()
-                .zip(slices)
-                .enumerate()
-                .map(|(k, (st, sl))| (k, st, sl))
-                .collect();
-            let (k0, st0, sl0) = work.remove(0);
-            let ctx_ref = &ctx;
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = work
-                    .into_iter()
-                    .map(|(k, st, sl)| scope.spawn(move || shard_worker(ctx_ref, k, st, sl)))
-                    .collect();
-                // This thread runs shard 0 (the leader).
-                outs.push(shard_worker(ctx_ref, k0, st0, sl0));
-                for h in handles {
-                    outs.push(h.join().expect("shard worker panicked"));
+            outs = match band.axis() {
+                ShardAxis::Cols => {
+                    // Column bands are scattered across the row-major
+                    // grid: build per-shard views of per-cell references
+                    // (local order = ascending cell id, matching
+                    // `BandMap::for_each_cell`).
+                    let mut views: Vec<Vec<&mut Cell<A::State>>> = (0..nshards)
+                        .map(|k| Vec::with_capacity(band.len_of(k) as usize))
+                        .collect();
+                    for (c, cell) in self.cells.iter_mut().enumerate() {
+                        views[band.shard_of(c as CellId)].push(cell);
+                    }
+                    let work: Vec<(usize, Shard, &mut [&mut Cell<A::State>])> = shards
+                        .into_iter()
+                        .zip(views.iter_mut().map(|v| &mut v[..]))
+                        .enumerate()
+                        .map(|(k, (st, sl))| (k, st, sl))
+                        .collect();
+                    drive(&ctx, work)
                 }
-            });
+                _ => {
+                    // Row bands: per-shard contiguous slices of the grid.
+                    let mut slices: Vec<&mut [Cell<A::State>]> =
+                        Vec::with_capacity(nshards);
+                    let mut rest: &mut [Cell<A::State>] = &mut self.cells;
+                    for k in 0..nshards {
+                        let (mine, r) = rest.split_at_mut(band.len_of(k) as usize);
+                        slices.push(mine);
+                        rest = r;
+                    }
+                    debug_assert!(rest.is_empty());
+                    let work: Vec<(usize, Shard, &mut [Cell<A::State>])> = shards
+                        .into_iter()
+                        .zip(slices)
+                        .enumerate()
+                        .map(|(k, (st, sl))| (k, st, sl))
+                        .collect();
+                    drive(&ctx, work)
+                }
+            };
         }
 
         // Deterministic merge, fixed shard order.
@@ -846,13 +999,19 @@ impl<A: Application> Chip<A> {
         if self.cfg.heatmap_every > 0 && !outs[0].frames.is_empty() {
             let count = outs[0].frames.len();
             debug_assert!(outs.iter().all(|o| o.frames.len() == count));
+            let n = self.cells.len();
             for idx in 0..count {
                 let cycle = outs[0].frames[idx].0;
-                let mut occupancy = Vec::with_capacity(self.cells.len());
-                let mut cong = Vec::with_capacity(self.cells.len());
-                for o in &outs {
-                    occupancy.extend_from_slice(&o.frames[idx].1);
-                    cong.extend_from_slice(&o.frames[idx].2);
+                // Scatter each shard's segment through the band map (for
+                // row bands this is plain concatenation; column bands
+                // interleave).
+                let mut occupancy = vec![0f32; n];
+                let mut cong = vec![false; n];
+                for (k, o) in outs.iter().enumerate() {
+                    band.for_each_cell(k, |local, c| {
+                        occupancy[c as usize] = o.frames[idx].1[local];
+                        cong[c as usize] = o.frames[idx].2[local];
+                    });
                 }
                 self.heatmap.frames.push(Frame {
                     cycle,
@@ -904,32 +1063,43 @@ impl<A: Application> Chip<A> {
 // Per-cycle engine logic, shared by the serial engine and every worker
 // ------------------------------------------------------------------------
 
-/// A shard's view of one cycle: its own cells (mutable), the global
-/// read-only snapshots, and its scheduling state.
-struct Lane<'a, A: Application> {
+/// A shard's view of one cycle: its own cells (mutable, behind the
+/// [`CellArena`] view — a contiguous slice for row bands / the serial
+/// engine, scattered references for column bands), the global read-only
+/// snapshots, and its scheduling state.
+struct Lane<'a, A: Application, V: CellArena<S = A::State> + ?Sized> {
     app: &'a A,
     geo: &'a Geometry,
     cfg: &'a ChipConfig,
     now: u64,
     throttle_period: u64,
-    cells: &'a mut [Cell<A::State>],
+    cells: &'a mut V,
     space: &'a [AtomicU32],
     congested: &'a [AtomicBool],
-    /// Row -> owning shard (empty for the serial engine, which owns all).
-    row_shard: &'a [u16],
+    /// Band partition: cell ownership and (for column bands) local
+    /// indexing. The serial engine carries a trivial one-shard map.
+    band: &'a BandMap,
+    /// This shard's index in the band map.
+    k: usize,
     st: &'a mut Shard,
     metrics: &'a mut Metrics,
 }
 
-impl<'a, A: Application> Lane<'a, A> {
+impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     #[inline]
     fn idx(&self, c: CellId) -> usize {
-        (c - self.st.base) as usize
+        // Contiguous bands (serial engine + row bands) index by offset;
+        // column bands read the band map's cell -> local table.
+        if self.band.contiguous() {
+            (c - self.st.base) as usize
+        } else {
+            self.band.local_table()[c as usize] as usize
+        }
     }
 
     #[inline]
     fn owns(&self, c: CellId) -> bool {
-        c >= self.st.base && ((c - self.st.base) as usize) < self.cells.len()
+        self.band.shard_of(c) == self.k
     }
 
     /// Mark a cell for processing next cycle (dedup via epoch stamps).
@@ -960,7 +1130,7 @@ impl<'a, A: Application> Lane<'a, A> {
         let epoch = now + 1;
         let i = self.idx(c);
         // Fast path: compute-only cells have an empty router.
-        if !self.cells[i].has_flits() {
+        if !self.cells.at(i).has_flits() {
             return;
         }
         let num_vcs = self.cfg.num_vcs;
@@ -968,7 +1138,7 @@ impl<'a, A: Application> Lane<'a, A> {
         // Deliveries: head flits addressed to this cell drain into the
         // action queue (one per input port per cycle).
         for p in 0..NUM_PORTS {
-            let cell = &mut self.cells[i];
+            let cell = self.cells.at_mut(i);
             let unit = &mut cell.inputs[p];
             let mut mask = unit.live_mask();
             while mask != 0 {
@@ -992,7 +1162,7 @@ impl<'a, A: Application> Lane<'a, A> {
         // lanes computes each head's route exactly once (the candidate
         // first in rotation order wins its output — same arbitration as a
         // per-direction rescan, ~5x cheaper).
-        let arb = self.cells[i].arb;
+        let arb = self.cells.at(i).arb;
         let lanes = NUM_PORTS * num_vcs as usize;
         let mut served_dirs: u8 = 0;
         let mut blocked_dirs: u8 = 0;
@@ -1014,10 +1184,10 @@ impl<'a, A: Application> Lane<'a, A> {
             if popped_ports & (1 << p) != 0 {
                 continue;
             }
-            if self.cells[i].inputs[p].live_mask() & (1 << vc) == 0 {
+            if self.cells.at(i).inputs[p].live_mask() & (1 << vc) == 0 {
                 continue; // empty VC: skip without touching the buffer
             }
-            let head = match self.cells[i].inputs[p].head(vc) {
+            let head = match self.cells.at(i).inputs[p].head(vc) {
                 Some(f) if f.moved_at < now && f.next_port != DELIVER => *f,
                 _ => continue,
             };
@@ -1034,7 +1204,7 @@ impl<'a, A: Application> Lane<'a, A> {
             // one-cycle credit delay, identical for every shard count.
             let bit = 1u32 << (in_port * 8 + out_vc as usize);
             if self.space[n as usize].load(Ordering::Relaxed) & bit != 0 {
-                let mut f = self.cells[i].inputs[p].pop(vc).unwrap();
+                let mut f = self.cells.at_mut(i).inputs[p].pop(vc).unwrap();
                 f.vc = out_vc;
                 f.hops += 1;
                 f.moved_at = now;
@@ -1052,15 +1222,14 @@ impl<'a, A: Application> Lane<'a, A> {
                 popped_ports |= 1 << p;
                 served_dirs |= 1 << d;
                 if self.owns(n) {
-                    let ni = (n - self.st.base) as usize;
-                    let ncell = &mut self.cells[ni];
+                    let ni = self.idx(n);
+                    let ncell = self.cells.at_mut(ni);
                     let ok = ncell.inputs[in_port].try_push(out_vc, f);
                     debug_assert!(ok, "space snapshot guaranteed a free slot");
                     Self::mark(&mut self.st.next, ncell, n, epoch);
                     self.st.pushed.push(n);
                 } else {
-                    let (_, ny) = self.geo.coords(n);
-                    let dest = self.row_shard[ny as usize] as usize;
+                    let dest = self.band.shard_of(n);
                     self.st.per_dest[dest].push(Staged {
                         dst: n,
                         in_port: in_port as u8,
@@ -1074,7 +1243,7 @@ impl<'a, A: Application> Lane<'a, A> {
         }
         let stalled = blocked_dirs & !served_dirs;
         if stalled != 0 {
-            let cell = &mut self.cells[i];
+            let cell = self.cells.at_mut(i);
             for d in 0..4u8 {
                 if stalled & (1 << d) != 0 {
                     cell.contention[d as usize] += 1;
@@ -1082,7 +1251,7 @@ impl<'a, A: Application> Lane<'a, A> {
                 }
             }
         }
-        let cell = &mut self.cells[i];
+        let cell = self.cells.at_mut(i);
         cell.arb = cell.arb.wrapping_add(1);
         if cell.has_flits() {
             Self::mark(&mut self.st.next, cell, c, epoch);
@@ -1094,15 +1263,15 @@ impl<'a, A: Application> Lane<'a, A> {
     fn compute_cell(&mut self, c: CellId) {
         let now = self.now;
         let i = self.idx(c);
-        if self.cells[i].busy_until > now {
+        if self.cells.at(i).busy_until > now {
             // Re-activated while busy (usually a flit arrival); the
             // compute side stays parked until the timer expires.
             self.park_or_mark(c);
             return;
         }
-        if !self.cells[i].action_q.is_empty() {
+        if !self.cells.at(i).action_q.is_empty() {
             self.execute_action(c);
-        } else if !self.cells[i].diffuse_q.is_empty() {
+        } else if !self.cells.at(i).diffuse_q.is_empty() {
             self.progress_diffusion(c);
         }
         self.park_or_mark(c);
@@ -1118,7 +1287,7 @@ impl<'a, A: Application> Lane<'a, A> {
         let now = self.now;
         let epoch = now + 1;
         let i = self.idx(c);
-        let cell = &mut self.cells[i];
+        let cell = self.cells.at_mut(i);
         if cell.busy_until > now + 1 {
             if !cell.wheel_armed {
                 cell.wheel_armed = true;
@@ -1136,10 +1305,10 @@ impl<'a, A: Application> Lane<'a, A> {
     fn execute_action(&mut self, c: CellId) {
         let now = self.now;
         let i = self.idx(c);
-        let msg = self.cells[i].action_q.pop_front().unwrap();
+        let msg = self.cells.at_mut(i).action_q.pop_front().unwrap();
         // Overlap accounting (Fig. 6): an action runs while this cell's
         // head diffusion is blocked on the network or throttle.
-        if self.cells[i].diff_blocked && !self.cells[i].diffuse_q.is_empty() {
+        if self.cells.at(i).diff_blocked && !self.cells.at(i).diffuse_q.is_empty() {
             self.metrics.actions_overlapped += 1;
         }
         let mut busy = 1u32; // predicate resolution / dispatch
@@ -1147,7 +1316,7 @@ impl<'a, A: Application> Lane<'a, A> {
         let slot = msg.target as usize;
         match msg.kind {
             ActionKind::App => {
-                let cell = &mut self.cells[i];
+                let cell = self.cells.at_mut(i);
                 let obj = &mut cell.objects[slot];
                 if self.app.predicate(&obj.state, &msg) {
                     let meta = obj.meta;
@@ -1166,7 +1335,7 @@ impl<'a, A: Application> Lane<'a, A> {
                 }
             }
             ActionKind::RelayDiffuse => {
-                let cell = &mut self.cells[i];
+                let cell = self.cells.at_mut(i);
                 let obj = &mut cell.objects[slot];
                 self.app.apply_relay(&mut obj.state, msg.payload, msg.aux);
                 self.metrics.relays += 1;
@@ -1178,7 +1347,7 @@ impl<'a, A: Application> Lane<'a, A> {
                 self.metrics.diffusions_created += 1;
             }
             ActionKind::RhizomeShare => {
-                let cell = &mut self.cells[i];
+                let cell = self.cells.at_mut(i);
                 let obj = &mut cell.objects[slot];
                 let meta = obj.meta;
                 let work = self.app.on_rhizome_share(&mut obj.state, &msg, &meta);
@@ -1194,14 +1363,14 @@ impl<'a, A: Application> Lane<'a, A> {
                 busy += self.handle_insert_edge(c, &msg);
             }
             ActionKind::MetaBump => {
-                let obj = &mut self.cells[i].objects[slot];
+                let obj = &mut self.cells.at_mut(i).objects[slot];
                 obj.meta.out_degree += msg.payload;
                 obj.meta.in_degree_share += msg.aux;
                 self.metrics.meta_bumps += 1;
                 self.metrics.sram_writes += 1;
             }
         }
-        let cell = &mut self.cells[i];
+        let cell = self.cells.at_mut(i);
         cell.busy_until = now + busy as u64;
         self.metrics.compute_cycles += busy as u64;
     }
@@ -1221,7 +1390,7 @@ impl<'a, A: Application> Lane<'a, A> {
         self.metrics.sram_writes += 1;
         let i = self.idx(c);
         {
-            let obj = &mut self.cells[i].objects[slot];
+            let obj = &mut self.cells.at_mut(i).objects[slot];
             if obj.edges.len() < chunk {
                 obj.edges.push(crate::rpvo::object::Edge { to, weight });
                 self.metrics.edges_inserted += 1;
@@ -1236,23 +1405,23 @@ impl<'a, A: Application> Lane<'a, A> {
         // forward the action, so it grows anyway — the same pressure
         // valve the host allocator expresses by erroring once every ring
         // is full.
-        let can_alloc_here = self.cells[i].objects.len() < self.cfg.cell_mem_objects;
-        let n_ghosts = self.cells[i].objects[slot].ghosts.len();
+        let can_alloc_here = self.cells.at(i).objects.len() < self.cfg.cell_mem_objects;
+        let n_ghosts = self.cells.at(i).objects[slot].ghosts.len();
         if n_ghosts < arity && (can_alloc_here || n_ghosts == 0) {
             if !can_alloc_here {
                 self.metrics.sram_overflows += 1;
             }
             let (vid, member, meta) = {
-                let obj = &self.cells[i].objects[slot];
+                let obj = &self.cells.at(i).objects[slot];
                 (obj.vid, obj.member, obj.meta)
             };
             let state = self.app.init(&meta);
             let mut ghost = crate::rpvo::object::Object::new_ghost(vid, member, state);
             ghost.meta = meta;
             ghost.edges.push(crate::rpvo::object::Edge { to, weight });
-            let gslot = self.cells[i].alloc_object(ghost);
+            let gslot = self.cells.at_mut(i).alloc_object(ghost);
             let gaddr = Address::new(c, gslot);
-            self.cells[i].objects[slot].ghosts.push(gaddr);
+            self.cells.at_mut(i).objects[slot].ghosts.push(gaddr);
             self.metrics.edges_inserted += 1;
             return 3;
         }
@@ -1261,7 +1430,7 @@ impl<'a, A: Application> Lane<'a, A> {
         // freezes once the chunk is full); the action re-executes at the
         // child's locality.
         let g = {
-            let obj = &mut self.cells[i].objects[slot];
+            let obj = &mut self.cells.at_mut(i).objects[slot];
             let pick = obj.ghosts[(obj.relay_rr as usize) % obj.ghosts.len()];
             obj.relay_rr = obj.relay_rr.wrapping_add(1);
             pick
@@ -1269,7 +1438,7 @@ impl<'a, A: Application> Lane<'a, A> {
         let relay = ActionMsg { kind: ActionKind::InsertEdge, target: g.slot, ..*msg };
         let epoch = self.now + 1;
         if g.cc == c {
-            let cell = &mut self.cells[i];
+            let cell = self.cells.at_mut(i);
             cell.action_q.push_back(relay);
             self.metrics.messages_local += 1;
             Self::mark(&mut self.st.next, cell, c, epoch);
@@ -1280,9 +1449,9 @@ impl<'a, A: Application> Lane<'a, A> {
             if self.inject(c, g, relay) {
                 self.metrics.messages_sent += 1;
             } else {
-                self.cells[i].action_q.push_back(relay); // retry later
+                self.cells.at_mut(i).action_q.push_back(relay); // retry later
             }
-            let cell = &mut self.cells[i];
+            let cell = self.cells.at_mut(i);
             Self::mark(&mut self.st.next, cell, c, epoch);
         }
         2
@@ -1299,22 +1468,22 @@ impl<'a, A: Application> Lane<'a, A> {
         flit.next_port = hop.port.index() as u8;
         flit.next_vc = hop.vc;
         let i = self.idx(c);
-        self.cells[i].inputs[Port::Local.index()].try_push(hop.vc, flit)
+        self.cells.at_mut(i).inputs[Port::Local.index()].try_push(hop.vc, flit)
     }
 
     /// Progress the head diffusion by one `propagate` (or prune it).
     fn progress_diffusion(&mut self, c: CellId) {
         let now = self.now;
         let i = self.idx(c);
-        let d = *self.cells[i].diffuse_q.front().unwrap();
+        let d = *self.cells.at(i).diffuse_q.front().unwrap();
         // The diffuse clause's own predicate, evaluated lazily (Listing 6).
         let live = {
-            let obj = &self.cells[i].objects[d.slot as usize];
+            let obj = &self.cells.at(i).objects[d.slot as usize];
             self.app.diffuse_live(&obj.state, d.payload, d.aux)
         };
         self.metrics.sram_reads += 1;
         if !live {
-            let cell = &mut self.cells[i];
+            let cell = self.cells.at_mut(i);
             cell.diffuse_q.pop_front();
             cell.diff_blocked = false;
             self.metrics.diffusions_pruned += 1;
@@ -1324,13 +1493,13 @@ impl<'a, A: Application> Lane<'a, A> {
         // Throttling (§6.2): before creating a message, consult neighbour
         // congestion from the previous cycle.
         if self.cfg.throttling {
-            if self.cells[i].throttle.halted(now) {
+            if self.cells.at_mut(i).throttle.halted(now) {
                 self.metrics.throttle_cycles += 1;
                 self.blocked_filter_pass(c);
                 return;
             }
             if self.neighbors_congested(c) {
-                self.cells[i].throttle.engage(now, self.throttle_period);
+                self.cells.at_mut(i).throttle.engage(now, self.throttle_period);
                 self.metrics.throttle_engaged += 1;
                 self.metrics.throttle_cycles += 1;
                 self.blocked_filter_pass(c);
@@ -1339,7 +1508,7 @@ impl<'a, A: Application> Lane<'a, A> {
         }
         // Stage the next propagate of this diffusion.
         let (target_addr, msg) = {
-            let obj = &self.cells[i].objects[d.slot as usize];
+            let obj = &self.cells.at(i).objects[d.slot as usize];
             if d.edges && (d.e_idx as usize) < obj.edges.len() {
                 let e = obj.edges[d.e_idx as usize];
                 let (p, a) = self.app.edge_payload(d.payload, d.aux, e.weight);
@@ -1389,16 +1558,16 @@ impl<'a, A: Application> Lane<'a, A> {
         self.metrics.sram_reads += 1; // edge/link fetch
         if target_addr.cc == c {
             // Same-cell action: skips the network (§4).
-            let cell = &mut self.cells[i];
+            let cell = self.cells.at_mut(i);
             cell.action_q.push_back(msg);
             self.metrics.messages_local += 1;
             self.advance_cursor(c);
-            self.cells[i].diff_blocked = false;
+            self.cells.at_mut(i).diff_blocked = false;
             self.charge(c, 1);
         } else if self.inject(c, target_addr, msg) {
             self.metrics.messages_sent += 1;
             self.advance_cursor(c);
-            self.cells[i].diff_blocked = false;
+            self.cells.at_mut(i).diff_blocked = false;
             self.charge(c, 1);
         } else {
             // Injection blocked on a congested network: overlap with
@@ -1413,7 +1582,7 @@ impl<'a, A: Application> Lane<'a, A> {
     fn advance_cursor(&mut self, c: CellId) {
         let i = self.idx(c);
         let done = {
-            let cell = &mut self.cells[i];
+            let cell = self.cells.at_mut(i);
             let obj_edges;
             let obj_ghosts;
             let obj_rhiz;
@@ -1443,7 +1612,7 @@ impl<'a, A: Application> Lane<'a, A> {
 
     fn finish_diffusion(&mut self, c: CellId) {
         let i = self.idx(c);
-        let cell = &mut self.cells[i];
+        let cell = self.cells.at_mut(i);
         cell.diffuse_q.pop_front();
         cell.diff_blocked = false;
         self.metrics.diffusions_executed += 1;
@@ -1455,13 +1624,13 @@ impl<'a, A: Application> Lane<'a, A> {
     /// never allocates.
     fn blocked_filter_pass(&mut self, c: CellId) {
         let i = self.idx(c);
-        self.cells[i].diff_blocked = true;
-        let len = self.cells[i].diffuse_q.len();
+        self.cells.at_mut(i).diff_blocked = true;
+        let len = self.cells.at(i).diffuse_q.len();
         let scan = len.min(1 + FILTER_SCAN);
         let mut dead = [0usize; FILTER_SCAN];
         let mut ndead = 0usize;
         {
-            let cell = &self.cells[i];
+            let cell = self.cells.at(i);
             for j in 1..scan {
                 let d = cell.diffuse_q[j];
                 let obj = &cell.objects[d.slot as usize];
@@ -1471,7 +1640,7 @@ impl<'a, A: Application> Lane<'a, A> {
                 }
             }
         }
-        let cell = &mut self.cells[i];
+        let cell = self.cells.at_mut(i);
         for k in (0..ndead).rev() {
             cell.diffuse_q.remove(dead[k]);
             self.metrics.diffusions_pruned_filter += 1;
@@ -1482,7 +1651,7 @@ impl<'a, A: Application> Lane<'a, A> {
     #[inline]
     fn charge(&mut self, c: CellId, cycles: u32) {
         let i = self.idx(c);
-        self.cells[i].busy_until = self.now + cycles as u64;
+        self.cells.at_mut(i).busy_until = self.now + cycles as u64;
         self.metrics.compute_cycles += cycles as u64;
     }
 
@@ -1503,8 +1672,8 @@ impl<'a, A: Application> Lane<'a, A> {
     fn apply_staged(&mut self, items: &mut Vec<Staged>) {
         let epoch = self.now + 1;
         for s in items.drain(..) {
-            let i = (s.dst - self.st.base) as usize;
-            let cell = &mut self.cells[i];
+            let i = self.idx(s.dst);
+            let cell = self.cells.at_mut(i);
             let ok = cell.inputs[s.in_port as usize].try_push(s.vc, s.flit);
             debug_assert!(ok, "outbox push must fit (single producer + credit)");
             Self::mark(&mut self.st.next, cell, s.dst, epoch);
@@ -1531,20 +1700,25 @@ impl<'a, A: Application> Lane<'a, A> {
 
     #[inline]
     fn refresh(&mut self, c: CellId) {
-        let i = (c - self.st.base) as usize;
-        let cell = &self.cells[i];
+        let i = self.idx(c);
+        let cell = self.cells.at(i);
         self.space[c as usize].store(cell.space_snapshot(), Ordering::Relaxed);
         self.congested[c as usize].store(cell.compute_congested(), Ordering::Relaxed);
     }
 
-    /// Heat-map sample over this shard's own cell range (call after
-    /// `finish_cycle` so congestion flags are fresh).
+    /// Heat-map sample over this shard's own cells, in the band's local
+    /// order (call after `finish_cycle` so congestion flags are fresh).
+    /// The merge in `run_sharded` scatters the segments back through the
+    /// same band map.
     fn sample_segment(&self) -> (Vec<f32>, Vec<bool>) {
         let cap = (NUM_PORTS * self.cfg.num_vcs as usize * self.cfg.vc_buffer) as f32;
-        let occ = self.cells.iter().map(|cl| cl.occupancy() as f32 / cap).collect();
-        let cong = (0..self.cells.len())
-            .map(|i| self.congested[self.st.base as usize + i].load(Ordering::Relaxed))
-            .collect();
+        let len = self.band.len_of(self.k) as usize;
+        let mut occ = Vec::with_capacity(len);
+        let mut cong = Vec::with_capacity(len);
+        self.band.for_each_cell(self.k, |local, c| {
+            occ.push(self.cells.at(local).occupancy() as f32 / cap);
+            cong.push(self.congested[c as usize].load(Ordering::Relaxed));
+        });
         (occ, cong)
     }
 }
@@ -1835,6 +2009,113 @@ mod tests {
                 }
                 assert_eq!(cs.contention, cp.contention, "cell {i} contention diverged");
             }
+        }
+    }
+
+    #[test]
+    fn column_bands_match_serial_bitwise() {
+        let mut serial = flood_chip(1);
+        serial.run().unwrap();
+        for shards in [2, 4] {
+            let mut sharded = flood_chip(shards);
+            sharded.set_band_axis(ShardAxis::Cols);
+            sharded.run().unwrap();
+            assert_eq!(
+                serial.metrics, sharded.metrics,
+                "metrics diverged at cols x {shards} shards"
+            );
+            for (i, (cs, cp)) in serial.cells.iter().zip(&sharded.cells).enumerate() {
+                for (os, op) in cs.objects.iter().zip(&cp.objects) {
+                    assert_eq!(os.state, op.state, "cell {i} state diverged");
+                }
+                assert_eq!(cs.contention, cp.contention, "cell {i} contention diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_axis_aspect_guess() {
+        // Short dimension too narrow to shard 16 ways: parallelism wins,
+        // band along the long axis.
+        let mut cfg = ChipConfig::torus(4);
+        cfg.dim_x = 8; // wide 8x4 grid
+        let chip = Chip::new(cfg, Flood).unwrap();
+        assert_eq!(chip.band_axis(), ShardAxis::Cols);
+        let mut cfg = ChipConfig::torus(4);
+        cfg.dim_y = 8; // tall 4x8 grid
+        let chip = Chip::new(cfg, Flood).unwrap();
+        assert_eq!(chip.band_axis(), ShardAxis::Rows);
+        // Short dimension still offers >= MAX_SHARDS lines: band along it
+        // (the long dimension carries the traffic).
+        let mut cfg = ChipConfig::torus(32);
+        cfg.dim_y = 128; // tall 32x128 grid: Y-heavy, columns band
+        let chip = Chip::new(cfg, Flood).unwrap();
+        assert_eq!(chip.band_axis(), ShardAxis::Cols);
+        let mut cfg = ChipConfig::torus(32);
+        cfg.dim_x = 128; // wide 128x32 grid
+        let chip = Chip::new(cfg, Flood).unwrap();
+        assert_eq!(chip.band_axis(), ShardAxis::Rows);
+        // Explicit config wins, and set_band_axis repins.
+        let mut cfg = ChipConfig::torus(4);
+        cfg.shard_axis = ShardAxis::Cols;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        assert_eq!(chip.band_axis(), ShardAxis::Cols);
+        chip.set_band_axis(ShardAxis::Rows);
+        assert_eq!(chip.band_axis(), ShardAxis::Rows);
+    }
+
+    #[test]
+    fn rectangular_grid_sharded_matches_serial_on_both_axes() {
+        // A tall 4x8 torus where the hub's fan-out crosses both axes.
+        fn build(shards: usize, axis: ShardAxis) -> Chip<Flood> {
+            let mut cfg = ChipConfig::torus(4);
+            cfg.dim_y = 8;
+            cfg.shards = shards;
+            cfg.shard_axis = axis;
+            let mut chip = Chip::new(cfg, Flood).unwrap();
+            let targets: Vec<_> =
+                (1..32).map(|i| chip.install(i, Object::new_root(i, 0, 0))).collect();
+            let mut hub = Object::new_root(0, 0, 0);
+            for &t in &targets {
+                hub.edges.push(Edge { to: t, weight: 1 });
+            }
+            let a = chip.install(0, hub);
+            chip.germinate(a, ActionKind::App, 6, 0);
+            chip
+        }
+        let mut serial = build(1, ShardAxis::Rows);
+        serial.run().unwrap();
+        for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+            for shards in [2, 4] {
+                let mut chip = build(shards, axis);
+                chip.run().unwrap();
+                assert_eq!(
+                    serial.metrics, chip.metrics,
+                    "metrics diverged at {axis:?} x {shards} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heatmap_frames_identical_across_axes() {
+        // The fully-stepped sharded engine with frame sampling: column
+        // bands scatter their segments back through the band map, so the
+        // merged frames must be identical to the row-band run.
+        let mut rows = flood_chip(2);
+        rows.cfg.heatmap_every = 2;
+        rows.run().unwrap();
+        let mut cols = flood_chip(2);
+        cols.cfg.heatmap_every = 2;
+        cols.set_band_axis(ShardAxis::Cols);
+        cols.run().unwrap();
+        assert_eq!(rows.metrics, cols.metrics);
+        assert_eq!(rows.heatmap.frames.len(), cols.heatmap.frames.len());
+        assert!(!rows.heatmap.frames.is_empty(), "sampling must produce frames");
+        for (a, b) in rows.heatmap.frames.iter().zip(&cols.heatmap.frames) {
+            assert_eq!(a.cycle, b.cycle);
+            assert_eq!(a.occupancy, b.occupancy, "cycle {} occupancy diverged", a.cycle);
+            assert_eq!(a.congested, b.congested, "cycle {} congestion diverged", a.cycle);
         }
     }
 

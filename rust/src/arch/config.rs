@@ -7,6 +7,14 @@
 
 use crate::noc::topology::Topology;
 
+pub use crate::arch::band::ShardAxis;
+
+/// Hard ceiling on engine worker shards: the cycle barrier stops scaling
+/// long before this. Shared by the shard-count clamp and the `Auto` axis
+/// guess (an axis is only worth its traffic advantage if it still offers
+/// this much banding parallelism).
+pub(crate) const MAX_SHARDS: usize = 16;
+
 /// Vertex-object allocation policy (paper Fig. 4).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum AllocPolicy {
@@ -82,11 +90,17 @@ pub struct ChipConfig {
     pub max_cycles: u64,
     /// Record per-cell congestion frames every N cycles (0 = off, Fig. 5).
     pub heatmap_every: u64,
-    /// Engine worker shards (contiguous row bands of the grid). `0` = auto:
-    /// available parallelism for chips of >= 1024 cells, serial below that
-    /// (tiny chips lose more to the cycle barrier than they gain). Results
-    /// are bit-identical for every shard count — see `arch::chip` docs.
+    /// Engine worker shards (contiguous bands of grid lines along
+    /// [`ChipConfig::shard_axis`]). `0` = auto: available parallelism for
+    /// chips of >= 1024 cells, serial below that (tiny chips lose more to
+    /// the cycle barrier than they gain). Results are bit-identical for
+    /// every shard count — see `arch::chip` docs.
     pub shards: usize,
+    /// Which grid axis the engine bands along: `Rows`, `Cols`, or `Auto`
+    /// (pick per run from the built graph's predicted traffic split; see
+    /// [`crate::arch::band`]). Results are bit-identical for every axis —
+    /// this only trades cross-band NoC traffic for locality.
+    pub shard_axis: ShardAxis,
 }
 
 impl ChipConfig {
@@ -112,6 +126,7 @@ impl ChipConfig {
             max_cycles: 200_000_000,
             heatmap_every: 0,
             shards: 0,
+            shard_axis: ShardAxis::Auto,
         }
     }
 
@@ -125,16 +140,15 @@ impl ChipConfig {
         self.dim_x * self.dim_y
     }
 
-    /// Resolve the engine shard count actually used for a run.
+    /// Resolve the engine shard count actually used for a run on `axis`.
     ///
-    /// Shards are contiguous row bands, so the count is clamped to `dim_y`
-    /// (every shard needs at least one row) and to a fixed ceiling (the
-    /// cycle barrier stops scaling long before that). `shards == 0` picks
-    /// the machine's available parallelism for chips of >= 1024 cells and
-    /// stays serial below — a 16x16 chip's cycles are too cheap to amortize
-    /// even a spin barrier.
-    pub fn effective_shards(&self) -> usize {
-        const MAX_SHARDS: usize = 16;
+    /// Shards are contiguous bands of grid lines, so the count is clamped
+    /// to the axis line count (every shard needs at least one row/column)
+    /// and to a fixed ceiling (the cycle barrier stops scaling long before
+    /// that). `shards == 0` picks the machine's available parallelism for
+    /// chips of >= 1024 cells and stays serial below — a 16x16 chip's
+    /// cycles are too cheap to amortize even a spin barrier.
+    pub fn effective_shards_on(&self, axis: ShardAxis) -> usize {
         let requested = if self.shards == 0 {
             if self.num_cells() >= 1024 {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -144,7 +158,11 @@ impl ChipConfig {
         } else {
             self.shards
         };
-        requested.min(self.dim_y as usize).clamp(1, MAX_SHARDS)
+        let lines = match axis {
+            ShardAxis::Cols => self.dim_x,
+            _ => self.dim_y,
+        };
+        requested.min(lines as usize).clamp(1, MAX_SHARDS)
     }
 
     /// Throttle period `T` (paper Eq. 2): chip hypotenuse, halved on torus.
@@ -234,14 +252,29 @@ mod tests {
     fn effective_shards_clamps() {
         let mut c = ChipConfig::torus(64);
         c.shards = 9999;
-        assert_eq!(c.effective_shards(), 16, "hard ceiling");
+        assert_eq!(c.effective_shards_on(ShardAxis::Rows), 16, "hard ceiling");
         c.shards = 4;
-        assert_eq!(c.effective_shards(), 4);
+        assert_eq!(c.effective_shards_on(ShardAxis::Rows), 4);
         let mut tiny = ChipConfig::torus(2);
         tiny.shards = 8;
-        assert_eq!(tiny.effective_shards(), 2, "one row per shard minimum");
+        assert_eq!(tiny.effective_shards_on(ShardAxis::Rows), 2, "one row per shard minimum");
         tiny.shards = 0;
-        assert_eq!(tiny.effective_shards(), 1, "auto stays serial on tiny chips");
+        assert_eq!(
+            tiny.effective_shards_on(ShardAxis::Rows),
+            1,
+            "auto stays serial on tiny chips"
+        );
+    }
+
+    #[test]
+    fn effective_shards_clamp_follows_axis() {
+        // 4 columns x 64 rows: row bands can use up to 16 shards, column
+        // bands only 4 (one column per band minimum).
+        let mut c = ChipConfig::torus(4);
+        c.dim_y = 64;
+        c.shards = 16;
+        assert_eq!(c.effective_shards_on(ShardAxis::Rows), 16);
+        assert_eq!(c.effective_shards_on(ShardAxis::Cols), 4);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! cycle-level engine.
 
 pub mod addr;
+pub mod band;
 pub mod cell;
 pub mod chip;
 pub mod config;

@@ -1,10 +1,16 @@
 //! Campaign runner: sweep experiment grids across OS threads (the leader
-//! process of the Makefile/bench targets). Campaigns parallelize across
-//! configurations; when running multi-threaded, `run_all` pins every job
-//! to `cfg.shards = 1` so the (deterministic, shard-invariant) chip
-//! engine does not nest its own workers inside an already-saturated
-//! sweep. Results are unaffected: the engine is bit-identical for every
-//! shard count.
+//! process of the Makefile/bench targets).
+//!
+//! Campaigns parallelize across configurations *and* inside each job's
+//! chip engine. A global **thread budget** `B` (default: the machine's
+//! available parallelism, [`default_budget`]) is split by [`plan_budget`]
+//! into `workers` concurrent sweep threads and `engine_shards` engine
+//! worker threads per job, with the invariant `workers × engine_shards
+//! <= B` so the sweep never oversubscribes the machine. With more jobs
+//! than budget this degenerates to the historical behavior (`B` workers,
+//! serial engines); with few long-running jobs the leftover threads go to
+//! the engines instead of idling. Results are unaffected either way: the
+//! engine is bit-identical for every shard count and banding axis.
 
 use crate::coordinator::experiment::{run, Experiment, Outcome};
 use crate::graph::model::HostGraph;
@@ -16,23 +22,58 @@ pub struct Job {
     pub graph: std::sync::Arc<HostGraph>,
 }
 
-/// Run all jobs, up to `threads` at a time, preserving input order.
+/// Split a global thread budget `B` between sweep workers and per-job
+/// engine shards: pick `workers <= min(jobs, B)` and `engine_shards =
+/// B / workers` maximizing utilization (`workers × engine_shards`,
+/// which never exceeds `B`), preferring more sweep workers on ties —
+/// sweep parallelism scales linearly while engine shards pay a cycle
+/// barrier.
 ///
-/// With `threads > 1` every job's engine is forced serial (`shards = 1`):
-/// the sweep itself saturates the cores, and engine results are
-/// shard-invariant so this only avoids oversubscription.
-pub fn run_all(mut jobs: Vec<Job>, threads: usize) -> Vec<(String, anyhow::Result<Outcome>)> {
-    let threads = threads.max(1);
-    if threads > 1 {
-        for job in &mut jobs {
-            job.exp.cfg.shards = 1;
+/// * `jobs >= B` ⇒ `(B, 1)`: today's saturated sweep, serial engines.
+/// * `jobs = 1`  ⇒ `(1, B)`: a lone job gets the whole budget as engine
+///   shards.
+/// * In between, leftover threads flow to the engines — uniformly, so
+///   whichever configs run longest keep the extra threads busy. Jobs on
+///   tiny chips (< 1024 cells) decline the grant and stay serial
+///   ([`Experiment::adopt_engine_shards`]): the spin barrier costs more
+///   than it buys there.
+pub fn plan_budget(jobs: usize, budget: usize) -> (usize, usize) {
+    let budget = budget.max(1);
+    let jobs = jobs.max(1);
+    let mut best = (1usize, budget);
+    let mut best_score = budget;
+    for w in 2..=jobs.min(budget) {
+        let s = budget / w;
+        let score = w * s;
+        if score >= best_score {
+            best = (w, s);
+            best_score = score;
         }
     }
+    best
+}
+
+/// Apply the budget plan to a job list: every job whose config leaves the
+/// engine on auto (`shards == 0`) adopts the planned per-job shard count;
+/// explicitly pinned shard counts (e.g. a `--shards` flag) are respected.
+/// Returns the number of sweep workers to run.
+pub fn apply_budget(jobs: &mut [Job], budget: usize) -> usize {
+    let (workers, engine_shards) = plan_budget(jobs.len(), budget);
+    for job in jobs.iter_mut() {
+        job.exp.adopt_engine_shards(engine_shards);
+    }
+    workers
+}
+
+/// Run all jobs under a global thread budget (see the module docs),
+/// preserving input order in the returned results.
+pub fn run_all(mut jobs: Vec<Job>, budget: usize) -> Vec<(String, anyhow::Result<Outcome>)> {
+    let workers = apply_budget(&mut jobs, budget);
     let jobs: Vec<_> = jobs.into_iter().enumerate().collect();
     let queue = std::sync::Mutex::new(jobs.into_iter().collect::<std::collections::VecDeque<_>>());
     let results = std::sync::Mutex::new(Vec::new());
     std::thread::scope(|s| {
-        for _ in 0..threads {
+        for _ in 0..workers {
             s.spawn(|| loop {
                 let item = queue.lock().unwrap().pop_front();
                 let Some((idx, job)) = item else { break };
@@ -46,9 +87,9 @@ pub fn run_all(mut jobs: Vec<Job>, threads: usize) -> Vec<(String, anyhow::Resul
     results.into_iter().map(|(_, label, out)| (label, out)).collect()
 }
 
-/// Default worker count: physical parallelism minus one for the leader.
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+/// Default global thread budget: the machine's available parallelism.
+pub fn default_budget() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
 #[cfg(test)]
@@ -59,16 +100,18 @@ mod tests {
     use crate::graph::erdos;
     use std::sync::Arc;
 
+    fn job(label: &str, g: &Arc<crate::graph::model::HostGraph>) -> Job {
+        Job {
+            label: label.into(),
+            exp: Experiment::new(AppKind::Bfs, ChipConfig::torus(4)),
+            graph: g.clone(),
+        }
+    }
+
     #[test]
     fn parallel_sweep_preserves_order_and_results() {
         let g = Arc::new(erdos::generate(64, 256, 2));
-        let jobs: Vec<Job> = (0..6)
-            .map(|i| Job {
-                label: format!("job{i}"),
-                exp: Experiment::new(AppKind::Bfs, ChipConfig::torus(4)),
-                graph: g.clone(),
-            })
-            .collect();
+        let jobs: Vec<Job> = (0..6).map(|i| job(&format!("job{i}"), &g)).collect();
         let results = run_all(jobs, 3);
         assert_eq!(results.len(), 6);
         for (i, (label, out)) in results.iter().enumerate() {
@@ -79,5 +122,78 @@ mod tests {
         let c0 = results[0].1.as_ref().unwrap().metrics.cycles;
         let c1 = results[1].1.as_ref().unwrap().metrics.cycles;
         assert_eq!(c0, c1);
+    }
+
+    #[test]
+    fn budget_plan_never_oversubscribes() {
+        for jobs in 1..=24usize {
+            for budget in 1..=24usize {
+                let (w, s) = plan_budget(jobs, budget);
+                assert!(w >= 1 && s >= 1, "degenerate plan for {jobs}/{budget}");
+                assert!(w <= jobs, "more workers than jobs at {jobs}/{budget}");
+                assert!(
+                    w * s <= budget,
+                    "oversubscribed: {w} workers x {s} shards > B={budget}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn budget_plan_degenerates_when_jobs_saturate() {
+        // jobs >= B: today's behavior — one worker per budget thread,
+        // serial engines.
+        assert_eq!(plan_budget(10, 4), (4, 1));
+        assert_eq!(plan_budget(4, 4), (4, 1));
+        // jobs < B: leftover budget flows to engine shards.
+        assert_eq!(plan_budget(1, 4), (1, 4));
+        assert_eq!(plan_budget(2, 8), (2, 4));
+        // ties prefer more sweep workers at full utilization.
+        assert_eq!(plan_budget(6, 16), (4, 4));
+    }
+
+    fn big_job(label: &str, g: &Arc<crate::graph::model::HostGraph>) -> Job {
+        // 32x32 = 1024 cells: large enough that the budget grant is
+        // adopted (tiny chips decline it and stay serial).
+        Job {
+            label: label.into(),
+            exp: Experiment::new(AppKind::Bfs, ChipConfig::torus(32)),
+            graph: g.clone(),
+        }
+    }
+
+    #[test]
+    fn one_job_campaign_actually_runs_sharded() {
+        // Regression: a 1-job campaign with budget 4 must hand the engine
+        // all four threads (cfg.shards == 0 means auto-under-campaign).
+        let g = Arc::new(erdos::generate(64, 256, 2));
+        let mut jobs = vec![big_job("solo", &g)];
+        assert_eq!(jobs[0].exp.cfg.shards, 0);
+        let workers = apply_budget(&mut jobs, 4);
+        assert_eq!(workers, 1);
+        assert_eq!(jobs[0].exp.cfg.shards, 4, "engine must be sharded");
+        // The sharded run completes and matches a serial run bit-for-bit.
+        let sharded = run_all(jobs, 4);
+        let mut serial_jobs = vec![big_job("solo", &g)];
+        serial_jobs[0].exp.cfg.shards = 1;
+        let serial = run_all(serial_jobs, 4);
+        assert_eq!(
+            serial[0].1.as_ref().unwrap().metrics,
+            sharded[0].1.as_ref().unwrap().metrics,
+            "budgeted sharding changed results"
+        );
+    }
+
+    #[test]
+    fn explicit_shard_pins_are_respected() {
+        let g = Arc::new(erdos::generate(64, 128, 5));
+        let mut jobs = vec![big_job("pinned", &g)];
+        jobs[0].exp.cfg.shards = 2;
+        apply_budget(&mut jobs, 8);
+        assert_eq!(jobs[0].exp.cfg.shards, 2, "--shards style pin overridden");
+        // Tiny chips never adopt the grant: the serial auto path wins.
+        let mut tiny = vec![job("tiny", &g)];
+        apply_budget(&mut tiny, 8);
+        assert_eq!(tiny[0].exp.cfg.shards, 0, "tiny chip should stay on auto/serial");
     }
 }

@@ -80,6 +80,21 @@ impl Experiment {
     pub fn new(app: AppKind, cfg: ChipConfig) -> Self {
         Experiment { app, cfg, root: 0, pr_iters: 10, trials: 1, verify: true, mutations: 0 }
     }
+
+    /// Campaign hook: adopt the budget-planned engine shard count unless
+    /// the config pins one explicitly (`shards != 0`, e.g. a `--shards`
+    /// flag) or the chip is too small to profit (< 1024 cells stay on
+    /// the serial auto path — the spin barrier costs more than it buys;
+    /// same threshold as `ChipConfig::effective_shards_on`). Under a
+    /// campaign, "auto" on a big chip means "what the thread budget
+    /// grants" rather than the standalone machine-wide default — the
+    /// sweep and the engines share one thread pool (see
+    /// `coordinator::campaign`). Results are shard-invariant either way.
+    pub fn adopt_engine_shards(&mut self, shards: usize) {
+        if self.cfg.shards == 0 && self.cfg.num_cells() >= 1024 {
+            self.cfg.shards = shards.max(1);
+        }
+    }
 }
 
 /// Everything a figure harness needs from one experiment.
@@ -252,6 +267,20 @@ mod tests {
         let out = run(&exp, &g).unwrap();
         assert!(out.metrics.cycles > 0);
         assert_eq!(out.verified_mismatches, 0);
+    }
+
+    #[test]
+    fn adopt_engine_shards_respects_pins_and_tiny_chips() {
+        let mut auto = Experiment::new(AppKind::Bfs, ChipConfig::torus(32));
+        auto.adopt_engine_shards(4);
+        assert_eq!(auto.cfg.shards, 4, "auto config on a big chip adopts the grant");
+        let mut pinned = Experiment::new(AppKind::Bfs, ChipConfig::torus(32));
+        pinned.cfg.shards = 2;
+        pinned.adopt_engine_shards(8);
+        assert_eq!(pinned.cfg.shards, 2, "explicit pin survives the campaign");
+        let mut tiny = Experiment::new(AppKind::Bfs, ChipConfig::torus(4));
+        tiny.adopt_engine_shards(4);
+        assert_eq!(tiny.cfg.shards, 0, "tiny chips stay on the serial auto path");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!
 //! Flag parsing is in-tree (offline build: no clap); see `Args`.
 
-use amcca::arch::config::{AllocPolicy, BuildMode, ChipConfig};
+use amcca::arch::config::{AllocPolicy, BuildMode, ChipConfig, ShardAxis};
 use amcca::coordinator::experiment::{run, AppKind, Experiment};
 use amcca::coordinator::report::Table;
 use amcca::graph::datasets::{Dataset, Scale, ALL};
@@ -74,6 +74,10 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
         "torus" => ChipConfig::torus(dim),
         t => anyhow::bail!("unknown --topo {t} (mesh|torus)"),
     };
+    // Rectangular chips: --dim-x/--dim-y override the square --dim (the
+    // Y-heavy tall-grid scenarios, e.g. 32x128).
+    cfg.dim_x = args.num("dim-x", cfg.dim_x)?;
+    cfg.dim_y = args.num("dim-y", cfg.dim_y)?;
     cfg.rpvo_max = args.num("rpvo-max", 1u32)?;
     cfg.throttling = !args.has("no-throttle");
     cfg.seed = args.num("seed", 0x5EEDu64)?;
@@ -101,6 +105,13 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
     // Engine parallelism: 0 = auto (available cores on big chips). The
     // result is identical for every shard count; this only trades speed.
     cfg.shards = args.num("shards", 0usize)?;
+    // Banding axis for the sharded engine: rows, cols, or auto (resolved
+    // from the built graph's predicted traffic split). Results are
+    // identical for every axis.
+    if let Some(a) = args.get("shard-axis") {
+        cfg.shard_axis = ShardAxis::from_name(a)
+            .ok_or_else(|| anyhow::anyhow!("unknown --shard-axis {a} (rows|cols|auto)"))?;
+    }
     // Mutation-stream wave cap: 0 = auto (group structurally independent
     // inserts per chip run), 1 = per-edge. Results are identical for
     // every setting; this only trades streaming throughput.
@@ -143,6 +154,7 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --scale tiny|small|medium   stand-in graph size (default tiny)\n\
                  \x20 --graph-file PATH           load an edge list instead\n\
                  \x20 --dim N                     chip is N x N cells (default 16)\n\
+                 \x20 --dim-x N  --dim-y M        rectangular chip (overrides --dim)\n\
                  \x20 --topo torus|mesh           NoC topology (default torus)\n\
                  \x20 --rpvo-max N                max RPVOs per rhizome (default 1)\n\
                  \x20 --build host|onchip         graph construction path: host-side fast\n\
@@ -156,6 +168,9 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --heatmap N                 sample congestion frames every N cycles\n\
                  \x20 --shards N                  engine worker threads (0 = auto; results\n\
                  \x20                             are identical for every shard count)\n\
+                 \x20 --shard-axis rows|cols|auto engine banding axis (auto picks from the\n\
+                 \x20                             built graph's traffic split; results are\n\
+                 \x20                             identical for every axis)\n\
                  \x20 --root V  --iters K  --trials T  --seed S\n\
                  \x20 --xla                       (verify) also check the PJRT oracle\n"
             );

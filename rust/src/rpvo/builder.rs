@@ -14,6 +14,7 @@
 //!    once the structure is complete, walking each member's RPVO through
 //!    its live ghost pointers.
 
+use crate::arch::band::ShardAxis;
 use crate::arch::chip::Chip;
 use crate::arch::config::{AllocPolicy, BuildMode};
 use crate::diffusive::handler::{Application, VertexMeta};
@@ -39,6 +40,16 @@ pub struct BuiltGraph {
     /// Vertices with more than one rhizome member.
     pub rhizomatic_vertices: u64,
     pub cutoff_chunk: u32,
+    /// Predicted NoC hop volume of the built structure along the X axis:
+    /// minimal-route |Δx| summed over every out-edge, ghost link, and
+    /// rhizome sibling link (torus-aware). Together with
+    /// [`BuiltGraph::link_hops_y`] this is the traffic split the builder
+    /// uses to resolve `ShardAxis::Auto` — row bands move the Y volume
+    /// across shard boundaries, column bands the X volume.
+    pub link_hops_x: u64,
+    /// Predicted NoC hop volume along the Y axis (see
+    /// [`BuiltGraph::link_hops_x`]).
+    pub link_hops_y: u64,
     /// Persistent edge-ingest state (allocator occupancy + selection
     /// counters) — see [`crate::rpvo::mutate`].
     pub ingest: Ingest,
@@ -113,6 +124,8 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
         objects,
         rhizomatic_vertices: rhizomatic,
         cutoff_chunk: cutoff,
+        link_hops_x: 0,
+        link_hops_y: 0,
         ingest: Ingest::new(alloc, g.n),
     };
     match cfg.build_mode {
@@ -168,7 +181,58 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
         }
     }
 
+    // -- 4. predicted traffic split -> banding-axis hint ------------------
+    let (hx, hy) = predicted_axis_hops(chip, &geo);
+    built.link_hops_x = hx;
+    built.link_hops_y = hy;
+    if cfg.shard_axis == ShardAxis::Auto {
+        // Row bands move the Y hop volume across shard boundaries, column
+        // bands the X volume: band along the axis that crosses less. An
+        // exact tie stays `Auto`, which `set_band_axis` resolves to the
+        // aspect-ratio guess. Bit-identical results either way — this is
+        // purely a locality decision.
+        let axis = if hy > hx {
+            ShardAxis::Cols
+        } else if hx > hy {
+            ShardAxis::Rows
+        } else {
+            ShardAxis::Auto
+        };
+        chip.set_band_axis(axis);
+    }
+
     Ok(built)
+}
+
+/// Predicted per-axis NoC hop volume of the built structure: for every
+/// out-edge, ghost link, and rhizome sibling link, the minimal-route
+/// (|Δx|, |Δy|) between the two owning cells (torus-aware), summed. This
+/// approximates the traffic a diffusion sweep puts on each axis, which is
+/// what the `ShardAxis::Auto` banding decision needs.
+pub fn predicted_axis_hops<A: Application>(chip: &Chip<A>, geo: &Geometry) -> (u64, u64) {
+    let mut hx = 0u64;
+    let mut hy = 0u64;
+    let mut add = |from: u32, to: u32| {
+        let (ax, ay) = geo.coords(from);
+        let (bx, by) = geo.coords(to);
+        hx += geo.delta(ax, bx, geo.dim_x).unsigned_abs();
+        hy += geo.delta(ay, by, geo.dim_y).unsigned_abs();
+    };
+    for (ci, cell) in chip.cells.iter().enumerate() {
+        let c = ci as u32;
+        for obj in &cell.objects {
+            for e in &obj.edges {
+                add(c, e.to.cc);
+            }
+            for g in &obj.ghosts {
+                add(c, g.cc);
+            }
+            for s in &obj.rhizome {
+                add(c, s.cc);
+            }
+        }
+    }
+    (hx, hy)
 }
 
 #[cfg(test)]
@@ -295,6 +359,41 @@ mod tests {
         let hub = chip.object(built.addr_of(0));
         assert_eq!(hub.meta.out_degree, 0);
         assert_eq!(hub.meta.rhizome_size, built.roots[0].len() as u32);
+    }
+
+    #[test]
+    fn auto_axis_banding_follows_predicted_traffic() {
+        // Random allocation on a tall torus puts most link displacement on
+        // the Y axis (|Δy| can reach dim_y/2 = 8 while |Δx| <= 2), so
+        // Auto must band along columns; the wide transpose must band
+        // along rows. Deterministic for a fixed cfg.seed.
+        let g = crate::graph::erdos::generate(200, 800, 3);
+        let mut cfg = ChipConfig::torus(4);
+        cfg.dim_y = 16;
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        assert!(
+            built.link_hops_y > built.link_hops_x,
+            "tall torus should be Y-heavy: x={} y={}",
+            built.link_hops_x,
+            built.link_hops_y
+        );
+        assert_eq!(chip.band_axis(), ShardAxis::Cols);
+
+        let mut cfg = ChipConfig::torus(4);
+        cfg.dim_x = 16;
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        let built = build(&mut chip, &g).unwrap();
+        assert!(built.link_hops_x > built.link_hops_y);
+        assert_eq!(chip.band_axis(), ShardAxis::Rows);
+
+        // An explicitly pinned axis is never overridden by the builder.
+        let mut cfg = ChipConfig::torus(4);
+        cfg.dim_y = 16;
+        cfg.shard_axis = ShardAxis::Rows;
+        let mut chip = Chip::new(cfg, Probe).unwrap();
+        build(&mut chip, &g).unwrap();
+        assert_eq!(chip.band_axis(), ShardAxis::Rows);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Determinism regression: the sharded parallel engine must be
 //! bit-for-bit identical to the serial engine — same `Metrics` (cycles,
 //! flit hops, action counts, every counter), same per-vertex results —
-//! for 1, 2, and 4 shards, on a real skewed dataset (R18 @ Tiny).
+//! for 1, 2, and 4 shards, on real skewed datasets (R18/WK @ Tiny).
 //!
 //! This is the contract that makes the parallel engine safe to enable by
 //! default: arbitration, credit-based flow control, and the outbox merge
@@ -9,6 +9,14 @@
 //! are unobservable (see `arch::chip` module docs for the argument).
 //! These runs also exercise the adaptive serial fallback: shards > 1
 //! takes the hybrid path, which must not change a single counter.
+//!
+//! The axis-invariance suite (`axis_invariance_*`) extends the contract
+//! to axis-adaptive banding: `Rows`, `Cols`, and `Auto` bandings at 1/2/4
+//! shards produce bitwise-identical whole-`Metrics` and per-vertex
+//! results for BFS/SSSP/CC/PageRank on R18 and WK. The env var
+//! `AMCCA_SHARD_AXIS` (rows|cols|auto) flips the *default* axis used by
+//! every other test in this file, so the CI matrix leg re-runs the whole
+//! suite — including the streaming-mutation tests — on column bands.
 //!
 //! The mutation suite extends the contract to the ingest subsystem:
 //! interleaved dynamic inserts (with incremental repair or live-graph
@@ -25,55 +33,140 @@
 //! pins that batching produced an identical on-chip structure).
 
 use amcca::apps::driver;
-use amcca::arch::config::ChipConfig;
+use amcca::arch::config::{ChipConfig, ShardAxis};
 use amcca::graph::datasets::{Dataset, Scale};
 use amcca::rpvo::mutate::MutationBatch;
 use amcca::stats::metrics::Metrics;
 
 const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
 
-fn cfg(shards: usize) -> ChipConfig {
+/// Default banding axis for the plain shard-count sweeps below. The CI
+/// matrix leg sets `AMCCA_SHARD_AXIS=cols` to re-run the whole suite —
+/// including the streaming-mutation tests — on column bands.
+fn default_axis() -> ShardAxis {
+    std::env::var("AMCCA_SHARD_AXIS")
+        .ok()
+        .and_then(|s| ShardAxis::from_name(&s))
+        .unwrap_or(ShardAxis::Rows)
+}
+
+fn cfg_on(shards: usize, axis: ShardAxis) -> ChipConfig {
     let mut cfg = ChipConfig::torus(16);
     cfg.seed = 7;
     cfg.shards = shards;
+    cfg.shard_axis = axis;
     cfg
 }
 
-#[test]
-fn bfs_identical_across_shard_counts() {
-    let g = Dataset::R18.build(Scale::Tiny);
+fn cfg(shards: usize) -> ChipConfig {
+    cfg_on(shards, default_axis())
+}
+
+/// The full axis-invariance grid: serial reference plus every banding
+/// axis at 2 and 4 shards.
+fn axis_grid() -> Vec<(usize, ShardAxis)> {
+    let mut grid = vec![(1, ShardAxis::Rows)];
+    for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+        for shards in [2usize, 4] {
+            grid.push((shards, axis));
+        }
+    }
+    grid
+}
+
+/// Run `run` over the grid and require bitwise-equal whole-`Metrics` and
+/// results everywhere (results are u32 words — f32 scores go through
+/// `to_bits`, pinning bit-exactness).
+fn assert_axis_invariant(
+    label: &str,
+    grid: &[(usize, ShardAxis)],
+    mut run: impl FnMut(ChipConfig) -> (Metrics, Vec<u32>),
+) {
     let mut reference: Option<(Metrics, Vec<u32>)> = None;
-    for shards in SHARD_COUNTS {
-        let (chip, built) = driver::run_bfs(cfg(shards), &g, 0).unwrap();
-        let levels = driver::bfs_levels(&chip, &built);
-        assert_eq!(driver::verify_bfs(&g, 0, &levels), 0, "shards={shards} wrong BFS");
+    for &(shards, axis) in grid {
+        let (metrics, results) = run(cfg_on(shards, axis));
         match &reference {
-            None => reference = Some((chip.metrics.clone(), levels)),
-            Some((m, l)) => {
-                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
-                assert_eq!(l, &levels, "levels diverged at shards={shards}");
+            None => reference = Some((metrics, results)),
+            Some((m, r)) => {
+                assert_eq!(m, &metrics, "{label}: metrics diverged at {axis:?} x {shards}");
+                assert_eq!(r, &results, "{label}: results diverged at {axis:?} x {shards}");
             }
         }
     }
 }
 
 #[test]
-fn sssp_identical_across_shard_counts() {
-    let mut g = Dataset::R18.build(Scale::Tiny);
-    g.randomize_weights(32, 11);
-    let mut reference: Option<(Metrics, Vec<u32>)> = None;
-    for shards in SHARD_COUNTS {
-        let (chip, built) = driver::run_sssp(cfg(shards), &g, 3).unwrap();
+fn axis_invariance_all_apps_r18() {
+    // BFS / SSSP / CC / PageRank on R18: whole-`Metrics` and per-vertex
+    // results bitwise identical across {Rows, Cols, Auto} x {1, 2, 4}.
+    let grid = axis_grid();
+    let g = Dataset::R18.build(Scale::Tiny);
+    assert_axis_invariant("bfs/R18", &grid, |c| {
+        let (chip, built) = driver::run_bfs(c, &g, 0).unwrap();
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &levels), 0, "wrong BFS");
+        (chip.metrics.clone(), levels)
+    });
+    let mut gw = Dataset::R18.build(Scale::Tiny);
+    gw.randomize_weights(32, 11);
+    assert_axis_invariant("sssp/R18", &grid, |c| {
+        let (chip, built) = driver::run_sssp(c, &gw, 3).unwrap();
         let dists = driver::sssp_dists(&chip, &built);
-        assert_eq!(driver::verify_sssp(&g, 3, &dists), 0, "shards={shards} wrong SSSP");
-        match &reference {
-            None => reference = Some((chip.metrics.clone(), dists)),
-            Some((m, d)) => {
-                assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
-                assert_eq!(d, &dists, "distances diverged at shards={shards}");
-            }
-        }
-    }
+        assert_eq!(driver::verify_sssp(&gw, 3, &dists), 0, "wrong SSSP");
+        (chip.metrics.clone(), dists)
+    });
+    let want_cc = amcca::apps::cc::reference_labels(&g);
+    assert_axis_invariant("cc/R18", &grid, |c| {
+        let (chip, built) = driver::run_cc(c, &g).unwrap();
+        let labels = driver::cc_labels(&chip, &built);
+        assert_eq!(labels, want_cc, "wrong components");
+        (chip.metrics.clone(), labels)
+    });
+    assert_axis_invariant("pagerank/R18", &grid, |c| {
+        let (chip, built) = driver::run_pagerank(c, &g, 4).unwrap();
+        let scores = driver::pagerank_scores(&chip, &built);
+        let (bad, max_rel) = driver::verify_pagerank(&g, 4, &scores);
+        assert_eq!(bad, 0, "pagerank diverged (max_rel={max_rel})");
+        (chip.metrics.clone(), scores.iter().map(|s| s.to_bits()).collect())
+    });
+}
+
+#[test]
+fn axis_invariance_all_apps_wk_with_rhizomes() {
+    // The hardest engine paths on the WK hub dataset with rhizomes
+    // (rpvo_max = 8): consistency traffic plus congestion throttling,
+    // bitwise identical across axes and shard counts.
+    let grid = [
+        (1, ShardAxis::Rows),
+        (2, ShardAxis::Cols),
+        (4, ShardAxis::Rows),
+        (4, ShardAxis::Cols),
+    ];
+    let rh = |mut c: ChipConfig| {
+        c.rpvo_max = 8;
+        c
+    };
+    let g = Dataset::WK.build(Scale::Tiny);
+    assert_axis_invariant("bfs/WK", &grid, |c| {
+        let (chip, built) = driver::run_bfs(rh(c), &g, 0).unwrap();
+        assert!(built.rhizomatic_vertices >= 1, "WK hub must be rhizomatic");
+        (chip.metrics.clone(), driver::bfs_levels(&chip, &built))
+    });
+    let mut gw = Dataset::WK.build(Scale::Tiny);
+    gw.randomize_weights(32, 11);
+    assert_axis_invariant("sssp/WK", &grid, |c| {
+        let (chip, built) = driver::run_sssp(rh(c), &gw, 3).unwrap();
+        (chip.metrics.clone(), driver::sssp_dists(&chip, &built))
+    });
+    assert_axis_invariant("cc/WK", &grid, |c| {
+        let (chip, built) = driver::run_cc(rh(c), &g).unwrap();
+        (chip.metrics.clone(), driver::cc_labels(&chip, &built))
+    });
+    assert_axis_invariant("pagerank/WK", &grid, |c| {
+        let (chip, built) = driver::run_pagerank(rh(c), &g, 3).unwrap();
+        let scores = driver::pagerank_scores(&chip, &built);
+        (chip.metrics.clone(), scores.iter().map(|s| s.to_bits()).collect())
+    });
 }
 
 #[test]
@@ -183,8 +276,18 @@ fn mutations_then_recompute_identical_across_shard_counts_pagerank() {
     }
 }
 
-fn wave_cfg(shards: usize, wave: usize, on_chip: bool) -> ChipConfig {
-    let mut c = cfg(shards);
+/// Shard/axis points for the streaming-mutation suites: the usual shard
+/// sweep on the (env-selectable) default axis plus an explicit point on
+/// the other axis, so wave batching is exercised on both row and column
+/// bands in every run.
+fn wave_grid() -> Vec<(usize, ShardAxis)> {
+    let d = default_axis();
+    let other = if d == ShardAxis::Cols { ShardAxis::Rows } else { ShardAxis::Cols };
+    vec![(1, d), (2, d), (4, d), (4, other)]
+}
+
+fn wave_cfg(shards: usize, axis: ShardAxis, wave: usize, on_chip: bool) -> ChipConfig {
+    let mut c = cfg_on(shards, axis);
     c.ingest_wave = wave;
     if on_chip {
         c.build_mode = amcca::arch::config::BuildMode::OnChip;
@@ -205,21 +308,21 @@ fn batched_ingest_equals_sequential_bfs_onchip() {
     let mut across_modes: Option<Vec<u32>> = None;
     for wave in [1usize, 0] {
         let mut reference: Option<(Metrics, Vec<u32>)> = None;
-        for shards in SHARD_COUNTS {
+        for (shards, axis) in wave_grid() {
             let (mut chip, mut built) =
-                driver::run_bfs(wave_cfg(shards, wave, true), &g, 0).unwrap();
+                driver::run_bfs(wave_cfg(shards, axis, wave, true), &g, 0).unwrap();
             assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
             let levels = driver::bfs_levels(&chip, &built);
             assert_eq!(
                 driver::verify_bfs(&gm, 0, &levels),
                 0,
-                "wave={wave} shards={shards}: repair != from-scratch recompute"
+                "wave={wave} {axis:?} x {shards}: repair != from-scratch recompute"
             );
             match &reference {
                 None => reference = Some((chip.metrics.clone(), levels.clone())),
                 Some((m, l)) => {
-                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
-                    assert_eq!(l, &levels, "levels diverged wave={wave} shards={shards}");
+                    assert_eq!(m, &chip.metrics, "metrics diverged w={wave} {axis:?}x{shards}");
+                    assert_eq!(l, &levels, "levels diverged w={wave} {axis:?}x{shards}");
                 }
             }
             match &across_modes {
@@ -242,21 +345,21 @@ fn batched_ingest_equals_sequential_sssp() {
     let mut across_modes: Option<Vec<u32>> = None;
     for wave in [1usize, 0] {
         let mut reference: Option<(Metrics, Vec<u32>)> = None;
-        for shards in SHARD_COUNTS {
+        for (shards, axis) in wave_grid() {
             let (mut chip, mut built) =
-                driver::run_sssp(wave_cfg(shards, wave, false), &g, 3).unwrap();
+                driver::run_sssp(wave_cfg(shards, axis, wave, false), &g, 3).unwrap();
             assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
             let dists = driver::sssp_dists(&chip, &built);
             assert_eq!(
                 driver::verify_sssp(&gm, 3, &dists),
                 0,
-                "wave={wave} shards={shards}: repair != from-scratch recompute"
+                "wave={wave} {axis:?} x {shards}: repair != from-scratch recompute"
             );
             match &reference {
                 None => reference = Some((chip.metrics.clone(), dists.clone())),
                 Some((m, d)) => {
-                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
-                    assert_eq!(d, &dists, "distances diverged wave={wave} shards={shards}");
+                    assert_eq!(m, &chip.metrics, "metrics diverged w={wave} {axis:?}x{shards}");
+                    assert_eq!(d, &dists, "distances diverged w={wave} {axis:?}x{shards}");
                 }
             }
             match &across_modes {
@@ -279,17 +382,17 @@ fn batched_ingest_equals_sequential_cc() {
     let mut across_modes: Option<Vec<u32>> = None;
     for wave in [1usize, 0] {
         let mut reference: Option<(Metrics, Vec<u32>)> = None;
-        for shards in SHARD_COUNTS {
+        for (shards, axis) in wave_grid() {
             let (mut chip, mut built) =
-                driver::run_cc(wave_cfg(shards, wave, false), &g).unwrap();
+                driver::run_cc(wave_cfg(shards, axis, wave, false), &g).unwrap();
             assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
             let labels = driver::cc_labels(&chip, &built);
-            assert_eq!(labels, want, "wave={wave} shards={shards}: wrong components");
+            assert_eq!(labels, want, "wave={wave} {axis:?} x {shards}: wrong components");
             match &reference {
                 None => reference = Some((chip.metrics.clone(), labels.clone())),
                 Some((m, l)) => {
-                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
-                    assert_eq!(l, &labels, "labels diverged wave={wave} shards={shards}");
+                    assert_eq!(m, &chip.metrics, "metrics diverged w={wave} {axis:?}x{shards}");
+                    assert_eq!(l, &labels, "labels diverged w={wave} {axis:?}x{shards}");
                 }
             }
             match &across_modes {
@@ -315,20 +418,20 @@ fn batched_ingest_equals_sequential_pagerank_after_recompute() {
     let mut across_modes: Option<Vec<f32>> = None;
     for wave in [1usize, 0] {
         let mut reference: Option<(Metrics, Vec<f32>)> = None;
-        for shards in SHARD_COUNTS {
+        for (shards, axis) in wave_grid() {
             let (mut chip, mut built) =
-                driver::run_pagerank(wave_cfg(shards, wave, true), &g, 4).unwrap();
+                driver::run_pagerank(wave_cfg(shards, axis, wave, true), &g, 4).unwrap();
             let repaired = driver::apply_mutations(&mut chip, &mut built, &batch).unwrap();
             assert!(!repaired, "PageRank must fall back to live-graph recompute");
             driver::recompute_pagerank(&mut chip, &built).unwrap();
             let scores = driver::pagerank_scores(&chip, &built);
             let (bad, max_rel) = driver::verify_pagerank(&gm, 4, &scores);
-            assert_eq!(bad, 0, "wave={wave} shards={shards}: diverged (max_rel={max_rel})");
+            assert_eq!(bad, 0, "wave={wave} {axis:?} x {shards}: diverged (max_rel={max_rel})");
             match &reference {
                 None => reference = Some((chip.metrics.clone(), scores.clone())),
                 Some((m, s)) => {
-                    assert_eq!(m, &chip.metrics, "metrics diverged wave={wave} shards={shards}");
-                    assert_eq!(s, &scores, "scores diverged bitwise wave={wave} shards={shards}");
+                    assert_eq!(m, &chip.metrics, "metrics diverged w={wave} {axis:?}x{shards}");
+                    assert_eq!(s, &scores, "scores diverged w={wave} {axis:?}x{shards}");
                 }
             }
             match &across_modes {
@@ -360,25 +463,6 @@ fn onchip_construction_identical_across_shard_counts() {
                 assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}");
                 assert_eq!(l, &levels, "levels diverged at shards={shards}");
             }
-        }
-    }
-}
-
-#[test]
-fn rhizomes_and_throttling_identical_across_shard_counts() {
-    // The hardest engine paths together: rhizome consistency traffic plus
-    // congestion throttling (which reads neighbour state across shard
-    // boundaries through the published snapshots).
-    let g = Dataset::WK.build(Scale::Tiny);
-    let mut reference: Option<Metrics> = None;
-    for shards in SHARD_COUNTS {
-        let mut c = cfg(shards);
-        c.rpvo_max = 8;
-        let (chip, built) = driver::run_bfs(c, &g, 0).unwrap();
-        assert!(built.rhizomatic_vertices >= 1, "WK hub must be rhizomatic");
-        match &reference {
-            None => reference = Some(chip.metrics.clone()),
-            Some(m) => assert_eq!(m, &chip.metrics, "metrics diverged at shards={shards}"),
         }
     }
 }

@@ -3,6 +3,7 @@
 //! seed-reproduction protocol).
 
 use amcca::apps::driver;
+use amcca::arch::band::{BandMap, ShardAxis};
 use amcca::arch::config::ChipConfig;
 use amcca::graph::model::HostGraph;
 use amcca::noc::routing::trace;
@@ -34,6 +35,11 @@ fn random_cfg(rng: &mut Rng) -> ChipConfig {
     cfg.ghost_arity = 1 + rng.usize_below(3);
     cfg.vc_buffer = 1 + rng.usize_below(4);
     cfg.seed = rng.next_u64();
+    // Engine banding axis is unobservable in results; sample it so every
+    // property below also pins axis invariance.
+    cfg.shard_axis =
+        [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto][rng.usize_below(3)];
+    cfg.shards = rng.usize_below(4); // 0 = auto
     cfg
 }
 
@@ -171,6 +177,68 @@ fn prop_dynamic_insert_incremental_bfs() {
         }
         let got = driver::bfs_levels(&chip, &built);
         assert_eq!(driver::verify_bfs(&g, root, &got), 0);
+    });
+}
+
+/// The band partition behind the sharded engine: for any grid, axis, and
+/// shard count, the `BandMap` is contiguous along its axis, covers every
+/// cell exactly once with dense local indices, balances band sizes within
+/// one grid line, and its ownership agrees with the serial engine's
+/// (single-shard) view.
+#[test]
+fn prop_band_map_partition() {
+    qcheck("band_map_partition", |rng| {
+        let dim_x = 2 + rng.below(40) as u32;
+        let dim_y = 2 + rng.below(40) as u32;
+        let axis = if rng.chance(0.5) { ShardAxis::Rows } else { ShardAxis::Cols };
+        let lines = if axis == ShardAxis::Cols { dim_x } else { dim_y };
+        let nshards = 1 + rng.usize_below(lines.min(16) as usize);
+        let bm = BandMap::new(axis, dim_x, dim_y, nshards);
+        assert_eq!(bm.nshards(), nshards);
+        let n = (dim_x * dim_y) as usize;
+
+        // Bands are contiguous in lines, cover 0..lines exactly, and
+        // balance within one line.
+        let bounds = bm.bounds();
+        assert_eq!(bounds[0], 0);
+        assert_eq!(bounds[nshards], lines);
+        let sizes: Vec<u32> = bounds.windows(2).map(|w| w[1] - w[0]).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(*min >= 1, "empty band: {sizes:?}");
+        assert!(max - min <= 1, "unbalanced bands: {sizes:?}");
+
+        // Every cell is owned exactly once, local indices are dense and
+        // agree with `local_of`, and ownership matches the cell's
+        // axis-line owner.
+        let mut owner = vec![usize::MAX; n];
+        for k in 0..nshards {
+            let mut count = 0usize;
+            bm.for_each_cell(k, |local, c| {
+                assert_eq!(local, count, "local order not dense");
+                assert_eq!(bm.shard_of(c), k);
+                assert_eq!(bm.local_of(c), local);
+                assert_eq!(owner[c as usize], usize::MAX, "cell {c} covered twice");
+                owner[c as usize] = k;
+                count += 1;
+            });
+            assert_eq!(count as u32, bm.len_of(k));
+            let line = |c: u32| if axis == ShardAxis::Cols { c % dim_x } else { c / dim_x };
+            bm.for_each_cell(k, |_, c| {
+                assert!(
+                    (bounds[k]..bounds[k + 1]).contains(&line(c)),
+                    "cell {c} outside band {k}'s line range"
+                );
+            });
+        }
+        assert!(owner.iter().all(|&o| o != usize::MAX), "cell never covered");
+
+        // Agrees with the serial engine's ownership: the single-shard map
+        // owns everything at shard 0 with identity local indexing.
+        let serial = BandMap::new(axis, dim_x, dim_y, 1);
+        for c in 0..n as u32 {
+            assert_eq!(serial.shard_of(c), 0);
+            assert_eq!(serial.local_of(c), c as usize);
+        }
     });
 }
 
