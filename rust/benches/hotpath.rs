@@ -263,6 +263,57 @@ fn main() {
         }
     }
 
+    // --- streaming growth: sprout rhizome members for a runtime hub --------
+    // The same live-chip stream, but skewed into one initially-quiet
+    // vertex so it BECOMES a hub mid-stream (crossing Eq.-1 chunk
+    // boundaries). growth=off funnels every new in-edge through the
+    // build-time members — the re-concentration failure mode — while
+    // growth=on sprouts members at each boundary. Medges/s is the ingest
+    // headline; the post-stream p99 in-degree-share tail is the Fig.-9
+    // flattening metric growth exists to cut.
+    {
+        use amcca::arch::config::BuildMode;
+        use amcca::rpvo::mutate::MutationBatch;
+        let g = Dataset::R18.build(Scale::Tiny);
+        let in_deg = g.in_degrees();
+        let hub = (0..g.n).min_by_key(|&v| in_deg[v as usize]).unwrap();
+        let mut edges = MutationBatch::random(g.n, 256, 1, 0x6047).edges;
+        edges.extend((0..512u32).map(|k| {
+            let u = (hub + 1 + k) % g.n;
+            (if u == hub { (hub + 1) % g.n } else { u }, hub, 1)
+        }));
+        let batch = MutationBatch { edges };
+        for (label, grow) in [("growth=off", false), ("growth=on", true)] {
+            let mut cfg = ChipConfig::torus(32);
+            cfg.build_mode = BuildMode::OnChip;
+            cfg.rpvo_max = 8;
+            cfg.rhizome_growth = grow;
+            let mut samples: Vec<std::time::Duration> = Vec::new();
+            let mut p99 = 0.0f64;
+            let mut sprouted = 0u64;
+            for _ in 0..3 {
+                let (mut chip, mut built) = driver::run_bfs(cfg.clone(), &g, 0).unwrap();
+                let t0 = Instant::now();
+                driver::apply_mutations(&mut chip, &mut built, &batch).unwrap();
+                samples.push(t0.elapsed());
+                p99 = amcca::util::percentile(&driver::in_degree_shares(&chip, &built), 99.0);
+                sprouted = chip.metrics.members_sprouted;
+            }
+            assert!(sprouted > 0 || !grow, "growth=on must sprout on the hub stream");
+            samples.sort();
+            let dur = samples[samples.len() / 2];
+            let meps = batch.edges.len() as f64 / dur.as_secs_f64() / 1e6;
+            let name = format!("ingest-growth R18@Tiny 32x32 [{label}]");
+            t.row(&[
+                name.clone(),
+                format!("{dur:?}"),
+                format!("{meps:.3} Medges/s ({sprouted} sprouts, p99 share {p99:.0})"),
+            ]);
+            json.push((name, meps));
+            json.push((format!("{name} p99-share"), p99));
+        }
+    }
+
     // --- PJRT artifact execution (L1/L2 path) ------------------------------
     if amcca::runtime::pjrt::PjrtRuntime::available()
         && !amcca::runtime::artifacts::available_sizes(amcca::runtime::artifacts::Step::RelaxStep)

@@ -7,6 +7,13 @@
 //! lands first (monotonic relaxation). With rhizomes, the new level is
 //! also broadcast over the rhizome-links (Listing 9) so every member
 //! diffuses its own out-edge chunk.
+//!
+//! Runtime rhizome growth (`ChipConfig::rhizome_growth`) needs no BFS
+//! code: a sprouted member is seeded with a sibling's settled level, the
+//! repair hook below germinates at whichever member the new edge points
+//! to (including a sprout), and any later improvement re-broadcasts over
+//! the widened ring — the same monotonic-relaxation argument that makes
+//! the repair wave-safe covers growth.
 
 use crate::diffusive::action::{DiffuseSpec, RepairSpec, Work};
 use crate::diffusive::handler::{Application, VertexMeta};

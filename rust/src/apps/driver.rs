@@ -140,6 +140,23 @@ pub fn cc_labels(chip: &Chip<crate::apps::cc::Cc>, built: &BuiltGraph) -> Vec<u3
     labels
 }
 
+/// Per-member in-degree shares over every member root, one sample per
+/// rhizome member — the Fig.-9 flattening metric. A skewed vertex split
+/// over a healthy rhizome shows a flat profile; a vertex that *became* a
+/// hub after construction (streaming mutation without rhizome growth)
+/// shows a re-concentrated tail. The experiment runner samples this
+/// before and after a mutation stream so the flattening — and the effect
+/// of `--rhizome-growth` — lands in the summary output.
+pub fn in_degree_shares<A: Application>(chip: &Chip<A>, built: &BuiltGraph) -> Vec<f64> {
+    let mut out = Vec::with_capacity(built.roots.iter().map(|m| m.len()).sum());
+    for members in &built.roots {
+        for &a in members {
+            out.push(chip.object(a).meta.in_degree_share as f64);
+        }
+    }
+    out
+}
+
 // ----------------------------------------------------------- mutation --
 
 /// Stream a mutation batch through a live chip in waves of structurally

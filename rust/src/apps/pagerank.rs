@@ -21,6 +21,14 @@
 //! Because wave batching is pinned to produce a bit-identical structure,
 //! the recomputed scores are bit-identical too, for every
 //! `ChipConfig::ingest_wave` setting.
+//!
+//! The recompute also rebalances shares over rhizomes widened at runtime
+//! (`ChipConfig::rhizome_growth`): every object's state re-initializes
+//! from its live metadata, so a sprouted member accumulates exactly its
+//! own `in_degree_share` (the in-edges that point at it — zero at birth,
+//! streamed bumps after) and the AND gate sizes itself from the grown
+//! `rhizome_size` the ring splices left on every member. No
+//! growth-specific PageRank code exists, by construction.
 
 use std::collections::VecDeque;
 

@@ -23,7 +23,16 @@
 //! consistent. Host-side member selection and the shared tree-walk live
 //! in [`crate::rpvo::mutate`]; graph construction with
 //! `ChipConfig::build_mode == OnChip` is nothing but a batch of these
-//! actions followed by `run`.
+//! actions followed by `run`. With `ChipConfig::rhizome_growth` the
+//! ingest subsystem also *sprouts rhizome members at runtime*: the
+//! `SproutMember` / `RingSplice` action pair splices a freshly sprouted
+//! root into every sibling's rhizome ring and closes the sprout's own
+//! ring, each splice executing at its member's locality (the sprouted
+//! root itself is installed host-side between runs, under the same
+//! covenant construction uses for member roots — so runtime root
+//! allocation never mutates a live shard's arena mid-cycle; see
+//! [`crate::rpvo::rhizome`] for the consistency protocol and its
+//! ordering argument).
 //!
 //! # Sharded parallel engine
 //!
@@ -450,14 +459,7 @@ impl<A: Application> Chip<A> {
     /// (e.g. an incremental bfs-action) is the caller's to germinate —
     /// [`crate::rpvo::mutate`] wraps both ends into the ingest subsystem.
     pub fn germinate_insert_edge(&mut self, src_root: Address, to: Address, weight: u32) {
-        let packed = to.pack();
-        let msg = ActionMsg {
-            kind: ActionKind::InsertEdge,
-            target: src_root.slot,
-            payload: (packed >> 32) as u32,
-            aux: packed as u32,
-            ext: weight,
-        };
+        let msg = ActionMsg::with_addr(ActionKind::InsertEdge, src_root.slot, to, weight);
         self.cells[src_root.cc as usize].action_q.push_back(msg);
         self.mark_host(src_root.cc);
     }
@@ -475,6 +477,18 @@ impl<A: Application> Chip<A> {
         };
         self.cells[root.cc as usize].action_q.push_back(msg);
         self.mark_host(root.cc);
+    }
+
+    /// Send a SproutMember action to an existing rhizome member: vertex
+    /// growth notification carrying the freshly sprouted root's packed
+    /// address. The sibling splices its own ring at its own locality and
+    /// acknowledges with a RingSplice back to the sprout, so the widened
+    /// ring closes without a host-side stop-the-world (see the protocol
+    /// in [`crate::rpvo::rhizome`]).
+    pub fn germinate_sprout(&mut self, sibling: Address, new_member: Address) {
+        let msg = ActionMsg::with_addr(ActionKind::SproutMember, sibling.slot, new_member, 0);
+        self.cells[sibling.cc as usize].action_q.push_back(msg);
+        self.mark_host(sibling.cc);
     }
 
     /// Run until the termination detector reports, or `max_cycles`.
@@ -1369,6 +1383,22 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                 self.metrics.meta_bumps += 1;
                 self.metrics.sram_writes += 1;
             }
+            ActionKind::SproutMember => {
+                busy += self.handle_sprout_member(c, &msg);
+            }
+            ActionKind::RingSplice => {
+                // An existing member's ring-closing ack: splice its
+                // address into the freshly sprouted root's ring and grow
+                // the sprout's width by one (it was installed counting
+                // only itself; each sibling acks exactly once).
+                let sibling = msg.operand_addr();
+                let obj = &mut self.cells.at_mut(i).objects[slot];
+                obj.rhizome.push(sibling);
+                obj.meta.rhizome_size += 1;
+                self.metrics.ring_splices += 1;
+                self.metrics.sram_writes += 1;
+                busy += 1;
+            }
         }
         let cell = self.cells.at_mut(i);
         cell.busy_until = now + busy as u64;
@@ -1382,7 +1412,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     /// new ghost *on this cell* when the tree has room. Returns the
     /// compute cycles charged.
     fn handle_insert_edge(&mut self, c: CellId, msg: &ActionMsg) -> u32 {
-        let to = Address::unpack(((msg.payload as u64) << 32) | msg.aux as u64);
+        let to = msg.operand_addr();
         let weight = msg.ext;
         let slot = msg.target as usize;
         let chunk = self.cfg.local_edgelist_size;
@@ -1449,9 +1479,64 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             if self.inject(c, g, relay) {
                 self.metrics.messages_sent += 1;
             } else {
-                self.cells.at_mut(i).action_q.push_back(relay); // retry later
+                // Retry the ORIGINAL action next cycle — re-enqueueing
+                // the relay itself would re-execute it against *this*
+                // cell's arena, where its slot indexes a different
+                // object. Rewind the round-robin cursor so the retry
+                // re-picks the same child.
+                let cell = self.cells.at_mut(i);
+                cell.objects[slot].relay_rr = cell.objects[slot].relay_rr.wrapping_sub(1);
+                cell.action_q.push_back(*msg);
             }
             let cell = self.cells.at_mut(i);
+            Self::mark(&mut self.st.next, cell, c, epoch);
+        }
+        2
+    }
+
+    /// Handle a SproutMember action (runtime rhizome growth, §3.2 meets
+    /// §7): the vertex this member belongs to sprouted a new member whose
+    /// root address rides packed in (payload, aux). Splice it into this
+    /// member's rhizome ring, bump the local width, and acknowledge with
+    /// a RingSplice carrying this member's own address back to the
+    /// sprout, so the new ring closes at the data's locality. The splice
+    /// is guarded (idempotent), so an ack that could not be injected this
+    /// cycle retries by re-executing the whole action. Returns the
+    /// compute cycles charged.
+    fn handle_sprout_member(&mut self, c: CellId, msg: &ActionMsg) -> u32 {
+        let new_member = msg.operand_addr();
+        let slot = msg.target as usize;
+        let i = self.idx(c);
+        {
+            let obj = &mut self.cells.at_mut(i).objects[slot];
+            if !obj.rhizome.contains(&new_member) {
+                obj.rhizome.push(new_member);
+                obj.meta.rhizome_size += 1;
+                self.metrics.ring_splices += 1;
+                self.metrics.sram_writes += 1;
+            }
+        }
+        let ack = ActionMsg::with_addr(
+            ActionKind::RingSplice,
+            new_member.slot,
+            Address::new(c, msg.target),
+            0,
+        );
+        let epoch = self.now + 1;
+        if new_member.cc == c {
+            let cell = self.cells.at_mut(i);
+            cell.action_q.push_back(ack);
+            self.metrics.messages_local += 1;
+            Self::mark(&mut self.st.next, cell, c, epoch);
+        } else if self.inject(c, new_member, ack) {
+            self.metrics.messages_sent += 1;
+            let cell = self.cells.at_mut(i);
+            Self::mark(&mut self.st.next, cell, c, epoch);
+        } else {
+            // Local port full: retry next cycle (only the ack re-runs;
+            // the splice above is idempotent).
+            let cell = self.cells.at_mut(i);
+            cell.action_q.push_back(*msg);
             Self::mark(&mut self.st.next, cell, c, epoch);
         }
         2
@@ -1951,6 +2036,38 @@ mod tests {
         for &t in &targets {
             assert_eq!(chip.object(t).state, 8, "edge at {t} traversed");
         }
+    }
+
+    #[test]
+    fn sprout_ring_splice_protocol_closes_rings() {
+        // Runtime rhizome growth, engine half: each existing member
+        // splices the sprout into its own ring and acks a RingSplice so
+        // the sprout's ring closes message-by-message.
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let m0 = chip.install(0, Object::new_root(7, 0, 0));
+        let m1 = chip.install(15, Object::new_root(7, 1, 0));
+        chip.object_mut(m0).rhizome.push(m1);
+        chip.object_mut(m0).meta.rhizome_size = 2;
+        chip.object_mut(m1).rhizome.push(m0);
+        chip.object_mut(m1).meta.rhizome_size = 2;
+        // The sprout is installed host-side, born counting only itself.
+        let sprout = chip.install(10, Object::new_root(7, 2, 0));
+        chip.object_mut(sprout).meta.rhizome_size = 1;
+        chip.germinate_sprout(m0, sprout);
+        chip.germinate_sprout(m1, sprout);
+        chip.run().unwrap();
+        for (a, want) in [(m0, vec![m1, sprout]), (m1, vec![m0, sprout])] {
+            let o = chip.object(a);
+            assert_eq!(o.meta.rhizome_size, 3, "sibling width bumped");
+            assert_eq!(o.rhizome, want, "sprout spliced into sibling ring");
+        }
+        let s = chip.object(sprout);
+        assert_eq!(s.meta.rhizome_size, 3, "one ack per sibling");
+        assert_eq!(s.rhizome.len(), 2);
+        assert!(s.rhizome.contains(&m0) && s.rhizome.contains(&m1));
+        assert_eq!(chip.metrics.ring_splices, 4, "2 sibling splices + 2 acks");
     }
 
     #[test]

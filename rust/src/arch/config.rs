@@ -68,6 +68,18 @@ pub struct ChipConfig {
     pub ghost_arity: usize,
     /// Max RPVOs per rhizome (Eq. 1). 1 = plain RPVO, no rhizomes.
     pub rpvo_max: u32,
+    /// Grow rhizomes at runtime (`--rhizome-growth on`): when a streamed
+    /// in-edge crosses an Eq.-1 chunk boundary its vertex's build-time
+    /// width cannot absorb (and `rpvo_max` still has room), the ingest
+    /// subsystem sprouts a fresh member root — placed by the live
+    /// allocator under the construction policy — and splices it into
+    /// every sibling's rhizome ring (`SproutMember`/`RingSplice` actions
+    /// on the on-chip path; see `rpvo::rhizome` for the consistency
+    /// protocol). Off by default: widths stay frozen at build-time
+    /// sizing, the pre-growth behaviour. Results remain bit-identical
+    /// across shard counts, banding axes, and ingest-wave caps either
+    /// way; this flag only changes *which* structure the stream builds.
+    pub rhizome_growth: bool,
     /// Allocation policy (Fig. 4).
     pub alloc: AllocPolicy,
     /// Host-side vs message-driven graph construction (see [`BuildMode`]).
@@ -118,6 +130,7 @@ impl ChipConfig {
             local_edgelist_size: 16,
             ghost_arity: 2,
             rpvo_max: 1,
+            rhizome_growth: false,
             alloc: AllocPolicy::Mixed,
             build_mode: BuildMode::Host,
             ingest_wave: 0,

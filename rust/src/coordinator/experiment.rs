@@ -14,7 +14,7 @@ use crate::graph::model::HostGraph;
 use crate::rpvo::builder::BuiltGraph;
 use crate::rpvo::mutate::MutationBatch;
 use crate::stats::heatmap::Heatmap;
-use crate::stats::histogram::ChannelContention;
+use crate::stats::histogram::{ChannelContention, Histogram, ShareStats};
 use crate::stats::metrics::Metrics;
 
 /// Seed perturbation for the mutation stream (so the streamed edges are
@@ -97,6 +97,20 @@ impl Experiment {
     }
 }
 
+/// Pre/post-stream view of the per-member in-degree-share distribution
+/// (the Fig.-9 flattening metric): how evenly the rhizomes spread each
+/// vertex's in-degree load before and after the mutation stream — and,
+/// with `--rhizome-growth on`, how much runtime sprouting flattened the
+/// tail that streamed hubs would otherwise re-concentrate. Both
+/// histograms share one bin range so they compare bin-for-bin.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub shares_pre: Histogram,
+    pub shares_post: Histogram,
+    pub stats_pre: ShareStats,
+    pub stats_post: ShareStats,
+}
+
 /// Everything a figure harness needs from one experiment.
 #[derive(Clone, Debug)]
 pub struct Outcome {
@@ -107,6 +121,8 @@ pub struct Outcome {
     pub rhizomatic_vertices: u64,
     pub objects: u64,
     pub verified_mismatches: usize,
+    /// Present iff the run streamed mutations (`Experiment::mutations`).
+    pub stream: Option<StreamReport>,
 }
 
 /// Run the experiment; returns the minimum-cycles trial's outcome.
@@ -129,8 +145,16 @@ pub fn run(exp: &Experiment, g: &HostGraph) -> anyhow::Result<Outcome> {
     Ok(best.expect("at least one trial"))
 }
 
-/// Streaming-mutation phase shared by every app arm: stream the random
-/// edge batch through the live chip and return the mutated reference
+/// One streamed run's worth of mutation bookkeeping: the mutated
+/// reference graph to verify against plus the pre/post share report.
+struct Mutated {
+    graph: HostGraph,
+    report: StreamReport,
+}
+
+/// Streaming-mutation phase shared by every app arm: sample the
+/// per-member in-degree-share distribution, stream the random edge batch
+/// through the live chip, sample again, and return the mutated reference
 /// graph to verify against (`None` for static runs). The batch is seeded
 /// from the *experiment* seed, not the per-trial perturbed seed — trials
 /// vary allocation randomness only (§A.2), so every trial must solve the
@@ -141,24 +165,37 @@ fn mutate_phase<A: Application>(
     built: &mut BuiltGraph,
     g: &HostGraph,
     max_w: u32,
-) -> anyhow::Result<Option<HostGraph>> {
+) -> anyhow::Result<Option<Mutated>> {
     if exp.mutations == 0 {
         return Ok(None);
     }
+    let pre = driver::in_degree_shares(chip, built);
     let batch = MutationBatch::random(g.n, exp.mutations, max_w, exp.cfg.seed ^ MUTATION_SEED);
     let mut gm = g.clone();
     batch.mirror_into(&mut gm);
     driver::apply_mutations(chip, built, &batch)?;
-    Ok(Some(gm))
+    let post = driver::in_degree_shares(chip, built);
+    // One shared range (Fig. 9 uses 25 bins) so pre and post compare
+    // bin-for-bin; growth widens the member population, so the post
+    // histogram may hold more samples than the pre one.
+    let hi = pre.iter().chain(&post).copied().fold(1.0f64, f64::max);
+    let report = StreamReport {
+        shares_pre: Histogram::build(&pre, 25, 0.0, hi),
+        shares_post: Histogram::build(&post, 25, 0.0, hi),
+        stats_pre: ShareStats::from_samples(&pre),
+        stats_post: ShareStats::from_samples(&post),
+    };
+    Ok(Some(Mutated { graph: gm, report }))
 }
 
 fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<Outcome> {
     let params = EnergyParams::default();
-    let (metrics, energy, contention, heatmap, rhiz, objects, mismatches) = match exp.app {
+    let (metrics, energy, contention, heatmap, rhiz, objects, mismatches, stream) = match exp.app
+    {
         AppKind::Bfs => {
             let (mut chip, mut built) = driver::run_bfs(cfg.clone(), g, exp.root)?;
             let mutated = mutate_phase(exp, &mut chip, &mut built, g, 1)?;
-            let reference = mutated.as_ref().unwrap_or(g);
+            let reference = mutated.as_ref().map_or(g, |m| &m.graph);
             let mism = if exp.verify {
                 driver::verify_bfs(reference, exp.root, &driver::bfs_levels(&chip, &built))
             } else {
@@ -172,12 +209,13 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
                 built.rhizomatic_vertices,
                 built.objects,
                 mism,
+                mutated.map(|m| m.report),
             )
         }
         AppKind::Sssp => {
             let (mut chip, mut built) = driver::run_sssp(cfg.clone(), g, exp.root)?;
             let mutated = mutate_phase(exp, &mut chip, &mut built, g, 16)?;
-            let reference = mutated.as_ref().unwrap_or(g);
+            let reference = mutated.as_ref().map_or(g, |m| &m.graph);
             let mism = if exp.verify {
                 driver::verify_sssp(reference, exp.root, &driver::sssp_dists(&chip, &built))
             } else {
@@ -191,12 +229,13 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
                 built.rhizomatic_vertices,
                 built.objects,
                 mism,
+                mutated.map(|m| m.report),
             )
         }
         AppKind::Cc => {
             let (mut chip, mut built) = driver::run_cc(cfg.clone(), g)?;
             let mutated = mutate_phase(exp, &mut chip, &mut built, g, 1)?;
-            let reference = mutated.as_ref().unwrap_or(g);
+            let reference = mutated.as_ref().map_or(g, |m| &m.graph);
             let mism = if exp.verify {
                 let want = crate::apps::cc::reference_labels(reference);
                 driver::cc_labels(&chip, &built).iter().zip(&want).filter(|(a, b)| a != b).count()
@@ -211,6 +250,7 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
                 built.rhizomatic_vertices,
                 built.objects,
                 mism,
+                mutated.map(|m| m.report),
             )
         }
         AppKind::PageRank => {
@@ -221,7 +261,7 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
                 // structure is mutated; recompute on it (rebuild-free).
                 driver::recompute_pagerank(&mut chip, &built)?;
             }
-            let reference = mutated.as_ref().unwrap_or(g);
+            let reference = mutated.as_ref().map_or(g, |m| &m.graph);
             let mism = if exp.verify {
                 driver::verify_pagerank(
                     reference,
@@ -240,6 +280,7 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
                 built.rhizomatic_vertices,
                 built.objects,
                 mism,
+                mutated.map(|m| m.report),
             )
         }
     };
@@ -251,6 +292,7 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
         rhizomatic_vertices: rhiz,
         objects,
         verified_mismatches: mismatches,
+        stream,
     })
 }
 
@@ -281,6 +323,23 @@ mod tests {
         let mut tiny = Experiment::new(AppKind::Bfs, ChipConfig::torus(4));
         tiny.adopt_engine_shards(4);
         assert_eq!(tiny.cfg.shards, 0, "tiny chips stay on the serial auto path");
+    }
+
+    #[test]
+    fn mutation_runs_carry_a_share_report() {
+        let g = erdos::generate(64, 256, 3);
+        let mut exp = Experiment::new(AppKind::Bfs, ChipConfig::torus(4));
+        exp.mutations = 8;
+        let out = run(&exp, &g).unwrap();
+        let s = out.stream.expect("streamed run must report shares");
+        // 8 streamed edges raise exactly 8 member shares by one each.
+        let pre: u64 = s.shares_pre.total();
+        let post: u64 = s.shares_post.total();
+        assert_eq!(pre, post, "no growth here: member population is stable");
+        assert!(s.stats_post.mean > s.stats_pre.mean, "stream must raise the mean share");
+        // Static runs stay report-free.
+        exp.mutations = 0;
+        assert!(run(&exp, &g).unwrap().stream.is_none());
     }
 
     #[test]

@@ -22,7 +22,10 @@ pub struct DiffuseSpec {
     /// Propagate along the local out-edge chunk + relay into ghost children.
     pub edges: bool,
     /// Also propagate a RhizomeShare with these operands to every rhizome
-    /// sibling (§5.1 `rhizome-collapse` traffic).
+    /// sibling (§5.1 `rhizome-collapse` traffic). The sibling list is read
+    /// live from the object when each send stages, so a ring widened by a
+    /// runtime sprout (`ChipConfig::rhizome_growth`) is covered by every
+    /// diffusion staged after the splice settles.
     pub rhizome: Option<(u32, u32)>,
 }
 

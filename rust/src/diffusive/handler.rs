@@ -29,7 +29,12 @@ pub struct VertexMeta {
     /// Number of in-edges pointing at *this* rhizome member (its share of
     /// the in-degree load, §3.2).
     pub in_degree_share: u32,
-    /// Rhizome members for this vertex (1 = plain RPVO).
+    /// Rhizome members for this vertex (1 = plain RPVO). Not static: with
+    /// `ChipConfig::rhizome_growth` the ingest subsystem sprouts members
+    /// at runtime, bumping this on every member (`SproutMember` /
+    /// `RingSplice` actions on the on-chip path) — so apps sizing
+    /// collectives from it (the PageRank AND gate) must reread it per
+    /// invocation rather than caching it in state.
     pub rhizome_size: u32,
     /// Total vertices in the graph (PageRank teleport term).
     pub total_vertices: u32,
@@ -99,6 +104,17 @@ pub trait Application: Send + Sync + 'static {
     /// already-inserted edge on its own. Repairs that encode
     /// order-dependent state must not implement this hook; use the
     /// recompute path instead.
+    ///
+    /// **Rhizome growth.** With `ChipConfig::rhizome_growth` the member
+    /// the repair germinates at may have been sprouted by the very edge
+    /// being repaired. A sprout is installed with a *clone of member 0's
+    /// settled state* (and its ring splices settle in a structural chip
+    /// run before any repair germinates — see `rpvo::rhizome`), so a
+    /// monotonic-relaxation repair observes a consistent member whose
+    /// value it can only improve; improvements re-broadcast over the
+    /// completed ring exactly as on a build-time member. Apps meeting
+    /// the wave-safety contract above therefore need no growth-specific
+    /// handling.
     fn repair(&self, _src_state: &Self::State, _weight: u32) -> Option<RepairSpec> {
         None
     }

@@ -79,6 +79,15 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
     cfg.dim_x = args.num("dim-x", cfg.dim_x)?;
     cfg.dim_y = args.num("dim-y", cfg.dim_y)?;
     cfg.rpvo_max = args.num("rpvo-max", 1u32)?;
+    // Runtime rhizome growth: sprout members when streamed in-edges cross
+    // Eq.-1 chunk boundaries (off by default — build-time sizing only).
+    if let Some(v) = args.get("rhizome-growth") {
+        cfg.rhizome_growth = match v {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            _ => anyhow::bail!("unknown --rhizome-growth {v} (on|off)"),
+        };
+    }
     cfg.throttling = !args.has("no-throttle");
     cfg.seed = args.num("seed", 0x5EEDu64)?;
     cfg.local_edgelist_size = args.num("chunk", 16usize)?;
@@ -157,6 +166,8 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --dim-x N  --dim-y M        rectangular chip (overrides --dim)\n\
                  \x20 --topo torus|mesh           NoC topology (default torus)\n\
                  \x20 --rpvo-max N                max RPVOs per rhizome (default 1)\n\
+                 \x20 --rhizome-growth on|off     sprout rhizome members at runtime when a\n\
+                 \x20                             streamed vertex becomes a hub (default off)\n\
                  \x20 --build host|onchip         graph construction path: host-side fast\n\
                  \x20                             path or message-driven InsertEdge actions\n\
                  \x20 --mutations N               (run) stream N random edge inserts through\n\
@@ -221,6 +232,28 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         "wall={wall:.2?} ({:.1} Mcycles/s)",
         out.metrics.cycles as f64 / wall.as_secs_f64() / 1e6
     );
+    if let Some(s) = &out.stream {
+        // The Fig.-9 comparison metric for the mutation stream: how the
+        // per-member in-degree-share distribution moved — and, with
+        // --rhizome-growth on, how much sprouting flattened the tail.
+        println!(
+            "in-degree share/member: pre [{}] -> post [{}] | members_sprouted={} ring_splices={}",
+            s.stats_pre.format(),
+            s.stats_post.format(),
+            out.metrics.members_sprouted,
+            out.metrics.ring_splices,
+        );
+        println!(
+            "share histogram pre-stream (tail mass {:.1}%):\n{}",
+            100.0 * s.shares_pre.tail_mass(),
+            s.shares_pre.render(40)
+        );
+        println!(
+            "share histogram post-stream (tail mass {:.1}%):\n{}",
+            100.0 * s.shares_post.tail_mass(),
+            s.shares_post.render(40)
+        );
+    }
     if cfg.heatmap_every > 0 {
         if let Some(peak) = out.heatmap.frames.iter().max_by(|a, b| {
             a.congested_fraction().total_cmp(&b.congested_fraction())
@@ -335,6 +368,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     t.row(&["local edge-list".into(), cfg.local_edgelist_size.to_string()]);
     t.row(&["ghost arity".into(), cfg.ghost_arity.to_string()]);
     t.row(&["rpvo_max".into(), cfg.rpvo_max.to_string()]);
+    t.row(&["rhizome growth".into(), cfg.rhizome_growth.to_string()]);
     print!("{}", t.render());
     Ok(())
 }

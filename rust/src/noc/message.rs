@@ -35,6 +35,20 @@ pub enum ActionKind {
     /// per-object [`crate::diffusive::handler::VertexMeta`] consistent
     /// without a host-side fixup pass.
     MetaBump = 4,
+    /// Runtime rhizome growth (§3.2 meets §7, the dynamic half of Eq. 1):
+    /// the target vertex sprouted a new member whose root address rides
+    /// packed in (payload, aux). Sent to each *existing* member root; the
+    /// handler splices the sprout into its own rhizome ring, bumps its
+    /// `rhizome_size`, and acknowledges with a [`ActionKind::RingSplice`]
+    /// back to the sprout. Handled by the engine (`arch::chip`); see the
+    /// consistency protocol in [`crate::rpvo::rhizome`].
+    SproutMember = 5,
+    /// Ring-closing acknowledgement of [`ActionKind::SproutMember`]: an
+    /// existing member tells the freshly sprouted root its own address
+    /// (packed in (payload, aux)), which the sprout splices into its
+    /// ring — so the widened ring closes member-by-member at the data's
+    /// locality, with no host-side stop-the-world.
+    RingSplice = 6,
 }
 
 /// An action in flight (or queued): the unit of work of the diffusive model.
@@ -64,6 +78,24 @@ impl ActionMsg {
     #[inline]
     pub fn app(target: Slot, payload: u32, aux: u32) -> Self {
         ActionMsg { kind: ActionKind::App, target, payload, aux, ext: 0 }
+    }
+
+    /// Engine-level mutation action carrying a PGAS [`Address`] operand
+    /// split across (payload, aux) — `InsertEdge`'s edge destination,
+    /// `SproutMember`'s sprouted root, `RingSplice`'s acked sibling. The
+    /// split lives here (with [`ActionMsg::operand_addr`]) so the
+    /// encoding is single-sourced.
+    #[inline]
+    pub fn with_addr(kind: ActionKind, target: Slot, addr: Address, ext: u32) -> Self {
+        let packed = addr.pack();
+        ActionMsg { kind, target, payload: (packed >> 32) as u32, aux: packed as u32, ext }
+    }
+
+    /// The [`Address`] operand of an engine-level mutation action (the
+    /// inverse of [`ActionMsg::with_addr`]).
+    #[inline]
+    pub fn operand_addr(&self) -> Address {
+        Address::unpack(((self.payload as u64) << 32) | self.aux as u64)
     }
 
     /// f32 operand view (PageRank scores travel as raw bits).
@@ -210,5 +242,13 @@ mod tests {
     fn f32_payload_roundtrip() {
         let m = ActionMsg::app(3, 1.25f32.to_bits(), 7);
         assert_eq!(m.payload_f32(), 1.25);
+    }
+
+    #[test]
+    fn address_operand_roundtrip() {
+        let addr = Address::new(16383, 123_456);
+        let m = ActionMsg::with_addr(ActionKind::InsertEdge, 9, addr, 5);
+        assert_eq!(m.operand_addr(), addr);
+        assert_eq!((m.kind, m.target, m.ext), (ActionKind::InsertEdge, 9, 5));
     }
 }

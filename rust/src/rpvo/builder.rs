@@ -33,6 +33,12 @@ use crate::arch::addr::Address;
 #[derive(Clone, Debug)]
 pub struct BuiltGraph {
     /// `roots[vid][member]` = address of that rhizome member's root object.
+    ///
+    /// Growable at runtime: with `ChipConfig::rhizome_growth` the ingest
+    /// subsystem sprouts additional members when streamed in-edges cross
+    /// Eq.-1 chunk boundaries the build-time width cannot absorb
+    /// (`rpvo::mutate::maybe_sprout`), appending the new root here so
+    /// every later `select_members` call cycles over the widened ring.
     pub roots: Vec<Vec<Address>>,
     pub n: u32,
     /// Total objects (roots + ghosts) installed.
@@ -74,9 +80,12 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
     // Eq. 1, floored: §6.1 deploys rhizomes for the *highly skewed*
     // in-degree vertices. On low-skew graphs (E18) Eq. 1 alone would give a
     // cutoff near 1 and split every vertex; a member is only worth creating
-    // when it absorbs at least a few local edge-lists worth of in-edges.
+    // when it absorbs at least a few local edge-lists worth of in-edges
+    // (see the floor rationale in `rpvo::rhizome`). The same floored
+    // cutoff persists in `BuiltGraph::cutoff_chunk`, so runtime rhizome
+    // growth crosses chunk boundaries exactly where a static build would.
     let min_cutoff = (4 * cfg.local_edgelist_size) as u32;
-    let cutoff = rhizome::cutoff_chunk(max_in, cfg.rpvo_max).max(min_cutoff);
+    let cutoff = rhizome::floored_cutoff(max_in, cfg.rpvo_max, min_cutoff);
 
     // -- 1. allocate member roots (host-side in both build modes: the
     //       roots ARE the user-visible vertex addresses) -----------------

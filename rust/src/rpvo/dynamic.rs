@@ -21,7 +21,11 @@ use crate::rpvo::mutate::{self, MutationBatch};
 /// The edge lands in `u`'s next member by out-degree round-robin and
 /// points at `v`'s member chosen by the same Eq.-1 in-edge cycling that
 /// static construction used (the counters continue where the build
-/// stopped). Degree metadata is updated on the member roots.
+/// stopped). Degree metadata is updated on the member roots. With
+/// `ChipConfig::rhizome_growth`, an insert that crosses an Eq.-1 chunk
+/// boundary first sprouts a new rhizome member for `v` (spliced into
+/// every sibling ring host-side on this path) and the edge then points
+/// at the sprout — see `rpvo::rhizome` for the growth protocol.
 pub fn insert_edge<A: Application>(
     chip: &mut Chip<A>,
     built: &mut BuiltGraph,
@@ -103,6 +107,34 @@ mod tests {
         assert_eq!(root.meta.out_degree, 5);
         assert!(!root.ghosts.is_empty(), "5 edges with chunk 2 need ghosts");
         assert_eq!(built.objects, 3 + 2, "two ghosts grown");
+    }
+
+    #[test]
+    fn dynamic_inserts_grow_rhizome_and_keep_bfs_exact() {
+        // Per-edge dynamic inserts (no batching) cross an Eq.-1 chunk
+        // boundary: the target sprouts a member mid-stream and the
+        // incremental BFS repair stays equal to a from-scratch solve.
+        let mut g = erdos::generate(64, 128, 21);
+        let mut cfg = ChipConfig::torus(4);
+        cfg.local_edgelist_size = 2; // min_cutoff = 8: boundaries reachable
+        cfg.rpvo_max = 4;
+        cfg.rhizome_growth = true;
+        let (mut chip, mut built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        let target = 7u32;
+        let before = built.roots[target as usize].len();
+        for k in 0..(2 * built.cutoff_chunk) {
+            let u = (target + 1 + k) % 64;
+            let u = if u == target { target + 1 } else { u };
+            insert_and_update_bfs(&mut chip, &mut built, u, target).unwrap();
+            g.edges.push((u, target, 1));
+        }
+        assert!(
+            built.roots[target as usize].len() > before,
+            "streamed in-degree must sprout members"
+        );
+        assert!(chip.metrics.members_sprouted >= 1);
+        let got = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &got), 0, "growth broke incremental repair");
     }
 
     #[test]

@@ -19,6 +19,16 @@
 //!   by default, §3.1).
 //! * **Metadata bump**: out-degree on every member root of the source,
 //!   in-degree share on the member the edge points at.
+//! * **Runtime rhizome growth** ([`maybe_sprout`]): with
+//!   `ChipConfig::rhizome_growth`, an in-edge that crosses an Eq.-1
+//!   chunk boundary its vertex's width cannot absorb first sprouts a
+//!   fresh member root — allocated under the construction placement
+//!   policy, seeded from member 0's settled state, spliced into every
+//!   sibling's rhizome ring (`SproutMember`/`RingSplice` actions on the
+//!   on-chip path) — and then receives the entire new chunk, exactly as
+//!   a static build of the same in-degree would have assigned it. See
+//!   [`crate::rpvo::rhizome`] for the growth math and the consistency
+//!   protocol's ordering argument.
 //!
 //! Each step has an on-chip twin: [`germinate_insert`] ships the
 //! selection result as `InsertEdge`/`MetaBump` actions and the engine
@@ -108,6 +118,119 @@ pub struct Inserted {
     pub to: Address,
 }
 
+/// Sprout a new rhizome member for vertex `v` if the in-edge about to be
+/// assigned crosses an Eq.-1 chunk boundary the current width cannot
+/// absorb (`ChipConfig::rhizome_growth`; see [`crate::rpvo::rhizome`]
+/// for the growth math and the consistency protocol). Called by both
+/// ingest paths immediately before [`select_members`], so the widened
+/// ring is what the incoming edge cycles over — the sprout receives the
+/// entire new chunk, exactly as a static build of the same in-degree
+/// would have assigned it. `via_actions` picks the splice transport and
+/// matches how the caller ships the edge itself: `false` splices sibling
+/// rings directly (host fast path), `true` germinates the
+/// `SproutMember`/`RingSplice` protocol (message-driven path; the caller
+/// runs the chip). Returns whether a member was sprouted.
+pub fn maybe_sprout<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    v: u32,
+    via_actions: bool,
+) -> anyhow::Result<bool> {
+    if !chip.cfg.rhizome_growth || chip.cfg.rpvo_max < 2 {
+        return Ok(false);
+    }
+    let vi = v as usize;
+    let width = built.roots[vi].len() as u32;
+    if !rhizome::grows_at(
+        built.ingest.in_seq[vi] + 1,
+        built.cutoff_chunk,
+        width,
+        chip.cfg.rpvo_max,
+    ) {
+        return Ok(false);
+    }
+    sprout_member(chip, built, v, via_actions)?;
+    Ok(true)
+}
+
+/// Grow one rhizome member for vertex `v`: allocate a fresh root under
+/// the construction placement policy (random-far for rhizome roots in
+/// `Mixed`/`Random` mode — Fig. 4c dispersal — vicinity of the last
+/// member otherwise), seed its metadata and app state from member 0's
+/// settled root (`in_degree_share` starts at 0), and splice it into
+/// every sibling's rhizome ring. The host ingest path splices directly;
+/// the on-chip path germinates a `SproutMember` action per sibling whose
+/// `RingSplice` acknowledgement closes the sprout's own ring — both
+/// yield the same closed ring (order excepted) and the same metadata.
+/// The root itself is installed host-side in both modes, under the same
+/// covenant construction uses: member roots ARE the user-visible vertex
+/// addresses, so [`BuiltGraph::roots`] and the selection counters stay
+/// authoritative without waiting on a chip run.
+fn sprout_member<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    v: u32,
+    via_actions: bool,
+) -> anyhow::Result<Address> {
+    let vi = v as usize;
+    let member = built.roots[vi].len() as u32;
+    let width = member + 1;
+    let anchor = *built.roots[vi].last().expect("vertex has at least one member");
+    if via_actions {
+        // The message-driven path grows ghosts engine-side, invisible to
+        // the host allocator until a resync; refresh occupancy before
+        // placing the root so the sprout cannot land on a cell whose
+        // arena already filled mid-batch (sprouts are rare — one
+        // O(cells) sweep each is noise). Deterministic: at a sprout the
+        // arenas reflect exactly the settled prefix of the batch, which
+        // is identical across shard counts, axes, and wave caps.
+        built.ingest.resync(chip);
+    }
+    let cc = match chip.cfg.alloc {
+        // Rhizome/root dispersal is the point of Fig. 4b/4c.
+        AllocPolicy::Mixed | AllocPolicy::Random => built.ingest.alloc.random()?,
+        AllocPolicy::Vicinity => built.ingest.alloc.vicinity(anchor.cc)?,
+    };
+    let (mut meta, state) = {
+        let o = chip.object(built.roots[vi][0]);
+        (o.meta, o.state.clone())
+    };
+    meta.in_degree_share = 0;
+    meta.rhizome_size = width;
+    let mut obj = Object::new_root(v, member, state);
+    obj.meta = meta;
+    if via_actions {
+        // The ring closes message-by-message: each sibling's RingSplice
+        // ack adds itself. Born counting only itself; no app action can
+        // observe the interim width (the sprout settles in a structural
+        // run before any repair traffic germinates — see rpvo::rhizome).
+        obj.meta.rhizome_size = 1;
+    } else {
+        obj.rhizome = built.roots[vi].clone();
+    }
+    let addr = chip.install(cc, obj);
+    chip.metrics.members_sprouted += 1;
+    built.objects += 1;
+    if member == 1 {
+        built.rhizomatic_vertices += 1;
+    }
+    for &s in &built.roots[vi] {
+        if via_actions {
+            chip.germinate_sprout(s, addr);
+        } else {
+            let o = chip.object_mut(s);
+            o.rhizome.push(addr);
+            o.meta.rhizome_size = width;
+            // Sibling splice + the sprout's matching ring entry (already
+            // installed above) — the same 2-per-sibling the on-chip
+            // SproutMember/RingSplice pair counts.
+            chip.metrics.ring_splices += 2;
+        }
+    }
+    built.roots[vi].push(addr);
+    Ok(addr)
+}
+
 /// Pick the (source member root, destination member root) pair for a new
 /// edge `(u, v)` and advance the balance counters. The rule is identical
 /// for static construction and incremental inserts: in-edges cycle over
@@ -188,6 +311,7 @@ pub fn insert_edge<A: Application>(
     bump_meta: bool,
 ) -> anyhow::Result<Inserted> {
     anyhow::ensure!(u < built.n && v < built.n, "vertex out of range");
+    maybe_sprout(chip, built, v, false)?;
     let (src, to) = select_members(built, u, v);
     let edge = Edge { to, weight: w };
     let (landed, grew) = {
@@ -223,6 +347,7 @@ pub fn germinate_insert<A: Application>(
     bump_meta: bool,
 ) -> anyhow::Result<Address> {
     anyhow::ensure!(u < built.n && v < built.n, "vertex out of range");
+    maybe_sprout(chip, built, v, true)?;
     let (src, to) = select_members(built, u, v);
     chip.germinate_insert_edge(src, to, w);
     if bump_meta {
@@ -317,18 +442,47 @@ impl MutationBatch {
 /// determinism suite still pins 1/2/4 shards), but ghost placement may
 /// then differ between wave settings. Arenas that full already make the
 /// host path error out, so streaming that regime is out of contract.
-fn wave_end(built: &BuiltGraph, batch: &MutationBatch, start: usize, cap: usize) -> usize {
+///
+/// With rhizome growth enabled (`growth = Some(rpvo_max)`), an edge the
+/// planner predicts will sprout a member is a *conflict barrier for its
+/// vertex's waves*: it runs as its own single-edge wave. That keeps every
+/// member width static within a planned wave (so the source round-robin
+/// predictions above stay exact) and guarantees the sprout's ring
+/// splices settle in a purely structural chip run before any wave-mate's
+/// repair traffic can traverse the widened ring — the ordering half of
+/// the consistency protocol in [`crate::rpvo::rhizome`].
+fn wave_end(
+    built: &BuiltGraph,
+    batch: &MutationBatch,
+    start: usize,
+    cap: usize,
+    growth: Option<u32>,
+) -> usize {
     let n = batch.edges.len();
     if cap == 1 {
         return (start + 1).min(n);
     }
     let mut used: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
     let mut planned: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut in_ahead: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
     let mut end = start;
     while end < n && (cap == 0 || end - start < cap) {
-        let (u, _, _) = batch.edges[end];
-        if (u as usize) >= built.roots.len() {
-            break; // out-of-range source: surface the insert error itself
+        let (u, v, _) = batch.edges[end];
+        if (u as usize) >= built.roots.len() || (v as usize) >= built.roots.len() {
+            break; // out-of-range endpoint: surface the insert error itself
+        }
+        if let Some(rpvo_max) = growth {
+            let ahead_in = in_ahead.entry(v).or_insert(0);
+            let v_width = built.roots[v as usize].len() as u32;
+            if rhizome::grows_at(
+                built.ingest.in_seq[v as usize] + *ahead_in + 1,
+                built.cutoff_chunk,
+                v_width,
+                rpvo_max,
+            ) {
+                break; // sprouting edge starts (and ends) its own wave
+            }
+            *ahead_in += 1;
         }
         let width = built.roots[u as usize].len() as u32;
         let ahead = planned.entry(u).or_insert(0);
@@ -362,10 +516,15 @@ pub fn apply_batch<A: Application>(
     let repairable = chip.app.can_repair();
     let on_chip = chip.cfg.build_mode == BuildMode::OnChip;
     let cap = chip.cfg.ingest_wave;
+    let growth = if chip.cfg.rhizome_growth && chip.cfg.rpvo_max > 1 {
+        Some(chip.cfg.rpvo_max)
+    } else {
+        None
+    };
     let mut repair_targets: Vec<Address> = Vec::new();
     let mut start = 0usize;
     while start < batch.edges.len() {
-        let end = wave_end(built, batch, start, cap);
+        let end = wave_end(built, batch, start, cap, growth);
         chip.metrics.ingest_waves += 1;
         // (1) structural mutation: the whole wave settles in one run.
         repair_targets.clear();
@@ -529,18 +688,18 @@ mod tests {
         assert!(hub_width > 1, "hub must be rhizomatic");
         // Distinct plain sources: one wave covers everything.
         let indep = MutationBatch { edges: vec![(10, 20, 1), (11, 21, 1), (12, 22, 1)] };
-        assert_eq!(wave_end(&built, &indep, 0, 0), 3);
+        assert_eq!(wave_end(&built, &indep, 0, 0, None), 3);
         // A plain (width-1) source repeated: the wave breaks at the repeat.
         let rep = MutationBatch { edges: vec![(10, 20, 1), (10, 21, 1), (11, 22, 1)] };
-        assert_eq!(wave_end(&built, &rep, 0, 0), 1, "repeat of a width-1 source splits");
-        assert_eq!(wave_end(&built, &rep, 1, 0), 3, "the remainder is conflict-free");
+        assert_eq!(wave_end(&built, &rep, 0, 0, None), 1, "repeat of a width-1 source splits");
+        assert_eq!(wave_end(&built, &rep, 1, 0, None), 3, "the remainder is conflict-free");
         // A rhizomatic hub round-robins its members: width edges fit one
         // wave, the wrap-around lands in the next.
         let hub = MutationBatch { edges: (0..8).map(|k| (0, 20 + k, 1)).collect() };
-        assert_eq!(wave_end(&built, &hub, 0, 0), hub_width);
+        assert_eq!(wave_end(&built, &hub, 0, 0, None), hub_width);
         // An explicit cap truncates, and cap = 1 is per-edge mode.
-        assert_eq!(wave_end(&built, &indep, 0, 2), 2);
-        assert_eq!(wave_end(&built, &indep, 0, 1), 1);
+        assert_eq!(wave_end(&built, &indep, 0, 2, None), 2);
+        assert_eq!(wave_end(&built, &indep, 0, 1, None), 1);
     }
 
     #[test]
@@ -598,6 +757,184 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// `count` in-edges streamed at `hub` from distinct-ish other sources.
+    fn hub_batch(hub: u32, count: u32, spread: u32) -> MutationBatch {
+        let edges = (0..count)
+            .map(|k| {
+                let mut u = k % spread;
+                if u == hub {
+                    u = spread;
+                }
+                (u, hub, 1)
+            })
+            .collect();
+        MutationBatch { edges }
+    }
+
+    /// Ring closure + width metadata for every member of `vid`.
+    fn assert_ring_closed(chip: &Chip<Bfs>, built: &BuiltGraph, vid: u32) {
+        let members = &built.roots[vid as usize];
+        for (i, &a) in members.iter().enumerate() {
+            let o = chip.object(a);
+            assert_eq!(
+                o.meta.rhizome_size as usize,
+                members.len(),
+                "v{vid} member {i} width meta"
+            );
+            assert_eq!(o.rhizome.len(), members.len() - 1, "v{vid} member {i} ring size");
+            for (j, &b) in members.iter().enumerate() {
+                if i != j {
+                    assert!(o.rhizome.contains(&b), "v{vid} member {i} missing sibling {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_hub_sprouts_members_and_stays_consistent() {
+        // A chain vertex (in-degree 1 at build) BECOMES a hub under the
+        // stream: the host ingest path must sprout a member at every
+        // Eq.-1 chunk boundary, keep the rings closed, keep shares
+        // summing to the in-degree, and keep BFS repair exact.
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 2; // min_cutoff = 8
+        cfg.rpvo_max = 4;
+        cfg.rhizome_growth = true;
+        let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+        let cutoff = built.cutoff_chunk;
+        assert_eq!(cutoff, 14, "hub in-degree 59 / rpvo_max 4, above the floor of 8");
+        assert_eq!(built.roots[70].len(), 1, "chain vertex starts plain");
+
+        // 3 * cutoff streamed in-edges cross three chunk boundaries.
+        let batch = hub_batch(70, 3 * cutoff, 60);
+        let mut gm = g.clone();
+        batch.mirror_into(&mut gm);
+        assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
+
+        assert_eq!(built.roots[70].len(), 4, "grew to rpvo_max");
+        assert_eq!(chip.metrics.members_sprouted, 3);
+        assert_eq!(
+            chip.metrics.ring_splices,
+            2 * (1 + 2 + 3),
+            "2 ring insertions per sprout per existing sibling"
+        );
+        assert_ring_closed(&chip, &built, 70);
+        let shares: Vec<u32> =
+            built.roots[70].iter().map(|&a| chip.object(a).meta.in_degree_share).collect();
+        assert_eq!(shares.iter().sum::<u32>(), 1 + 3 * cutoff, "shares sum to in-degree");
+        let spread = shares.iter().max().unwrap() - shares.iter().min().unwrap();
+        assert!(spread <= cutoff, "shares {shares:?} diverge past one chunk");
+        // Members agree on the level (sprouts seeded + repairs broadcast),
+        // and the repaired result equals a from-scratch recompute.
+        let lvls: Vec<u32> =
+            built.roots[70].iter().map(|&a| chip.object(a).state.level).collect();
+        assert!(lvls.iter().all(|&l| l == lvls[0]), "members disagree: {lvls:?}");
+        let levels = crate::apps::driver::bfs_levels(&chip, &built);
+        assert_eq!(crate::apps::driver::verify_bfs(&gm, 0, &levels), 0);
+        // Host-path bookkeeping survived the growth.
+        assert_eq!(built.objects, total_objects(&chip));
+        for (ci, cell) in chip.cells.iter().enumerate() {
+            assert_eq!(built.ingest.alloc.counts[ci], cell.objects.len() as u32, "cell {ci}");
+        }
+    }
+
+    #[test]
+    fn growth_disabled_keeps_widths_frozen() {
+        // Default (rhizome_growth = false): the same skewed stream leaves
+        // the build-time sizing untouched — the pre-growth behaviour.
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 2;
+        cfg.rpvo_max = 4;
+        let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+        let batch = hub_batch(70, 3 * built.cutoff_chunk, 60);
+        assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
+        assert_eq!(built.roots[70].len(), 1, "no growth without the flag");
+        assert_eq!(chip.metrics.members_sprouted, 0);
+        assert_eq!(chip.metrics.ring_splices, 0);
+    }
+
+    #[test]
+    fn wave_planner_isolates_sprouting_edges() {
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 2;
+        cfg.rpvo_max = 4;
+        cfg.rhizome_growth = true;
+        let mut chip = Chip::new(cfg, Bfs).unwrap();
+        let mut built = crate::rpvo::builder::build(&mut chip, &g).unwrap();
+        let cutoff = built.cutoff_chunk; // 14; vertex 70's in_seq is 1
+        let batch = hub_batch(70, cutoff + 2, 60);
+        // Distinct sources: without growth the whole batch is one wave.
+        assert_eq!(wave_end(&built, &batch, 0, 0, None), batch.edges.len());
+        // With growth the planner predicts the boundary-crossing edge
+        // (index cutoff - 1: in_seq 1 + 13 planned + 1 = 15 > cutoff)
+        // and ends the wave just before it.
+        let boundary = (cutoff - 1) as usize;
+        assert_eq!(wave_end(&built, &batch, 0, 0, Some(4)), boundary);
+        // Streaming the batch: pre-boundary wave + isolated sprout wave +
+        // remainder wave, observable in the wave counter.
+        assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
+        assert_eq!(chip.metrics.ingest_waves, 3, "sprout runs as its own wave");
+        assert_eq!(chip.metrics.members_sprouted, 1);
+        assert_eq!(built.roots[70].len(), 2);
+    }
+
+    #[test]
+    fn growth_onchip_matches_host_structurally() {
+        // Both ingest paths must grow the same widened rhizomes: same
+        // member counts, closed rings, same edge multiset, same share
+        // sums — the sprout decision runs on the same persisted counters.
+        let g = skewed_graph();
+        let batch = hub_batch(70, 30, 60);
+        let run = |mode: BuildMode| {
+            let mut cfg = ChipConfig::torus(8);
+            cfg.local_edgelist_size = 2;
+            cfg.rpvo_max = 4;
+            cfg.rhizome_growth = true;
+            cfg.build_mode = mode;
+            let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+            assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
+            assert!(chip.metrics.members_sprouted > 0, "{mode:?}: growth must fire");
+            assert_ring_closed(&chip, &built, 70);
+            let widths: Vec<usize> = built.roots.iter().map(|m| m.len()).collect();
+            let shares: Vec<u32> = built
+                .roots
+                .iter()
+                .map(|m| m.iter().map(|&a| chip.object(a).meta.in_degree_share).sum())
+                .collect();
+            (widths, shares, edge_multiset(&chip), chip.metrics.members_sprouted)
+        };
+        let host = run(BuildMode::Host);
+        let onchip = run(BuildMode::OnChip);
+        assert_eq!(host, onchip, "host vs onchip growth diverged");
+    }
+
+    #[test]
+    fn growth_pagerank_recomputes_after_sprout() {
+        // PageRank has no incremental repair; after a sprouting stream the
+        // live-graph recompute must fill the widened AND gates and match
+        // the power iteration on the mutated graph.
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 2;
+        cfg.rpvo_max = 4;
+        cfg.rhizome_growth = true;
+        let (mut chip, mut built) = crate::apps::driver::run_pagerank(cfg, &g, 4).unwrap();
+        let batch = hub_batch(70, 3 * built.cutoff_chunk, 60);
+        let mut gm = g.clone();
+        batch.mirror_into(&mut gm);
+        let repaired = apply_batch(&mut chip, &mut built, &batch).unwrap();
+        assert!(!repaired, "PageRank takes the recompute path");
+        assert_eq!(chip.metrics.members_sprouted, 3);
+        assert_eq!(built.roots[70].len(), 4);
+        crate::apps::driver::recompute_pagerank(&mut chip, &built).unwrap();
+        let scores = crate::apps::driver::pagerank_scores(&chip, &built);
+        let (bad, max_rel) = crate::apps::driver::verify_pagerank(&gm, 4, &scores);
+        assert_eq!(bad, 0, "recompute over sprouted members diverged (max_rel={max_rel})");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Rhizome sizing (§3.2, §6.1 "Graph Construction", Eq. 1).
+//! Rhizome sizing (§3.2, §6.1 "Graph Construction", Eq. 1) and the
+//! runtime-growth math behind dynamic member sprouting.
 //!
 //! Highly skewed in-degree vertices are split into up to `rpvo_max` RPVOs
 //! joined by rhizome-links. In-edges are assigned in runs of
@@ -6,11 +7,84 @@
 //! member 0, the next at member 1, …, cycling after `rpvo_max` members.
 //! Deriving the cutoff from the graph's max in-degree keeps the method
 //! uniform across inputs (no per-graph tuning).
+//!
+//! # The §6.1 deployment floor
+//!
+//! Eq. 1 alone sizes the cutoff purely from skew: on a low-skew graph
+//! (E18) the max in-degree is small, the raw cutoff lands near 1, and
+//! *every* vertex would split into members — pure overhead, since a
+//! member only pays for itself once it absorbs at least a few local
+//! edge-lists' worth of in-edges. The builder therefore floors the
+//! cutoff at `4 * local_edgelist_size` ([`floored_cutoff`]): rhizomes
+//! deploy only for the *highly skewed* vertices §6.1 aims them at, and
+//! the floored regime degenerates gracefully to plain RPVOs. All growth
+//! math below uses the floored cutoff, so build-time sizing and runtime
+//! sprouting agree on where every chunk boundary lies.
+//!
+//! # Runtime growth (dynamic member sprouting)
+//!
+//! Eq.-1 sizing is computed from the in-degrees the build saw — but under
+//! a streaming-mutation workload a vertex can *become* a hub after
+//! construction, funnelling every new in-edge through its build-time
+//! members and re-concentrating exactly the load rhizomes exist to
+//! flatten. With `ChipConfig::rhizome_growth` the ingest subsystem grows
+//! rhizomes at runtime: [`grows_at`] fires exactly when the incoming
+//! in-edge crosses an Eq.-1 chunk boundary the current width cannot
+//! absorb — i.e. when a static build of the same in-degree would have
+//! sized one more member — and the cycling then routes the entire new
+//! chunk at the freshly sprouted member
+//! (`member_for_in_edge(width * cutoff, cutoff, width + 1) == width`).
+//!
+//! ## Sprout/splice consistency protocol
+//!
+//! A sprout must widen every sibling's rhizome ring without a host-side
+//! stop-the-world, and no in-flight computation may ever observe a
+//! half-spliced ring. The protocol (`rpvo::mutate::sprout_member` +
+//! the `SproutMember` / `RingSplice` engine actions in `arch::chip`):
+//!
+//! 1. **Decision** — host-side, per inserted edge, from the persisted
+//!    Eq.-1 counters in `BuiltGraph::ingest`. Deterministic, therefore
+//!    identical for the host and on-chip ingest paths and for every
+//!    shard count, banding axis, and wave cap.
+//! 2. **Root install** — the new member root is installed host-side
+//!    under the same host/chip covenant construction uses (member roots
+//!    ARE the user-visible vertex addresses), placed by the live
+//!    [`crate::rpvo::alloc::Allocator`] with the construction policy
+//!    (random-far under `Mixed`/`Random` — Fig. 4c dispersal). Its state
+//!    and metadata are seeded from member 0's settled root, with
+//!    `in_degree_share = 0`.
+//! 3. **Ring splice** — the host ingest path splices directly. The
+//!    on-chip path germinates one `SproutMember` action per existing
+//!    sibling: each sibling splices the sprout into its own ring at its
+//!    own locality and acknowledges with a `RingSplice` action back to
+//!    the sprout, whose ring closes member-by-member, fully
+//!    message-driven.
+//! 4. **Ordering argument** — the wave planner treats a sprouting insert
+//!    as a conflict barrier: it runs as its own single-edge wave. That
+//!    wave's chip run carries only structural actions (`InsertEdge`,
+//!    `MetaBump`, `SproutMember`, `RingSplice`), none of which enqueue
+//!    application diffusions, so nothing can traverse a rhizome-link
+//!    while a splice is in flight. Application traffic (the wave's
+//!    repair ripples) germinates only after that run reaches quiescence,
+//!    by which point every sibling ring contains the sprout and the
+//!    sprout's ring contains every sibling. Because the sprout was
+//!    seeded from a settled sibling, monotonic apps see a consistent
+//!    member whose value later relaxations only improve — and any later
+//!    improvement re-broadcasts over the now-complete ring.
 
 /// Eq. 1: `cutoff_chunk = indegree_max / rpvo_max` (at least 1).
 pub fn cutoff_chunk(indegree_max: u32, rpvo_max: u32) -> u32 {
     debug_assert!(rpvo_max >= 1);
     (indegree_max / rpvo_max.max(1)).max(1)
+}
+
+/// Eq. 1 with the §6.1 deployment floor applied: the cutoff the builder
+/// (and every later dynamic insert) actually uses. `min_cutoff` is the
+/// smallest in-edge run worth a member of its own — the builder passes
+/// `4 * local_edgelist_size`, so low-skew graphs whose raw Eq.-1 cutoff
+/// collapses toward 1 keep plain single-member RPVOs (see module docs).
+pub fn floored_cutoff(indegree_max: u32, rpvo_max: u32, min_cutoff: u32) -> u32 {
+    cutoff_chunk(indegree_max, rpvo_max).max(min_cutoff)
 }
 
 /// Number of rhizome members a vertex with `in_degree` gets.
@@ -28,6 +102,17 @@ pub fn members_for(in_degree: u32, cutoff: u32, rpvo_max: u32) -> u32 {
 /// cycling back to member 0 after `members` chunks (§6.1).
 pub fn member_for_in_edge(seq: u32, cutoff: u32, members: u32) -> u32 {
     (seq / cutoff) % members.max(1)
+}
+
+/// Should the in-edge that raises a vertex's in-degree to `next_in_seq`
+/// sprout a new rhizome member first? True exactly when a static build
+/// of that in-degree would have sized more members than the current
+/// `width` (and the Eq.-1 cap still has room) — so runtime growth and
+/// build-time sizing cross every chunk boundary at the same edge. The
+/// caller passes `next_in_seq = in_seq + 1`: the count *including* the
+/// edge about to be assigned.
+pub fn grows_at(next_in_seq: u32, cutoff: u32, width: u32, rpvo_max: u32) -> bool {
+    width < rpvo_max && members_for(next_in_seq, cutoff, rpvo_max) > width
 }
 
 #[cfg(test)]
@@ -61,10 +146,64 @@ mod tests {
     }
 
     #[test]
+    fn floored_cutoff_keeps_low_skew_graphs_plain() {
+        // §6.1 floor interplay: a low-skew graph (raw Eq.-1 cutoff near 1)
+        // is floored to `min_cutoff` — the builder's `4 * chunk` — so no
+        // vertex splits until its in-degree clears several local
+        // edge-lists' worth of edges.
+        let min_cutoff = 4 * 16; // builder default: local_edgelist_size 16
+        let raw = cutoff_chunk(7, 16);
+        assert_eq!(raw, 1, "raw Eq. 1 would split every vertex");
+        let floored = floored_cutoff(7, 16, min_cutoff);
+        assert_eq!(floored, 64);
+        for deg in [0u32, 1, 7, 64] {
+            assert_eq!(members_for(deg, floored, 16), 1, "deg {deg} stays plain");
+        }
+        assert_eq!(members_for(65, floored, 16), 2, "past the floor a member pays off");
+        // High-skew graphs are untouched by the floor.
+        assert_eq!(floored_cutoff(1600, 16, min_cutoff), 100);
+    }
+
+    #[test]
+    fn floor_and_growth_cross_boundaries_at_the_same_edge() {
+        // The floored regime must drive growth exactly like build-time
+        // sizing: members_for and grows_at agree chunk by chunk.
+        let cutoff = floored_cutoff(10, 8, 64); // floored to 64
+        let mut width = 1u32;
+        for next in 1..=(3 * cutoff + 1) {
+            if grows_at(next, cutoff, width, 8) {
+                width += 1;
+            }
+            assert_eq!(
+                width,
+                members_for(next, cutoff, 8),
+                "incremental growth diverged from static sizing at in-degree {next}"
+            );
+        }
+        assert_eq!(width, 4, "three boundaries crossed");
+    }
+
+    #[test]
     fn in_edges_cycle_over_members() {
         // cutoff 2, 3 members: seq 0,1 -> m0; 2,3 -> m1; 4,5 -> m2; 6,7 -> m0
         let assignments: Vec<u32> = (0..8).map(|s| member_for_in_edge(s, 2, 3)).collect();
         assert_eq!(assignments, vec![0, 0, 1, 1, 2, 2, 0, 0]);
+    }
+
+    #[test]
+    fn grows_exactly_at_chunk_boundaries() {
+        let cutoff = 100u32;
+        // Width 2 absorbs in-degrees up to 2 * cutoff; the 201st in-edge
+        // sprouts member 3, and the sprout receives the whole new chunk.
+        assert!(!grows_at(200, cutoff, 2, 8));
+        assert!(grows_at(201, cutoff, 2, 8));
+        assert_eq!(member_for_in_edge(200, cutoff, 3), 2, "new chunk lands on the sprout");
+        // The cap stops growth even past the boundary.
+        assert!(!grows_at(201, cutoff, 2, 2), "at rpvo_max: never grows");
+        assert!(!grows_at(u32::MAX, cutoff, 8, 8));
+        // Plain vertices sprout their second member one edge past a chunk.
+        assert!(!grows_at(cutoff, cutoff, 1, 4));
+        assert!(grows_at(cutoff + 1, cutoff, 1, 4));
     }
 
     #[test]

@@ -58,6 +58,37 @@ impl Histogram {
     }
 }
 
+/// Compact tail summary of a sample set (mean / p99 / max, nearest-rank
+/// percentiles via [`crate::util::percentile`], NaN-tolerant). Printed
+/// next to the Fig.-9-style per-member in-degree-share histograms the
+/// mutation-stream summary emits: the p99/max tail is the
+/// load-concentration rhizomes (and runtime rhizome growth) are supposed
+/// to flatten.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShareStats {
+    pub mean: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl ShareStats {
+    pub fn from_samples(samples: &[f64]) -> ShareStats {
+        if samples.is_empty() {
+            return ShareStats { mean: 0.0, p99: 0.0, max: 0.0 };
+        }
+        ShareStats {
+            mean: crate::util::mean(samples),
+            p99: crate::util::percentile(samples, 99.0),
+            max: crate::util::percentile(samples, 100.0),
+        }
+    }
+
+    /// One-line rendering for run summaries and bench rows.
+    pub fn format(&self) -> String {
+        format!("mean {:.1} p99 {:.1} max {:.1}", self.mean, self.p99, self.max)
+    }
+}
+
 /// Per-channel contention samples for a whole chip: one f64 per (cell,
 /// channel) = stall cycles observed on that output link.
 #[derive(Clone, Debug, Default)]
@@ -110,5 +141,17 @@ mod tests {
     fn render_has_one_line_per_bin() {
         let h = Histogram::build(&[1.0, 2.0], 4, 0.0, 4.0);
         assert_eq!(h.render(10).lines().count(), 4);
+    }
+
+    #[test]
+    fn share_stats_summarize_tail() {
+        let samples: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = ShareStats::from_samples(&samples);
+        assert_eq!(s.mean, 50.5);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.max, 100.0);
+        assert!(s.format().contains("p99 99.0"));
+        let empty = ShareStats::from_samples(&[]);
+        assert_eq!(empty, ShareStats { mean: 0.0, p99: 0.0, max: 0.0 });
     }
 }

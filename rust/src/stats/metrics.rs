@@ -42,6 +42,15 @@ pub struct Metrics {
     /// structurally independent edge inserts settled in one chip run
     /// (per-edge application reports one wave per edge).
     pub ingest_waves: u64,
+    /// Rhizome members sprouted at runtime (`ChipConfig::rhizome_growth`):
+    /// streamed in-edges that crossed an Eq.-1 chunk boundary their
+    /// vertex's width could not absorb, each growing one member root.
+    pub members_sprouted: u64,
+    /// Rhizome-ring insertions performed by the growth protocol: sibling
+    /// rings splicing in a sprout plus the sprout's own ring closing
+    /// (`SproutMember`/`RingSplice` actions on-chip, direct splices on the
+    /// host ingest path — both count 2 per sprout per existing sibling).
+    pub ring_splices: u64,
     // -- scheduling --------------------------------------------------------
     /// Cells parked in the engine timing wheel: a multi-cycle-busy cell is
     /// scheduled to wake exactly at its busy-timer expiry instead of being
@@ -135,6 +144,8 @@ impl Metrics {
         self.meta_bumps += o.meta_bumps;
         self.sram_overflows += o.sram_overflows;
         self.ingest_waves += o.ingest_waves;
+        self.members_sprouted += o.members_sprouted;
+        self.ring_splices += o.ring_splices;
         self.wheel_wakeups += o.wheel_wakeups;
         self.diffusions_created += o.diffusions_created;
         self.diffusions_executed += o.diffusions_executed;

@@ -444,6 +444,149 @@ fn batched_ingest_equals_sequential_pagerank_after_recompute() {
     }
 }
 
+// ------------------------------------------------------------ growth --
+
+/// A stream skewed into one initially-quiet vertex: enough in-edges to
+/// cross the next two Eq.-1 chunk boundaries, so rhizome growth
+/// (`--rhizome-growth on`) provably sprouts members mid-stream. The
+/// boundary arithmetic mirrors `rpvo::rhizome` on the *default* chip
+/// parameters (`local_edgelist_size` 16 => floor 64) used by `cfg_on`.
+fn growth_batch(g: &amcca::graph::model::HostGraph, rpvo_max: u32) -> (MutationBatch, u32) {
+    let in_deg = g.in_degrees();
+    let max_in = in_deg.iter().copied().max().unwrap_or(0);
+    let cutoff = amcca::rpvo::rhizome::floored_cutoff(max_in, rpvo_max, 4 * 16);
+    let hub = (0..g.n).min_by_key(|&v| in_deg[v as usize]).unwrap();
+    let width = amcca::rpvo::rhizome::members_for(in_deg[hub as usize], cutoff, rpvo_max);
+    let need = width * cutoff - in_deg[hub as usize] + cutoff + 4;
+    let mut edges: Vec<(u32, u32, u32)> = (0..need)
+        .map(|k| {
+            let u = (hub + 1 + k) % g.n;
+            let u = if u == hub { (hub + 1) % g.n } else { u };
+            (u, hub, 1)
+        })
+        .collect();
+    // A few scattered edges so repair ripples also run off-hub.
+    edges.extend(MutationBatch::random(g.n, 16, 1, 0x6047).edges);
+    (MutationBatch { edges }, hub)
+}
+
+#[test]
+fn growth_streaming_identical_across_shards_and_axes() {
+    // The tentpole determinism contract: streaming mutation with rhizome
+    // growth enabled — on the on-chip ingest path, the hardest one — is
+    // whole-`Metrics` bit-identical across {Rows, Cols, Auto} x {1, 2, 4},
+    // with sprouts actually firing and repair still equal to a
+    // from-scratch recompute on the mutated graph.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let (batch, hub) = growth_batch(&g, 8);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let grid = axis_grid();
+    assert_axis_invariant("bfs-growth/R18", &grid, |mut c| {
+        c.rpvo_max = 8;
+        c.rhizome_growth = true;
+        c.build_mode = amcca::arch::config::BuildMode::OnChip;
+        let (mut chip, mut built) = driver::run_bfs(c, &g, 0).unwrap();
+        let width_before = built.roots[hub as usize].len();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        assert!(chip.metrics.members_sprouted > 0, "growth must actually fire");
+        assert!(built.roots[hub as usize].len() > width_before, "hub must widen");
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(
+            driver::verify_bfs(&gm, 0, &levels),
+            0,
+            "repair over sprouted members != from-scratch recompute"
+        );
+        (chip.metrics.clone(), levels)
+    });
+}
+
+#[test]
+fn growth_host_vs_onchip_structurally_equivalent() {
+    // Host-build and onchip-build streaming must widen the same rhizomes
+    // the same way: identical member counts everywhere, rings closed
+    // (every member links every sibling, no duplicates, no self-link,
+    // width metadata consistent), and per-vertex shares summing to the
+    // mutated graph's in-degree. Ring *order* may differ — on-chip rings
+    // close in message-arrival order — so the pin is set-based.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let (batch, hub) = growth_batch(&g, 8);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let in_deg = gm.in_degrees();
+    let run = |mode: amcca::arch::config::BuildMode| {
+        let mut c = cfg(1);
+        c.rpvo_max = 8;
+        c.rhizome_growth = true;
+        c.build_mode = mode;
+        let (mut chip, mut built) = driver::run_bfs(c, &g, 0).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        assert!(chip.metrics.members_sprouted > 0, "{mode:?}: growth must fire");
+        for (vid, members) in built.roots.iter().enumerate() {
+            let all: std::collections::HashSet<_> = members.iter().copied().collect();
+            assert_eq!(all.len(), members.len(), "v{vid}: duplicate member roots");
+            let mut share_sum = 0u64;
+            for &a in members {
+                let o = chip.object(a);
+                assert_eq!(
+                    o.meta.rhizome_size as usize,
+                    members.len(),
+                    "{mode:?} v{vid}: width metadata out of date"
+                );
+                let ring: std::collections::HashSet<_> = o.rhizome.iter().copied().collect();
+                assert_eq!(ring.len(), o.rhizome.len(), "{mode:?} v{vid}: duplicate links");
+                let mut want = all.clone();
+                want.remove(&a);
+                assert_eq!(ring, want, "{mode:?} v{vid}: ring not closed");
+                share_sum += o.meta.in_degree_share as u64;
+            }
+            assert_eq!(
+                share_sum, in_deg[vid] as u64,
+                "{mode:?} v{vid}: shares don't sum to in-degree"
+            );
+        }
+        (
+            built.roots.iter().map(|m| m.len()).collect::<Vec<_>>(),
+            chip.metrics.members_sprouted,
+            driver::bfs_levels(&chip, &built),
+        )
+    };
+    let host = run(amcca::arch::config::BuildMode::Host);
+    let onchip = run(amcca::arch::config::BuildMode::OnChip);
+    assert_eq!(host.0, onchip.0, "widened member counts diverged between build modes");
+    assert_eq!(host.1, onchip.1, "sprout counts diverged between build modes");
+    assert_eq!(host.2, onchip.2, "results diverged between build modes");
+    assert!(host.0[hub as usize] > 1, "hub must be rhizomatic after the stream");
+}
+
+#[test]
+fn growth_wave_modes_identical() {
+    // `ingest_wave` auto vs per-edge with growth enabled: sprouts are
+    // planned as wave barriers, so both modes must produce bit-identical
+    // results and identical sprout counts (metrics are compared within
+    // each wave mode across shard counts by the suites above; across
+    // modes the *structure* is the contract).
+    let g = Dataset::R18.build(Scale::Tiny);
+    let (batch, _) = growth_batch(&g, 8);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let mut across: Option<(u64, Vec<u32>)> = None;
+    for wave in [1usize, 0] {
+        let mut c = wave_cfg(2, default_axis(), wave, true);
+        c.rpvo_max = 8;
+        c.rhizome_growth = true;
+        let (mut chip, mut built) = driver::run_bfs(c, &g, 0).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&gm, 0, &levels), 0, "wave={wave}: wrong BFS");
+        let key = (chip.metrics.members_sprouted, levels);
+        match &across {
+            None => across = Some(key),
+            Some(k) => assert_eq!(k, &key, "wave modes diverged under growth"),
+        }
+    }
+}
+
 #[test]
 fn onchip_construction_identical_across_shard_counts() {
     // Message-driven construction (BuildMode::OnChip) is itself a chip

@@ -158,6 +158,54 @@ fn prop_rhizome_sizing() {
     });
 }
 
+/// Eq.-1 member selection balance: over any random insert sequence fed
+/// through the same persisted-counter selection the ingest engine uses,
+/// every vertex's per-member in-degree shares stay within one cutoff
+/// chunk of each other (the chunk currently filling is the only
+/// imbalance) and out-edges stay round-robin balanced to within one edge
+/// per member tree.
+#[test]
+fn prop_select_members_balance() {
+    qcheck("select_members_balance", |rng| {
+        let g = random_graph(rng, 120);
+        let mut cfg = random_cfg(rng);
+        cfg.rpvo_max = [2u32, 4, 8][rng.usize_below(3)];
+        cfg.local_edgelist_size = 1 + rng.usize_below(4); // low floor => real rhizomes
+        let mut chip = amcca::arch::chip::Chip::new(cfg, amcca::apps::bfs::Bfs).unwrap();
+        let mut built = amcca::rpvo::builder::build(&mut chip, &g).unwrap();
+        let inserts = 2 * g.n as u64;
+        for _ in 0..inserts {
+            let u = rng.below(g.n as u64) as u32;
+            let v = rng.below(g.n as u64) as u32;
+            if u == v {
+                continue;
+            }
+            amcca::rpvo::mutate::insert_edge(&mut chip, &mut built, u, v, 1, true).unwrap();
+        }
+        for (vid, members) in built.roots.iter().enumerate() {
+            let shares: Vec<u32> =
+                members.iter().map(|&a| chip.object(a).meta.in_degree_share).collect();
+            let spread = shares.iter().max().unwrap() - shares.iter().min().unwrap();
+            assert!(
+                spread <= built.cutoff_chunk,
+                "v{vid} shares {shares:?} diverge past one chunk ({})",
+                built.cutoff_chunk
+            );
+            let out_counts: Vec<usize> = members
+                .iter()
+                .map(|&a| {
+                    amcca::rpvo::mutate::member_tree(&chip, a)
+                        .iter()
+                        .map(|&o| chip.object(o).edges.len())
+                        .sum()
+                })
+                .collect();
+            let spread = out_counts.iter().max().unwrap() - out_counts.iter().min().unwrap();
+            assert!(spread <= 1, "v{vid} out-edges {out_counts:?} not round-robin");
+        }
+    });
+}
+
 /// Dynamic insertion then incremental BFS equals from-scratch BFS.
 #[test]
 fn prop_dynamic_insert_incremental_bfs() {
