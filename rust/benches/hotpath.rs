@@ -314,6 +314,67 @@ fn main() {
         }
     }
 
+    // --- wire-side combining: hub flits folded in router buffers -----------
+    // BFS and PageRank on the WK hub dataset with rhizomes, combining on
+    // vs off (`ChipConfig::combine`). Folding changes what the wire
+    // carries, so cycle and hop counts legitimately differ between the
+    // legs; the paired `hops` / `flits-combined` JSON entries quantify
+    // the wire-side traffic cut (on-leg hops + saved vs off-leg hops).
+    {
+        let g = Dataset::WK.build(Scale::Tiny);
+        for (label, combine) in [("combine=on", true), ("combine=off", false)] {
+            let mut cfg = ChipConfig::torus(64);
+            cfg.rpvo_max = 16;
+            cfg.combine = combine;
+
+            let mut samples: Vec<std::time::Duration> = Vec::new();
+            let mut st = (0u64, 0u64, 0u64, 0u64);
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let (chip, _) = driver::run_bfs(cfg.clone(), &g, 0).unwrap();
+                samples.push(t0.elapsed());
+                let m = &chip.metrics;
+                st = (m.cycles, m.hops, m.flits_combined, m.combined_hops_saved);
+            }
+            assert!(combine || st.2 == 0, "--combine off must disable folding");
+            samples.sort();
+            let dur = samples[samples.len() / 2];
+            let mcps = st.0 as f64 / dur.as_secs_f64() / 1e6;
+            let name = format!("bfs WK 64x64 [{label}]");
+            t.row(&[
+                name.clone(),
+                format!("{dur:?}"),
+                format!("{mcps:.2} Mcycles/s ({} hops, {} folds save {})", st.1, st.2, st.3),
+            ]);
+            json.push((name.clone(), mcps));
+            json.push((format!("{name} hops"), st.1 as f64));
+            json.push((format!("{name} flits-combined"), st.2 as f64));
+
+            let mut samples: Vec<std::time::Duration> = Vec::new();
+            let mut st = (0u64, 0u64, 0u64, 0u64);
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let (chip, _) = driver::run_pagerank(cfg.clone(), &g, 3).unwrap();
+                samples.push(t0.elapsed());
+                let m = &chip.metrics;
+                st = (m.cycles, m.hops, m.flits_combined, m.combined_hops_saved);
+            }
+            assert!(combine || st.2 == 0, "--combine off must disable folding");
+            samples.sort();
+            let dur = samples[samples.len() / 2];
+            let mcps = st.0 as f64 / dur.as_secs_f64() / 1e6;
+            let name = format!("pagerank WK 64x64 [{label}]");
+            t.row(&[
+                name.clone(),
+                format!("{dur:?}"),
+                format!("{mcps:.2} Mcycles/s ({} hops, {} folds save {})", st.1, st.2, st.3),
+            ]);
+            json.push((name.clone(), mcps));
+            json.push((format!("{name} hops"), st.1 as f64));
+            json.push((format!("{name} flits-combined"), st.2 as f64));
+        }
+    }
+
     // --- PJRT artifact execution (L1/L2 path) ------------------------------
     if amcca::runtime::pjrt::PjrtRuntime::available()
         && !amcca::runtime::artifacts::available_sizes(amcca::runtime::artifacts::Step::RelaxStep)

@@ -86,6 +86,13 @@ impl Application for Bfs {
         (payload + 1, aux)
     }
 
+    /// Wire-side combiner: two levels for the same vertex fold to their
+    /// min — the idempotent commutative monoid of the relaxation itself,
+    /// so results are bitwise-identical with combining on or off.
+    fn combine(&self, a: &ActionMsg, b: &ActionMsg) -> Option<ActionMsg> {
+        (a.aux == b.aux).then(|| ActionMsg { payload: a.payload.min(b.payload), ..*a })
+    }
+
     fn can_repair(&self) -> bool {
         true
     }

@@ -78,6 +78,14 @@ impl Application for Cc {
         (payload, 0.min(aux))
     }
 
+    /// Wire-side combiner: min-label, like BFS/SSSP — but kickoff
+    /// sentinels must never fold (each delivers a distinct "diffuse your
+    /// own label" command, not a label value).
+    fn combine(&self, a: &ActionMsg, b: &ActionMsg) -> Option<ActionMsg> {
+        (a.aux == b.aux && a.aux != KICKOFF)
+            .then(|| ActionMsg { payload: a.payload.min(b.payload), ..*a })
+    }
+
     fn can_repair(&self) -> bool {
         true
     }

@@ -182,13 +182,16 @@ impl Application for PageRank {
             debug_assert!(false, "score share for a completed iteration {i} < {}", st.iter);
             return out;
         }
+        // A combined flit is `1 + ext` in-edge contributions already
+        // summed at the wire (`Application::combine`): credit them all so
+        // the in-degree gate still fills.
         if i == st.iter {
             st.acc += msg.payload_f32();
-            st.seen += 1;
+            st.seen += 1 + msg.ext;
         } else {
             let p = Self::pend_slot(st, i - st.iter);
             p.acc += msg.payload_f32();
-            p.seen += 1;
+            p.seen += 1 + msg.ext;
         }
         self.cascade(st, meta, &mut out);
         out
@@ -228,6 +231,26 @@ impl Application for PageRank {
 
     fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
         (payload, aux)
+    }
+
+    /// Wire-side combiner: score shares for the same vertex *and the same
+    /// iteration* sum at the wire. f32 addition is order-sensitive, so the
+    /// engine pins the fold order (queued-earlier flit is always the left
+    /// operand — see `arch::chip` docs); within one run the combined
+    /// result is then bit-identical across shard counts and band axes,
+    /// though not bitwise-equal to `--combine off` (verified against the
+    /// BSP reference under tolerance instead). `ext` accumulates the
+    /// extra-arrival count the in-degree gate needs; kickoff sentinels and
+    /// cross-iteration pairs never fold.
+    fn combine(&self, a: &ActionMsg, b: &ActionMsg) -> Option<ActionMsg> {
+        if a.aux != b.aux || a.aux == KICKOFF {
+            return None;
+        }
+        Some(ActionMsg {
+            payload: (a.payload_f32() + b.payload_f32()).to_bits(),
+            ext: a.ext + b.ext + 1,
+            ..*a
+        })
     }
 
     /// PageRank is not a monotonic relaxation: one new edge perturbs

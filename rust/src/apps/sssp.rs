@@ -69,6 +69,13 @@ impl Application for Sssp {
         (payload.saturating_add(weight), aux)
     }
 
+    /// Wire-side combiner: two distances for the same vertex fold to
+    /// their min (the semiring's additive monoid — idempotent and
+    /// commutative, so combining cannot change the fixpoint).
+    fn combine(&self, a: &ActionMsg, b: &ActionMsg) -> Option<ActionMsg> {
+        (a.aux == b.aux).then(|| ActionMsg { payload: a.payload.min(b.payload), ..*a })
+    }
+
     fn can_repair(&self) -> bool {
         true
     }

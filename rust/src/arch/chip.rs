@@ -89,6 +89,55 @@
 //! fixed shard order at the end of the run. Hence serial and sharded
 //! execution are observationally identical.
 //!
+//! # Wire-side flit combining (`ChipConfig::combine`)
+//!
+//! Rhizomes flatten a hub's in-degree by adding members, but every
+//! relaxation flit still crosses the NoC individually. With combining on,
+//! same-destination `ActionKind::App` flits coalesce in router buffers
+//! via the app's [`Application::combine`] monoid (min for BFS/SSSP/CC,
+//! f32 sum for PageRank) at every push site — the *choke points*:
+//!   * the cell's **Local injection port** ([`Lane::inject`]): a staged
+//!     send folds into any queued same-`(dst, target)` flit instead of
+//!     consuming a slot (this even succeeds when the port is full, since
+//!     no new slot is needed);
+//!   * a **receiving input unit** on a forward — the same-shard immediate
+//!     push in [`Lane::route_cell`] and the cross-shard outbox merge in
+//!     [`Lane::apply_staged`] apply one shared eligibility rule, so fold
+//!     events are identical whether the push lands immediately (serial,
+//!     same band) or at the cycle barrier (cross band).
+//!
+//! **Determinism of the fold decision.** A queued flit is an eligible
+//! fold target iff `moved_at < now` (it was not pushed this cycle) and it
+//! either sits past the head (`offset >= 1`) or its unit already popped
+//! this cycle (`popped_at == now`). The start-of-cycle head is the only
+//! flit a receiver may still pop this cycle (one pop per input port per
+//! cycle); the rule excludes it until that pop provably happened, so the
+//! eligible set — and hence the fold outcome — is independent of whether
+//! the receiver's route step ran before or after the sender's push.
+//! There is at most one push per (cell, port) per cycle (single
+//! producer), so no ordering among pushes exists to matter. On the Local
+//! port the owning cell is sole producer *and* consumer and its route
+//! step always precedes its compute step within a cycle, so every queued
+//! flit is eligible. Mutation actions (`InsertEdge`/`MetaBump`/
+//! `SproutMember`/`RingSplice`) and system kinds never combine, keeping
+//! the structural ingest/growth waves byte-for-byte untouched.
+//!
+//! **Pinned fold order (PageRank).** The scan walks VC-ascending then
+//! offset-ascending from the head and folds the arriving flit into the
+//! *first* queued flit the app accepts, with the queued (earlier) flit
+//! as the **left** operand: `combine(queued, arriving)`. f32 addition is
+//! order-sensitive, but this order is a pure function of FIFO content,
+//! which the determinism argument above already fixes — so PageRank
+//! scores are bit-identical across shard counts and band axes for a
+//! fixed `combine` setting (and differ from `--combine off` only within
+//! f32 re-association, which the BSP-reference verification tolerates).
+//! The idempotent min-monoid apps are bitwise-equal with combining on or
+//! off. `Metrics::flits_combined` counts folds;
+//! `Metrics::combined_hops_saved` accumulates each absorbed flit's
+//! remaining distance to its destination (0 when folding at the
+//! destination itself — the flit still saved a queue slot and a
+//! delivery).
+//!
 //! **Timing-wheel wakeups.** A cell busy past the next cycle is *parked*
 //! in a per-shard [`TimingWheel`] slot keyed by its `busy_until` and woken
 //! exactly there, instead of being re-marked active every cycle just to
@@ -1161,7 +1210,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                 let deliverable = matches!(unit.head(vc),
                     Some(f) if f.next_port == DELIVER && f.moved_at < now);
                 if deliverable {
-                    let f = unit.pop(vc).unwrap();
+                    let f = unit.pop_at(vc, now).unwrap();
                     cell.action_q.push_back(f.action);
                     self.metrics.action_q_hwm =
                         self.metrics.action_q_hwm.max(cell.action_q.len() as u64);
@@ -1218,7 +1267,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             // one-cycle credit delay, identical for every shard count.
             let bit = 1u32 << (in_port * 8 + out_vc as usize);
             if self.space[n as usize].load(Ordering::Relaxed) & bit != 0 {
-                let mut f = self.cells.at_mut(i).inputs[p].pop(vc).unwrap();
+                let mut f = self.cells.at_mut(i).inputs[p].pop_at(vc, now).unwrap();
                 f.vc = out_vc;
                 f.hops += 1;
                 f.moved_at = now;
@@ -1237,11 +1286,18 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                 served_dirs |= 1 << d;
                 if self.owns(n) {
                     let ni = self.idx(n);
-                    let ncell = self.cells.at_mut(ni);
-                    let ok = ncell.inputs[in_port].try_push(out_vc, f);
-                    debug_assert!(ok, "space snapshot guaranteed a free slot");
-                    Self::mark(&mut self.st.next, ncell, n, epoch);
-                    self.st.pushed.push(n);
+                    if self.try_fold(n, ni, in_port, &f, false) {
+                        // Absorbed into a queued flit: no slot consumed,
+                        // occupancy unchanged, so no space refresh needed.
+                        let ncell = self.cells.at_mut(ni);
+                        Self::mark(&mut self.st.next, ncell, n, epoch);
+                    } else {
+                        let ncell = self.cells.at_mut(ni);
+                        let ok = ncell.inputs[in_port].try_push(out_vc, f);
+                        debug_assert!(ok, "space snapshot guaranteed a free slot");
+                        Self::mark(&mut self.st.next, ncell, n, epoch);
+                        self.st.pushed.push(n);
+                    }
                 } else {
                     let dest = self.band.shard_of(n);
                     self.st.per_dest[dest].push(Staged {
@@ -1542,8 +1598,54 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         2
     }
 
+    /// Try to absorb `flit` into a queued same-`(dst, target)` application
+    /// flit of cell `c`'s input unit on `port` (wire-side combining — see
+    /// the module docs). `local` marks the Local injection port, where the
+    /// owning cell is sole producer and consumer and its route step already
+    /// ran this cycle, so every queued flit is an eligible fold target; on
+    /// cardinal ports eligibility needs the order-invariance rule
+    /// (`moved_at < now` and past-the-head or already-popped). Returns
+    /// true when the flit was folded away — no slot or credit consumed.
+    fn try_fold(&mut self, c: CellId, i: usize, port: usize, flit: &Flit, local: bool) -> bool {
+        if !self.cfg.combine || flit.action.kind != ActionKind::App {
+            return false;
+        }
+        let now = self.now;
+        let mut hit: Option<(u8, u8, ActionMsg)> = None;
+        let unit = &self.cells.at(i).inputs[port];
+        'scan: for vc in 0..unit.num_vcs() as u8 {
+            for off in 0..unit.vc_len(vc) {
+                let q = unit.peek(vc, off).unwrap();
+                if q.action.kind != ActionKind::App
+                    || q.dst != flit.dst
+                    || q.action.target != flit.action.target
+                {
+                    continue;
+                }
+                if !local && !(q.moved_at < now && (off >= 1 || unit.popped_at() == now)) {
+                    continue;
+                }
+                // Pinned fold order: queued (earlier) flit is the left
+                // operand; first accepted match in (vc, offset) scan
+                // order wins.
+                if let Some(m) = self.app.combine(&q.action, &flit.action) {
+                    hit = Some((vc, off, m));
+                    break 'scan;
+                }
+            }
+        }
+        let Some((vc, off, m)) = hit else { return false };
+        self.cells.at_mut(i).inputs[port].peek_mut(vc, off).unwrap().action = m;
+        self.metrics.flits_combined += 1;
+        self.metrics.combined_hops_saved += self.geo.distance(c, flit.dst) as u64;
+        true
+    }
+
     /// Build + stage a remote-bound flit into this cell's Local injection
     /// port (live check: the owning cell is this port's only producer).
+    /// With combining on, a send that folds into an already-queued flit
+    /// reports success without consuming a slot — even when the port is
+    /// full, which is exactly when coalescing pays most.
     fn inject(&mut self, c: CellId, target: Address, msg: ActionMsg) -> bool {
         let num_vcs = self.cfg.num_vcs;
         let dst_xy = self.geo.coords(target.cc);
@@ -1553,6 +1655,9 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         flit.next_port = hop.port.index() as u8;
         flit.next_vc = hop.vc;
         let i = self.idx(c);
+        if self.try_fold(c, i, Port::Local.index(), &flit, true) {
+            return true;
+        }
         self.cells.at_mut(i).inputs[Port::Local.index()].try_push(hop.vc, flit)
     }
 
@@ -1754,13 +1859,27 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     // ------------------------------------------------- barrier merge --
 
     /// Apply pushes staged by another shard for cells this shard owns.
+    /// The fixed source-shard merge order makes the fold-vs-push decision
+    /// here identical to the serial engine's immediate push (see the
+    /// combining section of the module docs).
     fn apply_staged(&mut self, items: &mut Vec<Staged>) {
         let epoch = self.now + 1;
         for s in items.drain(..) {
             let i = self.idx(s.dst);
+            if self.try_fold(s.dst, i, s.in_port as usize, &s.flit, false) {
+                let cell = self.cells.at_mut(i);
+                Self::mark(&mut self.st.next, cell, s.dst, epoch);
+                continue;
+            }
             let cell = self.cells.at_mut(i);
             let ok = cell.inputs[s.in_port as usize].try_push(s.vc, s.flit);
             debug_assert!(ok, "outbox push must fit (single producer + credit)");
+            if !ok {
+                // Release builds would otherwise drop the flit silently:
+                // count it so a credit-accounting regression surfaces in
+                // the determinism suite (asserted zero there).
+                self.metrics.outbox_overflows += 1;
+            }
             Self::mark(&mut self.st.next, cell, s.dst, epoch);
             self.st.pushed.push(s.dst);
         }

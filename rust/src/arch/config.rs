@@ -80,6 +80,20 @@ pub struct ChipConfig {
     /// across shard counts, banding axes, and ingest-wave caps either
     /// way; this flag only changes *which* structure the stream builds.
     pub rhizome_growth: bool,
+    /// Wire-side message combining (`--combine on|off`, default on): fold
+    /// same-destination application actions at the router-buffer choke
+    /// points — a cell's Local injection port and the receiving input
+    /// unit of every forward (same-shard push and cross-shard outbox
+    /// merge alike) — using the app's `Application::combine` monoid
+    /// instead of consuming another slot/credit. Engine mutation actions
+    /// never combine (they carry addresses, not monoid values), so the
+    /// structural sprout/splice waves are untouched. Results stay
+    /// bit-identical across shard counts and band axes either way; for
+    /// the min-monoid apps (BFS/SSSP/CC) results are also bitwise-equal
+    /// to `--combine off` (idempotent monoid), while PageRank's pinned
+    /// f32 fold order differs from the uncombined sum order. See the
+    /// combining section of the `arch::chip` module docs.
+    pub combine: bool,
     /// Allocation policy (Fig. 4).
     pub alloc: AllocPolicy,
     /// Host-side vs message-driven graph construction (see [`BuildMode`]).
@@ -131,6 +145,7 @@ impl ChipConfig {
             ghost_arity: 2,
             rpvo_max: 1,
             rhizome_growth: false,
+            combine: true,
             alloc: AllocPolicy::Mixed,
             build_mode: BuildMode::Host,
             ingest_wave: 0,

@@ -114,6 +114,52 @@ impl Diffusion {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::addr::Address;
+    use crate::noc::message::{ActionKind, ActionMsg};
+
+    /// The (payload, aux) Address split is load-bearing for every mutation
+    /// action the ingest subsystem emits: pin the
+    /// `ActionMsg::with_addr` / `ActionMsg::operand_addr` round trip for
+    /// each mutation kind, including boundary addresses whose halves
+    /// saturate either u32 (a sign-extension or swapped-half bug would
+    /// corrupt exactly these).
+    #[test]
+    fn mutation_operand_address_roundtrip() {
+        let kinds = [
+            ActionKind::InsertEdge,
+            ActionKind::MetaBump,
+            ActionKind::SproutMember,
+            ActionKind::RingSplice,
+        ];
+        let addrs = [
+            Address::new(0, 0),
+            Address::new(0, u32::MAX),
+            Address::new(u32::MAX, 0),
+            Address::new(u32::MAX - 1, u32::MAX - 1),
+            Address::new(16383, 123_456),
+            Address::NULL,
+        ];
+        for kind in kinds {
+            for addr in addrs {
+                for ext in [0, 7, u32::MAX] {
+                    let m = ActionMsg::with_addr(kind, 9, addr, ext);
+                    assert_eq!(m.operand_addr(), addr, "{kind:?} {addr} ext={ext}");
+                    assert_eq!((m.kind, m.target, m.ext), (kind, 9, ext));
+                    // The split must match the packed form half-for-half:
+                    // payload carries the high word (cell id), aux the low
+                    // word (slot) — the engine relies on this layout when
+                    // it rebuilds addresses at the target's locality.
+                    assert_eq!(m.payload, addr.cc, "high word is the cell id");
+                    assert_eq!(m.aux, addr.slot, "low word is the slot");
+                    assert_eq!(
+                        ((m.payload as u64) << 32) | m.aux as u64,
+                        addr.pack(),
+                        "split re-concatenates to Address::pack"
+                    );
+                }
+            }
+        }
+    }
 
     #[test]
     fn spec_builders() {

@@ -77,6 +77,37 @@ pub trait Application: Send + Sync + 'static {
     /// PageRank: score share unchanged).
     fn edge_payload(&self, payload: u32, aux: u32, weight: u32) -> (u32, u32);
 
+    /// Wire-side message *combiner* (`ChipConfig::combine`): fold two
+    /// application actions bound for the same vertex object into one, so
+    /// hub traffic coalesces in router buffers instead of crossing the
+    /// NoC flit-by-flit (Yan et al.'s combiner aggregation, applied at
+    /// the paper's fine-grain message layer).
+    ///
+    /// Contract:
+    ///   * Only called for pairs of `ActionKind::App` messages with equal
+    ///     destination cell and equal `target` slot. Engine-level mutation
+    ///     actions (`InsertEdge`/`MetaBump`/`SproutMember`/`RingSplice`)
+    ///     and the system kinds (`RelayDiffuse`/`RhizomeShare`) are never
+    ///     offered — they carry addresses or feed counted collectives, not
+    ///     monoid values.
+    ///   * `a` is the *earlier* (queued) message and must be kept as the
+    ///     left operand of any order-sensitive fold — this pins the f32
+    ///     summation order for PageRank (see the combining section of the
+    ///     `arch::chip` module docs for the determinism argument).
+    ///   * Return `None` to refuse (e.g. mismatched iteration tags or a
+    ///     kickoff sentinel); the messages then travel separately.
+    ///   * Must be pure: no vertex state is available, and the same pair
+    ///     must fold the same way on every shard count.
+    ///   * An app that counts message *arrivals* (PageRank's in-degree
+    ///     gate) must carry the number of extra messages folded into the
+    ///     survivor in `ext` (`a.ext + b.ext + 1`) and credit `1 + ext`
+    ///     arrivals per delivered message in its `work`.
+    ///
+    /// The default refuses everything: combining is opt-in per app.
+    fn combine(&self, _a: &ActionMsg, _b: &ActionMsg) -> Option<ActionMsg> {
+        None
+    }
+
     /// Can this app repair incrementally after an edge insert? Monotonic
     /// relaxations (BFS, SSSP, CC) override this to `true` together with
     /// [`Application::repair`]; the default is `false` so an app that

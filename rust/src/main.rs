@@ -88,6 +88,16 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
             _ => anyhow::bail!("unknown --rhizome-growth {v} (on|off)"),
         };
     }
+    // Wire-side message combining: fold same-destination app actions in
+    // router buffers (on by default — off reproduces pre-combining NoC
+    // traffic; min-monoid app results are bitwise-identical either way).
+    if let Some(v) = args.get("combine") {
+        cfg.combine = match v {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            _ => anyhow::bail!("unknown --combine {v} (on|off)"),
+        };
+    }
     cfg.throttling = !args.has("no-throttle");
     cfg.seed = args.num("seed", 0x5EEDu64)?;
     cfg.local_edgelist_size = args.num("chunk", 16usize)?;
@@ -175,6 +185,9 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --ingest-wave N             mutation-stream wave cap: how many\n\
                  \x20                             independent inserts settle per chip run\n\
                  \x20                             (0 = auto, 1 = per-edge; same results)\n\
+                 \x20 --combine on|off            fold same-destination app actions in\n\
+                 \x20                             router buffers (default on; min-monoid\n\
+                 \x20                             app results are identical either way)\n\
                  \x20 --no-throttle               disable diffusion throttling\n\
                  \x20 --heatmap N                 sample congestion frames every N cycles\n\
                  \x20 --shards N                  engine worker threads (0 = auto; results\n\
@@ -205,7 +218,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let out = run(&exp, &g)?;
     let wall = t0.elapsed();
     println!(
-        "app={} graph={gname} ({} v, {} e) chip={}x{} {} rpvo_max={} throttle={} build={:?} mutations={}",
+        "app={} graph={gname} ({} v, {} e) chip={}x{} {} rpvo_max={} throttle={} combine={} build={:?} mutations={}",
         app.name(),
         g.n,
         g.m(),
@@ -214,6 +227,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         cfg.topology,
         cfg.rpvo_max,
         cfg.throttling,
+        cfg.combine,
         cfg.build_mode,
         exp.mutations,
     );
@@ -369,6 +383,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     t.row(&["ghost arity".into(), cfg.ghost_arity.to_string()]);
     t.row(&["rpvo_max".into(), cfg.rpvo_max.to_string()]);
     t.row(&["rhizome growth".into(), cfg.rhizome_growth.to_string()]);
+    t.row(&["combining".into(), cfg.combine.to_string()]);
     print!("{}", t.render());
     Ok(())
 }

@@ -30,6 +30,13 @@ pub struct InputUnit {
     cap: u8,
     live: u8,
     full: u8,
+    /// Cycle of this unit's most recent pop (`u64::MAX` = never). The
+    /// router stamps it via [`InputUnit::pop_at`]; push-time flit combining
+    /// reads it to prove no further pop can happen on this port this cycle
+    /// (the router pops at most one flit per input port per cycle). The
+    /// engine's `now` is monotonic across runs, so a stale stamp can never
+    /// alias the current cycle.
+    popped_at: u64,
 }
 
 impl InputUnit {
@@ -43,6 +50,7 @@ impl InputUnit {
             cap: cap as u8,
             live: 0,
             full: 0,
+            popped_at: u64::MAX,
         }
     }
 
@@ -98,6 +106,53 @@ impl InputUnit {
             return None;
         }
         Some(&self.slots[self.slot(v, 0)])
+    }
+
+    /// Buffered flits on one VC (combining scans walk `0..vc_len`).
+    #[inline]
+    pub fn vc_len(&self, vc: u8) -> u8 {
+        self.len[vc as usize]
+    }
+
+    /// The flit `off` positions past `vc`'s head (0 = head).
+    #[inline]
+    pub fn peek(&self, vc: u8, off: u8) -> Option<&Flit> {
+        let v = vc as usize;
+        if off >= self.len[v] {
+            return None;
+        }
+        Some(&self.slots[self.slot(v, off)])
+    }
+
+    /// Mutable [`InputUnit::peek`]: push-time combining rewrites a queued
+    /// flit's action in place (occupancy, cursors, and masks unchanged).
+    #[inline]
+    pub fn peek_mut(&mut self, vc: u8, off: u8) -> Option<&mut Flit> {
+        let v = vc as usize;
+        if off >= self.len[v] {
+            return None;
+        }
+        let idx = self.slot(v, off);
+        Some(&mut self.slots[idx])
+    }
+
+    /// [`InputUnit::pop`] that also stamps [`InputUnit::popped_at`] — the
+    /// router's pop sites use this so combining eligibility can tell a
+    /// start-of-cycle head that was already consumed from one that may
+    /// still be popped later this cycle.
+    #[inline]
+    pub fn pop_at(&mut self, vc: u8, now: u64) -> Option<Flit> {
+        let f = self.pop(vc);
+        if f.is_some() {
+            self.popped_at = now;
+        }
+        f
+    }
+
+    /// Cycle of the most recent [`InputUnit::pop_at`] (`u64::MAX` = never).
+    #[inline]
+    pub fn popped_at(&self) -> u64 {
+        self.popped_at
     }
 
     #[inline]
@@ -196,6 +251,31 @@ mod tests {
         assert!(!u.any_full());
         assert_eq!(u.occupancy(), 0);
         assert_eq!(u.space_mask(), 0b1111);
+    }
+
+    #[test]
+    fn peek_follows_ring_head_and_pop_stamps() {
+        let mut u = InputUnit::new(1, 3);
+        assert_eq!(u.popped_at(), u64::MAX, "fresh unit has never popped");
+        for i in 0..3 {
+            let mut f = flit();
+            f.action.payload = i;
+            assert!(u.try_push(0, f));
+        }
+        assert_eq!(u.vc_len(0), 3);
+        assert_eq!(u.peek(0, 0).unwrap().action.payload, 0);
+        assert_eq!(u.peek(0, 2).unwrap().action.payload, 2);
+        assert!(u.peek(0, 3).is_none());
+        u.peek_mut(0, 1).unwrap().action.payload = 99;
+        assert_eq!(u.pop_at(0, 7).unwrap().action.payload, 0);
+        assert_eq!(u.popped_at(), 7);
+        // After the pop the ring head advanced: offsets re-anchor.
+        assert_eq!(u.peek(0, 0).unwrap().action.payload, 99);
+        // Wrap the cursor and peek across the seam.
+        let mut f = flit();
+        f.action.payload = 42;
+        assert!(u.try_push(0, f));
+        assert_eq!(u.peek(0, 2).unwrap().action.payload, 42, "peek wraps the ring");
     }
 
     #[test]

@@ -76,6 +76,20 @@ pub struct Metrics {
     pub messages_local: u64,
     /// Total link traversals (energy; Fig. 10).
     pub hops: u64,
+    /// Same-destination application flits folded at a router-buffer choke
+    /// point (`ChipConfig::combine`): each count is one flit that never
+    /// consumed a slot, credit, or further link traversals.
+    pub flits_combined: u64,
+    /// Link traversals avoided by combining: for every fold, the remaining
+    /// distance from the fold point to the flit's destination (the hops
+    /// the absorbed flit would still have crossed). Compare with `hops`
+    /// for the wire-side traffic reduction.
+    pub combined_hops_saved: u64,
+    /// Cross-shard outbox pushes that found a full input FIFO — a credit
+    /// accounting bug if ever nonzero (debug builds assert instead). The
+    /// determinism suite asserts this stays zero so release builds cannot
+    /// silently drop flits.
+    pub outbox_overflows: u64,
     /// Flit-move attempts that stalled on a full downstream buffer.
     pub contention_stalls: u64,
     // -- throttle ---------------------------------------------------------
@@ -155,6 +169,9 @@ impl Metrics {
         self.messages_sent += o.messages_sent;
         self.messages_local += o.messages_local;
         self.hops += o.hops;
+        self.flits_combined += o.flits_combined;
+        self.combined_hops_saved += o.combined_hops_saved;
+        self.outbox_overflows += o.outbox_overflows;
         self.contention_stalls += o.contention_stalls;
         self.throttle_engaged += o.throttle_engaged;
         self.throttle_cycles += o.throttle_cycles;
@@ -168,7 +185,7 @@ impl Metrics {
     /// Compact one-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "cycles={} actions={} (work {:.1}% overlap {:.1}%) diffusions={} (pruned {:.1}%) msgs={} hops={} stalls={}",
+            "cycles={} actions={} (work {:.1}% overlap {:.1}%) diffusions={} (pruned {:.1}%) msgs={} hops={} combined={} (saved {}) stalls={}",
             self.cycles,
             self.actions_total(),
             100.0 * self.work_fraction(),
@@ -177,6 +194,8 @@ impl Metrics {
             100.0 * self.prune_fraction(),
             self.messages_sent,
             self.hops,
+            self.flits_combined,
+            self.combined_hops_saved,
             self.contention_stalls,
         )
     }

@@ -31,6 +31,17 @@
 //! wave mode, and bit-identical per-vertex results *between* the modes
 //! (for PageRank: bit-identical scores after `recompute_pagerank`, which
 //! pins that batching produced an identical on-chip structure).
+//!
+//! The combine suite (`combining_*`, `min_monoid_*`) extends the contract
+//! to wire-side flit combining (`ChipConfig::combine`, on by default):
+//! folds must actually fire on the WK hub dataset, stay whole-`Metrics`
+//! bit-identical across every shard count and banding axis, and — for the
+//! min-monoid apps — leave per-vertex results bitwise-equal to a
+//! `--combine off` run. The env var `AMCCA_COMBINE=off` flips the default
+//! for every other test in this file, so the CI `combine` leg re-runs the
+//! whole suite (mutations, waves, growth included) with folding disabled.
+//! Every grid point additionally asserts `outbox_overflows == 0`: release
+//! builds must never silently drop a staged cross-shard flit.
 
 use amcca::apps::driver;
 use amcca::arch::config::{ChipConfig, ShardAxis};
@@ -50,11 +61,22 @@ fn default_axis() -> ShardAxis {
         .unwrap_or(ShardAxis::Rows)
 }
 
+/// Wire-side combining default for this suite run. The CI `combine` leg
+/// sets `AMCCA_COMBINE=off` to re-run every test here with folding
+/// disabled, proving the invariances hold on both router paths.
+fn combine_default() -> bool {
+    !matches!(
+        std::env::var("AMCCA_COMBINE").as_deref(),
+        Ok("off") | Ok("0") | Ok("false")
+    )
+}
+
 fn cfg_on(shards: usize, axis: ShardAxis) -> ChipConfig {
     let mut cfg = ChipConfig::torus(16);
     cfg.seed = 7;
     cfg.shards = shards;
     cfg.shard_axis = axis;
+    cfg.combine = combine_default();
     cfg
 }
 
@@ -85,6 +107,10 @@ fn assert_axis_invariant(
     let mut reference: Option<(Metrics, Vec<u32>)> = None;
     for &(shards, axis) in grid {
         let (metrics, results) = run(cfg_on(shards, axis));
+        assert_eq!(
+            metrics.outbox_overflows, 0,
+            "{label}: staged flit dropped at {axis:?} x {shards}"
+        );
         match &reference {
             None => reference = Some((metrics, results)),
             Some((m, r)) => {
@@ -585,6 +611,80 @@ fn growth_wave_modes_identical() {
             Some(k) => assert_eq!(k, &key, "wave modes diverged under growth"),
         }
     }
+}
+
+// ----------------------------------------------------------- combine --
+
+#[test]
+fn combining_fires_and_stays_invariant_wk() {
+    // The tentpole pin for wire-side combining: on the WK hub dataset
+    // with rhizomes, same-destination flits must actually fold
+    // (`flits_combined > 0`) and the whole `Metrics` — including the new
+    // fold counters — must stay bit-identical across {Rows, Cols, Auto}
+    // x {1, 2, 4}. Combining is forced on here so the pin holds even on
+    // the `AMCCA_COMBINE=off` CI leg.
+    let grid = axis_grid();
+    let g = Dataset::WK.build(Scale::Tiny);
+    assert_axis_invariant("bfs-combine/WK", &grid, |mut c| {
+        c.rpvo_max = 8;
+        c.combine = true;
+        let (chip, built) = driver::run_bfs(c, &g, 0).unwrap();
+        assert!(chip.metrics.flits_combined > 0, "combining must fire on WK");
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &levels), 0, "wrong BFS");
+        (chip.metrics.clone(), levels)
+    });
+    assert_axis_invariant("pagerank-combine/WK", &grid, |mut c| {
+        c.rpvo_max = 8;
+        c.combine = true;
+        let (chip, built) = driver::run_pagerank(c, &g, 3).unwrap();
+        assert!(chip.metrics.flits_combined > 0, "combining must fire on WK");
+        let scores = driver::pagerank_scores(&chip, &built);
+        (chip.metrics.clone(), scores.iter().map(|s| s.to_bits()).collect())
+    });
+}
+
+#[test]
+fn min_monoid_results_equal_with_combining_off() {
+    // Folding min-monoid flits (BFS/SSSP/CC) is algebraically invisible:
+    // min is commutative, associative, and idempotent, so per-vertex
+    // results must be bitwise-equal between `--combine on` and
+    // `--combine off`. Metrics legitimately differ (fewer slots, fewer
+    // hops) — only the results are compared across the gate.
+    let with = |combine: bool| {
+        let mut c = cfg_on(2, default_axis());
+        c.rpvo_max = 8;
+        c.combine = combine;
+        c
+    };
+    let g = Dataset::WK.build(Scale::Tiny);
+    let (on, on_built) = driver::run_bfs(with(true), &g, 0).unwrap();
+    let (off, off_built) = driver::run_bfs(with(false), &g, 0).unwrap();
+    assert!(on.metrics.flits_combined > 0, "combining must fire on WK");
+    assert_eq!(off.metrics.flits_combined, 0, "--combine off must disable folding");
+    assert_eq!(
+        driver::bfs_levels(&on, &on_built),
+        driver::bfs_levels(&off, &off_built),
+        "BFS levels diverged across the combine gate"
+    );
+    let mut gw = Dataset::WK.build(Scale::Tiny);
+    gw.randomize_weights(32, 11);
+    let (on, on_built) = driver::run_sssp(with(true), &gw, 3).unwrap();
+    let (off, off_built) = driver::run_sssp(with(false), &gw, 3).unwrap();
+    assert_eq!(off.metrics.flits_combined, 0, "--combine off must disable folding");
+    assert_eq!(
+        driver::sssp_dists(&on, &on_built),
+        driver::sssp_dists(&off, &off_built),
+        "SSSP distances diverged across the combine gate"
+    );
+    let (on, on_built) = driver::run_cc(with(true), &g).unwrap();
+    let (off, off_built) = driver::run_cc(with(false), &g).unwrap();
+    assert_eq!(off.metrics.flits_combined, 0, "--combine off must disable folding");
+    assert_eq!(
+        driver::cc_labels(&on, &on_built),
+        driver::cc_labels(&off, &off_built),
+        "CC labels diverged across the combine gate"
+    );
 }
 
 #[test]

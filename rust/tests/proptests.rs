@@ -40,6 +40,10 @@ fn random_cfg(rng: &mut Rng) -> ChipConfig {
     cfg.shard_axis =
         [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto][rng.usize_below(3)];
     cfg.shards = rng.usize_below(4); // 0 = auto
+    // Wire-side combining is result-invisible for every app here (min
+    // monoid or gated sum); sample the gate so each property also pins
+    // that folded and unfolded runs agree with the reference.
+    cfg.combine = rng.chance(0.5);
     cfg
 }
 
@@ -287,6 +291,104 @@ fn prop_band_map_partition() {
             assert_eq!(serial.shard_of(c), 0);
             assert_eq!(serial.local_of(c), c as usize);
         }
+    });
+}
+
+/// The wire-side combine hooks are sound folds. For the min-monoid apps
+/// (BFS/SSSP/CC): commutative, associative, idempotent, and refusing
+/// mismatched iteration tags (CC additionally refuses its kickoff
+/// sentinel) — exactly the algebra that makes folding result-invisible.
+/// For PageRank: pairwise folding in the pinned queued-left order equals
+/// the sequential f32 sum bit-for-bit and accumulates the extra-arrival
+/// count in `ext` exactly, so the in-degree `seen` gate still balances.
+#[test]
+fn prop_combine_algebra() {
+    use amcca::diffusive::handler::Application;
+    use amcca::noc::message::{ActionKind, ActionMsg};
+
+    fn app_msg(rng: &mut Rng, target: u32, aux: u32) -> ActionMsg {
+        ActionMsg {
+            kind: ActionKind::App,
+            target,
+            payload: rng.next_u64() as u32,
+            aux,
+            ext: 0,
+        }
+    }
+
+    fn check_min_monoid<A: Application>(app: &A, rng: &mut Rng, kickoff: Option<u32>) {
+        // try_fold only offers same-(dst, target) App pairs; mirror that.
+        let target = rng.below(64) as u32;
+        let aux = rng.below(1_000) as u32;
+        let a = app_msg(rng, target, aux);
+        let b = app_msg(rng, target, aux);
+        let c = app_msg(rng, target, aux);
+        let name = app.name();
+        let ab = app.combine(&a, &b).expect("same-tag pair must fold");
+        assert_eq!(ab.payload, a.payload.min(b.payload), "{name}: fold is min");
+        assert_eq!((ab.kind, ab.target, ab.aux, ab.ext), (a.kind, target, aux, 0));
+        assert_eq!(app.combine(&b, &a), Some(ab), "{name}: commutative");
+        let bc = app.combine(&b, &c).unwrap();
+        assert_eq!(
+            app.combine(&ab, &c),
+            app.combine(&a, &bc),
+            "{name}: associative"
+        );
+        assert_eq!(app.combine(&a, &a), Some(a), "{name}: idempotent");
+        let other = app_msg(rng, target, aux + 1);
+        assert_eq!(app.combine(&a, &other), None, "{name}: tag mismatch must refuse");
+        if let Some(k) = kickoff {
+            let ka = ActionMsg { aux: k, ..a };
+            let kb = ActionMsg { aux: k, ..b };
+            assert_eq!(app.combine(&ka, &kb), None, "{name}: kickoff must refuse");
+        }
+    }
+
+    qcheck("combine_algebra", |rng| {
+        check_min_monoid(&amcca::apps::bfs::Bfs, rng, None);
+        check_min_monoid(&amcca::apps::sssp::Sssp, rng, None);
+        check_min_monoid(&amcca::apps::cc::Cc, rng, Some(amcca::apps::cc::KICKOFF));
+
+        let pr = amcca::apps::pagerank::PageRank::new(4);
+        let target = rng.below(64) as u32;
+        let iter = rng.below(8) as u32;
+        let k = 2 + rng.usize_below(5);
+        let vals: Vec<f32> =
+            (0..k).map(|_| rng.below(1_000_000) as f32 * 0.25).collect();
+        let exts: Vec<u32> = (0..k).map(|_| rng.below(4) as u32).collect();
+        let msgs: Vec<ActionMsg> = (0..k)
+            .map(|i| ActionMsg {
+                kind: ActionKind::App,
+                target,
+                payload: vals[i].to_bits(),
+                aux: iter,
+                ext: exts[i],
+            })
+            .collect();
+        // The engine always folds with the queued (earlier) flit on the
+        // left; chaining that way must equal the sequential f32 fold.
+        let mut acc = msgs[0];
+        for m in &msgs[1..] {
+            acc = pr.combine(&acc, m).expect("same-iteration pair must fold");
+        }
+        let mut seq = vals[0];
+        for v in &vals[1..] {
+            seq += *v;
+        }
+        assert_eq!(
+            acc.payload,
+            seq.to_bits(),
+            "pagerank: pinned left fold != sequential f32 sum"
+        );
+        assert_eq!(
+            acc.ext,
+            exts.iter().sum::<u32>() + (k as u32 - 1),
+            "pagerank: ext must count every folded arrival"
+        );
+        let late = ActionMsg { aux: iter + 1, ..msgs[0] };
+        assert_eq!(pr.combine(&msgs[0], &late), None, "pagerank: iterations must not mix");
+        let kick = ActionMsg { aux: amcca::apps::pagerank::KICKOFF, ..msgs[0] };
+        assert_eq!(pr.combine(&kick, &kick), None, "pagerank: kickoff must refuse");
     });
 }
 
