@@ -187,11 +187,11 @@ impl Application for PageRank {
         // the in-degree gate still fills.
         if i == st.iter {
             st.acc += msg.payload_f32();
-            st.seen += 1 + msg.ext;
+            st.seen = st.seen.saturating_add(1).saturating_add(msg.ext);
         } else {
             let p = Self::pend_slot(st, i - st.iter);
             p.acc += msg.payload_f32();
-            p.seen += 1 + msg.ext;
+            p.seen = p.seen.saturating_add(1).saturating_add(msg.ext);
         }
         self.cascade(st, meta, &mut out);
         out
@@ -246,9 +246,12 @@ impl Application for PageRank {
         if a.aux != b.aux || a.aux == KICKOFF {
             return None;
         }
+        // Saturating: `ext` is bounded by the member's in-degree share in
+        // practice, but an extreme hub chain must degrade (gate waits for
+        // the missing credits) rather than wrap the in-degree gate.
         Some(ActionMsg {
             payload: (a.payload_f32() + b.payload_f32()).to_bits(),
-            ext: a.ext + b.ext + 1,
+            ext: a.ext.saturating_add(b.ext).saturating_add(1),
             ..*a
         })
     }

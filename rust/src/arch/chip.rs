@@ -104,16 +104,34 @@
 //!     push in [`Lane::route_cell`] and the cross-shard outbox merge in
 //!     [`Lane::apply_staged`] apply one shared eligibility rule, so fold
 //!     events are identical whether the push lands immediately (serial,
-//!     same band) or at the cycle barrier (cross band).
+//!     same band) or at the cycle barrier (cross band). Forward-path
+//!     folds are *intentionally* gated behind the start-of-cycle credit
+//!     check: a fold needs no slot, but when the receiver lives on
+//!     another shard its queue cannot be read at send time (the fold
+//!     resolves only at the barrier), so a credit-failed flit cannot be
+//!     popped conditionally on a fold that might not happen. Allowing
+//!     pre-credit folds only when sender and receiver share a shard
+//!     would make flit fates depend on band placement, breaking the
+//!     serial/sharded bit-identity below. A credit-stalled flit simply
+//!     retries — and usually folds — next cycle. (Only the Local
+//!     injection port folds past a full buffer, because there the owning
+//!     cell is both producer and consumer and no cross-shard case
+//!     exists.)
 //!
 //! **Determinism of the fold decision.** A queued flit is an eligible
 //! fold target iff `moved_at < now` (it was not pushed this cycle) and it
-//! either sits past the head (`offset >= 1`) or its unit already popped
-//! this cycle (`popped_at == now`). The start-of-cycle head is the only
-//! flit a receiver may still pop this cycle (one pop per input port per
-//! cycle); the rule excludes it until that pop provably happened, so the
-//! eligible set — and hence the fold outcome — is independent of whether
-//! the receiver's route step ran before or after the sender's push.
+//! either sits past the head (`offset >= 1`) or *its own VC* already
+//! popped this cycle (`popped_at == now && popped_vc == vc`). The
+//! start-of-cycle head of each VC is the only flit a receiver may still
+//! pop this cycle (one pop per input port per cycle); the rule excludes
+//! every such head until the pop that provably consumed it — on *that*
+//! VC — happened. The VC qualifier matters: a pop advances only one VC's
+//! ring, so after it the other VCs' heads still sit at their
+//! start-of-cycle position, where a pre-route push would have seen them
+//! at `offset == 0` and ineligible. Qualifying by VC keeps them
+//! ineligible in the post-pop ordering too, so the eligible set — and
+//! hence the fold outcome — is independent of whether the receiver's
+//! route step ran before or after the sender's push.
 //! There is at most one push per (cell, port) per cycle (single
 //! producer), so no ordering among pushes exists to matter. On the Local
 //! port the owning cell is sole producer *and* consumer and its route
@@ -1265,6 +1283,13 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             let in_port = port.opposite().index();
             // Credit check against the *start-of-cycle* space snapshot —
             // one-cycle credit delay, identical for every shard count.
+            // The fold attempt below is deliberately gated behind this
+            // check even though a fold needs no slot: when the receiver
+            // lives on another shard its queue is unreadable here (the
+            // fold only resolves at the barrier), so a credit-failed flit
+            // cannot be popped conditionally on fold success. Folding
+            // pre-credit on the same-shard path alone would make outcomes
+            // depend on band placement — see the module docs.
             let bit = 1u32 << (in_port * 8 + out_vc as usize);
             if self.space[n as usize].load(Ordering::Relaxed) & bit != 0 {
                 let mut f = self.cells.at_mut(i).inputs[p].pop_at(vc, now).unwrap();
@@ -1604,8 +1629,9 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     /// owning cell is sole producer and consumer and its route step already
     /// ran this cycle, so every queued flit is an eligible fold target; on
     /// cardinal ports eligibility needs the order-invariance rule
-    /// (`moved_at < now` and past-the-head or already-popped). Returns
-    /// true when the flit was folded away — no slot or credit consumed.
+    /// (`moved_at < now` and past-the-head or its own VC already popped).
+    /// Returns true when the flit was folded away — no slot or credit
+    /// consumed.
     fn try_fold(&mut self, c: CellId, i: usize, port: usize, flit: &Flit, local: bool) -> bool {
         if !self.cfg.combine || flit.action.kind != ActionKind::App {
             return false;
@@ -1614,6 +1640,10 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         let mut hit: Option<(u8, u8, ActionMsg)> = None;
         let unit = &self.cells.at(i).inputs[port];
         'scan: for vc in 0..unit.num_vcs() as u8 {
+            // Per-VC pop evidence: a pop advances only its own VC's ring,
+            // so only that VC's new head is provably past the
+            // start-of-cycle head (see the module docs).
+            let head_popped = unit.popped_at() == now && unit.popped_vc() == vc;
             for off in 0..unit.vc_len(vc) {
                 let q = unit.peek(vc, off).unwrap();
                 if q.action.kind != ActionKind::App
@@ -1622,7 +1652,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                 {
                     continue;
                 }
-                if !local && !(q.moved_at < now && (off >= 1 || unit.popped_at() == now)) {
+                if !local && !(q.moved_at < now && (off >= 1 || head_popped)) {
                     continue;
                 }
                 // Pinned fold order: queued (earlier) flit is the left

@@ -37,6 +37,13 @@ pub struct InputUnit {
     /// engine's `now` is monotonic across runs, so a stale stamp can never
     /// alias the current cycle.
     popped_at: u64,
+    /// VC of that pop. Combining eligibility must be per-VC: the pop only
+    /// advances *this* VC's ring, so only this VC's new head was provably
+    /// past the start-of-cycle head. Other VCs' heads keep their
+    /// start-of-cycle position and must stay ineligible, or the fold
+    /// decision would depend on whether the push landed before or after
+    /// the receiver's route step (see `arch::chip` module docs).
+    popped_vc: u8,
 }
 
 impl InputUnit {
@@ -51,6 +58,7 @@ impl InputUnit {
             live: 0,
             full: 0,
             popped_at: u64::MAX,
+            popped_vc: 0,
         }
     }
 
@@ -145,6 +153,7 @@ impl InputUnit {
         let f = self.pop(vc);
         if f.is_some() {
             self.popped_at = now;
+            self.popped_vc = vc;
         }
         f
     }
@@ -153,6 +162,13 @@ impl InputUnit {
     #[inline]
     pub fn popped_at(&self) -> u64 {
         self.popped_at
+    }
+
+    /// VC of the most recent [`InputUnit::pop_at`] (meaningless until
+    /// [`InputUnit::popped_at`] has been stamped).
+    #[inline]
+    pub fn popped_vc(&self) -> u8 {
+        self.popped_vc
     }
 
     #[inline]
@@ -251,6 +267,21 @@ mod tests {
         assert!(!u.any_full());
         assert_eq!(u.occupancy(), 0);
         assert_eq!(u.space_mask(), 0b1111);
+    }
+
+    #[test]
+    fn pop_stamps_cycle_and_vc() {
+        let mut u = InputUnit::new(2, 2);
+        assert!(u.try_push(0, flit()));
+        assert!(u.try_push(1, flit()));
+        assert!(u.pop_at(1, 5).is_some());
+        assert_eq!(u.popped_at(), 5);
+        assert_eq!(u.popped_vc(), 1, "stamp must name the popped VC");
+        assert!(u.pop_at(0, 6).is_some());
+        assert_eq!(u.popped_at(), 6);
+        assert_eq!(u.popped_vc(), 0);
+        assert!(u.pop_at(0, 7).is_none(), "empty pop must not restamp");
+        assert_eq!(u.popped_at(), 6);
     }
 
     #[test]
