@@ -14,10 +14,32 @@
 use amcca::apps::driver;
 use amcca::arch::config::{ChipConfig, ShardAxis};
 use amcca::coordinator::report::Table;
-use amcca::graph::datasets::{Dataset, Scale};
+use amcca::graph::datasets::{self, Dataset, Scale};
+use amcca::graph::source::{self, BinaryEdgeSource, EdgeSource};
 use amcca::noc::routing::trace;
 use amcca::noc::topology::{Geometry, Topology};
 use std::time::Instant;
+
+/// `AMCCA_BENCH_SCALE=tiny|small|medium|large` picks the stand-in graph
+/// size for the micro-benches (default tiny — the CI snapshot size; JSON
+/// keys carry an `@Scale` marker when overridden so snapshots from
+/// different scales never mix).
+fn bench_scale() -> Scale {
+    match std::env::var("AMCCA_BENCH_SCALE") {
+        Ok(s) => Scale::from_name(&s)
+            .unwrap_or_else(|| panic!("bad AMCCA_BENCH_SCALE {s} (tiny|small|medium|large)")),
+        Err(_) => Scale::Tiny,
+    }
+}
+
+/// Peak resident set so far (VmHWM from /proc/self/status, KiB). Linux
+/// only; `None` elsewhere. Monotone over the process lifetime, so probes
+/// that rely on deltas must run before anything big is allocated.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
 
 /// Median wall time of `n` runs of `f` (after one warmup).
 fn median_time<F: FnMut() -> u64>(n: usize, mut f: F) -> (std::time::Duration, u64) {
@@ -38,10 +60,11 @@ fn median_time<F: FnMut() -> u64>(n: usize, mut f: F) -> (std::time::Duration, u
 fn sim_loop_mcps(
     dim: u32,
     ds: Dataset,
+    scale: Scale,
     rpvo_max: u32,
     shards: usize,
 ) -> (f64, std::time::Duration, u64) {
-    let g = ds.build(Scale::Tiny);
+    let g = ds.build(scale);
     let mut cfg = ChipConfig::torus(dim);
     cfg.rpvo_max = rpvo_max;
     cfg.shards = shards;
@@ -82,6 +105,115 @@ fn main() {
     let mut t = Table::new(&["bench", "median", "throughput"]);
     let mut json: Vec<(String, f64)> = Vec::new();
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16);
+    let scale = bench_scale();
+    // Appended to every scale-sensitive label when the env override is in
+    // play, so snapshot keys from different scales never collide.
+    let sc = if scale == Scale::Tiny { String::new() } else { format!(" @{scale:?}") };
+
+    // --- out-of-core build: RMAT20 (2^20 vertices, ~8.4M edges) ------------
+    // Runs FIRST: VmHWM is a process-lifetime high-water mark, so the
+    // staging-memory probes only mean something before anything else has
+    // allocated. The streamed probe drains the generator through one
+    // fixed-size chunk buffer; the materialized probe then stages the
+    // whole edge list host-side. The delta pair is the out-of-core win —
+    // chip-resident arenas are common to both paths and excluded by
+    // construction (the chips are built after the probes).
+    {
+        const CHUNK: usize = 65_536;
+        let rss0 = peak_rss_kb();
+        let mut src = datasets::rmat20_stream();
+        let mut buf = Vec::new();
+        src.reset().unwrap();
+        while src.next_chunk(&mut buf, CHUNK).unwrap() > 0 {}
+        let rss_stream = peak_rss_kb();
+        let g20 = source::materialize(&mut src).unwrap();
+        let rss_mat = peak_rss_kb();
+        if let (Some(r0), Some(rs), Some(rm)) = (rss0, rss_stream, rss_mat) {
+            let streamed = (rs - r0).max(1);
+            let materialized = (rm - rs).max(1);
+            assert!(
+                2 * streamed < materialized,
+                "streamed staging ({streamed} KiB) must stay under half the \
+                 materialized staging ({materialized} KiB)"
+            );
+            t.row(&[
+                "build-stream RMAT20 staging RSS".into(),
+                format!("{streamed} KiB vs {materialized} KiB"),
+                format!("{:.1}x less host staging", materialized as f64 / streamed as f64),
+            ]);
+            json.push((
+                "build-stream RMAT20 staging-rss-kb [streamed]".into(),
+                streamed as f64,
+            ));
+            json.push((
+                "build-stream RMAT20 staging-rss-kb [materialized]".into(),
+                materialized as f64,
+            ));
+        }
+
+        // Streamed vs materialized construction of the same 128x128 chip.
+        // The streamed leg replays the binary edge list from disk (the
+        // true out-of-core scenario: generation cost stays out of the
+        // timing); host build mode makes the two chips bit-identical, so
+        // Medges/s differences are pure staging effect. Single-shot: the
+        // workload is big enough to swamp timer noise.
+        let tmp = std::env::temp_dir().join("amcca_rmat20.amel");
+        {
+            use std::io::Write as _;
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp).unwrap());
+            g20.save_binary_edgelist(&mut w).unwrap();
+            w.flush().unwrap();
+        }
+        let mut cfg = ChipConfig::torus(128);
+        cfg.rpvo_max = 16;
+        let m_edges = g20.m() as f64;
+
+        let t0 = Instant::now();
+        {
+            let mut chip =
+                amcca::arch::chip::Chip::new(cfg.clone(), amcca::apps::bfs::Bfs).unwrap();
+            let mut fsrc = BinaryEdgeSource::new(std::io::BufReader::new(
+                std::fs::File::open(&tmp).unwrap(),
+            ))
+            .unwrap();
+            amcca::rpvo::builder::build_stream(&mut chip, &mut fsrc, CHUNK).unwrap();
+        }
+        let dur_s = t0.elapsed();
+        let meps_s = m_edges / dur_s.as_secs_f64() / 1e6;
+        t.row(&[
+            "build-stream RMAT20 128x128 [streamed]".into(),
+            format!("{dur_s:?}"),
+            format!("{meps_s:.2} Medges/s"),
+        ]);
+        json.push(("build-stream RMAT20 128x128 [streamed]".into(), meps_s));
+        let _ = std::fs::remove_file(&tmp);
+
+        let t0 = Instant::now();
+        let mut chip = amcca::arch::chip::Chip::new(cfg, amcca::apps::bfs::Bfs).unwrap();
+        let built = amcca::rpvo::builder::build(&mut chip, &g20).unwrap();
+        let dur_m = t0.elapsed();
+        let meps_m = m_edges / dur_m.as_secs_f64() / 1e6;
+        t.row(&[
+            "build-stream RMAT20 128x128 [materialized]".into(),
+            format!("{dur_m:?}"),
+            format!("{meps_m:.2} Medges/s ({:.2}x vs streamed)", meps_m / meps_s),
+        ]);
+        json.push(("build-stream RMAT20 128x128 [materialized]".into(), meps_m));
+
+        // The materialized chip doubles as the million-vertex app leg.
+        drop(g20);
+        chip.germinate(built.addr_of(0), amcca::noc::message::ActionKind::App, 0, 0);
+        let t0 = Instant::now();
+        chip.run().unwrap();
+        let dur = t0.elapsed();
+        let mcps = chip.metrics.cycles as f64 / dur.as_secs_f64() / 1e6;
+        t.row(&[
+            "bfs RMAT20 128x128".into(),
+            format!("{dur:?}"),
+            format!("{mcps:.2} Mcycles/s ({} cyc)", chip.metrics.cycles),
+        ]);
+        json.push(("bfs RMAT20 128x128".into(), mcps));
+    }
 
     // --- end-to-end simulation throughput (the headline §Perf metric) ----
     // Serial vs sharded on the same workloads; determinism makes cycle
@@ -91,23 +223,23 @@ fn main() {
         ("bfs R18 64x64", 64, Dataset::R18, 1),
         ("bfs WK-Rh 64x64", 64, Dataset::WK, 16),
     ] {
-        let (serial, sdur, cycles) = sim_loop_mcps(dim, ds, rpvo, 1);
+        let (serial, sdur, cycles) = sim_loop_mcps(dim, ds, scale, rpvo, 1);
         t.row(&[
-            format!("{name} [serial]"),
+            format!("{name}{sc} [serial]"),
             format!("{sdur:?}"),
             format!("{serial:.2} Mcycles/s (sim loop, {cycles} cyc)"),
         ]);
-        json.push((format!("{name} [serial]"), serial));
+        json.push((format!("{name}{sc} [serial]"), serial));
         if auto > 1 && dim >= 32 {
             let shards = auto.min(dim as usize);
-            let (par, pdur, pcycles) = sim_loop_mcps(dim, ds, rpvo, shards);
+            let (par, pdur, pcycles) = sim_loop_mcps(dim, ds, scale, rpvo, shards);
             assert_eq!(cycles, pcycles, "sharded engine must be cycle-identical");
             t.row(&[
-                format!("{name} [shards={shards}]"),
+                format!("{name}{sc} [shards={shards}]"),
                 format!("{pdur:?}"),
                 format!("{par:.2} Mcycles/s ({:.2}x vs serial)", par / serial),
             ]);
-            json.push((format!("{name} [shards={shards}]"), par));
+            json.push((format!("{name}{sc} [shards={shards}]"), par));
         }
     }
 
@@ -118,7 +250,7 @@ fn main() {
     // axes (bit-for-bit determinism), so the Mcycles/s ratio is pure
     // banding effect.
     if auto > 1 {
-        let g = Dataset::R18.build(Scale::Tiny);
+        let g = Dataset::R18.build(scale);
         let shards = auto.min(16);
         let mut cycles_by_axis: Vec<u64> = Vec::new();
         for (label, axis) in [("rows", ShardAxis::Rows), ("cols", ShardAxis::Cols)] {
@@ -142,7 +274,7 @@ fn main() {
             samples.sort_by(|a, b| a.0.total_cmp(&b.0));
             let (mcps, dur) = samples[samples.len() / 2];
             cycles_by_axis.push(cycles);
-            let name = format!("bfs R18 32x128 [{label} shards={shards}]");
+            let name = format!("bfs R18{sc} 32x128 [{label} shards={shards}]");
             t.row(&[
                 name.clone(),
                 format!("{dur:?}"),
@@ -158,7 +290,7 @@ fn main() {
 
     // --- per-cycle engine step cost on an idle-ish chip -------------------
     {
-        let g = Dataset::R18.build(Scale::Tiny);
+        let g = Dataset::R18.build(scale);
         let cfg = ChipConfig::torus(32);
         let (dur, steps) = median_time(5, || {
             let mut chip =
@@ -205,7 +337,7 @@ fn main() {
     // host fast path and message-driven InsertEdge actions (edges/s is
     // the §7 ingest-as-a-workload headline).
     {
-        let g = Dataset::R18.build(Scale::Tiny);
+        let g = Dataset::R18.build(scale);
         use amcca::arch::config::BuildMode;
         for (label, mode) in [("host", BuildMode::Host), ("onchip", BuildMode::OnChip)] {
             let mut cfg = ChipConfig::torus(32);
@@ -218,11 +350,11 @@ fn main() {
             });
             let meps = edges as f64 / dur.as_secs_f64() / 1e6;
             t.row(&[
-                format!("ingest R18@Tiny 32x32 [{label}]"),
+                format!("ingest R18@{scale:?} 32x32 [{label}]"),
                 format!("{dur:?}"),
                 format!("{meps:.2} Medges/s"),
             ]);
-            json.push((format!("ingest R18@Tiny 32x32 [{label}]"), meps));
+            json.push((format!("ingest R18@{scale:?} 32x32 [{label}]"), meps));
         }
     }
 
@@ -236,7 +368,7 @@ fn main() {
     {
         use amcca::arch::config::BuildMode;
         use amcca::rpvo::mutate::MutationBatch;
-        let g = Dataset::R18.build(Scale::Tiny);
+        let g = Dataset::R18.build(scale);
         let batch = MutationBatch::random(g.n, 512, 1, 0xB47C);
         for (label, wave) in [("wave=1", 1usize), ("auto", 0usize)] {
             let mut cfg = ChipConfig::torus(32);
@@ -255,11 +387,11 @@ fn main() {
             let dur = samples[samples.len() / 2];
             let meps = batch.edges.len() as f64 / dur.as_secs_f64() / 1e6;
             t.row(&[
-                format!("ingest-batched R18@Tiny 32x32 [{label}]"),
+                format!("ingest-batched R18@{scale:?} 32x32 [{label}]"),
                 format!("{dur:?}"),
                 format!("{meps:.3} Medges/s ({} edges, {waves} waves)", batch.edges.len()),
             ]);
-            json.push((format!("ingest-batched R18@Tiny 32x32 [{label}]"), meps));
+            json.push((format!("ingest-batched R18@{scale:?} 32x32 [{label}]"), meps));
         }
     }
 
@@ -274,7 +406,7 @@ fn main() {
     {
         use amcca::arch::config::BuildMode;
         use amcca::rpvo::mutate::MutationBatch;
-        let g = Dataset::R18.build(Scale::Tiny);
+        let g = Dataset::R18.build(scale);
         let in_deg = g.in_degrees();
         let hub = (0..g.n).min_by_key(|&v| in_deg[v as usize]).unwrap();
         let mut edges = MutationBatch::random(g.n, 256, 1, 0x6047).edges;
@@ -303,13 +435,13 @@ fn main() {
             samples.sort();
             let dur = samples[samples.len() / 2];
             let meps = batch.edges.len() as f64 / dur.as_secs_f64() / 1e6;
-            let name = format!("ingest-growth R18@Tiny 32x32 [{label}]");
+            let name = format!("ingest-growth R18@{scale:?} 32x32 [{label}]");
             t.row(&[
                 name.clone(),
                 format!("{dur:?}"),
                 format!("{meps:.3} Medges/s ({sprouted} sprouts, p99 share {p99:.0})"),
             ]);
-            json.push((name, meps));
+            json.push((name.clone(), meps));
             json.push((format!("{name} p99-share"), p99));
         }
     }
@@ -321,7 +453,7 @@ fn main() {
     // legs; the paired `hops` / `flits-combined` JSON entries quantify
     // the wire-side traffic cut (on-leg hops + saved vs off-leg hops).
     {
-        let g = Dataset::WK.build(Scale::Tiny);
+        let g = Dataset::WK.build(scale);
         for (label, combine) in [("combine=on", true), ("combine=off", false)] {
             let mut cfg = ChipConfig::torus(64);
             cfg.rpvo_max = 16;
@@ -340,7 +472,7 @@ fn main() {
             samples.sort();
             let dur = samples[samples.len() / 2];
             let mcps = st.0 as f64 / dur.as_secs_f64() / 1e6;
-            let name = format!("bfs WK 64x64 [{label}]");
+            let name = format!("bfs WK{sc} 64x64 [{label}]");
             t.row(&[
                 name.clone(),
                 format!("{dur:?}"),
@@ -363,7 +495,7 @@ fn main() {
             samples.sort();
             let dur = samples[samples.len() / 2];
             let mcps = st.0 as f64 / dur.as_secs_f64() / 1e6;
-            let name = format!("pagerank WK 64x64 [{label}]");
+            let name = format!("pagerank WK{sc} 64x64 [{label}]");
             t.row(&[
                 name.clone(),
                 format!("{dur:?}"),
@@ -395,13 +527,17 @@ fn main() {
 
     // --- full app wall time (context for the sim loop numbers) ------------
     {
-        let g = Dataset::R18.build(Scale::Tiny);
+        let g = Dataset::R18.build(scale);
         let cfg = ChipConfig::torus(16);
         let (dur, _) = median_time(5, || {
             let (chip, _) = driver::run_bfs(cfg.clone(), &g, 0).unwrap();
             chip.metrics.cycles
         });
-        t.row(&["bfs R18@Tiny 16x16 (build+run+extract)".into(), format!("{dur:?}"), "-".into()]);
+        t.row(&[
+            format!("bfs R18@{scale:?} 16x16 (build+run+extract)"),
+            format!("{dur:?}"),
+            "-".into(),
+        ]);
     }
 
     print!("{}", t.render());

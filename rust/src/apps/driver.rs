@@ -17,8 +17,9 @@ use crate::arch::config::ChipConfig;
 use crate::baseline::bsp;
 use crate::diffusive::handler::Application;
 use crate::graph::model::HostGraph;
+use crate::graph::source::EdgeSource;
 use crate::noc::message::ActionKind;
-use crate::rpvo::builder::{build, BuiltGraph};
+use crate::rpvo::builder::{build, build_stream, BuiltGraph};
 use crate::rpvo::mutate::{self, MutationBatch};
 
 /// Rhizome consistency tolerance for f32 all-reduce ordering differences.
@@ -140,6 +141,79 @@ pub fn cc_labels(chip: &Chip<crate::apps::cc::Cc>, built: &BuiltGraph) -> Vec<u3
     labels
 }
 
+// ------------------------------------------------------------ streaming --
+//
+// Out-of-core twins of the run_* drivers: the graph arrives through an
+// [`EdgeSource`] in `chunk`-edge waves instead of a materialized
+// `HostGraph` (see `rpvo::builder::build_stream`). With the default host
+// build mode the resulting chip is bit-identical to the materialized
+// driver for every chunk size, so metrics and per-vertex results match
+// exactly; verification against the BSP references still needs a
+// materialized copy (`graph::source::materialize`).
+
+/// Streaming twin of [`run_bfs`]: build from an edge source, then BFS.
+pub fn run_bfs_stream(
+    cfg: ChipConfig,
+    src: &mut dyn EdgeSource,
+    chunk: usize,
+    root: u32,
+) -> anyhow::Result<(Chip<Bfs>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, Bfs)?;
+    let built = build_stream(&mut chip, src, chunk)?;
+    chip.germinate(built.addr_of(root), ActionKind::App, 0, 0);
+    chip.run()?;
+    Ok((chip, built))
+}
+
+/// Streaming twin of [`run_sssp`].
+pub fn run_sssp_stream(
+    cfg: ChipConfig,
+    src: &mut dyn EdgeSource,
+    chunk: usize,
+    root: u32,
+) -> anyhow::Result<(Chip<Sssp>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, Sssp)?;
+    let built = build_stream(&mut chip, src, chunk)?;
+    chip.germinate(built.addr_of(root), ActionKind::App, 0, 0);
+    chip.run()?;
+    Ok((chip, built))
+}
+
+/// Streaming twin of [`run_pagerank`].
+pub fn run_pagerank_stream(
+    cfg: ChipConfig,
+    src: &mut dyn EdgeSource,
+    chunk: usize,
+    iters: u32,
+) -> anyhow::Result<(Chip<PageRank>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, PageRank::new(iters))?;
+    let built = build_stream(&mut chip, src, chunk)?;
+    for members in &built.roots {
+        for &addr in members {
+            chip.germinate(addr, ActionKind::App, 0, KICKOFF);
+        }
+    }
+    chip.run()?;
+    Ok((chip, built))
+}
+
+/// Streaming twin of [`run_cc`].
+pub fn run_cc_stream(
+    cfg: ChipConfig,
+    src: &mut dyn EdgeSource,
+    chunk: usize,
+) -> anyhow::Result<(Chip<crate::apps::cc::Cc>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, crate::apps::cc::Cc)?;
+    let built = build_stream(&mut chip, src, chunk)?;
+    for members in &built.roots {
+        for &addr in members {
+            chip.germinate(addr, ActionKind::App, 0, crate::apps::cc::KICKOFF);
+        }
+    }
+    chip.run()?;
+    Ok((chip, built))
+}
+
 /// Per-member in-degree shares over every member root, one sample per
 /// rhizome member — the Fig.-9 flattening metric. A skewed vertex split
 /// over a healthy rhizome shows a flat profile; a vertex that *became* a
@@ -259,6 +333,22 @@ mod tests {
         let (chip2, built2) = run_bfs(sharded_cfg, &g, 0).unwrap();
         assert_eq!(chip1.metrics, chip2.metrics, "engine must be shard-invariant");
         assert_eq!(bfs_levels(&chip1, &built1), bfs_levels(&chip2, &built2));
+    }
+
+    #[test]
+    fn streamed_driver_is_bit_identical_to_materialized() {
+        // Host build mode: same insert order regardless of chunking, so
+        // the streamed driver must reproduce the materialized chip
+        // exactly — metrics included.
+        let g = erdos::generate(128, 512, 3);
+        let (chip_m, built_m) = run_bfs(small_cfg(), &g, 0).unwrap();
+        let mut bytes = Vec::new();
+        g.save_binary_edgelist(&mut bytes).unwrap();
+        let mut src =
+            crate::graph::source::BinaryEdgeSource::new(std::io::Cursor::new(bytes)).unwrap();
+        let (chip_s, built_s) = run_bfs_stream(small_cfg(), &mut src, 7, 0).unwrap();
+        assert_eq!(chip_m.metrics, chip_s.metrics, "streamed build must match bit-for-bit");
+        assert_eq!(bfs_levels(&chip_m, &built_m), bfs_levels(&chip_s, &built_s));
     }
 
     #[test]

@@ -183,6 +183,26 @@
 //! ping-pong between producer and mailbox so steady-state cycles allocate
 //! nothing, and the blocked-diffusion filter pass uses a fixed scratch
 //! array instead of a per-call `Vec`.
+//!
+//! **Touch-first (NUMA-aware) cell placement.** On Linux a freshly mapped
+//! page is physically placed on the NUMA node of the first thread that
+//! *writes* it, not the thread that `malloc`ed it. `Chip::new` exploits
+//! exactly that, with no libnuma dependency: when the config resolves to
+//! a sharded run, the cell arenas are constructed **in parallel, one
+//! scoped worker per band**, over an untouched `MaybeUninit` slab — each
+//! band worker first-touch-initializes its own cells' object arenas,
+//! action/diffuse queues, and pooled router FIFO slabs, so the pages a
+//! band worker will hammer every cycle of `run_sharded` live on its own
+//! node. The band partition used for construction is the same `BandMap`
+//! the engine banding uses, keyed off the resolved axis and
+//! `effective_shards_on`, so worker k constructs what worker k later
+//! simulates (modulo a later `set_band_axis` refinement — still mostly
+//! overlapping bands). Small chips (< 1024 cells) and serial configs
+//! keep the plain serial construction. Cell *values* are identical
+//! either way — construction order and thread assignment affect page
+//! placement only, never contents, so results stay bit-identical (the
+//! determinism suite's shard/axis grids run against both construction
+//! paths).
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
@@ -460,13 +480,71 @@ pub struct Chip<A: Application> {
     throttle_period: u64,
 }
 
+/// Chips too small to ever run sharded (`ChipConfig::effective_shards_on`
+/// auto-serializes below this) build their cells serially.
+const TOUCH_FIRST_MIN_CELLS: usize = 1024;
+
+/// Construct the cell arenas, touch-first when the chip will run sharded.
+///
+/// A `Cell` owns every hot allocation of its grid point — the object
+/// arena, the action/diffuse queues, and the pooled router FIFO slabs —
+/// and Linux places each page on the NUMA node of the **first thread that
+/// writes it** (first-touch policy). Building all cells from the
+/// constructing thread would therefore concentrate a 128x128+ chip's
+/// working set on one node while `run_sharded`'s band workers hammer it
+/// from every other. Instead, when the config resolves to a sharded run,
+/// one scoped worker per band constructs exactly its own band's cells
+/// (the same `BandMap` partition the engine will use), so each worker's
+/// slabs land node-local without any libnuma dependency. Cell contents
+/// are value-identical to the serial path — `Cell::new` is deterministic
+/// and thread-independent — so results are unaffected; only page
+/// placement changes.
+fn alloc_cells<S: Send>(cfg: &ChipConfig) -> Vec<Cell<S>> {
+    let n = cfg.num_cells();
+    let axis = resolve_axis(cfg.shard_axis, cfg.dim_x, cfg.dim_y);
+    let shards = cfg.effective_shards_on(axis);
+    if shards <= 1 || n < TOUCH_FIRST_MIN_CELLS {
+        return (0..n).map(|_| Cell::new(cfg.num_vcs, cfg.vc_buffer)).collect();
+    }
+    let band = BandMap::new(axis, cfg.dim_x, cfg.dim_y, shards);
+    let mut slots: Vec<std::mem::MaybeUninit<Cell<S>>> = Vec::with_capacity(n);
+    // SAFETY: `MaybeUninit` needs no initialization, and crucially this
+    // leaves the backing pages *untouched* by the constructing thread
+    // (a `(0..n).map(..uninit..).collect()` would not guarantee that).
+    unsafe { slots.set_len(n) };
+    struct Slab<T>(*mut T);
+    // SAFETY: shared across the scoped workers below, which write
+    // pairwise-disjoint slots (bands partition the cell ids).
+    unsafe impl<T: Send> Sync for Slab<T> {}
+    let slab = Slab(slots.as_mut_ptr() as *mut Cell<S>);
+    std::thread::scope(|scope| {
+        for k in 0..shards {
+            let band = &band;
+            let slab = &slab;
+            scope.spawn(move || {
+                band.for_each_cell(k, |_, c| {
+                    // SAFETY: the band map covers every cell id exactly
+                    // once across shards (`prop_band_map_partition`), so
+                    // each slot is written by exactly one worker.
+                    unsafe {
+                        slab.0.add(c as usize).write(Cell::new(cfg.num_vcs, cfg.vc_buffer));
+                    }
+                });
+            });
+        }
+    });
+    // SAFETY: every slot was initialized above; `MaybeUninit<T>` has the
+    // same layout as `T`, so the allocation can be re-owned as `Vec<T>`.
+    let mut slots = std::mem::ManuallyDrop::new(slots);
+    unsafe { Vec::from_raw_parts(slots.as_mut_ptr() as *mut Cell<S>, n, slots.capacity()) }
+}
+
 impl<A: Application> Chip<A> {
     pub fn new(cfg: ChipConfig, app: A) -> anyhow::Result<Self> {
         cfg.validate()?;
         let n = cfg.num_cells();
         let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
-        let cells: Vec<Cell<A::State>> =
-            (0..n).map(|_| Cell::new(cfg.num_vcs, cfg.vc_buffer)).collect();
+        let cells: Vec<Cell<A::State>> = alloc_cells(&cfg);
         let free = cells[0].space_snapshot();
         Ok(Chip {
             geo,

@@ -11,6 +11,7 @@ use crate::arch::config::ChipConfig;
 use crate::diffusive::handler::Application;
 use crate::energy::model::{account, EnergyBreakdown, EnergyParams};
 use crate::graph::model::HostGraph;
+use crate::graph::source::{self, EdgeSource};
 use crate::rpvo::builder::BuiltGraph;
 use crate::rpvo::mutate::MutationBatch;
 use crate::stats::heatmap::Heatmap;
@@ -143,6 +144,103 @@ pub fn run(exp: &Experiment, g: &HostGraph) -> anyhow::Result<Outcome> {
         }
     }
     Ok(best.expect("at least one trial"))
+}
+
+/// Out-of-core twin of [`run`]: the graph arrives through an
+/// [`EdgeSource`] in `chunk`-edge waves (the source is `reset` once per
+/// trial), so no materialized `HostGraph` is staged host-side — unless
+/// `exp.verify` is set, in which case the source is drained once up front
+/// for the BSP reference (verification is inherently whole-graph; pass
+/// `verify: false` to stay out-of-core). Mutation streaming is a
+/// materialized-graph scenario and is rejected here.
+pub fn run_stream(
+    exp: &Experiment,
+    src: &mut dyn EdgeSource,
+    chunk: usize,
+) -> anyhow::Result<Outcome> {
+    anyhow::ensure!(
+        exp.mutations == 0,
+        "streamed builds take no mutation phase; use `run` on a materialized graph"
+    );
+    let reference = if exp.verify { Some(source::materialize(src)?) } else { None };
+    let mut best: Option<Outcome> = None;
+    for trial in 0..exp.trials.max(1) {
+        let mut cfg = exp.cfg.clone();
+        cfg.seed = exp.cfg.seed.wrapping_add(trial as u64 * 0x9E37_79B9);
+        let outcome = run_stream_once(exp, cfg, src, chunk, reference.as_ref())?;
+        anyhow::ensure!(
+            outcome.verified_mismatches == 0,
+            "{} trial {trial}: {} result mismatches vs reference",
+            exp.app.name(),
+            outcome.verified_mismatches
+        );
+        if best.as_ref().map_or(true, |b| outcome.metrics.cycles < b.metrics.cycles) {
+            best = Some(outcome);
+        }
+    }
+    Ok(best.expect("at least one trial"))
+}
+
+fn run_stream_once(
+    exp: &Experiment,
+    cfg: ChipConfig,
+    src: &mut dyn EdgeSource,
+    chunk: usize,
+    reference: Option<&HostGraph>,
+) -> anyhow::Result<Outcome> {
+    match exp.app {
+        AppKind::Bfs => {
+            let (chip, built) = driver::run_bfs_stream(cfg.clone(), src, chunk, exp.root)?;
+            let mism = reference.map_or(0, |g| {
+                driver::verify_bfs(g, exp.root, &driver::bfs_levels(&chip, &built))
+            });
+            Ok(stream_outcome(&chip, &built, &cfg, mism))
+        }
+        AppKind::Sssp => {
+            let (chip, built) = driver::run_sssp_stream(cfg.clone(), src, chunk, exp.root)?;
+            let mism = reference.map_or(0, |g| {
+                driver::verify_sssp(g, exp.root, &driver::sssp_dists(&chip, &built))
+            });
+            Ok(stream_outcome(&chip, &built, &cfg, mism))
+        }
+        AppKind::Cc => {
+            let (chip, built) = driver::run_cc_stream(cfg.clone(), src, chunk)?;
+            let mism = reference.map_or(0, |g| {
+                let want = crate::apps::cc::reference_labels(g);
+                driver::cc_labels(&chip, &built).iter().zip(&want).filter(|(a, b)| a != b).count()
+            });
+            Ok(stream_outcome(&chip, &built, &cfg, mism))
+        }
+        AppKind::PageRank => {
+            let (chip, built) =
+                driver::run_pagerank_stream(cfg.clone(), src, chunk, exp.pr_iters)?;
+            let mism = reference.map_or(0, |g| {
+                driver::verify_pagerank(g, exp.pr_iters, &driver::pagerank_scores(&chip, &built))
+                    .0
+            });
+            Ok(stream_outcome(&chip, &built, &cfg, mism))
+        }
+    }
+}
+
+/// Assemble the outcome of a streamed (mutation-free) run.
+fn stream_outcome<A: Application>(
+    chip: &Chip<A>,
+    built: &BuiltGraph,
+    cfg: &ChipConfig,
+    mism: usize,
+) -> Outcome {
+    let params = EnergyParams::default();
+    Outcome {
+        metrics: chip.metrics.clone(),
+        energy: account(&chip.metrics, cfg.topology, cfg.num_cells(), &params),
+        contention: chip.contention(),
+        heatmap: chip.heatmap.clone(),
+        rhizomatic_vertices: built.rhizomatic_vertices,
+        objects: built.objects,
+        verified_mismatches: mism,
+        stream: None,
+    }
 }
 
 /// One streamed run's worth of mutation bookkeeping: the mutated
@@ -340,6 +438,24 @@ mod tests {
         // Static runs stay report-free.
         exp.mutations = 0;
         assert!(run(&exp, &g).unwrap().stream.is_none());
+    }
+
+    #[test]
+    fn streamed_experiment_matches_materialized_and_rejects_mutations() {
+        let g = erdos::generate(64, 256, 2);
+        let mut bytes = Vec::new();
+        g.save_binary_edgelist(&mut bytes).unwrap();
+        let mut src =
+            crate::graph::source::BinaryEdgeSource::new(std::io::Cursor::new(bytes)).unwrap();
+        let exp = Experiment::new(AppKind::Bfs, ChipConfig::torus(4));
+        let out_m = run(&exp, &g).unwrap();
+        let out_s = run_stream(&exp, &mut src, 7).unwrap();
+        assert_eq!(out_m.metrics, out_s.metrics, "host-mode stream must be bit-identical");
+        assert_eq!(out_s.verified_mismatches, 0);
+        assert!(out_s.stream.is_none());
+        let mut bad = exp.clone();
+        bad.mutations = 4;
+        assert!(run_stream(&bad, &mut src, 7).is_err(), "mutations need a materialized graph");
     }
 
     #[test]

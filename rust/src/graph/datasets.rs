@@ -10,6 +10,7 @@
 //! fidelity for wall-clock.
 
 use crate::graph::model::HostGraph;
+use crate::graph::source::RmatStream;
 use crate::graph::{erdos, rmat};
 
 /// Reproduction scale: how big the stand-in graphs are.
@@ -21,7 +22,12 @@ pub enum Scale {
     Small,
     /// Slow-mode benches (2^16 vertices).
     Medium,
+    /// Million-vertex runs (2^20 vertices) for 128x128+ chips; pair with
+    /// the streaming sources rather than materializing where possible.
+    Large,
 }
+
+pub const SCALES: [Scale; 4] = [Scale::Tiny, Scale::Small, Scale::Medium, Scale::Large];
 
 impl Scale {
     pub fn log_n(self) -> u32 {
@@ -29,7 +35,22 @@ impl Scale {
             Scale::Tiny => 10,
             Scale::Small => 14,
             Scale::Medium => 16,
+            Scale::Large => 20,
         }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+            Scale::Medium => "medium",
+            Scale::Large => "large",
+        }
+    }
+
+    /// Single parse point for `--scale` and env overrides.
+    pub fn from_name(s: &str) -> Option<Scale> {
+        SCALES.into_iter().find(|sc| sc.name().eq_ignore_ascii_case(s))
     }
 }
 
@@ -103,6 +124,32 @@ impl Dataset {
     }
 }
 
+/// Seed for the streaming R-MAT presets (out-of-band of the `Dataset`
+/// seeds, which start at `0xDA7A_0000 + variant`).
+const STREAM_SEED: u64 = 0xDA7A_0100;
+/// Edge weights for the streaming presets (same `[1, 64]` range the
+/// materialized datasets get from `randomize_weights`).
+const STREAM_MAX_W: u32 = 64;
+
+/// Streaming R-MAT at an arbitrary scale: paper PaRMAT parameters,
+/// `edge_factor << log_n` edges synthesized chunk by chunk, weights drawn
+/// in-stream. Deterministic per `(log_n, edge_factor)`.
+pub fn rmat_stream(log_n: u32, edge_factor: u32) -> RmatStream {
+    RmatStream::new(
+        rmat::RmatParams::paper(log_n, edge_factor, STREAM_SEED + log_n as u64),
+        STREAM_MAX_W,
+    )
+}
+
+/// The million-vertex preset (RMAT20): 2^20 vertices, edge factor 8
+/// (~8.4M edges, ~100 MB materialized — hence the stream). Its
+/// materialized form is *defined* as the drained stream
+/// (`source::materialize`), so streamed and materialized construction are
+/// comparable edge-for-edge.
+pub fn rmat20_stream() -> RmatStream {
+    rmat_stream(Scale::Large.log_n(), 8)
+}
+
 /// Swap edge directions (out-degree skew <-> in-degree skew).
 fn transpose(mut g: HostGraph) -> HostGraph {
     for e in &mut g.edges {
@@ -141,6 +188,24 @@ mod tests {
         }
         assert_eq!(Dataset::from_name("wk"), Some(Dataset::WK));
         assert_eq!(Dataset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn scale_roundtrip() {
+        for s in SCALES {
+            assert_eq!(Scale::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Scale::from_name("LARGE"), Some(Scale::Large));
+        assert_eq!(Scale::Large.log_n(), 20);
+        assert_eq!(Scale::from_name("huge"), None);
+    }
+
+    #[test]
+    fn rmat20_preset_shape() {
+        use crate::graph::source::EdgeSource;
+        let src = rmat20_stream();
+        assert_eq!(src.declared_n(), 1 << 20);
+        assert_eq!(src.edge_count_hint(), Some(8u64 << 20));
     }
 
     #[test]

@@ -1,8 +1,17 @@
 //! Host-side graphs: representation, generators (R-MAT, Erdős–Rényi),
-//! Table-1 statistics, and the named dataset registry.
+//! Table-1 statistics, the named dataset registry, and out-of-core
+//! streaming.
+//!
+//! Graphs exist in two forms: the materialized [`model::HostGraph`] edge
+//! list, and the chunked [`source::EdgeSource`] streams (text, binary
+//! `AMEL`, generator-backed R-MAT) that feed the RPVO builder and the
+//! wave-batched ingest without ever holding all edges in host memory —
+//! the `source` module docs spell out the streaming contract and the
+//! binary edge-list format.
 
 pub mod datasets;
 pub mod erdos;
 pub mod model;
 pub mod rmat;
+pub mod source;
 pub mod stats;

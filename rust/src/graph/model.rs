@@ -83,8 +83,9 @@ impl HostGraph {
         self.edges.dedup_by_key(|e| (e.0, e.1));
     }
 
-    /// Load from whitespace-separated "src dst [weight]" lines ('#'/'%'
-    /// comments allowed) — the common SNAP / Matrix-Market-ish edge lists.
+    /// Load from whitespace-separated "src dst [weight]" lines — the common
+    /// SNAP / Matrix-Market-ish edge lists: tabs and spaces both separate
+    /// fields, `#`/`%` comment lines and blank lines are skipped.
     pub fn load_edgelist<R: BufRead>(reader: R) -> anyhow::Result<Self> {
         let mut edges = Vec::new();
         let mut max_v = 0u32;
@@ -94,12 +95,9 @@ impl HostGraph {
             if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
                 continue;
             }
-            let mut it = line.split_whitespace();
-            let s: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
-            let t: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
-            let w: u32 = it.next().map(|w| w.parse()).transpose()?.unwrap_or(1);
+            let (s, t, w) = parse_edge_line(line)?;
             max_v = max_v.max(s).max(t);
-            edges.push((s, t, w.max(1)));
+            edges.push((s, t, w));
         }
         Ok(HostGraph { n: max_v + 1, edges })
     }
@@ -111,6 +109,34 @@ impl HostGraph {
         }
         Ok(())
     }
+
+    /// Write the packed binary (`AMEL`) edge-list format streamed back by
+    /// `graph::source::BinaryEdgeSource`; layout documented in the
+    /// `graph::source` module docs.
+    pub fn save_binary_edgelist<W: Write>(&self, mut w: W) -> anyhow::Result<()> {
+        w.write_all(&crate::graph::source::BINARY_MAGIC)?;
+        w.write_all(&crate::graph::source::BINARY_VERSION.to_le_bytes())?;
+        w.write_all(&self.n.to_le_bytes())?;
+        w.write_all(&(self.m() as u64).to_le_bytes())?;
+        for &(s, t, wt) in &self.edges {
+            w.write_all(&s.to_le_bytes())?;
+            w.write_all(&t.to_le_bytes())?;
+            w.write_all(&wt.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse one non-comment edge-list line: `src dst [weight]`, any
+/// whitespace (spaces or tabs) between fields, weight defaulting to 1 and
+/// floored at 1. Shared by [`HostGraph::load_edgelist`] and the chunked
+/// `graph::source::TextEdgeSource` so both accept the exact same lines.
+pub(crate) fn parse_edge_line(line: &str) -> anyhow::Result<(u32, u32, u32)> {
+    let mut it = line.split_whitespace();
+    let s: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
+    let t: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad line: {line}"))?.parse()?;
+    let w: u32 = it.next().map(|w| w.parse()).transpose()?.unwrap_or(1);
+    Ok((s, t, w.max(1)))
 }
 
 impl Csr {
@@ -161,6 +187,34 @@ mod tests {
         let g2 = HostGraph::load_edgelist(std::io::Cursor::new(buf)).unwrap();
         assert_eq!(g2.n, 3);
         assert_eq!(g2.edges, g.edges);
+    }
+
+    #[test]
+    fn edgelist_tolerates_snap_comments() {
+        let text = "# Directed graph: web-Snap.txt\n# Nodes: 4 Edges: 3\n0 1\n% matrix-market too\n1 2 7\n\n3 0\n";
+        let g = HostGraph::load_edgelist(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(g.n, 4);
+        assert_eq!(g.edges, vec![(0, 1, 1), (1, 2, 7), (3, 0, 1)]);
+    }
+
+    #[test]
+    fn edgelist_tolerates_tab_separators() {
+        let text = "0\t1\n1\t2\t9\n2 \t 0\n";
+        let g = HostGraph::load_edgelist(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(g.n, 3);
+        assert_eq!(g.edges, vec![(0, 1, 1), (1, 2, 9), (2, 0, 1)]);
+    }
+
+    #[test]
+    fn binary_edgelist_header_layout() {
+        let g = tri();
+        let mut bytes = Vec::new();
+        g.save_binary_edgelist(&mut bytes).unwrap();
+        assert_eq!(bytes.len(), 20 + 12 * g.m());
+        assert_eq!(&bytes[0..4], b"AMEL");
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 1);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), g.n);
+        assert_eq!(u64::from_le_bytes(bytes[12..20].try_into().unwrap()), g.m() as u64);
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Out-of-core edge streaming: the [`EdgeSource`] contract plus chunked
+//! readers over text and binary edge lists and a generator-backed
+//! streaming R-MAT that synthesizes chunks on the fly.
+//!
+//! # The `EdgeSource` contract
+//!
+//! An [`EdgeSource`] yields a deterministic sequence of `(src, dst, weight)`
+//! triples in bounded chunks so the RPVO builder and the wave-batched ingest
+//! can construct million-edge graphs **without ever materializing the whole
+//! edge list** in host memory:
+//!
+//! - [`EdgeSource::next_chunk`] clears the caller's buffer, refills it with
+//!   up to `max` edges, and returns the count; `0` means the stream is
+//!   exhausted. Host memory per call is `O(max)`, never `O(m)`.
+//! - [`EdgeSource::reset`] rewinds to the first edge. Sources are
+//!   multi-pass: the two-pass streaming builder (degree scan, then insert)
+//!   and verification both rely on `reset` reproducing the *identical*
+//!   sequence.
+//! - The edge sequence is independent of the chunk size used to read it:
+//!   draining at `max = 1` and `max = 4096` yields the same edges in the
+//!   same order. [`Shuffled`] is the one deliberate exception — it
+//!   permutes *within* each chunk, so its order (but not its multiset)
+//!   depends on the chunk size.
+//! - [`EdgeSource::declared_n`] / [`EdgeSource::edge_count_hint`] are
+//!   optional metadata (0 / `None` when unknown) letting consumers size
+//!   allocations exactly instead of growing by doubling.
+//!
+//! # Binary edge-list format (`AMEL`)
+//!
+//! Written by [`HostGraph::save_binary_edgelist`], read by
+//! [`BinaryEdgeSource`]. A 20-byte header followed by packed 12-byte
+//! records, all little-endian:
+//!
+//! | offset | size | field                       |
+//! |--------|------|-----------------------------|
+//! | 0      | 4    | magic `b"AMEL"`             |
+//! | 4      | 4    | format version (`1`)        |
+//! | 8      | 4    | vertex count `n` (u32)      |
+//! | 12     | 8    | edge count `m` (u64)        |
+//! | 20     | 12·m | `(src, dst, weight)` u32 LE |
+//!
+//! At 12 bytes/edge a 2^20-vertex, edge-factor-8 R-MAT is a ~100 MB file
+//! streamed in chunk-sized reads; the text reader accepts the same graphs
+//! in SNAP-style `src dst [weight]` lines (`#`/`%` comments, spaces or
+//! tabs).
+
+use std::io::{BufRead, Read, Seek, SeekFrom};
+
+use crate::graph::model::{parse_edge_line, HostGraph};
+use crate::graph::rmat::{self, RmatParams};
+use crate::util::rng::{splitmix64, Rng};
+
+/// Magic bytes opening a binary (`AMEL`) edge-list file.
+pub const BINARY_MAGIC: [u8; 4] = *b"AMEL";
+/// Current binary format version.
+pub const BINARY_VERSION: u32 = 1;
+const BINARY_HEADER_LEN: u64 = 20;
+const EDGE_RECORD_LEN: usize = 12;
+
+/// A resettable, chunked stream of `(src, dst, weight)` edges. See the
+/// module docs for the full contract.
+pub trait EdgeSource {
+    /// Rewind to the first edge; the replayed sequence must be identical.
+    fn reset(&mut self) -> anyhow::Result<()>;
+
+    /// Clear `buf`, refill it with up to `max` edges (`max` is clamped to
+    /// at least 1), and return the count; 0 means exhausted.
+    fn next_chunk(&mut self, buf: &mut Vec<(u32, u32, u32)>, max: usize) -> anyhow::Result<usize>;
+
+    /// Declared vertex count, or 0 when the source doesn't know it up
+    /// front (consumers then grow `n` from the observed endpoints).
+    fn declared_n(&self) -> u32 {
+        0
+    }
+
+    /// Exact total edge count when known up front (exact-reserve hint).
+    fn edge_count_hint(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Chunked reader over SNAP-style text edge lists (`src dst [weight]`
+/// per line, `#`/`%` comment lines, spaces or tabs). Recognizes the
+/// `# amcca edge list: N vertices M edges` header written by
+/// [`HostGraph::save_edgelist`] and reports it via
+/// [`EdgeSource::declared_n`] / [`EdgeSource::edge_count_hint`].
+pub struct TextEdgeSource<R: BufRead + Seek> {
+    reader: R,
+    declared_n: u32,
+    declared_m: Option<u64>,
+    line: String,
+}
+
+impl<R: BufRead + Seek> TextEdgeSource<R> {
+    pub fn new(mut reader: R) -> anyhow::Result<Self> {
+        reader.seek(SeekFrom::Start(0))?;
+        let mut first = String::new();
+        reader.read_line(&mut first)?;
+        let (declared_n, declared_m) = match parse_amcca_header(&first) {
+            Some((n, m)) => (n, Some(m)),
+            None => (0, None),
+        };
+        reader.seek(SeekFrom::Start(0))?;
+        Ok(TextEdgeSource { reader, declared_n, declared_m, line: String::new() })
+    }
+}
+
+fn parse_amcca_header(line: &str) -> Option<(u32, u64)> {
+    let rest = line.trim().strip_prefix("# amcca edge list:")?;
+    let mut it = rest.split_whitespace();
+    let n: u32 = it.next()?.parse().ok()?;
+    (it.next()? == "vertices").then_some(())?;
+    let m: u64 = it.next()?.parse().ok()?;
+    (it.next()? == "edges").then_some(())?;
+    Some((n, m))
+}
+
+impl<R: BufRead + Seek> EdgeSource for TextEdgeSource<R> {
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.reader.seek(SeekFrom::Start(0))?;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<(u32, u32, u32)>, max: usize) -> anyhow::Result<usize> {
+        buf.clear();
+        let max = max.max(1);
+        while buf.len() < max {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                break;
+            }
+            let t = self.line.trim();
+            if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+                continue;
+            }
+            buf.push(parse_edge_line(t)?);
+        }
+        Ok(buf.len())
+    }
+
+    fn declared_n(&self) -> u32 {
+        self.declared_n
+    }
+
+    fn edge_count_hint(&self) -> Option<u64> {
+        self.declared_m
+    }
+}
+
+/// Chunked reader over the packed binary (`AMEL`) format described in the
+/// module docs. Each chunk is one bulk `read_exact` of `12 * k` bytes.
+pub struct BinaryEdgeSource<R: Read + Seek> {
+    reader: R,
+    n: u32,
+    m: u64,
+    remaining: u64,
+    scratch: Vec<u8>,
+}
+
+impl<R: Read + Seek> BinaryEdgeSource<R> {
+    pub fn new(mut reader: R) -> anyhow::Result<Self> {
+        reader.seek(SeekFrom::Start(0))?;
+        let mut hdr = [0u8; BINARY_HEADER_LEN as usize];
+        reader.read_exact(&mut hdr)?;
+        anyhow::ensure!(hdr[0..4] == BINARY_MAGIC, "not an AMEL binary edge list (bad magic)");
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        anyhow::ensure!(version == BINARY_VERSION, "unsupported AMEL version {version}");
+        let n = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        let m = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+        Ok(BinaryEdgeSource { reader, n, m, remaining: m, scratch: Vec::new() })
+    }
+}
+
+impl<R: Read + Seek> EdgeSource for BinaryEdgeSource<R> {
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.reader.seek(SeekFrom::Start(BINARY_HEADER_LEN))?;
+        self.remaining = self.m;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<(u32, u32, u32)>, max: usize) -> anyhow::Result<usize> {
+        buf.clear();
+        let take = self.remaining.min(max.max(1) as u64) as usize;
+        if take == 0 {
+            return Ok(0);
+        }
+        self.scratch.resize(take * EDGE_RECORD_LEN, 0);
+        self.reader.read_exact(&mut self.scratch)?;
+        buf.reserve(take);
+        for rec in self.scratch.chunks_exact(EDGE_RECORD_LEN) {
+            buf.push((
+                u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+                u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+                u32::from_le_bytes(rec[8..12].try_into().unwrap()),
+            ));
+        }
+        self.remaining -= take as u64;
+        Ok(take)
+    }
+
+    fn declared_n(&self) -> u32 {
+        self.n
+    }
+
+    fn edge_count_hint(&self) -> Option<u64> {
+        Some(self.m)
+    }
+}
+
+/// Generator-backed streaming R-MAT: synthesizes `edge_factor << scale`
+/// edges on the fly, never holding more than one chunk in memory.
+///
+/// Unlike [`rmat::generate`] (sequential RNG, then dedup), every edge is
+/// drawn from its own counter-derived RNG (`splitmix64(seed ^ mix(index))`),
+/// so the sequence is chunk-size invariant *by construction* and any
+/// sub-range can be regenerated independently. Self-loops are resampled
+/// (bounded, with a deterministic bit-flip fallback), duplicates are kept
+/// (parallel edges, as in raw SNAP downloads), and weights are drawn
+/// in-stream in `[1, max_w]`.
+pub struct RmatStream {
+    params: RmatParams,
+    max_w: u32,
+    total: u64,
+    next: u64,
+}
+
+impl RmatStream {
+    /// `params.scale` must be >= 1 (the self-loop fallback flips bit 0).
+    pub fn new(params: RmatParams, max_w: u32) -> Self {
+        assert!(params.scale >= 1, "RmatStream needs scale >= 1");
+        let total = (params.edge_factor as u64) << params.scale;
+        RmatStream { params, max_w: max_w.max(1), total, next: 0 }
+    }
+
+    /// The `idx`-th edge of the stream, independent of read position.
+    fn edge_at(&self, idx: u64) -> (u32, u32, u32) {
+        let mut s = self.params.seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(splitmix64(&mut s));
+        let (mut src, mut dst) = rmat::sample_edge(&self.params, &mut rng);
+        let mut tries = 0;
+        while src == dst && tries < 64 {
+            (src, dst) = rmat::sample_edge(&self.params, &mut rng);
+            tries += 1;
+        }
+        if src == dst {
+            dst = src ^ 1;
+        }
+        let w = rng.range_u32(1, self.max_w);
+        (src, dst, w)
+    }
+}
+
+impl EdgeSource for RmatStream {
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.next = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<(u32, u32, u32)>, max: usize) -> anyhow::Result<usize> {
+        buf.clear();
+        let take = (self.total - self.next).min(max.max(1) as u64);
+        buf.reserve(take as usize);
+        for i in 0..take {
+            buf.push(self.edge_at(self.next + i));
+        }
+        self.next += take;
+        Ok(buf.len())
+    }
+
+    fn declared_n(&self) -> u32 {
+        1u32 << self.params.scale
+    }
+
+    fn edge_count_hint(&self) -> Option<u64> {
+        Some(self.total)
+    }
+}
+
+/// Seeded per-chunk shuffle over any inner source: each chunk is permuted
+/// with a Fisher–Yates keyed by `seed ^ mix(chunk_index)`. The edge
+/// *multiset* is preserved; the order (and therefore chip placement under
+/// streamed construction) deliberately is not — use it to decorrelate
+/// ingest order from generation order.
+pub struct Shuffled<S> {
+    inner: S,
+    seed: u64,
+    chunk_idx: u64,
+}
+
+impl<S: EdgeSource> Shuffled<S> {
+    pub fn new(inner: S, seed: u64) -> Self {
+        Shuffled { inner, seed, chunk_idx: 0 }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: EdgeSource> EdgeSource for Shuffled<S> {
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.chunk_idx = 0;
+        self.inner.reset()
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<(u32, u32, u32)>, max: usize) -> anyhow::Result<usize> {
+        let k = self.inner.next_chunk(buf, max)?;
+        if k > 1 {
+            let mut s = self.seed ^ self.chunk_idx.wrapping_mul(0xD1B5_4A32_D192_ED03);
+            let mut rng = Rng::new(splitmix64(&mut s));
+            rng.shuffle(buf);
+        }
+        self.chunk_idx += 1;
+        Ok(k)
+    }
+
+    fn declared_n(&self) -> u32 {
+        self.inner.declared_n()
+    }
+
+    fn edge_count_hint(&self) -> Option<u64> {
+        self.inner.edge_count_hint()
+    }
+}
+
+/// Drain a source into a [`HostGraph`] (exact-reserved when the source
+/// hints its edge count). The inverse direction — verification and
+/// host-side baselines for streamed runs — not the construction path,
+/// which never needs the whole list resident.
+pub fn materialize<S: EdgeSource + ?Sized>(src: &mut S) -> anyhow::Result<HostGraph> {
+    src.reset()?;
+    let mut edges: Vec<(u32, u32, u32)> = Vec::new();
+    if let Some(m) = src.edge_count_hint() {
+        edges.reserve_exact(m as usize);
+    }
+    let mut buf = Vec::new();
+    let mut max_v = 0u32;
+    loop {
+        if src.next_chunk(&mut buf, 1 << 16)? == 0 {
+            break;
+        }
+        for &(s, t, _) in buf.iter() {
+            max_v = max_v.max(s).max(t);
+        }
+        edges.extend_from_slice(&buf);
+    }
+    let seen_n = if edges.is_empty() { 1 } else { max_v + 1 };
+    Ok(HostGraph { n: src.declared_n().max(seen_n), edges })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const CHUNKS: [usize; 4] = [1, 7, 4096, usize::MAX];
+
+    fn drain(src: &mut dyn EdgeSource, chunk: usize) -> Vec<(u32, u32, u32)> {
+        src.reset().unwrap();
+        let mut all = Vec::new();
+        let mut buf = Vec::new();
+        while src.next_chunk(&mut buf, chunk).unwrap() > 0 {
+            all.extend_from_slice(&buf);
+        }
+        all
+    }
+
+    fn tri() -> HostGraph {
+        HostGraph { n: 3, edges: vec![(0, 1, 5), (1, 2, 7), (0, 2, 9)] }
+    }
+
+    #[test]
+    fn text_source_roundtrip_with_header_metadata() {
+        let g = tri();
+        let mut bytes = Vec::new();
+        g.save_edgelist(&mut bytes).unwrap();
+        let mut src = TextEdgeSource::new(Cursor::new(bytes)).unwrap();
+        assert_eq!(src.declared_n(), 3);
+        assert_eq!(src.edge_count_hint(), Some(3));
+        assert_eq!(drain(&mut src, 2), g.edges);
+    }
+
+    #[test]
+    fn text_source_tolerates_snap_comments_and_tabs() {
+        let text = "# Directed graph (SNAP)\n# FromNodeId\tToNodeId\n0\t1\n2\t0\t9\n% mm\n1 2\n";
+        let mut src = TextEdgeSource::new(Cursor::new(text.as_bytes().to_vec())).unwrap();
+        assert_eq!(src.declared_n(), 0);
+        assert_eq!(src.edge_count_hint(), None);
+        assert_eq!(drain(&mut src, 64), vec![(0, 1, 1), (2, 0, 9), (1, 2, 1)]);
+    }
+
+    #[test]
+    fn binary_source_roundtrip() {
+        let g = tri();
+        let mut bytes = Vec::new();
+        g.save_binary_edgelist(&mut bytes).unwrap();
+        assert_eq!(bytes.len(), 20 + 12 * g.m());
+        let mut src = BinaryEdgeSource::new(Cursor::new(bytes)).unwrap();
+        assert_eq!(src.declared_n(), 3);
+        assert_eq!(src.edge_count_hint(), Some(3));
+        assert_eq!(drain(&mut src, 2), g.edges);
+    }
+
+    #[test]
+    fn binary_source_rejects_bad_magic() {
+        let bytes = b"NOPE\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0".to_vec();
+        assert!(BinaryEdgeSource::new(Cursor::new(bytes)).is_err());
+    }
+
+    #[test]
+    fn every_source_is_chunk_size_invariant() {
+        let g = crate::graph::datasets::Dataset::R18.build(crate::graph::datasets::Scale::Tiny);
+        let mut text = Vec::new();
+        g.save_edgelist(&mut text).unwrap();
+        let mut bin = Vec::new();
+        g.save_binary_edgelist(&mut bin).unwrap();
+
+        let mut sources: Vec<Box<dyn EdgeSource>> = vec![
+            Box::new(TextEdgeSource::new(Cursor::new(text)).unwrap()),
+            Box::new(BinaryEdgeSource::new(Cursor::new(bin)).unwrap()),
+            Box::new(RmatStream::new(RmatParams::paper(10, 4, 11), 64)),
+        ];
+        for src in &mut sources {
+            let whole = drain(src.as_mut(), usize::MAX);
+            assert!(!whole.is_empty());
+            for chunk in CHUNKS {
+                assert_eq!(drain(src.as_mut(), chunk), whole, "chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_mid_stream_replays_from_start() {
+        let mut src = RmatStream::new(RmatParams::paper(8, 4, 3), 16);
+        let whole = drain(&mut src, 100);
+        src.reset().unwrap();
+        let mut buf = Vec::new();
+        src.next_chunk(&mut buf, 37).unwrap();
+        assert_eq!(drain(&mut src, 100), whole);
+    }
+
+    #[test]
+    fn rmat_stream_deterministic_and_bounded() {
+        let p = RmatParams::paper(10, 8, 5);
+        let a = drain(&mut RmatStream::new(p, 64), 4096);
+        let b = drain(&mut RmatStream::new(p, 64), 4096);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8 << 10);
+        assert!(a.iter().all(|&(s, t, w)| s < 1024 && t < 1024 && s != t && (1..=64).contains(&w)));
+        let c = drain(&mut RmatStream::new(RmatParams::paper(10, 8, 6), 64), 4096);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn rmat_stream_keeps_the_skew() {
+        let mut src = RmatStream::new(RmatParams::paper(12, 16, 3), 64);
+        let g = materialize(&mut src).unwrap();
+        let din = g.in_degrees();
+        let mean = din.iter().map(|&d| d as f64).sum::<f64>() / din.len() as f64;
+        let max = *din.iter().max().unwrap() as f64;
+        assert!(max > 4.0 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_permutes_within_chunks_only() {
+        let p = RmatParams::paper(10, 4, 9);
+        let plain = drain(&mut RmatStream::new(p, 64), 512);
+        let mut shuffled_src = Shuffled::new(RmatStream::new(p, 64), 0xC0FFEE);
+        let shuffled = drain(&mut shuffled_src, 512);
+        assert_ne!(plain, shuffled, "a 512-edge chunk should not shuffle to itself");
+        let mut a = plain.clone();
+        let mut b = shuffled.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "shuffle must preserve the edge multiset");
+        let again = drain(&mut Shuffled::new(RmatStream::new(p, 64), 0xC0FFEE), 512);
+        assert_eq!(shuffled, again, "per-seed deterministic");
+    }
+
+    #[test]
+    fn materialize_matches_drain_and_declares_n() {
+        let mut src = RmatStream::new(RmatParams::paper(9, 4, 2), 8);
+        let g = materialize(&mut src).unwrap();
+        assert_eq!(g.n, 512);
+        assert_eq!(g.edges, drain(&mut src, 1000));
+    }
+}

@@ -10,10 +10,11 @@
 //! Flag parsing is in-tree (offline build: no clap); see `Args`.
 
 use amcca::arch::config::{AllocPolicy, BuildMode, ChipConfig, ShardAxis};
-use amcca::coordinator::experiment::{run, AppKind, Experiment};
+use amcca::coordinator::experiment::{run, run_stream, AppKind, Experiment};
 use amcca::coordinator::report::Table;
-use amcca::graph::datasets::{Dataset, Scale, ALL};
+use amcca::graph::datasets::{self, Dataset, Scale, ALL};
 use amcca::graph::model::HostGraph;
+use amcca::graph::source::{EdgeSource, TextEdgeSource};
 use amcca::graph::stats::{table_row, TableRow};
 
 fn main() {
@@ -145,15 +146,36 @@ fn graph_from(args: &Args) -> anyhow::Result<(String, HostGraph)> {
         return Ok((path.to_string(), g));
     }
     let name = args.get("dataset").unwrap_or("R18");
-    let scale = match args.get("scale").unwrap_or("tiny") {
-        "tiny" => Scale::Tiny,
-        "small" => Scale::Small,
-        "medium" => Scale::Medium,
-        s => anyhow::bail!("unknown --scale {s} (tiny|small|medium)"),
-    };
+    let scale = scale_from(args)?;
     let ds = Dataset::from_name(name)
         .ok_or_else(|| anyhow::anyhow!("unknown --dataset {name} (LN|AM|E18|R18|LJ|WK|R22)"))?;
     Ok((format!("{name}@{scale:?}"), ds.build(scale)))
+}
+
+/// Single parse point for `--scale` (satellite of the streaming PR: the
+/// same match used to live in two places and silently missed `large`).
+fn scale_from(args: &Args) -> anyhow::Result<Scale> {
+    let s = args.get("scale").unwrap_or("tiny");
+    Scale::from_name(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown --scale {s} (tiny|small|medium|large)"))
+}
+
+/// Out-of-core input selection: `--stream-file` (text edge list, streamed
+/// in `--stream-chunk` waves) or `--stream-rmat LOG_N` (generator-backed
+/// R-MAT, never materialized host-side). `None` when neither flag is set.
+fn stream_source_from(args: &Args) -> anyhow::Result<Option<(String, Box<dyn EdgeSource>)>> {
+    if let Some(path) = args.get("stream-file") {
+        let f = std::fs::File::open(path)?;
+        let src = TextEdgeSource::new(std::io::BufReader::new(f))?;
+        return Ok(Some((format!("stream:{path}"), Box::new(src))));
+    }
+    if args.has("stream-rmat") {
+        let log_n: u32 = args.num("stream-rmat", 20u32)?;
+        let ef: u32 = args.num("stream-ef", 8u32)?;
+        let src = datasets::rmat_stream(log_n, ef);
+        return Ok(Some((format!("stream:rmat{log_n} ef{ef}"), Box::new(src))));
+    }
+    Ok(None)
 }
 
 fn real_main() -> anyhow::Result<()> {
@@ -170,8 +192,15 @@ fn real_main() -> anyhow::Result<()> {
                  common flags:\n\
                  \x20 --app bfs|sssp|pagerank|cc  application (default bfs)\n\
                  \x20 --dataset LN|AM|E18|R18|LJ|WK|R22   (default R18)\n\
-                 \x20 --scale tiny|small|medium   stand-in graph size (default tiny)\n\
+                 \x20 --scale tiny|small|medium|large   stand-in graph size (default tiny)\n\
                  \x20 --graph-file PATH           load an edge list instead\n\
+                 \x20 --stream-file PATH          (run) stream a text edge list out-of-core\n\
+                 \x20                             instead of materializing it host-side\n\
+                 \x20 --stream-rmat LOG_N         (run) stream a generator-backed R-MAT\n\
+                 \x20                             (2^LOG_N vertices, never materialized)\n\
+                 \x20 --stream-ef K               streamed R-MAT edge factor (default 8)\n\
+                 \x20 --stream-chunk N            edges per streamed build wave (default 65536;\n\
+                 \x20                             results are identical for every chunk size)\n\
                  \x20 --dim N                     chip is N x N cells (default 16)\n\
                  \x20 --dim-x N  --dim-y M        rectangular chip (overrides --dim)\n\
                  \x20 --topo torus|mesh           NoC topology (default torus)\n\
@@ -205,7 +234,6 @@ fn real_main() -> anyhow::Result<()> {
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
-    let (gname, g) = graph_from(args)?;
     let app = AppKind::from_name(args.get("app").unwrap_or("bfs"))
         .ok_or_else(|| anyhow::anyhow!("unknown --app"))?;
     let mut exp = Experiment::new(app, cfg.clone());
@@ -214,6 +242,38 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     exp.trials = args.num("trials", 1u32)?;
     exp.verify = !args.has("no-verify");
     exp.mutations = args.num("mutations", 0u32)?;
+    if let Some((gname, mut src)) = stream_source_from(args)? {
+        anyhow::ensure!(
+            exp.mutations == 0,
+            "--mutations needs a materialized graph (drop the --stream-* flags)"
+        );
+        let chunk: usize = args.num("stream-chunk", 65_536usize)?;
+        let t0 = std::time::Instant::now();
+        let out = run_stream(&exp, src.as_mut(), chunk)?;
+        let wall = t0.elapsed();
+        println!(
+            "app={} graph={gname} (streamed, chunk={chunk}) chip={}x{} {} rpvo_max={} build={:?}",
+            app.name(),
+            cfg.dim_x,
+            cfg.dim_y,
+            cfg.topology,
+            cfg.rpvo_max,
+            cfg.build_mode,
+        );
+        println!("{}", out.metrics.summary());
+        println!(
+            "objects={} rhizomatic_vertices={} | energy: {:.2} uJ",
+            out.objects,
+            out.rhizomatic_vertices,
+            out.energy.total_uj(),
+        );
+        println!(
+            "wall={wall:.2?} ({:.1} Mcycles/s)",
+            out.metrics.cycles as f64 / wall.as_secs_f64() / 1e6
+        );
+        return Ok(());
+    }
+    let (gname, g) = graph_from(args)?;
     let t0 = std::time::Instant::now();
     let out = run(&exp, &g)?;
     let wall = t0.elapsed();
@@ -284,12 +344,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_stats(args: &Args) -> anyhow::Result<()> {
-    let scale = match args.get("scale").unwrap_or("tiny") {
-        "tiny" => Scale::Tiny,
-        "small" => Scale::Small,
-        "medium" => Scale::Medium,
-        s => anyhow::bail!("unknown --scale {s}"),
-    };
+    let scale = scale_from(args)?;
     println!("{}", TableRow::header());
     for ds in ALL {
         let g = ds.build(scale);

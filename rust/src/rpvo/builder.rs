@@ -19,6 +19,7 @@ use crate::arch::chip::Chip;
 use crate::arch::config::{AllocPolicy, BuildMode};
 use crate::diffusive::handler::{Application, VertexMeta};
 use crate::graph::model::HostGraph;
+use crate::graph::source::EdgeSource;
 use crate::noc::topology::Geometry;
 use crate::rpvo::alloc::Allocator;
 use crate::rpvo::mutate::{self, Ingest};
@@ -72,10 +73,129 @@ impl BuiltGraph {
 pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Result<BuiltGraph> {
     let cfg = chip.cfg.clone();
     let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
-    let mut alloc = Allocator::new(geo, cfg.cell_mem_objects as u32, cfg.seed);
 
     let in_deg = g.in_degrees();
     let out_deg = g.out_degrees();
+
+    // -- 1. allocate member roots (host-side in both build modes: the
+    //       roots ARE the user-visible vertex addresses) -----------------
+    let mut built = alloc_member_roots(chip, &geo, &in_deg)?;
+
+    // -- 2. insert edges through the unified ingest engine ----------------
+    match cfg.build_mode {
+        BuildMode::Host => {
+            for &(u, v, w) in &g.edges {
+                mutate::insert_edge(chip, &mut built, u, v, w, false)?;
+            }
+        }
+        BuildMode::OnChip => {
+            // Construction as a batch of InsertEdge actions (§6.1 meets
+            // §7): germinate them all, run the chip until the mutations
+            // settle. Metadata is fixed up wholesale below, so the batch
+            // needs no MetaBump companions.
+            for &(u, v, w) in &g.edges {
+                mutate::germinate_insert(chip, &mut built, u, v, w, false)?;
+            }
+            chip.run()?;
+            built.ingest.resync(chip);
+            built.objects = mutate::total_objects(chip);
+        }
+    }
+
+    // -- 3 + 4. metadata/state fixup, banding-axis hint -------------------
+    fixup_metadata(chip, &built, &in_deg, &out_deg);
+    resolve_auto_axis(chip, &mut built, &geo);
+    Ok(built)
+}
+
+/// Construct a streamed edge source onto `chip` **without materializing
+/// the edge list**: pass 1 streams once to count per-vertex degrees (and
+/// discover `n`), pass 2 streams again and inserts chunk by chunk. Host
+/// memory stays `O(n + chunk_edges)` regardless of the edge count.
+///
+/// Equivalence contract (pinned by the determinism suite): with
+/// `BuildMode::Host` the constructed chip is *bit-identical* to
+/// `build(chip, &source::materialize(src))` — same allocator draws, same
+/// insert order — for every chunk size. With `BuildMode::OnChip` each
+/// chunk is germinated and settled in its own `chip.run()`, bounding
+/// in-flight action memory; the resulting structure matches the
+/// materialized build while construction-phase cycle counts depend on the
+/// chunk size (exactly like `ingest_wave` batching of mutation streams).
+pub fn build_stream<A: Application, S: EdgeSource + ?Sized>(
+    chip: &mut Chip<A>,
+    src: &mut S,
+    chunk_edges: usize,
+) -> anyhow::Result<BuiltGraph> {
+    let cfg = chip.cfg.clone();
+    let geo = Geometry::new(cfg.dim_x, cfg.dim_y, cfg.topology);
+    let chunk = chunk_edges.max(1);
+
+    // -- pass 1: stream degrees + vertex count ----------------------------
+    src.reset()?;
+    let mut in_deg: Vec<u32> = vec![0; src.declared_n() as usize];
+    let mut out_deg: Vec<u32> = vec![0; src.declared_n() as usize];
+    let mut buf: Vec<(u32, u32, u32)> = Vec::new();
+    while src.next_chunk(&mut buf, chunk)? > 0 {
+        for &(s, t, _) in &buf {
+            let need = (s.max(t) as usize) + 1;
+            if in_deg.len() < need {
+                in_deg.resize(need, 0);
+                out_deg.resize(need, 0);
+            }
+            out_deg[s as usize] += 1;
+            in_deg[t as usize] += 1;
+        }
+    }
+    if in_deg.is_empty() {
+        in_deg.push(0);
+        out_deg.push(0);
+    }
+
+    let mut built = alloc_member_roots(chip, &geo, &in_deg)?;
+
+    // -- pass 2: stream edges through the unified ingest engine -----------
+    src.reset()?;
+    match cfg.build_mode {
+        BuildMode::Host => {
+            while src.next_chunk(&mut buf, chunk)? > 0 {
+                for &(u, v, w) in &buf {
+                    mutate::insert_edge(chip, &mut built, u, v, w, false)?;
+                }
+            }
+        }
+        BuildMode::OnChip => {
+            // One settling run per chunk keeps in-flight InsertEdge
+            // actions bounded by the chunk size instead of the edge count.
+            while src.next_chunk(&mut buf, chunk)? > 0 {
+                for &(u, v, w) in &buf {
+                    mutate::germinate_insert(chip, &mut built, u, v, w, false)?;
+                }
+                chip.run()?;
+            }
+            built.ingest.resync(chip);
+            built.objects = mutate::total_objects(chip);
+        }
+    }
+
+    fixup_metadata(chip, &built, &in_deg, &out_deg);
+    resolve_auto_axis(chip, &mut built, &geo);
+    Ok(built)
+}
+
+/// Step 1 of both build paths: size each vertex's rhizome from its
+/// in-degree (Eq. 1, floored cutoff), allocate every member root under the
+/// configured placement policy, and install placeholder-state roots. The
+/// allocator draw order — vertex-major, member-minor — is part of the
+/// determinism contract: `build` and `build_stream` go through this one
+/// function so identical degree vectors give identical placements.
+fn alloc_member_roots<A: Application>(
+    chip: &mut Chip<A>,
+    geo: &Geometry,
+    in_deg: &[u32],
+) -> anyhow::Result<BuiltGraph> {
+    let cfg = chip.cfg.clone();
+    let mut alloc = Allocator::new(*geo, cfg.cell_mem_objects as u32, cfg.seed);
+    let n = in_deg.len() as u32;
     let max_in = in_deg.iter().copied().max().unwrap_or(0);
     // Eq. 1, floored: §6.1 deploys rhizomes for the *highly skewed*
     // in-degree vertices. On low-skew graphs (E18) Eq. 1 alone would give a
@@ -87,12 +207,9 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
     let min_cutoff = (4 * cfg.local_edgelist_size) as u32;
     let cutoff = rhizome::floored_cutoff(max_in, cfg.rpvo_max, min_cutoff);
 
-    // -- 1. allocate member roots (host-side in both build modes: the
-    //       roots ARE the user-visible vertex addresses) -----------------
-    let n = g.n as usize;
-    let mut roots: Vec<Vec<Address>> = Vec::with_capacity(n);
+    let mut roots: Vec<Vec<Address>> = Vec::with_capacity(n as usize);
     let mut rhizomatic = 0u64;
-    for vid in 0..g.n {
+    for vid in 0..n {
         let members = if cfg.rpvo_max > 1 {
             rhizome::members_for(in_deg[vid as usize], cutoff, cfg.rpvo_max)
         } else {
@@ -125,40 +242,31 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
         roots.push(addrs);
     }
 
-    // -- 2. insert edges through the unified ingest engine ----------------
     let objects = roots.iter().map(|m| m.len() as u64).sum::<u64>();
-    let mut built = BuiltGraph {
+    Ok(BuiltGraph {
         roots,
-        n: g.n,
+        n,
         objects,
         rhizomatic_vertices: rhizomatic,
         cutoff_chunk: cutoff,
         link_hops_x: 0,
         link_hops_y: 0,
-        ingest: Ingest::new(alloc, g.n),
-    };
-    match cfg.build_mode {
-        BuildMode::Host => {
-            for &(u, v, w) in &g.edges {
-                mutate::insert_edge(chip, &mut built, u, v, w, false)?;
-            }
-        }
-        BuildMode::OnChip => {
-            // Construction as a batch of InsertEdge actions (§6.1 meets
-            // §7): germinate them all, run the chip until the mutations
-            // settle. Metadata is fixed up wholesale below, so the batch
-            // needs no MetaBump companions.
-            for &(u, v, w) in &g.edges {
-                mutate::germinate_insert(chip, &mut built, u, v, w, false)?;
-            }
-            chip.run()?;
-            built.ingest.resync(chip);
-            built.objects = mutate::total_objects(chip);
-        }
-    }
+        ingest: Ingest::new(alloc, n),
+    })
+}
 
-    // -- 3. metadata + state fixup ----------------------------------------
-    for vid in 0..g.n {
+/// Step 3 of both build paths: recompute every object's metadata and app
+/// state now that the structure is final, walking each member's RPVO
+/// through its live ghost pointers (valid for both build modes), and link
+/// the rhizome sibling rings (§3.2).
+fn fixup_metadata<A: Application>(
+    chip: &mut Chip<A>,
+    built: &BuiltGraph,
+    in_deg: &[u32],
+    out_deg: &[u32],
+) {
+    let cutoff = built.cutoff_chunk;
+    for vid in 0..built.n {
         let members = &built.roots[vid as usize];
         let width = members.len() as u32;
         // In-degree share per member from the same cycling the edges used.
@@ -172,13 +280,11 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
                 out_degree: out_deg[vid as usize],
                 in_degree_share: shares[m],
                 rhizome_size: width,
-                total_vertices: g.n,
+                total_vertices: built.n,
             };
             // Rhizome links: full sibling list (excluding self), §3.2.
             let siblings: Vec<Address> =
                 members.iter().enumerate().filter(|&(i, _)| i != m).map(|(_, &a)| a).collect();
-            // Fix up every object in this member's tree (walked through
-            // the live ghost pointers — valid for both build modes).
             for oaddr in mutate::member_tree(chip, addr) {
                 let state = chip.app.init(&meta);
                 let obj = chip.object_mut(oaddr);
@@ -189,12 +295,15 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
             root.rhizome = siblings;
         }
     }
+}
 
-    // -- 4. predicted traffic split -> banding-axis hint ------------------
-    let (hx, hy) = predicted_axis_hops(chip, &geo);
+/// Step 4 of both build paths: record the predicted per-axis traffic split
+/// and, when the config leaves the banding axis on `Auto`, hint the chip.
+fn resolve_auto_axis<A: Application>(chip: &mut Chip<A>, built: &mut BuiltGraph, geo: &Geometry) {
+    let (hx, hy) = predicted_axis_hops(chip, geo);
     built.link_hops_x = hx;
     built.link_hops_y = hy;
-    if cfg.shard_axis == ShardAxis::Auto {
+    if chip.cfg.shard_axis == ShardAxis::Auto {
         // Row bands move the Y hop volume across shard boundaries, column
         // bands the X volume: band along the axis that crosses less. An
         // exact tie stays `Auto`, which `set_band_axis` resolves to the
@@ -209,8 +318,6 @@ pub fn build<A: Application>(chip: &mut Chip<A>, g: &HostGraph) -> anyhow::Resul
         };
         chip.set_band_axis(axis);
     }
-
-    Ok(built)
 }
 
 /// Predicted per-axis NoC hop volume of the built structure: for every
@@ -403,6 +510,76 @@ mod tests {
         let mut chip = Chip::new(cfg, Probe).unwrap();
         build(&mut chip, &g).unwrap();
         assert_eq!(chip.band_axis(), ShardAxis::Rows);
+    }
+
+    /// Per-object placement fingerprint: vid, member, root-ness, edges,
+    /// ghost and rhizome links.
+    type ObjFingerprint = (u32, u32, bool, Vec<(Address, u32)>, Vec<Address>, Vec<Address>);
+
+    /// Full placement fingerprint of the constructed chip, cell by cell.
+    fn structure<A: Application>(chip: &Chip<A>) -> Vec<Vec<ObjFingerprint>> {
+        chip.cells
+            .iter()
+            .map(|c| {
+                c.objects
+                    .iter()
+                    .map(|o| {
+                        (
+                            o.vid,
+                            o.member,
+                            o.is_root(),
+                            o.edges.iter().map(|e| (e.to, e.weight)).collect(),
+                            o.ghosts.clone(),
+                            o.rhizome.clone(),
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn build_stream_host_is_placement_identical_for_every_chunk_size() {
+        use crate::graph::source::{materialize, RmatStream};
+        let mut src = RmatStream::new(crate::graph::rmat::RmatParams::paper(8, 6, 5), 32);
+        let g = materialize(&mut src).unwrap();
+
+        let mut cfg = ChipConfig::torus(8);
+        cfg.rpvo_max = 4;
+        cfg.local_edgelist_size = 4;
+        let mut ref_chip = Chip::new(cfg.clone(), Probe).unwrap();
+        let ref_built = build(&mut ref_chip, &g).unwrap();
+        let ref_struct = structure(&ref_chip);
+
+        for chunk in [1usize, 7, 4096, usize::MAX] {
+            let mut chip = Chip::new(cfg.clone(), Probe).unwrap();
+            let built = build_stream(&mut chip, &mut src, chunk).unwrap();
+            assert_eq!(built.n, ref_built.n, "chunk={chunk}");
+            assert_eq!(built.roots, ref_built.roots, "chunk={chunk}");
+            assert_eq!(built.objects, ref_built.objects, "chunk={chunk}");
+            assert_eq!(built.cutoff_chunk, ref_built.cutoff_chunk, "chunk={chunk}");
+            assert_eq!(
+                (built.link_hops_x, built.link_hops_y),
+                (ref_built.link_hops_x, ref_built.link_hops_y),
+                "chunk={chunk}"
+            );
+            assert_eq!(structure(&chip), ref_struct, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn build_stream_discovers_n_without_declared_metadata() {
+        use crate::graph::source::TextEdgeSource;
+        // No amcca header: n must come from the streamed endpoints.
+        let text = "0\t5\n5 2 3\n1 4\n";
+        let mut src =
+            TextEdgeSource::new(std::io::Cursor::new(text.as_bytes().to_vec())).unwrap();
+        let mut chip = Chip::new(ChipConfig::torus(4), Probe).unwrap();
+        let built = build_stream(&mut chip, &mut src, 2).unwrap();
+        assert_eq!(built.n, 6);
+        assert_eq!(count_edges(&chip), 3);
+        assert_eq!(chip.object(built.addr_of(5)).meta.in_degree_share, 1);
+        assert_eq!(chip.object(built.addr_of(5)).meta.out_degree, 1);
     }
 
     #[test]

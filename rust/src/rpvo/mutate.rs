@@ -68,6 +68,7 @@ use crate::arch::addr::Address;
 use crate::arch::chip::Chip;
 use crate::arch::config::{AllocPolicy, BuildMode};
 use crate::diffusive::handler::Application;
+use crate::graph::source::EdgeSource;
 use crate::noc::message::ActionKind;
 use crate::rpvo::alloc::Allocator;
 use crate::rpvo::builder::BuiltGraph;
@@ -568,6 +569,30 @@ pub fn apply_batch<A: Application>(
     Ok(repairable)
 }
 
+/// Out-of-core twin of [`apply_batch`]: stream an [`EdgeSource`] of
+/// mutations through the live chip in `chunk`-edge batches, each batch
+/// going through the full wave machinery above. Host memory stays
+/// `O(chunk)` for an arbitrarily long stream; since waves already make
+/// batching result-invariant (wave-batched == per-edge), the chunking
+/// adds no new ordering freedom. Returns the edge count streamed and
+/// [`apply_batch`]'s repairability verdict.
+pub fn apply_stream<A: Application, S: EdgeSource + ?Sized>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    src: &mut S,
+    chunk: usize,
+) -> anyhow::Result<(u64, bool)> {
+    let mut batch = MutationBatch::default();
+    let mut total = 0u64;
+    let mut repairable = chip.app.can_repair();
+    src.reset()?;
+    while src.next_chunk(&mut batch.edges, chunk.max(1))? > 0 {
+        total += batch.edges.len() as u64;
+        repairable = apply_batch(chip, built, &batch)?;
+    }
+    Ok((total, repairable))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -726,6 +751,42 @@ mod tests {
             assert_eq!(seq_levels, bat_levels, "{mode:?}: results diverged");
             assert_eq!(seq_waves as usize, batch.edges.len(), "wave=1 is per-edge");
             assert!(bat_waves < seq_waves, "{mode:?}: auto mode must batch waves");
+        }
+    }
+
+    #[test]
+    fn streamed_mutations_match_batched_for_every_chunk_size() {
+        // `apply_stream` == `apply_batch` of the same edges, however the
+        // stream is chunked: chunks are just batches, and waves already
+        // make batching result-invariant.
+        let g = skewed_graph();
+        let batch = MutationBatch::random(g.n, 48, 8, 0x57AE);
+        let mut bytes = Vec::new();
+        let as_graph = HostGraph { n: g.n, edges: batch.edges.clone() };
+        as_graph.save_binary_edgelist(&mut bytes).unwrap();
+
+        let reference = {
+            let (mut chip, mut built) =
+                crate::apps::driver::run_bfs(ChipConfig::torus(8), &g, 0).unwrap();
+            apply_batch(&mut chip, &mut built, &batch).unwrap();
+            (edge_multiset(&chip), crate::apps::driver::bfs_levels(&chip, &built))
+        };
+        for chunk in [1usize, 7, 4096] {
+            let mut src = crate::graph::source::BinaryEdgeSource::new(std::io::Cursor::new(
+                bytes.clone(),
+            ))
+            .unwrap();
+            let (mut chip, mut built) =
+                crate::apps::driver::run_bfs(ChipConfig::torus(8), &g, 0).unwrap();
+            let (m, repairable) = apply_stream(&mut chip, &mut built, &mut src, chunk).unwrap();
+            assert_eq!(m, batch.edges.len() as u64);
+            assert!(repairable);
+            assert_eq!(edge_multiset(&chip), reference.0, "chunk={chunk}");
+            assert_eq!(
+                crate::apps::driver::bfs_levels(&chip, &built),
+                reference.1,
+                "chunk={chunk}"
+            );
         }
     }
 

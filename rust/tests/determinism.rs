@@ -42,12 +42,22 @@
 //! whole suite (mutations, waves, growth included) with folding disabled.
 //! Every grid point additionally asserts `outbox_overflows == 0`: release
 //! builds must never silently drop a staged cross-shard flit.
+//!
+//! The streaming suite (`streamed_build_*`, `parallel_cell_init_*`)
+//! extends the contract to out-of-core construction: a chip built from an
+//! `EdgeSource` in waves (`rpvo::builder::build_stream`) must be
+//! whole-`Metrics` bit-identical to the materialized build for every
+//! chunk size, shard count, and banding axis — and the touch-first
+//! parallel cell-arena construction on 1024+-cell chips must be pure
+//! placement, invisible in every counter.
 
 use amcca::apps::driver;
 use amcca::arch::config::{ChipConfig, ShardAxis};
 use amcca::graph::datasets::{Dataset, Scale};
+use amcca::graph::source::BinaryEdgeSource;
 use amcca::rpvo::mutate::MutationBatch;
 use amcca::stats::metrics::Metrics;
+use std::io::Cursor;
 
 const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
 
@@ -685,6 +695,102 @@ fn min_monoid_results_equal_with_combining_off() {
         driver::cc_labels(&off, &off_built),
         "CC labels diverged across the combine gate"
     );
+}
+
+// ---------------------------------------------------------- streaming --
+
+/// R18@Tiny serialized in the AMEL binary format, so streaming suites
+/// replay the exact same edge list the materialized reference was built
+/// from.
+fn r18_bytes() -> Vec<u8> {
+    let g = Dataset::R18.build(Scale::Tiny);
+    let mut bytes = Vec::new();
+    g.save_binary_edgelist(&mut bytes).unwrap();
+    bytes
+}
+
+#[test]
+fn streamed_build_axis_invariant() {
+    // Out-of-core construction under the full engine grid: a chip built
+    // from an EdgeSource in 4096-edge waves must match the materialized
+    // build bit-for-bit — whole `Metrics` and levels — across
+    // {Rows, Cols, Auto} x {1, 2, 4}.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let bytes = r18_bytes();
+    let (ref_chip, ref_built) = driver::run_bfs(cfg_on(1, ShardAxis::Rows), &g, 0).unwrap();
+    let want = (ref_chip.metrics.clone(), driver::bfs_levels(&ref_chip, &ref_built));
+    let grid = axis_grid();
+    assert_axis_invariant("bfs-stream/R18", &grid, |c| {
+        let mut src = BinaryEdgeSource::new(Cursor::new(bytes.clone())).unwrap();
+        let (chip, built) = driver::run_bfs_stream(c, &mut src, 4096, 0).unwrap();
+        let got = (chip.metrics.clone(), driver::bfs_levels(&chip, &built));
+        assert_eq!(got, want, "streamed build != materialized build");
+        got
+    });
+}
+
+#[test]
+fn streamed_build_chunk_size_invariant() {
+    // Host-mode streamed construction is placement-identical for every
+    // chunk size: whole `Metrics` must equal the materialized run for
+    // chunks {1, 7, 4096, whole-file} — and the generator-backed
+    // RmatStream must match its own drained (materialized) form, pinning
+    // that `materialize` and chunked replay are the same graph.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let bytes = r18_bytes();
+    let (ref_chip, ref_built) = driver::run_bfs(cfg(1), &g, 0).unwrap();
+    let want = (ref_chip.metrics.clone(), driver::bfs_levels(&ref_chip, &ref_built));
+    for chunk in [1usize, 7, 4096, usize::MAX] {
+        let mut src = BinaryEdgeSource::new(Cursor::new(bytes.clone())).unwrap();
+        let (chip, built) = driver::run_bfs_stream(cfg(1), &mut src, chunk, 0).unwrap();
+        assert_eq!(chip.metrics, want.0, "metrics diverged at chunk={chunk}");
+        assert_eq!(
+            driver::bfs_levels(&chip, &built),
+            want.1,
+            "levels diverged at chunk={chunk}"
+        );
+    }
+    let mut src = amcca::graph::datasets::rmat_stream(10, 4);
+    let gs = amcca::graph::source::materialize(&mut src).unwrap();
+    let (ref_chip, ref_built) = driver::run_bfs(cfg(1), &gs, 0).unwrap();
+    let want = (ref_chip.metrics.clone(), driver::bfs_levels(&ref_chip, &ref_built));
+    for chunk in [257usize, usize::MAX] {
+        let (chip, built) = driver::run_bfs_stream(cfg(1), &mut src, chunk, 0).unwrap();
+        assert_eq!(chip.metrics, want.0, "generator metrics diverged at chunk={chunk}");
+        assert_eq!(
+            driver::bfs_levels(&chip, &built),
+            want.1,
+            "generator levels diverged at chunk={chunk}"
+        );
+    }
+}
+
+#[test]
+fn parallel_cell_init_is_invisible() {
+    // 32x32 = 1024 cells crosses the touch-first threshold in
+    // `arch::chip`, so shards > 1 constructs the cell arena in parallel
+    // band workers (NUMA first-touch placement). That must be pure
+    // placement: metrics and results bit-identical to the serial
+    // construction path, on both banding axes.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let mut reference: Option<(Metrics, Vec<u32>)> = None;
+    for (shards, axis) in [(1, ShardAxis::Rows), (4, ShardAxis::Rows), (4, ShardAxis::Cols)] {
+        let mut c = ChipConfig::torus(32);
+        c.seed = 7;
+        c.shards = shards;
+        c.shard_axis = axis;
+        c.combine = combine_default();
+        let (chip, built) = driver::run_bfs(c, &g, 0).unwrap();
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(driver::verify_bfs(&g, 0, &levels), 0, "wrong BFS at {axis:?} x {shards}");
+        match &reference {
+            None => reference = Some((chip.metrics.clone(), levels)),
+            Some((m, l)) => {
+                assert_eq!(m, &chip.metrics, "metrics diverged at {axis:?} x {shards}");
+                assert_eq!(l, &levels, "levels diverged at {axis:?} x {shards}");
+            }
+        }
+    }
 }
 
 #[test]
