@@ -1,0 +1,17 @@
+// Fixture: ActionKind fold table hiding variants behind a wildcard and
+// omitting an explicit entry. Must trip `combine-table`.
+
+pub enum ActionKind {
+    App = 0,
+    RelayDiffuse = 1,
+    InsertEdge = 2,
+}
+
+impl ActionKind {
+    pub fn combinable(self) -> bool {
+        match self {
+            ActionKind::App => true,
+            _ => false,
+        }
+    }
+}

@@ -1,0 +1,8 @@
+// Fixture: float ordering via partial_cmp. Must trip `float-ordering`.
+
+pub fn hottest(scores: &[f32]) -> Option<f32> {
+    scores
+        .iter()
+        .copied()
+        .max_by(|a, b| a.partial_cmp(b).unwrap())
+}

@@ -1,0 +1,17 @@
+// Fixture: iteration over a HashMap feeding result-affecting state.
+// Must trip `unordered-iter`.
+
+use std::collections::HashMap;
+
+pub fn degree_histogram(edges: &[(u32, u32)]) -> Vec<u64> {
+    let mut deg: HashMap<u32, u64> = HashMap::new();
+    for &(s, _) in edges {
+        *deg.entry(s).or_insert(0) += 1;
+    }
+    let mut out = Vec::new();
+    // Randomized order leaks straight into the output vector.
+    for (_, d) in deg.iter() {
+        out.push(*d);
+    }
+    out
+}

@@ -1,0 +1,9 @@
+// Fixture: wall-clock time in an engine module. Must trip `wall-clock`.
+
+use std::time::Instant;
+
+pub fn timed_step() -> u128 {
+    let t0 = Instant::now();
+    std::hint::black_box(0u64);
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,577 @@
+//! `amcca-lint`: a repo-specific determinism lint pass for the AM-CCA
+//! engine sources.
+//!
+//! The engine's headline invariant is whole-`Metrics` bit-identity across
+//! every shard count and banding axis (see `rust/src/arch/chip.rs` module
+//! docs). That invariant is enforced dynamically by `tests/determinism.rs`
+//! and the `dsan` shadow auditor; this crate closes the *static* side by
+//! rejecting the nondeterminism hazards that have actually bitten (or
+//! nearly bitten) this codebase:
+//!
+//! * **`unordered-iter`** — iteration over `std::collections::HashMap` /
+//!   `HashSet` (`for .. in`, `.iter()`, `.keys()`, `.values()`,
+//!   `.drain()`, `.retain()`): the iteration order is randomized per
+//!   process, so anything it feeds into result-affecting state diverges
+//!   between runs. Membership-only use (`insert` / `contains` / `get` /
+//!   `len`) is deterministic and allowed. Genuinely order-free iteration
+//!   sites must carry `// lint: allow(unordered-iter): <why>`.
+//! * **`float-ordering`** — float comparisons via `partial_cmp` /
+//!   `max_by` / `min_by` without `total_cmp` or `to_bits`: NaN handling
+//!   makes `partial_cmp`-based ordering panic- or tie-order-dependent.
+//! * **`wall-clock`** — `Instant::now`, `SystemTime`, or `thread_rng` in
+//!   engine modules: simulated results must be a pure function of config
+//!   and seed, never of host time or an OS-seeded RNG.
+//! * **`combine-table`** — every `ActionKind` variant must have an
+//!   explicit arm in the `combinable()` eligibility table (the
+//!   `Application::combine` gate in `noc/message.rs`), with no `_ =>`
+//!   wildcard: a new action kind must *opt in* to wire-side folding, not
+//!   inherit it silently.
+//!
+//! Any rule is silenced per line with a justification comment on the same
+//! or the preceding line:
+//!
+//! ```text
+//! // lint: allow(unordered-iter): drained into a sort before use
+//! ```
+//!
+//! The pass is a hand-rolled, std-only token scanner (the offline build
+//! environment carries no `syn`); it scrubs comments and string literals
+//! before matching, tracks `HashMap`/`HashSet` bindings per file, and
+//! walks a fixed set of engine directories. Deny semantics: the binary
+//! exits non-zero on any finding, and `rust/tests/lint.rs` runs the same
+//! pass under plain `cargo test`.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Iteration over a randomized-order hash container.
+pub const RULE_UNORDERED_ITER: &str = "unordered-iter";
+/// Float ordering via `partial_cmp`/`max_by` instead of `total_cmp`.
+pub const RULE_FLOAT_ORDERING: &str = "float-ordering";
+/// Wall-clock or OS-seeded randomness in engine modules.
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+/// `ActionKind` variant missing from the `combinable()` fold table.
+pub const RULE_COMBINE_TABLE: &str = "combine-table";
+
+/// Directories under `src/` that the default pass walks: the engine
+/// modules whose behaviour feeds `Metrics` (the five named in the issue)
+/// plus `noc`, which owns the `ActionKind` fold-eligibility table the
+/// `combine-table` rule audits.
+pub const DEFAULT_ROOTS: &[&str] = &["arch", "rpvo", "diffusive", "apps", "stats", "noc"];
+
+/// One lint violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Lint one file's source text. `path` is used only for reporting.
+pub fn lint_source(path: &str, source: &str) -> Vec<Finding> {
+    let raw: Vec<&str> = source.lines().collect();
+    let code = scrub(&raw);
+    let mut out = Vec::new();
+    check_unordered_iter(path, &raw, &code, &mut out);
+    check_float_ordering(path, &raw, &code, &mut out);
+    check_wall_clock(path, &raw, &code, &mut out);
+    check_combine_table(path, &raw, &code, &mut out);
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+/// Lint a single `.rs` file or recursively every `.rs` file under a
+/// directory, in sorted path order (deterministic output).
+pub fn lint_path(p: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(p, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let source = fs::read_to_string(&f)?;
+        out.extend(lint_source(&f.display().to_string(), &source));
+    }
+    Ok(out)
+}
+
+/// Lint the default engine roots under `src_root` (a crate's `src/`).
+pub fn lint_tree(src_root: &Path) -> io::Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    for d in DEFAULT_ROOTS {
+        let dir = src_root.join(d);
+        if dir.exists() {
+            out.extend(lint_path(&dir)?);
+        }
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if p.is_dir() {
+        for entry in fs::read_dir(p)? {
+            collect_rs_files(&entry?.path(), out)?;
+        }
+    } else if p.extension().is_some_and(|e| e == "rs") {
+        out.push(p.to_path_buf());
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- scrub --
+
+/// Blank out comments and string/char literal *contents* (delimiters are
+/// kept so token boundaries survive), line by line. Block comments may
+/// span lines; a trailing `\"` escape inside a string is handled, raw
+/// strings are treated like plain ones (good enough for this tree — the
+/// engine sources carry none with embedded quotes).
+fn scrub(raw: &[&str]) -> Vec<String> {
+    let mut out = Vec::with_capacity(raw.len());
+    let mut in_block = false;
+    for line in raw {
+        let bytes: Vec<char> = line.chars().collect();
+        let mut s = String::with_capacity(bytes.len());
+        let mut i = 0;
+        while i < bytes.len() {
+            if in_block {
+                if bytes[i] == '*' && bytes.get(i + 1) == Some(&'/') {
+                    in_block = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            match bytes[i] {
+                '/' if bytes.get(i + 1) == Some(&'/') => break, // line comment
+                '/' if bytes.get(i + 1) == Some(&'*') => {
+                    in_block = true;
+                    i += 2;
+                }
+                '"' => {
+                    s.push('"');
+                    i += 1;
+                    while i < bytes.len() {
+                        if bytes[i] == '\\' {
+                            i += 2;
+                        } else if bytes[i] == '"' {
+                            s.push('"');
+                            i += 1;
+                            break;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                // Char literal ('x' or '\x'); lifetimes ('a, 'scan:) have
+                // no closing quote at the right distance and fall through.
+                '\'' if bytes.get(i + 1) == Some(&'\\') || bytes.get(i + 2) == Some(&'\'') => {
+                    let skip = if bytes.get(i + 1) == Some(&'\\') { 4 } else { 3 };
+                    s.push('\'');
+                    i += skip;
+                }
+                c => {
+                    s.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(s);
+    }
+    out
+}
+
+// --------------------------------------------------------- allow lists --
+
+/// Is `rule` allow-listed for (1-based) line `n`? The justification
+/// comment must sit on the same line or the line directly above, and must
+/// carry a non-empty reason after the colon.
+fn allowed(raw: &[&str], n: usize, rule: &str) -> bool {
+    let tag = format!("lint: allow({rule}):");
+    let has = |idx: usize| {
+        raw.get(idx).is_some_and(|l| {
+            l.find(&tag).is_some_and(|at| !l[at + tag.len()..].trim().is_empty())
+        })
+    };
+    has(n - 1) || (n >= 2 && has(n - 2))
+}
+
+// ------------------------------------------------------- ident helpers --
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does `line` contain `ident` as a whole token?
+fn has_token(line: &str, ident: &str) -> bool {
+    let mut from = 0;
+    while let Some(at) = line[from..].find(ident) {
+        let start = from + at;
+        let end = start + ident.len();
+        let pre = line[..start].chars().next_back();
+        let post = line[end..].chars().next();
+        if !pre.is_some_and(is_ident_char) && !post.is_some_and(is_ident_char) {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Identifiers a line binds or declares: `let [mut] id = …`, `id: T`
+/// struct fields and fn params, and plain `id = …` reassignments — i.e.
+/// every identifier token directly followed by `:` or `=` (excluding the
+/// `::`, `==`, and `=>` operators). Pass 1 intersects these with lines
+/// mentioning a hash type, so over-approximation here is harmless unless
+/// the same name is later iterated.
+fn bound_idents(line: &str) -> Vec<String> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if !is_ident_char(chars[i]) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < chars.len() && is_ident_char(chars[i]) {
+            i += 1;
+        }
+        if chars[start].is_ascii_digit() {
+            continue;
+        }
+        let mut j = i;
+        while j < chars.len() && chars[j] == ' ' {
+            j += 1;
+        }
+        let binds = match (chars.get(j), chars.get(j + 1)) {
+            (Some(':'), Some(':')) => false,
+            (Some(':'), _) => true,
+            (Some('='), Some('=')) | (Some('='), Some('>')) => false,
+            (Some('='), _) => true,
+            _ => false,
+        };
+        if binds {
+            let id: String = chars[start..i].iter().collect();
+            if !out.contains(&id) {
+                out.push(id);
+            }
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------- rules --
+
+fn check_unordered_iter(path: &str, raw: &[&str], code: &[String], out: &mut Vec<Finding>) {
+    // Pass 1: every identifier bound to a HashMap/HashSet in this file.
+    let mut tracked: Vec<String> = Vec::new();
+    for line in code {
+        if (line.contains("HashMap") || line.contains("HashSet"))
+            && !line.contains("BTreeMap")
+            && !line.contains("BTreeSet")
+        {
+            for id in bound_idents(line) {
+                if !tracked.contains(&id) {
+                    tracked.push(id);
+                }
+            }
+        }
+    }
+    // Pass 2: flag iteration over any tracked binding.
+    const ITER_METHODS: &[&str] =
+        &["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "retain"];
+    for (idx, line) in code.iter().enumerate() {
+        let n = idx + 1;
+        for id in &tracked {
+            if !has_token(line, id) {
+                continue;
+            }
+            let method_hit =
+                ITER_METHODS.iter().any(|m| line.contains(&format!("{id}.{m}(")));
+            let for_hit = line.contains("for ") && {
+                // `for pat in [&|&mut ]id` — the loop source is the token
+                // right after the last ` in `.
+                line.rfind(" in ").is_some_and(|at| {
+                    let src = line[at + 4..].trim_start();
+                    let src = src.strip_prefix("&mut ").unwrap_or(src);
+                    let src = src.strip_prefix('&').unwrap_or(src);
+                    let tok: String = src.chars().take_while(|&c| is_ident_char(c)).collect();
+                    let after = src[tok.len()..].chars().next();
+                    tok == *id && !after.is_some_and(is_ident_char) && after != Some('(')
+                })
+            };
+            if (method_hit || for_hit) && !allowed(raw, n, RULE_UNORDERED_ITER) {
+                out.push(Finding {
+                    path: path.to_string(),
+                    line: n,
+                    rule: RULE_UNORDERED_ITER,
+                    msg: format!(
+                        "iteration over hash container `{id}` has randomized order; use a \
+                         BTreeMap/BTreeSet, sort before use, or justify with `// lint: \
+                         allow(unordered-iter): <why>`"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+fn check_float_ordering(path: &str, raw: &[&str], code: &[String], out: &mut Vec<Finding>) {
+    for (idx, line) in code.iter().enumerate() {
+        let n = idx + 1;
+        if line.contains("partial_cmp") && !allowed(raw, n, RULE_FLOAT_ORDERING) {
+            out.push(Finding {
+                path: path.to_string(),
+                line: n,
+                rule: RULE_FLOAT_ORDERING,
+                msg: "float ordering via `partial_cmp` is NaN-dependent; use `total_cmp` or \
+                      compare `to_bits()`"
+                    .to_string(),
+            });
+            continue;
+        }
+        if line.contains(".max_by(") || line.contains(".min_by(") {
+            // The comparator often sits on the following lines; accept a
+            // `total_cmp`/`to_bits` within a short window.
+            let window = code[idx..code.len().min(idx + 3)].join(" ");
+            if !window.contains("total_cmp")
+                && !window.contains("to_bits")
+                && !allowed(raw, n, RULE_FLOAT_ORDERING)
+            {
+                out.push(Finding {
+                    path: path.to_string(),
+                    line: n,
+                    rule: RULE_FLOAT_ORDERING,
+                    msg: "`max_by`/`min_by` without `total_cmp`/`to_bits` in reach; float \
+                          comparators must be total"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn check_wall_clock(path: &str, raw: &[&str], code: &[String], out: &mut Vec<Finding>) {
+    const BANNED: &[(&str, &str)] = &[
+        ("Instant::now", "wall-clock time in an engine module"),
+        ("SystemTime", "wall-clock time in an engine module"),
+        ("thread_rng", "OS-seeded randomness in an engine module"),
+    ];
+    for (idx, line) in code.iter().enumerate() {
+        let n = idx + 1;
+        for (pat, what) in BANNED {
+            if line.contains(pat) && !allowed(raw, n, RULE_WALL_CLOCK) {
+                out.push(Finding {
+                    path: path.to_string(),
+                    line: n,
+                    rule: RULE_WALL_CLOCK,
+                    msg: format!(
+                        "{what} (`{pat}`): engine results must be a pure function of config \
+                         and seed"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// In any file defining `enum ActionKind`, every variant needs an explicit
+/// `ActionKind::Variant =>` arm inside `fn combinable`, and the match may
+/// not hide new variants behind a `_ =>` wildcard.
+fn check_combine_table(path: &str, raw: &[&str], code: &[String], out: &mut Vec<Finding>) {
+    let Some(enum_at) = code.iter().position(|l| l.contains("enum ActionKind")) else {
+        return;
+    };
+    let variants = enum_variants(code, enum_at);
+    if variants.is_empty() {
+        return;
+    }
+    let Some(fn_at) = code.iter().position(|l| l.contains("fn combinable")) else {
+        out.push(Finding {
+            path: path.to_string(),
+            line: enum_at + 1,
+            rule: RULE_COMBINE_TABLE,
+            msg: "`enum ActionKind` has no `fn combinable` eligibility table; every action \
+                  kind must explicitly opt in or out of wire-side folding"
+                .to_string(),
+        });
+        return;
+    };
+    let body = block_of(code, fn_at);
+    for v in &variants {
+        let arm = format!("ActionKind::{v}");
+        if !body.iter().any(|(_, l)| l.contains(&arm)) {
+            out.push(Finding {
+                path: path.to_string(),
+                line: fn_at + 1,
+                rule: RULE_COMBINE_TABLE,
+                msg: format!(
+                    "`ActionKind::{v}` has no explicit entry in the `combinable()` fold table"
+                ),
+            });
+        }
+    }
+    for (n, l) in &body {
+        let wild = l.trim_start().starts_with("_ =>") || l.contains(" _ =>");
+        if wild && !allowed(raw, *n, RULE_COMBINE_TABLE) {
+            out.push(Finding {
+                path: path.to_string(),
+                line: *n,
+                rule: RULE_COMBINE_TABLE,
+                msg: "wildcard `_ =>` in the `combinable()` table silently classifies new \
+                      action kinds; list every variant explicitly"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Variant names of the enum whose `{` opens at/after `start`.
+fn enum_variants(code: &[String], start: usize) -> Vec<String> {
+    let mut variants = Vec::new();
+    for (_, line) in block_of(code, start) {
+        let t = line.trim_start();
+        let id: String = t.chars().take_while(|&c| is_ident_char(c)).collect();
+        if id.is_empty() || !id.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            continue;
+        }
+        let rest = t[id.len()..].trim_start();
+        if rest.starts_with(',') || rest.starts_with('=') || rest.is_empty() {
+            variants.push(id);
+        }
+    }
+    variants
+}
+
+/// The `(1-based line, text)` body of the brace block opening at or after
+/// line `start` (exclusive of the header line's text before `{`).
+fn block_of(code: &[String], start: usize) -> Vec<(usize, String)> {
+    let mut depth = 0i32;
+    let mut opened = false;
+    let mut body = Vec::new();
+    for (idx, line) in code.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            if c == '{' {
+                depth += 1;
+                opened = true;
+            } else if c == '}' {
+                depth -= 1;
+            }
+        }
+        if opened {
+            body.push((idx + 1, line.clone()));
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    body
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn fixtures_fail_their_rule() {
+        for (fixture, rule) in [
+            (include_str!("../fixtures/unordered_iter.rs"), RULE_UNORDERED_ITER),
+            (include_str!("../fixtures/float_ordering.rs"), RULE_FLOAT_ORDERING),
+            (include_str!("../fixtures/wall_clock.rs"), RULE_WALL_CLOCK),
+            (include_str!("../fixtures/combine_table.rs"), RULE_COMBINE_TABLE),
+        ] {
+            let findings = lint_source("fixture.rs", fixture);
+            assert!(
+                rules_of(&findings).contains(&rule),
+                "fixture for {rule} must trip it; got {findings:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn membership_only_hash_use_is_clean() {
+        let src = "fn f() {\n    let mut seen = std::collections::HashSet::new();\n    \
+                   seen.insert(1u32);\n    assert!(seen.contains(&1) && seen.len() == 1);\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_comment_with_reason_silences() {
+        let src = "fn f(m: std::collections::HashMap<u32, u32>) -> u64 {\n    \
+                   // lint: allow(unordered-iter): summed into a commutative total\n    \
+                   m.values().map(|&v| v as u64).sum()\n}\n";
+        assert!(lint_source("x.rs", src).is_empty(), "justified iteration must pass");
+        let bare = src.replace(": summed into a commutative total", ":");
+        assert_eq!(rules_of(&lint_source("x.rs", &bare)), vec![RULE_UNORDERED_ITER]);
+    }
+
+    #[test]
+    fn for_loop_over_hash_is_flagged() {
+        let src = "fn f() {\n    let mut m = std::collections::HashMap::new();\n    \
+                   m.insert(1u32, 2u32);\n    for (k, v) in &m {\n        \
+                   println!(\"{k}{v}\");\n    }\n}\n";
+        let f = lint_source("x.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_UNORDERED_ITER]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn btree_iteration_is_clean() {
+        let src = "fn f() {\n    let mut m = std::collections::BTreeMap::new();\n    \
+                   m.insert(1u32, 2u32);\n    for (k, v) in &m {\n        \
+                   println!(\"{k}{v}\");\n    }\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn total_cmp_is_clean_partial_cmp_is_not() {
+        let ok = "fn f(xs: &[f64]) -> Option<f64> {\n    \
+                  xs.iter().copied().max_by(|a, b| a.total_cmp(b))\n}\n";
+        assert!(lint_source("x.rs", ok).is_empty());
+        let bad = "fn f(xs: &[f64]) -> Option<f64> {\n    \
+                   xs.iter().copied().max_by(|a, b| a.partial_cmp(b).unwrap())\n}\n";
+        assert_eq!(rules_of(&lint_source("x.rs", bad)), vec![RULE_FLOAT_ORDERING]);
+    }
+
+    #[test]
+    fn comments_and_strings_never_trip_rules() {
+        let src = "fn f() -> &'static str {\n    // Instant::now and partial_cmp in prose\n    \
+                   /* SystemTime too */\n    \"thread_rng inside a string\"\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn combine_table_wildcard_and_missing_variant() {
+        let src = "pub enum ActionKind {\n    App = 0,\n    MetaBump = 1,\n    \
+                   RingSplice = 2,\n}\n\nimpl ActionKind {\n    \
+                   pub fn combinable(self) -> bool {\n        match self {\n            \
+                   ActionKind::App => true,\n            _ => false,\n        }\n    }\n}\n";
+        let rules = rules_of(&lint_source("x.rs", src));
+        assert!(rules.iter().filter(|r| **r == RULE_COMBINE_TABLE).count() >= 3, "{rules:?}");
+    }
+
+    #[test]
+    fn exhaustive_combine_table_is_clean() {
+        let src = "pub enum ActionKind {\n    App = 0,\n    MetaBump = 1,\n}\n\n\
+                   impl ActionKind {\n    pub fn combinable(self) -> bool {\n        \
+                   match self {\n            ActionKind::App => true,\n            \
+                   ActionKind::MetaBump => false,\n        }\n    }\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+}

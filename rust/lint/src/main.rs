@@ -1,0 +1,45 @@
+//! Deny-semantics CLI for the determinism lint pass.
+//!
+//! With no arguments, lints the engine roots under `./src` (run from
+//! `rust/`, as CI does). Explicit file or directory arguments override
+//! the default and are linted recursively.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let findings = if args.is_empty() {
+        amcca_lint::lint_tree(Path::new("src"))
+    } else {
+        let mut all = Ok(Vec::new());
+        for a in &args {
+            match (&mut all, amcca_lint::lint_path(Path::new(a))) {
+                (Ok(acc), Ok(mut f)) => acc.append(&mut f),
+                (all, Err(e)) => {
+                    *all = Err(e);
+                    break;
+                }
+                (Err(_), _) => break,
+            }
+        }
+        all
+    };
+    match findings {
+        Ok(f) if f.is_empty() => {
+            eprintln!("amcca-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(f) => {
+            for finding in &f {
+                eprintln!("{finding}");
+            }
+            eprintln!("amcca-lint: {} finding(s)", f.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("amcca-lint: io error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -203,6 +203,42 @@
 //! placement only, never contents, so results stay bit-identical (the
 //! determinism suite's shard/axis grids run against both construction
 //! paths).
+//!
+//! # Determinism rules
+//!
+//! The invariants above are guarded *mechanically*, on two layers:
+//!
+//! **Static — `amcca-lint`** (`rust/lint/`, blocking in CI and mirrored
+//! by `tests/lint.rs` under plain `cargo test`). The pass walks
+//! `src/{arch,rpvo,diffusive,apps,stats,noc}` and denies the hazard
+//! classes that can silently break bit-identity:
+//!   * `unordered-iter` — iterating a `std::collections::HashMap`/
+//!     `HashSet` (randomized order). Membership-only use is fine;
+//!     genuinely order-free iteration needs a
+//!     `// lint: allow(unordered-iter): <why>` justification on the same
+//!     or preceding line (same syntax for every rule).
+//!   * `float-ordering` — `partial_cmp`/`max_by`/`min_by` without
+//!     `total_cmp`/`to_bits` (NaN-dependent ordering).
+//!   * `wall-clock` — `Instant::now`, `SystemTime`, `thread_rng`:
+//!     results must be a pure function of config and seed.
+//!   * `combine-table` — every [`ActionKind`] variant must carry an
+//!     explicit arm in `ActionKind::combinable` (no `_` wildcard), so
+//!     new action kinds opt *in* to wire-side folding. [`Lane::try_fold`]
+//!     consults exactly that table.
+//! Run locally with `cargo run -p amcca-lint` from `rust/`.
+//!
+//! **Dynamic — `dsan`** (`--features dsan`, armed by
+//! [`ChipConfig::dsan`] / `--dsan`; see [`crate::arch::dsan`]). Every
+//! hot-path cell touch stamps a shadow `(shard, cell, cycle)` table —
+//! flagging foreign-owner touches, cross-shard same-cycle write/write,
+//! and same-cycle credit-read-after-republish (the pre-credit-semantics
+//! race class) — and every combiner decision in [`Lane::try_fold`]
+//! (positive or negative) folds into an order-independent audit hash,
+//! which `tests/dsan.rs` pins identical across the full shard/axis grid.
+//! The pre-PR-6 fold-eligibility bug (pop evidence not qualified by VC)
+//! is kept re-injectable behind [`ChipConfig::dsan_legacy_fold`] so the
+//! suite can prove the auditor catches that bug class. With the feature
+//! off every probe compiles to an empty inline stub — zero overhead.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
@@ -211,6 +247,9 @@ use crate::arch::addr::{Address, CellId};
 use crate::arch::band::{BandMap, ShardAxis};
 use crate::arch::cell::Cell;
 use crate::arch::config::ChipConfig;
+#[cfg(feature = "dsan")]
+use crate::arch::dsan::Dsan;
+use crate::arch::dsan::DsanReport;
 use crate::diffusive::action::Diffusion;
 use crate::diffusive::handler::Application;
 use crate::diffusive::terminator::Terminator;
@@ -478,6 +517,11 @@ pub struct Chip<A: Application> {
     congested: Vec<AtomicBool>,
     terminator: Terminator,
     throttle_period: u64,
+    /// Shadow-state determinism auditor (see [`crate::arch::dsan`]).
+    /// Exists only in `--features dsan` builds; recording is further
+    /// gated at runtime on [`ChipConfig::dsan`].
+    #[cfg(feature = "dsan")]
+    dsan: Dsan,
 }
 
 /// Chips too small to ever run sharded (`ChipConfig::effective_shards_on`
@@ -560,6 +604,8 @@ impl<A: Application> Chip<A> {
             congested: (0..n).map(|_| AtomicBool::new(false)).collect(),
             terminator: Terminator::new(n),
             throttle_period: cfg.throttle_period(),
+            #[cfg(feature = "dsan")]
+            dsan: Dsan::new(n as usize),
             cells,
             cfg,
         })
@@ -737,6 +783,8 @@ impl<A: Application> Chip<A> {
                 k: 0,
                 st: &mut self.serial,
                 metrics: &mut self.metrics,
+                #[cfg(feature = "dsan")]
+                dsan: &self.dsan,
             };
             lane.run_phase1();
             // Serial engine: nothing was staged (one shard owns every
@@ -799,6 +847,51 @@ impl<A: Application> Chip<A> {
         let slot = self.cells[cc as usize].alloc_object(obj);
         Address::new(cc, slot)
     }
+
+    /// The shadow auditor's results, when this build carries the `dsan`
+    /// feature and [`ChipConfig::dsan`] armed it; `None` otherwise. The
+    /// report type is always compiled so callers need no feature gates.
+    #[cfg(feature = "dsan")]
+    pub fn dsan_report(&self) -> Option<DsanReport> {
+        if self.cfg.dsan {
+            Some(self.dsan.report())
+        } else {
+            None
+        }
+    }
+
+    /// See the `dsan`-feature version; without the feature the auditor
+    /// does not exist and there is never a report.
+    #[cfg(not(feature = "dsan"))]
+    pub fn dsan_report(&self) -> Option<DsanReport> {
+        None
+    }
+
+    /// TEST PROBE (dsan builds only): run one combiner fold decision for
+    /// an arriving `flit` on cell `c`'s input `port` exactly as a
+    /// forward-path push would (`local = false`), against the chip's
+    /// current buffer state and `now`. Lets `tests/dsan.rs` pin the
+    /// eligibility rule — clean vs [`ChipConfig::dsan_legacy_fold`] —
+    /// on a hand-built buffer scenario without an engine run.
+    #[cfg(feature = "dsan")]
+    pub fn dsan_probe_fold(&mut self, c: CellId, port: usize, flit: &Flit) -> bool {
+        let mut lane = Lane {
+            app: &self.app,
+            geo: &self.geo,
+            cfg: &self.cfg,
+            now: self.now,
+            throttle_period: self.throttle_period,
+            cells: self.cells.as_mut_slice(),
+            space: &self.space,
+            congested: &self.congested,
+            band: &self.serial_band,
+            k: 0,
+            st: &mut self.serial,
+            metrics: &mut self.metrics,
+            dsan: &self.dsan,
+        };
+        lane.try_fold(c, c as usize, port, flit, false)
+    }
 }
 
 // ------------------------------------------------------------------------
@@ -849,6 +942,8 @@ struct Ctx<'e, A: Application> {
     /// Yield back to the serial engine when the total active set for the
     /// coming cycle drops below this (0 = never; run to termination).
     yield_below: u64,
+    #[cfg(feature = "dsan")]
+    dsan: &'e Dsan,
 }
 
 /// What each worker hands back for deterministic merging (shard order).
@@ -965,6 +1060,8 @@ fn shard_worker<A: Application, V: CellArena<S = A::State> + ?Sized>(
                 k,
                 st: &mut st,
                 metrics: &mut metrics,
+                #[cfg(feature = "dsan")]
+                dsan: ctx.dsan,
             };
             lane.run_phase1();
         }
@@ -995,6 +1092,8 @@ fn shard_worker<A: Application, V: CellArena<S = A::State> + ?Sized>(
                 k,
                 st: &mut st,
                 metrics: &mut metrics,
+                #[cfg(feature = "dsan")]
+                dsan: ctx.dsan,
             };
             for src in 0..ctx.nshards {
                 if src == k {
@@ -1107,6 +1206,8 @@ impl<A: Application> Chip<A> {
                 tree_depth: self.terminator.tree_depth(),
                 fast: self.cfg.heatmap_every == 0,
                 yield_below,
+                #[cfg(feature = "dsan")]
+                dsan: &self.dsan,
             };
 
             outs = match band.axis() {
@@ -1242,6 +1343,8 @@ struct Lane<'a, A: Application, V: CellArena<S = A::State> + ?Sized> {
     k: usize,
     st: &'a mut Shard,
     metrics: &'a mut Metrics,
+    #[cfg(feature = "dsan")]
+    dsan: &'a Dsan,
 }
 
 impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
@@ -1260,6 +1363,76 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     fn owns(&self, c: CellId) -> bool {
         self.band.shard_of(c) == self.k
     }
+
+    // ------------------------------------------------- dsan probes --
+    //
+    // Each probe has a `dsan`-feature body and an empty
+    // `#[inline(always)]` stub, so call sites are plain statements and
+    // the feature-off hot path compiles them out entirely (zero-overhead
+    // acceptance criterion). With the feature on, recording is further
+    // gated on the runtime `cfg.dsan` flag.
+
+    /// Write-class touch of cell `c` by this shard (route/compute/merge).
+    #[cfg(feature = "dsan")]
+    fn dsan_touch(&self, c: CellId) {
+        if self.cfg.dsan {
+            self.dsan.touch(c, self.k, self.band.shard_of(c), self.now);
+        }
+    }
+
+    #[cfg(not(feature = "dsan"))]
+    #[inline(always)]
+    fn dsan_touch(&self, _c: CellId) {}
+
+    /// A routing credit for cell `c` was read this cycle.
+    #[cfg(feature = "dsan")]
+    fn dsan_credit_read(&self, c: CellId) {
+        if self.cfg.dsan {
+            self.dsan.credit_read(c, self.now);
+        }
+    }
+
+    #[cfg(not(feature = "dsan"))]
+    #[inline(always)]
+    fn dsan_credit_read(&self, _c: CellId) {}
+
+    /// Cell `c`'s credit word was republished (end-of-cycle refresh).
+    #[cfg(feature = "dsan")]
+    fn dsan_space_publish(&self, c: CellId) {
+        if self.cfg.dsan {
+            self.dsan.stamp_space(c, self.now);
+        }
+    }
+
+    #[cfg(not(feature = "dsan"))]
+    #[inline(always)]
+    fn dsan_space_publish(&self, _c: CellId) {}
+
+    /// One combiner decision on `(cell, port)` for `target`: `vc` is the
+    /// winning VC of a fold, `None` a no-fold decision.
+    #[cfg(feature = "dsan")]
+    fn dsan_fold(&self, c: CellId, port: usize, target: u32, vc: Option<u8>) {
+        if self.cfg.dsan {
+            self.dsan.record_fold(self.now, c, port, target, vc);
+        }
+    }
+
+    #[cfg(not(feature = "dsan"))]
+    #[inline(always)]
+    fn dsan_fold(&self, _c: CellId, _port: usize, _target: u32, _vc: Option<u8>) {}
+
+    /// A fold hit consumed pop evidence from a foreign VC (only the
+    /// re-injected legacy eligibility rule can produce this).
+    #[cfg(feature = "dsan")]
+    fn dsan_foreign_vc_fold(&self) {
+        if self.cfg.dsan {
+            self.dsan.flag_foreign_vc_fold();
+        }
+    }
+
+    #[cfg(not(feature = "dsan"))]
+    #[inline(always)]
+    fn dsan_foreign_vc_fold(&self) {}
 
     /// Mark a cell for processing next cycle (dedup via epoch stamps).
     #[inline]
@@ -1292,6 +1465,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         if !self.cells.at(i).has_flits() {
             return;
         }
+        self.dsan_touch(c);
         let num_vcs = self.cfg.num_vcs;
         let mut popped_ports: u8 = 0; // one pop per input port per cycle
         // Deliveries: head flits addressed to this cell drain into the
@@ -1369,6 +1543,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             // pre-credit on the same-shard path alone would make outcomes
             // depend on band placement — see the module docs.
             let bit = 1u32 << (in_port * 8 + out_vc as usize);
+            self.dsan_credit_read(n);
             if self.space[n as usize].load(Ordering::Relaxed) & bit != 0 {
                 let mut f = self.cells.at_mut(i).inputs[p].pop_at(vc, now).unwrap();
                 f.vc = out_vc;
@@ -1389,6 +1564,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                 served_dirs |= 1 << d;
                 if self.owns(n) {
                     let ni = self.idx(n);
+                    self.dsan_touch(n);
                     if self.try_fold(n, ni, in_port, &f, false) {
                         // Absorbed into a queued flit: no slot consumed,
                         // occupancy unchanged, so no space refresh needed.
@@ -1436,6 +1612,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     fn compute_cell(&mut self, c: CellId) {
         let now = self.now;
         let i = self.idx(c);
+        self.dsan_touch(c);
         if self.cells.at(i).busy_until > now {
             // Re-activated while busy (usually a flit arrival); the
             // compute side stays parked until the timer expires.
@@ -1711,11 +1888,16 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     /// Returns true when the flit was folded away — no slot or credit
     /// consumed.
     fn try_fold(&mut self, c: CellId, i: usize, port: usize, flit: &Flit, local: bool) -> bool {
-        if !self.cfg.combine || flit.action.kind != ActionKind::App {
+        // Kind eligibility comes from the explicit per-variant table
+        // (`ActionKind::combinable`), which the `combine-table` lint rule
+        // keeps exhaustive — today only `App` folds.
+        if !self.cfg.combine || !flit.action.kind.combinable() {
             return false;
         }
         let now = self.now;
         let mut hit: Option<(u8, u8, ActionMsg)> = None;
+        #[cfg(feature = "dsan")]
+        let mut foreign_vc = false;
         let unit = &self.cells.at(i).inputs[port];
         'scan: for vc in 0..unit.num_vcs() as u8 {
             // Per-VC pop evidence: a pop advances only its own VC's ring,
@@ -1724,25 +1906,52 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             let head_popped = unit.popped_at() == now && unit.popped_vc() == vc;
             for off in 0..unit.vc_len(vc) {
                 let q = unit.peek(vc, off).unwrap();
-                if q.action.kind != ActionKind::App
+                if !q.action.kind.combinable()
                     || q.dst != flit.dst
                     || q.action.target != flit.action.target
                 {
                     continue;
                 }
-                if !local && !(q.moved_at < now && (off >= 1 || head_popped)) {
+                let eligible = q.moved_at < now && (off >= 1 || head_popped);
+                // TEST HOOK (dsan): the pre-PR-6 rule took *port-level*
+                // pop evidence — any pop this cycle, no VC qualifier —
+                // which made the eligible set depend on same-shard-vs-
+                // barrier push ordering. Re-injectable so tests/dsan.rs
+                // proves the auditor catches exactly that bug class.
+                #[cfg(feature = "dsan")]
+                let eligible = if self.cfg.dsan_legacy_fold {
+                    q.moved_at < now && (off >= 1 || unit.popped_at() == now)
+                } else {
+                    eligible
+                };
+                if !local && !eligible {
                     continue;
                 }
                 // Pinned fold order: queued (earlier) flit is the left
                 // operand; first accepted match in (vc, offset) scan
                 // order wins.
                 if let Some(m) = self.app.combine(&q.action, &flit.action) {
+                    #[cfg(feature = "dsan")]
+                    {
+                        foreign_vc = !local
+                            && off == 0
+                            && unit.popped_at() == now
+                            && unit.popped_vc() != vc;
+                    }
                     hit = Some((vc, off, m));
                     break 'scan;
                 }
             }
         }
-        let Some((vc, off, m)) = hit else { return false };
+        let Some((vc, off, m)) = hit else {
+            self.dsan_fold(c, port, flit.action.target, None);
+            return false;
+        };
+        #[cfg(feature = "dsan")]
+        if foreign_vc {
+            self.dsan_foreign_vc_fold();
+        }
+        self.dsan_fold(c, port, flit.action.target, Some(vc));
         self.cells.at_mut(i).inputs[port].peek_mut(vc, off).unwrap().action = m;
         self.metrics.flits_combined += 1;
         self.metrics.combined_hops_saved += self.geo.distance(c, flit.dst) as u64;
@@ -1974,6 +2183,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         let epoch = self.now + 1;
         for s in items.drain(..) {
             let i = self.idx(s.dst);
+            self.dsan_touch(s.dst);
             if self.try_fold(s.dst, i, s.in_port as usize, &s.flit, false) {
                 let cell = self.cells.at_mut(i);
                 Self::mark(&mut self.st.next, cell, s.dst, epoch);
@@ -2016,6 +2226,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         let cell = self.cells.at(i);
         self.space[c as usize].store(cell.space_snapshot(), Ordering::Relaxed);
         self.congested[c as usize].store(cell.compute_congested(), Ordering::Relaxed);
+        self.dsan_space_publish(c);
     }
 
     /// Heat-map sample over this shard's own cells, in the band's local
@@ -2206,6 +2417,48 @@ mod tests {
         let mut chip = Chip::new(cfg, Flood).unwrap();
         let m = chip.run().unwrap();
         assert!(m.cycles <= 16);
+    }
+
+    #[test]
+    fn touch_first_alloc_covers_every_cell() {
+        // Exercises the unsafe slab path of `alloc_cells` (MaybeUninit +
+        // set_len + scoped per-band writers + from_raw_parts) at the
+        // smallest size that takes it: 1024 cells, 2 bands. CI runs this
+        // under Miri (`cargo miri test touch_first`), so the router pool
+        // is kept minimal (2 VCs x 1 slot) to bound interpreter time.
+        let mut cfg = ChipConfig::torus(32);
+        cfg.shards = 2;
+        cfg.num_vcs = 2;
+        cfg.vc_buffer = 1;
+        let cells: Vec<Cell<u32>> = alloc_cells(&cfg);
+        assert_eq!(cells.len(), 1024);
+        let fresh = Cell::<u32>::new(cfg.num_vcs, cfg.vc_buffer);
+        for cell in &cells {
+            assert_eq!(cell.inputs.len(), NUM_PORTS);
+            assert!(cell.inputs.iter().all(|u| u.is_empty() && u.num_vcs() == 2));
+            assert!(cell.objects.is_empty() && cell.action_q.is_empty());
+            assert_eq!(cell.busy_until, 0);
+            assert_eq!(cell.space_snapshot(), fresh.space_snapshot());
+        }
+        drop(cells); // Vec::from_raw_parts re-owned the slab; Miri checks the frees
+    }
+
+    #[test]
+    fn touch_first_and_serial_alloc_agree() {
+        // The parallel construction must be value-identical to the serial
+        // one (placement-only optimization).
+        let mut cfg = ChipConfig::torus(32);
+        cfg.num_vcs = 2;
+        cfg.vc_buffer = 1;
+        cfg.shards = 1; // serial path
+        let serial: Vec<Cell<u32>> = alloc_cells(&cfg);
+        cfg.shards = 4; // touch-first path
+        let parallel: Vec<Cell<u32>> = alloc_cells(&cfg);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.space_snapshot(), p.space_snapshot());
+            assert_eq!(s.occupancy(), p.occupancy());
+        }
     }
 
     #[test]

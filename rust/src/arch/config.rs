@@ -127,6 +127,18 @@ pub struct ChipConfig {
     /// [`crate::arch::band`]). Results are bit-identical for every axis —
     /// this only trades cross-band NoC traffic for locality.
     pub shard_axis: ShardAxis,
+    /// Arm the `dsan` shadow-state determinism auditor (`--dsan`): stamp
+    /// every hot-path cell touch and fold into an order-independent audit
+    /// hash every combiner decision, so `tests/dsan.rs` can compare the
+    /// complete decision stream across shard/axis grid points. Only
+    /// effective in builds with `--features dsan`; without the feature the
+    /// probes are compiled out and this flag is inert (the CLI warns).
+    pub dsan: bool,
+    /// TEST HOOK (dsan): re-inject the pre-PR-6 fold eligibility rule —
+    /// pop evidence *not* qualified by VC — so `tests/dsan.rs` can prove
+    /// the auditor mechanically re-detects that bug class. Never set
+    /// outside tests; inert without `--features dsan`.
+    pub dsan_legacy_fold: bool,
 }
 
 impl ChipConfig {
@@ -155,6 +167,8 @@ impl ChipConfig {
             heatmap_every: 0,
             shards: 0,
             shard_axis: ShardAxis::Auto,
+            dsan: false,
+            dsan_legacy_fold: false,
         }
     }
 

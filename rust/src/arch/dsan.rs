@@ -1,0 +1,271 @@
+//! `dsan`: shadow-state determinism auditor for the cycle engine.
+//!
+//! Compiled in with `--features dsan` and armed at runtime by
+//! [`crate::arch::config::ChipConfig::dsan`] (`--dsan` on the CLI). When
+//! armed, every hot-path touch in `arch/chip.rs` stamps a shadow table,
+//! and the engine accumulates a commutative audit hash of every fold
+//! decision the router combiner takes. Two properties fall out:
+//!
+//! * **Sharing-discipline violations are caught live.** A cell touched
+//!   by a shard that does not own it ([`DsanReport::ownership_violations`]),
+//!   two shards writing the same cell in the same cycle
+//!   ([`DsanReport::ww_conflicts`]), or a credit word read in the same
+//!   cycle it was republished ([`DsanReport::raw_hazards`] — the
+//!   pre-barrier `has_space` race class) each bump a counter instead of
+//!   silently skewing `Metrics`.
+//! * **Fold decisions are comparable across grid points.** Every
+//!   `(cycle, cell, port, target, winning-vc)` combiner decision folds
+//!   into [`DsanReport::fold_hash`] via a commutative mix, so
+//!   `tests/dsan.rs` can assert the *entire decision stream* — not just
+//!   the folded-flit count — is identical across {1,2,4} shards ×
+//!   {rows,cols,auto}. This is the mechanical re-detection of the PR 6
+//!   VC-stamp bug: the pre-fix eligibility rule (pop evidence not
+//!   qualified by VC) is kept behind the
+//!   [`crate::arch::config::ChipConfig::dsan_legacy_fold`] test hook, and
+//!   any divergence it causes shows up as a `fold_hash` mismatch plus a
+//!   [`DsanReport::foreign_vc_folds`] bump.
+//!
+//! With the feature off, every probe in `arch/chip.rs` is an empty
+//! `#[inline(always)]` stub and the shadow state does not exist — the
+//! hot path carries zero overhead (acceptance criterion of ISSUE 8).
+//!
+//! The report type itself is always compiled so `Outcome` and the CLI can
+//! surface it (as `None`) without feature-gated call sites everywhere.
+
+/// Audit results of one engine run. Always compiled; populated only by
+/// `--features dsan` builds with [`crate::arch::config::ChipConfig::dsan`]
+/// set.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DsanReport {
+    /// Commutative hash over every fold decision tuple
+    /// `(cycle, cell, port, target, Option<winning vc>)` — including the
+    /// *negative* decisions (no eligible fold partner), so reordering
+    /// hazards that flip a fold from one cycle to another cannot cancel
+    /// out. Order-independent by construction (wrapping sum of mixed
+    /// tuples), so shard count and barrier interleaving must not change
+    /// it on a clean engine.
+    pub fold_hash: u64,
+    /// Total fold decisions audited (positive and negative).
+    pub fold_decisions: u64,
+    /// Folds that consumed pop evidence from a *different* VC than the
+    /// one that actually popped this cycle — only the re-injected
+    /// pre-PR-6 legacy eligibility rule can produce these.
+    pub foreign_vc_folds: u64,
+    /// Cell touches by a shard that does not own the cell's band.
+    pub ownership_violations: u64,
+    /// Two different shards writing the same cell in the same cycle.
+    pub ww_conflicts: u64,
+    /// Credit-word reads in the same cycle the word was republished
+    /// (must be impossible: `refresh` runs at end-of-cycle N, routing
+    /// reads at N+1).
+    pub raw_hazards: u64,
+}
+
+impl DsanReport {
+    /// No sharing-discipline violations recorded. (The fold hash is a
+    /// cross-run comparison value, not a violation count, so it does not
+    /// participate.)
+    pub fn is_clean(&self) -> bool {
+        self.foreign_vc_folds == 0
+            && self.ownership_violations == 0
+            && self.ww_conflicts == 0
+            && self.raw_hazards == 0
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "dsan: fold_hash={:#018x} decisions={} foreign_vc_folds={} \
+             ownership_violations={} ww_conflicts={} raw_hazards={} [{}]",
+            self.fold_hash,
+            self.fold_decisions,
+            self.foreign_vc_folds,
+            self.ownership_violations,
+            self.ww_conflicts,
+            self.raw_hazards,
+            if self.is_clean() { "clean" } else { "VIOLATIONS" }
+        )
+    }
+}
+
+#[cfg(feature = "dsan")]
+pub use gated::Dsan;
+
+#[cfg(feature = "dsan")]
+mod gated {
+    use super::DsanReport;
+    use crate::arch::addr::CellId;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// splitmix64 finalizer: a cheap, well-mixed injection of a tuple
+    /// word into the commutative accumulator.
+    #[inline]
+    fn mix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^ (x >> 31)
+    }
+
+    /// Shadow state shared by every shard of one chip. All counters are
+    /// relaxed atomics: the fold hash is a commutative (wrapping-sum)
+    /// accumulation, so cross-thread interleaving cannot change it, and
+    /// the violation counters only need eventual totals.
+    pub struct Dsan {
+        fold_hash: AtomicU64,
+        fold_decisions: AtomicU64,
+        foreign_vc_folds: AtomicU64,
+        ownership_violations: AtomicU64,
+        ww_conflicts: AtomicU64,
+        raw_hazards: AtomicU64,
+        /// Per-cell write stamp, packed `(cycle << 8) | (shard + 1)`.
+        /// Cycle counts stay far below 2^56 and `MAX_SHARDS` is 16, so
+        /// the packing is exact. 0 = never touched.
+        access: Vec<AtomicU64>,
+        /// Cycle at which each cell's credit word was last republished
+        /// (`u64::MAX` = never).
+        space_stamp: Vec<AtomicU64>,
+    }
+
+    impl Dsan {
+        pub fn new(cells: usize) -> Dsan {
+            Dsan {
+                fold_hash: AtomicU64::new(0),
+                fold_decisions: AtomicU64::new(0),
+                foreign_vc_folds: AtomicU64::new(0),
+                ownership_violations: AtomicU64::new(0),
+                ww_conflicts: AtomicU64::new(0),
+                raw_hazards: AtomicU64::new(0),
+                access: (0..cells).map(|_| AtomicU64::new(0)).collect(),
+                space_stamp: (0..cells).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            }
+        }
+
+        /// Stamp a write-class touch of `c` by `shard` at cycle `now`.
+        /// `owner` is the shard the band partition assigns the cell to.
+        pub fn touch(&self, c: CellId, shard: usize, owner: usize, now: u64) {
+            if shard != owner {
+                self.ownership_violations.fetch_add(1, Ordering::Relaxed);
+            }
+            let stamp = (now << 8) | (shard as u64 + 1);
+            let prev = self.access[c as usize].swap(stamp, Ordering::Relaxed);
+            if prev != 0 && prev >> 8 == now && (prev & 0xff) != (stamp & 0xff) {
+                self.ww_conflicts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        /// A credit word for `c` was read while routing at cycle `now`.
+        pub fn credit_read(&self, c: CellId, now: u64) {
+            if self.space_stamp[c as usize].load(Ordering::Relaxed) == now {
+                self.raw_hazards.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        /// The credit word for `c` was republished at cycle `now`.
+        pub fn stamp_space(&self, c: CellId, now: u64) {
+            self.space_stamp[c as usize].store(now, Ordering::Relaxed);
+        }
+
+        /// Fold into the audit stream one combiner decision at
+        /// `(now, cell, port)` for flit target `target`: `vc` is the
+        /// winning VC of a positive decision, `None` a negative one.
+        /// Queue *offsets* deliberately stay out of the tuple — the same
+        /// logical fold lands pre-pop (serial immediate push) or post-pop
+        /// (barrier merge) at different offsets, while the winning VC and
+        /// outcome are pinned by the eligibility rule.
+        pub fn record_fold(&self, now: u64, c: CellId, port: usize, target: u32, vc: Option<u8>) {
+            let word = mix(now)
+                ^ mix((c as u64) << 32 | (port as u64) << 16 | target as u64)
+                ^ mix(match vc {
+                    Some(v) => 0x1_0000 | v as u64,
+                    None => 0x2_0000,
+                });
+            self.fold_hash.fetch_add(mix(word), Ordering::Relaxed);
+            self.fold_decisions.fetch_add(1, Ordering::Relaxed);
+        }
+
+        /// A fold consumed pop evidence from a VC other than the one that
+        /// popped (legacy eligibility only).
+        pub fn flag_foreign_vc_fold(&self) {
+            self.foreign_vc_folds.fetch_add(1, Ordering::Relaxed);
+        }
+
+        pub fn report(&self) -> DsanReport {
+            DsanReport {
+                fold_hash: self.fold_hash.load(Ordering::Relaxed),
+                fold_decisions: self.fold_decisions.load(Ordering::Relaxed),
+                foreign_vc_folds: self.foreign_vc_folds.load(Ordering::Relaxed),
+                ownership_violations: self.ownership_violations.load(Ordering::Relaxed),
+                ww_conflicts: self.ww_conflicts.load(Ordering::Relaxed),
+                raw_hazards: self.raw_hazards.load(Ordering::Relaxed),
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn fold_hash_is_order_independent() {
+            let a = Dsan::new(4);
+            let b = Dsan::new(4);
+            let decisions: [(u64, CellId, usize, u32, Option<u8>); 3] =
+                [(5, 1, 0, 7, Some(0)), (5, 2, 3, 7, None), (6, 1, 0, 9, Some(1))];
+            for &(now, c, p, t, vc) in &decisions {
+                a.record_fold(now, c, p, t, vc);
+            }
+            for &(now, c, p, t, vc) in decisions.iter().rev() {
+                b.record_fold(now, c, p, t, vc);
+            }
+            assert_eq!(a.report(), b.report());
+            assert_ne!(a.report().fold_hash, 0);
+        }
+
+        #[test]
+        fn fold_hash_separates_outcome_and_vc() {
+            let pos0 = Dsan::new(1);
+            let pos1 = Dsan::new(1);
+            let neg = Dsan::new(1);
+            pos0.record_fold(5, 0, 2, 7, Some(0));
+            pos1.record_fold(5, 0, 2, 7, Some(1));
+            neg.record_fold(5, 0, 2, 7, None);
+            let (h0, h1, hn) =
+                (pos0.report().fold_hash, pos1.report().fold_hash, neg.report().fold_hash);
+            assert_ne!(h0, h1, "winning VC must be visible in the hash");
+            assert_ne!(h0, hn, "fold outcome must be visible in the hash");
+        }
+
+        #[test]
+        fn same_cycle_cross_shard_write_is_a_conflict() {
+            let d = Dsan::new(8);
+            d.touch(3, 0, 0, 5);
+            d.touch(3, 0, 0, 5); // same shard re-touch: fine
+            assert_eq!(d.report().ww_conflicts, 0);
+            d.touch(3, 1, 1, 5); // different shard, same cycle
+            assert_eq!(d.report().ww_conflicts, 1);
+            d.touch(3, 0, 0, 6); // next cycle: fine
+            assert_eq!(d.report().ww_conflicts, 1);
+        }
+
+        #[test]
+        fn foreign_owner_touch_is_a_violation() {
+            let d = Dsan::new(2);
+            d.touch(0, 1, 0, 3);
+            let r = d.report();
+            assert_eq!(r.ownership_violations, 1);
+            assert!(!r.is_clean());
+        }
+
+        #[test]
+        fn same_cycle_credit_read_after_publish_is_raw() {
+            let d = Dsan::new(2);
+            d.credit_read(1, 4); // never published: fine
+            d.stamp_space(1, 4);
+            d.credit_read(1, 5); // next cycle: fine
+            assert_eq!(d.report().raw_hazards, 0);
+            d.credit_read(1, 4); // same cycle as publish
+            assert_eq!(d.report().raw_hazards, 1);
+        }
+    }
+}

@@ -6,3 +6,4 @@ pub mod band;
 pub mod cell;
 pub mod chip;
 pub mod config;
+pub mod dsan;

@@ -124,6 +124,9 @@ pub struct Outcome {
     pub verified_mismatches: usize,
     /// Present iff the run streamed mutations (`Experiment::mutations`).
     pub stream: Option<StreamReport>,
+    /// Shadow-state determinism audit (`--features dsan` + `--dsan`);
+    /// `None` when the auditor was compiled out or not armed.
+    pub dsan: Option<crate::arch::dsan::DsanReport>,
 }
 
 /// Run the experiment; returns the minimum-cycles trial's outcome.
@@ -223,12 +226,14 @@ fn run_stream_once(
     }
 }
 
-/// Assemble the outcome of a streamed (mutation-free) run.
-fn stream_outcome<A: Application>(
+/// Assemble an [`Outcome`] from a solved chip (shared by every app arm
+/// of [`run_once`] and [`run_stream_once`]).
+fn solved_outcome<A: Application>(
     chip: &Chip<A>,
     built: &BuiltGraph,
     cfg: &ChipConfig,
     mism: usize,
+    stream: Option<StreamReport>,
 ) -> Outcome {
     let params = EnergyParams::default();
     Outcome {
@@ -239,8 +244,19 @@ fn stream_outcome<A: Application>(
         rhizomatic_vertices: built.rhizomatic_vertices,
         objects: built.objects,
         verified_mismatches: mism,
-        stream: None,
+        stream,
+        dsan: chip.dsan_report(),
     }
+}
+
+/// Assemble the outcome of a streamed (mutation-free) run.
+fn stream_outcome<A: Application>(
+    chip: &Chip<A>,
+    built: &BuiltGraph,
+    cfg: &ChipConfig,
+    mism: usize,
+) -> Outcome {
+    solved_outcome(chip, built, cfg, mism, None)
 }
 
 /// One streamed run's worth of mutation bookkeeping: the mutated
@@ -287,9 +303,7 @@ fn mutate_phase<A: Application>(
 }
 
 fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<Outcome> {
-    let params = EnergyParams::default();
-    let (metrics, energy, contention, heatmap, rhiz, objects, mismatches, stream) = match exp.app
-    {
+    match exp.app {
         AppKind::Bfs => {
             let (mut chip, mut built) = driver::run_bfs(cfg.clone(), g, exp.root)?;
             let mutated = mutate_phase(exp, &mut chip, &mut built, g, 1)?;
@@ -299,16 +313,7 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
             } else {
                 0
             };
-            (
-                chip.metrics.clone(),
-                account(&chip.metrics, cfg.topology, cfg.num_cells(), &params),
-                chip.contention(),
-                chip.heatmap.clone(),
-                built.rhizomatic_vertices,
-                built.objects,
-                mism,
-                mutated.map(|m| m.report),
-            )
+            Ok(solved_outcome(&chip, &built, &cfg, mism, mutated.map(|m| m.report)))
         }
         AppKind::Sssp => {
             let (mut chip, mut built) = driver::run_sssp(cfg.clone(), g, exp.root)?;
@@ -319,16 +324,7 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
             } else {
                 0
             };
-            (
-                chip.metrics.clone(),
-                account(&chip.metrics, cfg.topology, cfg.num_cells(), &params),
-                chip.contention(),
-                chip.heatmap.clone(),
-                built.rhizomatic_vertices,
-                built.objects,
-                mism,
-                mutated.map(|m| m.report),
-            )
+            Ok(solved_outcome(&chip, &built, &cfg, mism, mutated.map(|m| m.report)))
         }
         AppKind::Cc => {
             let (mut chip, mut built) = driver::run_cc(cfg.clone(), g)?;
@@ -340,16 +336,7 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
             } else {
                 0
             };
-            (
-                chip.metrics.clone(),
-                account(&chip.metrics, cfg.topology, cfg.num_cells(), &params),
-                chip.contention(),
-                chip.heatmap.clone(),
-                built.rhizomatic_vertices,
-                built.objects,
-                mism,
-                mutated.map(|m| m.report),
-            )
+            Ok(solved_outcome(&chip, &built, &cfg, mism, mutated.map(|m| m.report)))
         }
         AppKind::PageRank => {
             let (mut chip, mut built) = driver::run_pagerank(cfg.clone(), g, exp.pr_iters)?;
@@ -370,28 +357,9 @@ fn run_once(exp: &Experiment, cfg: ChipConfig, g: &HostGraph) -> anyhow::Result<
             } else {
                 0
             };
-            (
-                chip.metrics.clone(),
-                account(&chip.metrics, cfg.topology, cfg.num_cells(), &params),
-                chip.contention(),
-                chip.heatmap.clone(),
-                built.rhizomatic_vertices,
-                built.objects,
-                mism,
-                mutated.map(|m| m.report),
-            )
+            Ok(solved_outcome(&chip, &built, &cfg, mism, mutated.map(|m| m.report)))
         }
-    };
-    Ok(Outcome {
-        metrics,
-        energy,
-        contention,
-        heatmap,
-        rhizomatic_vertices: rhiz,
-        objects,
-        verified_mismatches: mismatches,
-        stream,
-    })
+    }
 }
 
 #[cfg(test)]

@@ -24,17 +24,21 @@ fn main() {
     }
 }
 
-/// Minimal `--flag value` / `--flag` parser.
+/// Minimal `--flag value` / `--flag` parser. The map is a `BTreeMap` so
+/// any future iteration over it (diagnostics, "did you mean" listings)
+/// is deterministic by construction — the amcca-lint `unordered-iter`
+/// rule bans result-affecting hash-order iteration in the engine crates,
+/// and the CLI follows the same discipline.
 struct Args {
     cmd: String,
-    flags: std::collections::HashMap<String, String>,
+    flags: std::collections::BTreeMap<String, String>,
 }
 
 impl Args {
     fn parse() -> Self {
         let mut it = std::env::args().skip(1);
         let cmd = it.next().unwrap_or_else(|| "help".into());
-        let mut flags = std::collections::HashMap::new();
+        let mut flags = std::collections::BTreeMap::new();
         let mut key: Option<String> = None;
         for a in it {
             if let Some(k) = a.strip_prefix("--") {
@@ -99,6 +103,10 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
             _ => anyhow::bail!("unknown --combine {v} (on|off)"),
         };
     }
+    // Arm the shadow-state determinism auditor (only effective in
+    // `--features dsan` builds; a release build reports the missing
+    // feature instead of silently ignoring the flag).
+    cfg.dsan = args.has("dsan");
     cfg.throttling = !args.has("no-throttle");
     cfg.seed = args.num("seed", 0x5EEDu64)?;
     cfg.local_edgelist_size = args.num("chunk", 16usize)?;
@@ -224,11 +232,23 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --shard-axis rows|cols|auto engine banding axis (auto picks from the\n\
                  \x20                             built graph's traffic split; results are\n\
                  \x20                             identical for every axis)\n\
+                 \x20 --dsan                      arm the shadow-state determinism auditor\n\
+                 \x20                             and print its report (needs a build with\n\
+                 \x20                             --features dsan)\n\
                  \x20 --root V  --iters K  --trials T  --seed S\n\
                  \x20 --xla                       (verify) also check the PJRT oracle\n"
             );
             Ok(())
         }
+    }
+}
+
+/// Surface the dsan audit (or the missing-feature hint) after a run.
+fn print_dsan(cfg: &ChipConfig, dsan: Option<&amcca::arch::dsan::DsanReport>) {
+    if let Some(r) = dsan {
+        println!("{}", r.summary());
+    } else if cfg.dsan {
+        println!("dsan: requested but compiled out; rebuild with `--features dsan`");
     }
 }
 
@@ -271,6 +291,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             "wall={wall:.2?} ({:.1} Mcycles/s)",
             out.metrics.cycles as f64 / wall.as_secs_f64() / 1e6
         );
+        print_dsan(&cfg, out.dsan.as_ref());
         return Ok(());
     }
     let (gname, g) = graph_from(args)?;
@@ -306,6 +327,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         "wall={wall:.2?} ({:.1} Mcycles/s)",
         out.metrics.cycles as f64 / wall.as_secs_f64() / 1e6
     );
+    print_dsan(&cfg, out.dsan.as_ref());
     if let Some(s) = &out.stream {
         // The Fig.-9 comparison metric for the mutation stream: how the
         // per-member in-degree-share distribution moved — and, with

@@ -51,6 +51,27 @@ pub enum ActionKind {
     RingSplice = 6,
 }
 
+impl ActionKind {
+    /// Wire-side fold eligibility table, audited by `amcca-lint`'s
+    /// `combine-table` rule: every variant must appear explicitly (no `_`
+    /// wildcard), so a new action kind *opts in* to router combining
+    /// instead of inheriting it. Only plain application actions fold —
+    /// mutation and rhizome-protocol traffic carries per-message identity
+    /// (addresses, ring splices) that `Application::combine` cannot merge.
+    #[inline]
+    pub fn combinable(self) -> bool {
+        match self {
+            ActionKind::App => true,
+            ActionKind::RelayDiffuse => false,
+            ActionKind::RhizomeShare => false,
+            ActionKind::InsertEdge => false,
+            ActionKind::MetaBump => false,
+            ActionKind::SproutMember => false,
+            ActionKind::RingSplice => false,
+        }
+    }
+}
+
 /// An action in flight (or queued): the unit of work of the diffusive model.
 ///
 /// `payload`/`aux` are app-interpreted 32-bit operands (BFS level, SSSP
@@ -236,6 +257,15 @@ mod tests {
         assert_eq!(f.dst, 7);
         assert_eq!(f.moved_at, 5);
         assert_eq!(f.next_port, DELIVER, "unrouted flit defaults to deliver");
+    }
+
+    #[test]
+    fn only_app_actions_fold() {
+        use ActionKind::*;
+        for k in [App, RelayDiffuse, RhizomeShare, InsertEdge, MetaBump, SproutMember, RingSplice]
+        {
+            assert_eq!(k.combinable(), k == App, "{k:?}");
+        }
     }
 
     #[test]

@@ -463,9 +463,13 @@ fn wave_end(
     if cap == 1 {
         return (start + 1).min(n);
     }
-    let mut used: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
-    let mut planned: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
-    let mut in_ahead: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    // Ordered scratch maps: membership/entry-only today, but the planner
+    // is exactly the kind of result-affecting state the amcca-lint
+    // `unordered-iter` rule protects — BTree keeps any future iteration
+    // (debug dumps, tie-breaking sweeps) deterministic by construction.
+    let mut used: std::collections::BTreeSet<(u32, u32)> = std::collections::BTreeSet::new();
+    let mut planned: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
+    let mut in_ahead: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
     let mut end = start;
     while end < n && (cap == 0 || end - start < cap) {
         let (u, v, _) = batch.edges[end];

@@ -1,0 +1,210 @@
+//! Shadow-state determinism auditor suite (`--features dsan`).
+//!
+//! Three contracts (ISSUE 8 tentpole, layer 2):
+//!
+//! 1. **The auditor catches the PR 6 VC-stamp bug.** The pre-fix fold
+//!    eligibility rule — pop evidence not qualified by VC — is kept
+//!    behind the `ChipConfig::dsan_legacy_fold` test hook. On a
+//!    hand-built buffer scenario that rule folds against a VC whose head
+//!    never popped; the clean rule refuses. dsan flags the divergence as
+//!    a `foreign_vc_folds` violation and a `fold_hash` mismatch.
+//! 2. **A clean engine audits identically everywhere.** The commutative
+//!    fold-decision hash and every violation counter must be bitwise
+//!    equal across {1, 2, 4} shards x {rows, cols, auto} on the WK hub
+//!    dataset with combining on — the decision *stream*, not just the
+//!    fold count, is shard- and axis-invariant.
+//! 3. **Runtime rhizome growth audits clean.** A mutation stream that
+//!    provably sprouts members (`members_sprouted > 0`) keeps the audit
+//!    clean and invariant across shard/axis points.
+//!
+//! Run with `cargo test --features dsan --test dsan`. Without the
+//! feature this file compiles to nothing, so tier-1 runs are unaffected.
+
+#![cfg(feature = "dsan")]
+
+use amcca::apps::bfs::Bfs;
+use amcca::apps::driver;
+use amcca::arch::addr::Address;
+use amcca::arch::chip::Chip;
+use amcca::arch::config::{BuildMode, ChipConfig, ShardAxis};
+use amcca::arch::dsan::DsanReport;
+use amcca::graph::datasets::{Dataset, Scale};
+use amcca::noc::message::{ActionMsg, Flit};
+use amcca::rpvo::mutate::MutationBatch;
+
+/// The determinism-suite config: 16x16 torus, fixed seed, combining and
+/// the auditor armed.
+fn dsan_cfg(shards: usize, axis: ShardAxis) -> ChipConfig {
+    let mut cfg = ChipConfig::torus(16);
+    cfg.seed = 7;
+    cfg.shards = shards;
+    cfg.shard_axis = axis;
+    cfg.combine = true;
+    cfg.dsan = true;
+    cfg
+}
+
+/// Serial reference plus every banding axis at 2 and 4 shards.
+fn axis_grid() -> Vec<(usize, ShardAxis)> {
+    let mut grid = vec![(1, ShardAxis::Rows)];
+    for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+        for shards in [2usize, 4] {
+            grid.push((shards, axis));
+        }
+    }
+    grid
+}
+
+/// A same-`(dst, target)` application flit headed for `dst`, last moved
+/// at cycle `moved_at` (the combiner only reads `dst`, `action`, and
+/// `moved_at`; the cached route fields are irrelevant here).
+fn app_flit(dst: u32, payload: u32, moved_at: u64) -> Flit {
+    Flit::new(0, Address::new(dst, 0), (0, 0), ActionMsg::app(0, payload, 0), moved_at)
+}
+
+/// Contract 1: re-inject the pre-PR-6 eligibility rule and prove the
+/// auditor catches exactly that bug class.
+///
+/// Scenario (the minimal reproduction of the original bug): cell 5's
+/// north input holds one old flit on VC 0 and one on VC 1, both for the
+/// same `(dst, target)`. This cycle the router pops VC 0 — so VC 0's pop
+/// evidence exists at the *port* level, but VC 1's head is exactly where
+/// it was at the start of the cycle. A same-destination flit then
+/// arrives:
+///
+/// * clean rule: VC 1's head has no VC-qualified pop evidence and is at
+///   offset 0, so it is ineligible — no fold (a barrier-path push and a
+///   same-shard push must decide identically, and the barrier path could
+///   still see that head popped later in the cycle ordering).
+/// * legacy rule: any pop this cycle makes every head eligible — the
+///   flit folds into VC 1 on foreign evidence, which is precisely the
+///   decision that made fold outcomes depend on push ordering.
+#[test]
+fn auditor_catches_reinjected_legacy_vc_bug() {
+    let cfg = dsan_cfg(1, ShardAxis::Rows);
+    let mut chip = Chip::new(cfg, Bfs).unwrap();
+    let c: u32 = 5;
+    let port = 0; // north input
+    let unit = &mut chip.cells[c as usize].inputs[port];
+    assert!(unit.try_push(0, app_flit(c, 9, 3)));
+    assert!(unit.try_push(1, app_flit(c, 9, 3)));
+    chip.now = 5;
+    // The router pops VC 0 this cycle; VC 1's head never moved.
+    assert!(chip.cells[c as usize].inputs[port].pop_at(0, 5).is_some());
+
+    // Clean rule: no eligible partner, the arriving flit must not fold.
+    let folded = chip.dsan_probe_fold(c, port, &app_flit(c, 7, 5));
+    assert!(!folded, "clean rule must refuse the foreign-VC fold");
+    let clean = chip.dsan_report().expect("auditor is armed");
+    assert_eq!(clean.fold_decisions, 1, "the negative decision is audited too");
+    assert_eq!(clean.foreign_vc_folds, 0);
+    assert!(clean.is_clean());
+
+    // Legacy rule: the same probe folds on port-level pop evidence — and
+    // the auditor flags it.
+    chip.cfg.dsan_legacy_fold = true;
+    let folded = chip.dsan_probe_fold(c, port, &app_flit(c, 7, 5));
+    assert!(folded, "legacy rule folds against the unpopped VC 1 head");
+    let legacy = chip.dsan_report().expect("auditor is armed");
+    assert_eq!(legacy.fold_decisions, 2);
+    assert_eq!(legacy.foreign_vc_folds, 1, "dsan must catch the foreign-VC fold");
+    assert!(!legacy.is_clean(), "the legacy rule must audit dirty");
+    assert_ne!(
+        clean.fold_hash, legacy.fold_hash,
+        "the divergent decision must be visible in the audit hash"
+    );
+    // The fold rewrote the queued VC 1 head in place: min(9, 7) = 7.
+    let head = chip.cells[c as usize].inputs[port].peek(1, 0).unwrap();
+    assert_eq!(head.action.payload, 7, "legacy fold min-combined the payloads");
+}
+
+/// Contract 2: on a clean engine the *entire* fold-decision stream —
+/// positive and negative decisions, winning VCs included — is bitwise
+/// identical across every shard count and banding axis, and no sharing
+/// violation ever fires. WK's hub traffic with rhizomes makes combining
+/// actually fire at every grid point.
+#[test]
+fn fold_audit_invariant_across_shards_and_axes_wk() {
+    let g = Dataset::WK.build(Scale::Tiny);
+    let mut reference: Option<DsanReport> = None;
+    for (shards, axis) in axis_grid() {
+        let mut cfg = dsan_cfg(shards, axis);
+        cfg.rpvo_max = 8;
+        let (chip, built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        assert!(built.rhizomatic_vertices >= 1, "WK hub must be rhizomatic");
+        assert!(chip.metrics.flits_combined > 0, "combining must fire on WK");
+        let report = chip.dsan_report().expect("auditor is armed");
+        assert!(report.is_clean(), "{axis:?} x {shards}: {}", report.summary());
+        assert!(report.fold_decisions > 0, "decision stream must be non-empty");
+        assert!(report.fold_decisions >= chip.metrics.flits_combined);
+        match &reference {
+            None => reference = Some(report),
+            Some(want) => {
+                assert_eq!(want, &report, "fold audit diverged at {axis:?} x {shards}");
+            }
+        }
+    }
+}
+
+/// A mutation stream skewed into one initially-quiet vertex: enough
+/// in-edges to cross the next Eq.-1 chunk boundaries so rhizome growth
+/// provably sprouts members mid-stream (mirrors the determinism suite's
+/// `growth_batch` on the default chip parameters).
+fn growth_batch(g: &amcca::graph::model::HostGraph, rpvo_max: u32) -> MutationBatch {
+    let in_deg = g.in_degrees();
+    let max_in = in_deg.iter().copied().max().unwrap_or(0);
+    let cutoff = amcca::rpvo::rhizome::floored_cutoff(max_in, rpvo_max, 4 * 16);
+    let hub = (0..g.n).min_by_key(|&v| in_deg[v as usize]).unwrap();
+    let width = amcca::rpvo::rhizome::members_for(in_deg[hub as usize], cutoff, rpvo_max);
+    let need = width * cutoff - in_deg[hub as usize] + cutoff + 4;
+    let mut edges: Vec<(u32, u32, u32)> = (0..need)
+        .map(|k| {
+            let u = (hub + 1 + k) % g.n;
+            let u = if u == hub { (hub + 1) % g.n } else { u };
+            (u, hub, 1)
+        })
+        .collect();
+    edges.extend(MutationBatch::random(g.n, 16, 1, 0x6047).edges);
+    MutationBatch { edges }
+}
+
+/// Contract 3: runtime rhizome growth — sprouts, ring splices, and the
+/// interleaved repair ripples, on the on-chip ingest path — audits clean
+/// and keeps the fold-decision stream shard/axis-invariant.
+#[test]
+fn growth_stream_audits_clean_and_invariant() {
+    let g = Dataset::R18.build(Scale::Tiny);
+    let batch = growth_batch(&g, 8);
+    let mut reference: Option<DsanReport> = None;
+    let grid =
+        [(1, ShardAxis::Rows), (2, ShardAxis::Rows), (2, ShardAxis::Cols), (4, ShardAxis::Auto)];
+    for (shards, axis) in grid {
+        let mut cfg = dsan_cfg(shards, axis);
+        cfg.rpvo_max = 8;
+        cfg.rhizome_growth = true;
+        cfg.build_mode = BuildMode::OnChip;
+        let (mut chip, mut built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        assert!(chip.metrics.members_sprouted > 0, "growth must actually fire");
+        let report = chip.dsan_report().expect("auditor is armed");
+        assert!(report.is_clean(), "{axis:?} x {shards}: {}", report.summary());
+        match &reference {
+            None => reference = Some(report),
+            Some(want) => {
+                assert_eq!(want, &report, "growth audit diverged at {axis:?} x {shards}");
+            }
+        }
+    }
+}
+
+/// The auditor is opt-in even in `dsan` builds: without `ChipConfig::dsan`
+/// there is no report and no stamping — `--features dsan` alone must not
+/// change observable behavior.
+#[test]
+fn auditor_disarmed_without_config_flag() {
+    let g = Dataset::R18.build(Scale::Tiny);
+    let mut cfg = dsan_cfg(2, ShardAxis::Rows);
+    cfg.dsan = false;
+    let (chip, _built) = driver::run_bfs(cfg, &g, 0).unwrap();
+    assert!(chip.dsan_report().is_none(), "disarmed auditor must not report");
+}

@@ -1,0 +1,57 @@
+//! Tier-1 shim for the determinism lint pass: the same checks the
+//! blocking `amcca-lint` CI job runs, wired into plain `cargo test` so a
+//! hazard never lands between CI configurations.
+
+use std::path::Path;
+
+fn src_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
+}
+
+#[test]
+fn engine_tree_is_lint_clean() {
+    let findings = amcca_lint::lint_tree(src_root()).expect("walk src tree");
+    assert!(
+        findings.is_empty(),
+        "determinism lint found {} hazard(s):\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn every_fixture_trips_its_rule() {
+    let fixtures = [
+        ("unordered_iter.rs", amcca_lint::RULE_UNORDERED_ITER),
+        ("float_ordering.rs", amcca_lint::RULE_FLOAT_ORDERING),
+        ("wall_clock.rs", amcca_lint::RULE_WALL_CLOCK),
+        ("combine_table.rs", amcca_lint::RULE_COMBINE_TABLE),
+    ];
+    for (name, rule) in fixtures {
+        let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/lint/fixtures")).join(name);
+        let findings = amcca_lint::lint_path(&p).expect("read fixture");
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "fixture {name} must trip `{rule}`; got {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn combine_table_rule_sees_the_real_enum() {
+    // The rule is only worth its CI slot if it actually parses the real
+    // `ActionKind` in noc/message.rs: deleting one arm from
+    // `combinable()` must produce a finding.
+    let msg = src_root().join("noc/message.rs");
+    let source = std::fs::read_to_string(&msg).expect("read noc/message.rs");
+    assert!(amcca_lint::lint_source("noc/message.rs", &source).is_empty());
+    let broken = source.replacen("ActionKind::MetaBump => false,", "", 1);
+    assert_ne!(broken, source, "expected the MetaBump arm to exist");
+    let findings = amcca_lint::lint_source("noc/message.rs", &broken);
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == amcca_lint::RULE_COMBINE_TABLE && f.msg.contains("MetaBump")),
+        "dropping an arm must trip combine-table; got {findings:?}"
+    );
+}
