@@ -1,0 +1,25 @@
+// Fixture: a router combiner that reaches `combine()` without comparing
+// query lanes first — a cross-query fold hazard. Must trip `combine-qid`.
+
+pub struct Queued {
+    pub payload: u32,
+    pub qid: u16,
+}
+
+pub struct App;
+
+impl App {
+    pub fn combine(&self, a: u32, b: u32) -> Option<u32> {
+        Some(a.min(b))
+    }
+}
+
+pub fn try_fold(app: &App, queue: &mut [Queued], payload: u32) -> bool {
+    for q in queue.iter_mut() {
+        if let Some(m) = app.combine(q.payload, payload) {
+            q.payload = m;
+            return true;
+        }
+    }
+    false
+}

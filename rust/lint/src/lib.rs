@@ -26,6 +26,13 @@
 //!   `Application::combine` gate in `noc/message.rs`), with no `_ =>`
 //!   wildcard: a new action kind must *opt in* to wire-side folding, not
 //!   inherit it silently.
+//! * **`combine-qid`** — the router-side combiner (`fn try_fold` in
+//!   `arch/chip.rs`) must compare `qid` lanes before any
+//!   `Application::combine` call: with concurrent query serving, folding
+//!   a flit into a queued flit from a *different* query merges two
+//!   independent queries' packets into one result, silently corrupting
+//!   both lanes. The guard must sit between the function header and the
+//!   first `.combine(` call site.
 //!
 //! Any rule is silenced per line with a justification comment on the same
 //! or the preceding line:
@@ -54,6 +61,8 @@ pub const RULE_FLOAT_ORDERING: &str = "float-ordering";
 pub const RULE_WALL_CLOCK: &str = "wall-clock";
 /// `ActionKind` variant missing from the `combinable()` fold table.
 pub const RULE_COMBINE_TABLE: &str = "combine-table";
+/// `try_fold` reaches `Application::combine` without a qid lane guard.
+pub const RULE_COMBINE_QID: &str = "combine-qid";
 
 /// Directories under `src/` that the default pass walks: the engine
 /// modules whose behaviour feeds `Metrics` (the five named in the issue)
@@ -86,6 +95,7 @@ pub fn lint_source(path: &str, source: &str) -> Vec<Finding> {
     check_float_ordering(path, &raw, &code, &mut out);
     check_wall_clock(path, &raw, &code, &mut out);
     check_combine_table(path, &raw, &code, &mut out);
+    check_combine_qid(path, &raw, &code, &mut out);
     out.sort_by_key(|f| f.line);
     out
 }
@@ -438,6 +448,37 @@ fn check_combine_table(path: &str, raw: &[&str], code: &[String], out: &mut Vec<
     }
 }
 
+/// In any file defining the router-side combiner (`fn try_fold`), a qid
+/// lane comparison (`.qid !=` / `.qid ==`) must appear between the
+/// function header and the first `.combine(` call: the queued flit and
+/// the arriving flit may belong to different concurrent queries, and a
+/// cross-lane fold merges two independent queries' packets into one
+/// (see the serving section of the `arch::chip` module docs; the `dsan`
+/// shadow auditor enforces the same invariant dynamically).
+fn check_combine_qid(path: &str, raw: &[&str], code: &[String], out: &mut Vec<Finding>) {
+    let Some(fn_at) = code.iter().position(|l| l.contains("fn try_fold")) else {
+        return;
+    };
+    let body = block_of(code, fn_at);
+    let Some(combine_at) = body.iter().position(|(_, l)| l.contains(".combine(")) else {
+        return;
+    };
+    let guarded = body[..combine_at]
+        .iter()
+        .any(|(_, l)| l.contains(".qid !=") || l.contains(".qid =="));
+    let (n, _) = body[combine_at];
+    if !guarded && !allowed(raw, n, RULE_COMBINE_QID) {
+        out.push(Finding {
+            path: path.to_string(),
+            line: n,
+            rule: RULE_COMBINE_QID,
+            msg: "`try_fold` reaches `combine()` with no qid lane guard in reach; compare \
+                  `action.qid` before folding so concurrent queries never merge packets"
+                .to_string(),
+        });
+    }
+}
+
 /// Variant names of the enum whose `{` opens at/after `start`.
 fn enum_variants(code: &[String], start: usize) -> Vec<String> {
     let mut variants = Vec::new();
@@ -495,6 +536,7 @@ mod tests {
             (include_str!("../fixtures/float_ordering.rs"), RULE_FLOAT_ORDERING),
             (include_str!("../fixtures/wall_clock.rs"), RULE_WALL_CLOCK),
             (include_str!("../fixtures/combine_table.rs"), RULE_COMBINE_TABLE),
+            (include_str!("../fixtures/combine_qid.rs"), RULE_COMBINE_QID),
         ] {
             let findings = lint_source("fixture.rs", fixture);
             assert!(
@@ -564,6 +606,18 @@ mod tests {
                    ActionKind::App => true,\n            _ => false,\n        }\n    }\n}\n";
         let rules = rules_of(&lint_source("x.rs", src));
         assert!(rules.iter().filter(|r| **r == RULE_COMBINE_TABLE).count() >= 3, "{rules:?}");
+    }
+
+    #[test]
+    fn qid_guard_before_combine_is_clean_missing_guard_is_not() {
+        let ok = "fn try_fold(app: &App, q: &mut Flit, f: &Flit) -> bool {\n    \
+                  if q.action.qid != f.action.qid {\n        return false;\n    }\n    \
+                  app.combine(&q.action, &f.action).is_some()\n}\n";
+        assert!(lint_source("x.rs", ok).is_empty(), "guarded combiner must pass");
+        let bad =
+            ok.replace("if q.action.qid != f.action.qid {\n        return false;\n    }\n    ", "");
+        assert_ne!(bad, ok);
+        assert_eq!(rules_of(&lint_source("x.rs", &bad)), vec![RULE_COMBINE_QID]);
     }
 
     #[test]

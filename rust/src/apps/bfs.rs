@@ -72,17 +72,17 @@ impl Application for Bfs {
         self.relax(st, msg.payload, meta, false)
     }
 
-    fn apply_relay(&self, st: &mut BfsState, payload: u32, _aux: u32) {
+    fn apply_relay(&self, st: &mut BfsState, payload: u32, _aux: u32, _qid: u16) {
         st.level = st.level.min(payload);
     }
 
     /// Listing 9 line 9: `(predicate (eq? (vertex-level v) lvl) …)`.
-    fn diffuse_live(&self, st: &BfsState, payload: u32, _aux: u32) -> bool {
+    fn diffuse_live(&self, st: &BfsState, payload: u32, _aux: u32, _qid: u16) -> bool {
         st.level == payload
     }
 
     /// `inform-neighbors` sends `lvl + 1` (Listing 5).
-    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
+    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32, _qid: u16) -> (u32, u32) {
         (payload + 1, aux)
     }
 
@@ -138,7 +138,7 @@ mod tests {
         assert_eq!(w.diffuse.len(), 1);
         assert_eq!(w.diffuse[0].payload, 3);
         assert!(w.diffuse[0].rhizome.is_none(), "no rhizome traffic when size 1");
-        assert_eq!(app.edge_payload(3, 0, 9).0, 4, "neighbors get lvl+1, weight ignored");
+        assert_eq!(app.edge_payload(3, 0, 9, 0).0, 4, "neighbors get lvl+1, weight ignored");
     }
 
     #[test]
@@ -157,17 +157,17 @@ mod tests {
     fn diffuse_live_prunes_stale_levels() {
         let app = Bfs;
         let st = BfsState { level: 2 };
-        assert!(app.diffuse_live(&st, 2, 0));
-        assert!(!app.diffuse_live(&st, 5, 0), "a better level arrived; prune");
+        assert!(app.diffuse_live(&st, 2, 0, 0));
+        assert!(!app.diffuse_live(&st, 5, 0, 0), "a better level arrived; prune");
     }
 
     #[test]
     fn relay_keeps_min() {
         let app = Bfs;
         let mut st = BfsState { level: 3 };
-        app.apply_relay(&mut st, 7, 0);
+        app.apply_relay(&mut st, 7, 0, 0);
         assert_eq!(st.level, 3);
-        app.apply_relay(&mut st, 1, 0);
+        app.apply_relay(&mut st, 1, 0, 0);
         assert_eq!(st.level, 1);
     }
 }

@@ -66,15 +66,15 @@ impl Application for Cc {
         self.relax(st, msg.payload, meta, false)
     }
 
-    fn apply_relay(&self, st: &mut CcState, payload: u32, _aux: u32) {
+    fn apply_relay(&self, st: &mut CcState, payload: u32, _aux: u32, _qid: u16) {
         st.label = st.label.min(payload);
     }
 
-    fn diffuse_live(&self, st: &CcState, payload: u32, _aux: u32) -> bool {
+    fn diffuse_live(&self, st: &CcState, payload: u32, _aux: u32, _qid: u16) -> bool {
         st.label == payload
     }
 
-    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
+    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32, _qid: u16) -> (u32, u32) {
         (payload, 0.min(aux))
     }
 

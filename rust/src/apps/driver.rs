@@ -11,6 +11,7 @@
 
 use crate::apps::bfs::{Bfs, UNREACHED};
 use crate::apps::pagerank::{PageRank, KICKOFF};
+use crate::apps::serve::{QueryKind, QuerySpec, Serve};
 use crate::apps::sssp::Sssp;
 use crate::arch::chip::Chip;
 use crate::arch::config::ChipConfig;
@@ -272,6 +273,71 @@ pub fn recompute_pagerank(
     }
     chip.run()?;
     Ok(())
+}
+
+// --------------------------------------------------------------- serve --
+//
+// Concurrent multi-query serving (`apps::serve`): one resident graph, K
+// query lanes admitted over time. The drivers here only build and
+// extract — admission scheduling, mutation barriers, and latency
+// accounting live in `coordinator::serve`.
+
+/// Build a serve chip with its full query set (slabs are sized at
+/// construction) but admit nothing: lanes only carry traffic once
+/// [`admit_query`] germinates them, which is what makes the solo-run
+/// isolation oracle a bitwise comparison.
+pub fn build_serve(
+    cfg: ChipConfig,
+    g: &HostGraph,
+    queries: Vec<QuerySpec>,
+) -> anyhow::Result<(Chip<Serve>, BuiltGraph)> {
+    let mut chip = Chip::new(cfg, Serve::new(queries))?;
+    let built = build(&mut chip, g)?;
+    Ok((chip, built))
+}
+
+/// Admit query lane `qid`: germinate its kickoff (BFS/SSSP relax-0, PPR
+/// seed mass) at the root's member-0, tagged with the lane id so the
+/// engine tracks its carriers separately.
+pub fn admit_query(chip: &mut Chip<Serve>, built: &BuiltGraph, qid: u16) {
+    let spec = chip.app.queries[qid as usize];
+    let payload = chip.app.kickoff_payload(qid);
+    chip.germinate_query(built.addr_of(spec.root), payload, 0, qid);
+}
+
+/// Extract query `qid`'s per-vertex result: BFS levels / SSSP distances
+/// are the min over rhizome members (consistency invariant, like
+/// [`bfs_levels`]); PPR retained mass is the *sum* over members — each
+/// member absorbs the packets it received, and only the total is
+/// placement-independent.
+pub fn serve_result(chip: &Chip<Serve>, built: &BuiltGraph, qid: u16) -> Vec<u32> {
+    let kind = chip.app.queries[qid as usize].kind;
+    let q = qid as usize;
+    let mut out = vec![0u32; built.n as usize];
+    for (vid, members) in built.roots.iter().enumerate() {
+        let vals = members.iter().map(|&a| chip.object(a).state.slab[q]);
+        out[vid] = match kind {
+            QueryKind::Bfs | QueryKind::Sssp => vals.min().unwrap(),
+            QueryKind::Ppr => vals.sum(),
+        };
+    }
+    out
+}
+
+/// The isolation oracle: run query `qid` *alone* on `g` — same config,
+/// same full query set (so slab layout and placement are identical), but
+/// only this lane germinated — and return its result. `tests/serve.rs`
+/// pins `serve_result` of a concurrent run bitwise-equal to this.
+pub fn run_solo_query(
+    cfg: ChipConfig,
+    g: &HostGraph,
+    queries: Vec<QuerySpec>,
+    qid: u16,
+) -> anyhow::Result<Vec<u32>> {
+    let (mut chip, built) = build_serve(cfg, g, queries)?;
+    admit_query(&mut chip, &built, qid);
+    chip.run()?;
+    Ok(serve_result(&chip, &built, qid))
 }
 
 // -------------------------------------------------------------- verify --

@@ -1,8 +1,10 @@
 //! Diffusive vertex-centric applications (§5, §6.1): asynchronous BFS,
-//! SSSP, and PageRank written as actions, plus the shared host drivers.
+//! SSSP, and PageRank written as actions, the multi-query serve app
+//! (concurrent BFS/SSSP/PPR lanes), plus the shared host drivers.
 
 pub mod bfs;
 pub mod cc;
 pub mod driver;
 pub mod pagerank;
+pub mod serve;
 pub mod sssp;

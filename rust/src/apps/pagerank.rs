@@ -221,15 +221,15 @@ impl Application for PageRank {
     }
 
     /// Ghosts just pass score shares through; nothing to snapshot.
-    fn apply_relay(&self, _st: &mut PrState, _payload: u32, _aux: u32) {}
+    fn apply_relay(&self, _st: &mut PrState, _payload: u32, _aux: u32, _qid: u16) {}
 
     /// Listing 10: the diffuse predicate is `#t` — score shares are never
     /// stale (each iteration's share must be delivered exactly once).
-    fn diffuse_live(&self, _st: &PrState, _payload: u32, _aux: u32) -> bool {
+    fn diffuse_live(&self, _st: &PrState, _payload: u32, _aux: u32, _qid: u16) -> bool {
         true
     }
 
-    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32) -> (u32, u32) {
+    fn edge_payload(&self, payload: u32, aux: u32, _weight: u32, _qid: u16) -> (u32, u32) {
         (payload, aux)
     }
 
@@ -378,6 +378,7 @@ mod tests {
                 payload: shares[0].rhizome.unwrap().0,
                 aux: 0,
                 ext: 0,
+                qid: 0,
             },
             &m0,
         );
@@ -389,6 +390,7 @@ mod tests {
                 payload: bits,
                 aux: 0,
                 ext: 0,
+                qid: 0,
             },
             &m1,
         );

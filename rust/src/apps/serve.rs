@@ -1,0 +1,372 @@
+//! Concurrent multi-query serving: K independent BFS / SSSP /
+//! personalized-PageRank queries interleaved on one resident graph.
+//!
+//! The engine threads a *query lane* (`ActionMsg::qid`) through every
+//! action, diffusion, and staged send (see the serving section of the
+//! `arch::chip` module docs); this app gives each lane its own per-vertex
+//! state *slab* — one `u32` per admitted query — so K queries relax
+//! independently in one chip run. Per lane the semantics are exactly the
+//! single-query apps':
+//!
+//! * **BFS / SSSP** — the monotonic (min, +0/+w) relaxations of
+//!   [`crate::apps::bfs`] / [`crate::apps::sssp`], against `slab[qid]`
+//!   instead of a scalar. Wire-side combining folds same-lane flits to
+//!   their min (idempotent, so results are bitwise-equal with combining
+//!   on or off), and the engine's lane guard keeps different queries'
+//!   flits apart.
+//! * **PPR** — *push-style* personalized PageRank from one seed, in
+//!   integer mass units so the fixpoint is exact (bit-comparable across
+//!   every shard/axis/combine grid point, no f32 ordering tolerance).
+//!   The seed member is germinated with [`SCALE`] mass; a vertex
+//!   receiving mass `m` retains `max(1, m * 154 / 1024)` (≈ the 0.15
+//!   teleport share of damping 0.85) plus the division spill, and
+//!   diffuses `(m - retained) / out_degree` along each out-edge — every
+//!   propagated packet carries strictly less mass than its parent, so
+//!   the cascade terminates in O(log m) hops, and total mass is
+//!   conserved: the slab sum over all vertices is exactly [`SCALE`].
+//!   Rhizome members split the fan-out as usual: the receiving member
+//!   retains and re-shares, siblings diffuse only their own edge chunks.
+//!   PPR packets refuse to combine — integer mass splitting is not
+//!   linear under the floor division, so folding two packets before the
+//!   split would change the fixpoint.
+//!
+//! Queries never repair incrementally ([`Application::can_repair`] is
+//! `false`): under the serve driver's admission-wave snapshot contract a
+//! query completes against the structure it was admitted on, and later
+//! mutations must not ripple into settled slabs.
+
+use crate::diffusive::action::{DiffuseSpec, Work};
+use crate::diffusive::handler::{Application, VertexMeta};
+use crate::noc::message::ActionMsg;
+
+pub const UNREACHED: u32 = u32::MAX;
+
+/// Seed mass of one PPR query (slab sums over all vertices conserve
+/// exactly this). 2^20 keeps `u32` arithmetic far from overflow while
+/// leaving ~85 strictly-decreasing halvings of headroom.
+pub const SCALE: u32 = 1 << 20;
+
+/// Retention numerator/shift: `retained = m * 154 >> 10` ≈ 0.1504 · m,
+/// the teleport share of damping 0.85.
+const RETAIN_NUM: u64 = 154;
+const RETAIN_SHIFT: u32 = 10;
+
+/// Work-cycle costs mirror the single-query apps (§6.1).
+const BFS_CYCLES: u32 = 2;
+const SSSP_CYCLES: u32 = 3;
+const PPR_CYCLES: u32 = 5;
+
+/// What one admitted query computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryKind {
+    Bfs,
+    Sssp,
+    Ppr,
+}
+
+/// One query of a serve run: a kind and its root (BFS/SSSP source, PPR
+/// seed). The query's lane id is its index in [`Serve::queries`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuerySpec {
+    pub kind: QueryKind,
+    pub root: u32,
+}
+
+/// Per-vertex state: one `u32` slab entry per query lane — BFS level /
+/// SSSP distance (init [`UNREACHED`]) or retained PPR mass (init 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeState {
+    pub slab: Vec<u32>,
+}
+
+/// The multi-query application: the full query set is fixed at chip
+/// construction (slabs are sized once), but lanes only carry traffic
+/// after the driver germinates them — an unadmitted lane stays at its
+/// init value everywhere, which is what makes the solo-run isolation
+/// oracle a bitwise comparison.
+pub struct Serve {
+    pub queries: Vec<QuerySpec>,
+}
+
+impl Serve {
+    pub fn new(queries: Vec<QuerySpec>) -> Self {
+        Serve { queries }
+    }
+
+    #[inline]
+    fn kind(&self, qid: u16) -> QueryKind {
+        self.queries[qid as usize].kind
+    }
+
+    /// Germinate operands for query `qid`'s kickoff at its root member.
+    pub fn kickoff_payload(&self, qid: u16) -> u32 {
+        match self.kind(qid) {
+            QueryKind::Bfs | QueryKind::Sssp => 0,
+            QueryKind::Ppr => SCALE,
+        }
+    }
+
+    /// The min-relaxation shared by the BFS and SSSP lanes (mirrors
+    /// `bfs::Bfs::relax` / `sssp::Sssp::relax` against the slab).
+    fn relax(
+        &self,
+        st: &mut ServeState,
+        q: usize,
+        val: u32,
+        cycles: u32,
+        meta: &VertexMeta,
+        share: bool,
+    ) -> Work {
+        if val >= st.slab[q] {
+            return Work::none(1);
+        }
+        st.slab[q] = val;
+        let mut spec = DiffuseSpec::edges(val, 0);
+        if share && meta.rhizome_size > 1 {
+            spec = spec.with_rhizome(val, 0);
+        }
+        Work::one(cycles, spec)
+    }
+
+    /// PPR mass arrival: retain ≈15% (floored at 1 so mass strictly
+    /// decreases), absorb the division spill, split the rest evenly over
+    /// the whole vertex's out-degree.
+    fn absorb(
+        &self,
+        st: &mut ServeState,
+        q: usize,
+        m: u32,
+        meta: &VertexMeta,
+        share: bool,
+    ) -> Work {
+        let retained = (((m as u64 * RETAIN_NUM) >> RETAIN_SHIFT) as u32).clamp(1, m);
+        let rest = m - retained;
+        let deg = meta.out_degree;
+        if deg == 0 || rest < deg {
+            // Sink vertex, or too little mass for one unit per edge:
+            // absorb everything (the paper's dangling-mass teleport,
+            // folded into the seed's own neighbourhood).
+            st.slab[q] += m;
+            return Work::none(PPR_CYCLES);
+        }
+        let per_edge = rest / deg;
+        st.slab[q] += m - per_edge * deg;
+        let mut spec = DiffuseSpec::edges(per_edge, 0);
+        if share && meta.rhizome_size > 1 {
+            spec = spec.with_rhizome(per_edge, 0);
+        }
+        Work::one(PPR_CYCLES, spec)
+    }
+}
+
+impl Application for Serve {
+    type State = ServeState;
+
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn init(&self, _meta: &VertexMeta) -> ServeState {
+        ServeState {
+            slab: self
+                .queries
+                .iter()
+                .map(|q| match q.kind {
+                    QueryKind::Bfs | QueryKind::Sssp => UNREACHED,
+                    QueryKind::Ppr => 0,
+                })
+                .collect(),
+        }
+    }
+
+    fn predicate(&self, st: &ServeState, msg: &ActionMsg) -> bool {
+        match self.kind(msg.qid) {
+            QueryKind::Bfs | QueryKind::Sssp => msg.payload < st.slab[msg.qid as usize],
+            QueryKind::Ppr => msg.payload > 0,
+        }
+    }
+
+    fn work(&self, st: &mut ServeState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        let q = msg.qid as usize;
+        match self.kind(msg.qid) {
+            QueryKind::Bfs => self.relax(st, q, msg.payload, BFS_CYCLES, meta, true),
+            QueryKind::Sssp => self.relax(st, q, msg.payload, SSSP_CYCLES, meta, true),
+            QueryKind::Ppr => self.absorb(st, q, msg.payload, meta, true),
+        }
+    }
+
+    fn on_rhizome_share(&self, st: &mut ServeState, msg: &ActionMsg, meta: &VertexMeta) -> Work {
+        let q = msg.qid as usize;
+        match self.kind(msg.qid) {
+            QueryKind::Bfs => self.relax(st, q, msg.payload, BFS_CYCLES, meta, false),
+            QueryKind::Sssp => self.relax(st, q, msg.payload, SSSP_CYCLES, meta, false),
+            // The retaining member already took the teleport share and
+            // informed every sibling; this member only fans its own edge
+            // chunk out (no retain, no re-share — mass is conserved
+            // because each member covers a disjoint slice of the
+            // vertex's out-edges).
+            QueryKind::Ppr => Work::one(PPR_CYCLES, DiffuseSpec::edges(msg.payload, msg.aux)),
+        }
+    }
+
+    fn apply_relay(&self, st: &mut ServeState, payload: u32, _aux: u32, qid: u16) {
+        match self.kind(qid) {
+            QueryKind::Bfs | QueryKind::Sssp => {
+                let q = qid as usize;
+                st.slab[q] = st.slab[q].min(payload);
+            }
+            // Ghosts never retain mass; they only relay the split onward.
+            QueryKind::Ppr => {}
+        }
+    }
+
+    fn diffuse_live(&self, st: &ServeState, payload: u32, _aux: u32, qid: u16) -> bool {
+        match self.kind(qid) {
+            QueryKind::Bfs | QueryKind::Sssp => st.slab[qid as usize] == payload,
+            // A mass packet is never stale — it carries its own share.
+            QueryKind::Ppr => payload > 0,
+        }
+    }
+
+    fn edge_payload(&self, payload: u32, aux: u32, weight: u32, qid: u16) -> (u32, u32) {
+        match self.kind(qid) {
+            QueryKind::Bfs => (payload + 1, aux),
+            QueryKind::Sssp => (payload.saturating_add(weight), aux),
+            QueryKind::Ppr => (payload, aux),
+        }
+    }
+
+    /// Per-lane combiner (the engine guarantees `a.qid == b.qid`): min
+    /// for the BFS/SSSP lanes, refusal for PPR — mass splitting uses
+    /// floor division, so `work(m1 + m2)` ≠ `work(m1); work(m2)` and a
+    /// pre-split fold would change the fixpoint.
+    fn combine(&self, a: &ActionMsg, b: &ActionMsg) -> Option<ActionMsg> {
+        match self.kind(a.qid) {
+            QueryKind::Bfs | QueryKind::Sssp => {
+                (a.aux == b.aux).then(|| ActionMsg { payload: a.payload.min(b.payload), ..*a })
+            }
+            QueryKind::Ppr => None,
+        }
+    }
+
+    /// Settled slabs must not be rippled by later structure: the serve
+    /// contract is an admission-wave snapshot, not a live view.
+    fn can_repair(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> Serve {
+        Serve::new(vec![
+            QuerySpec { kind: QueryKind::Bfs, root: 0 },
+            QuerySpec { kind: QueryKind::Sssp, root: 1 },
+            QuerySpec { kind: QueryKind::Ppr, root: 2 },
+        ])
+    }
+
+    fn meta(out_degree: u32) -> VertexMeta {
+        VertexMeta { out_degree, ..Default::default() }
+    }
+
+    #[test]
+    fn slab_inits_per_kind() {
+        let st = app().init(&meta(0));
+        assert_eq!(st.slab, vec![UNREACHED, UNREACHED, 0]);
+    }
+
+    #[test]
+    fn lanes_relax_independently() {
+        let a = app();
+        let mut st = a.init(&meta(4));
+        let w = a.work(&mut st, &ActionMsg::app(0, 3, 0).with_qid(0), &meta(4));
+        assert_eq!(st.slab, vec![3, UNREACHED, 0], "only the BFS lane moved");
+        assert_eq!(w.diffuse.len(), 1);
+        let w2 = a.work(&mut st, &ActionMsg::app(0, 9, 0).with_qid(1), &meta(4));
+        assert_eq!(st.slab, vec![3, 9, 0], "the SSSP lane has its own entry");
+        assert_eq!(w2.diffuse[0].payload, 9);
+        assert!(!a.predicate(&st, &ActionMsg::app(0, 5, 0).with_qid(0)), "worse level rejected");
+        assert!(a.predicate(&st, &ActionMsg::app(0, 5, 0).with_qid(1)), "other lane unaffected");
+    }
+
+    #[test]
+    fn lane_payload_semantics_differ() {
+        let a = app();
+        assert_eq!(a.edge_payload(3, 0, 9, 0), (4, 0), "BFS: lvl+1, weight ignored");
+        assert_eq!(a.edge_payload(3, 0, 9, 1), (12, 0), "SSSP: dist+w");
+        assert_eq!(a.edge_payload(3, 0, 9, 2), (3, 0), "PPR: mass unchanged");
+    }
+
+    #[test]
+    fn ppr_mass_is_conserved_by_one_absorb() {
+        let a = app();
+        let m = SCALE;
+        let deg = 7u32;
+        let mut st = a.init(&meta(deg));
+        let w = a.work(&mut st, &ActionMsg::app(0, m, 0).with_qid(2), &meta(deg));
+        let sent = w.diffuse[0].payload * deg;
+        assert_eq!(st.slab[2] + sent, m, "retained + spill + sent == arrived");
+        assert!(w.diffuse[0].payload < m, "every packet shrinks (termination)");
+        let retained = ((m as u64 * RETAIN_NUM) >> RETAIN_SHIFT) as u32;
+        assert!(st.slab[2] >= retained, "teleport share stays home");
+    }
+
+    #[test]
+    fn ppr_small_mass_and_sinks_absorb_fully() {
+        let a = app();
+        let mut st = a.init(&meta(0));
+        let w = a.work(&mut st, &ActionMsg::app(0, 100, 0).with_qid(2), &meta(0));
+        assert!(w.diffuse.is_empty(), "sink absorbs everything");
+        assert_eq!(st.slab[2], 100);
+        let mut st = a.init(&meta(50));
+        let w = a.work(&mut st, &ActionMsg::app(0, 10, 0).with_qid(2), &meta(50));
+        assert!(w.diffuse.is_empty(), "rest < out_degree absorbs everything");
+        assert_eq!(st.slab[2], 10);
+        assert!(!a.predicate(&st, &ActionMsg::app(0, 0, 0).with_qid(2)), "zero mass is inert");
+    }
+
+    #[test]
+    fn ppr_rhizome_share_fans_out_without_retaining() {
+        let a = app();
+        let m = meta(8);
+        let m = VertexMeta { rhizome_size: 4, ..m };
+        let mut st = a.init(&m);
+        let w = a.work(&mut st, &ActionMsg::app(0, SCALE, 0).with_qid(2), &m);
+        assert_eq!(w.diffuse[0].rhizome, Some((w.diffuse[0].payload, 0)), "siblings informed");
+        let mut st2 = a.init(&m);
+        let msg = ActionMsg::app(0, w.diffuse[0].payload, 0).with_qid(2);
+        let w2 = a.on_rhizome_share(&mut st2, &msg, &m);
+        assert_eq!(st2.slab[2], 0, "sibling retains nothing");
+        assert!(w2.diffuse[0].rhizome.is_none(), "and does not re-share");
+        assert!(w2.diffuse[0].edges, "it only fans its own chunk out");
+    }
+
+    #[test]
+    fn combiner_folds_min_lanes_and_refuses_ppr() {
+        let a = app();
+        let x = ActionMsg::app(0, 5, 0).with_qid(1);
+        let y = ActionMsg::app(0, 3, 0).with_qid(1);
+        let folded = a.combine(&x, &y).unwrap();
+        assert_eq!((folded.payload, folded.qid), (3, 1), "min fold keeps the lane");
+        let p = ActionMsg::app(0, 100, 0).with_qid(2);
+        let q = ActionMsg::app(0, 200, 0).with_qid(2);
+        assert!(a.combine(&p, &q).is_none(), "PPR mass never folds");
+        assert!(!a.can_repair(), "admission-wave snapshots: no incremental repair");
+    }
+
+    #[test]
+    fn relay_and_liveness_follow_the_lane() {
+        let a = app();
+        let mut st = a.init(&meta(2));
+        a.apply_relay(&mut st, 7, 0, 0);
+        assert_eq!(st.slab[0], 7, "BFS ghost snapshot takes the min");
+        a.apply_relay(&mut st, 9, 0, 2);
+        assert_eq!(st.slab[2], 0, "PPR relay retains nothing");
+        assert!(a.diffuse_live(&st, 7, 0, 0));
+        assert!(!a.diffuse_live(&st, 8, 0, 0), "stale BFS diffusion prunes");
+        assert!(a.diffuse_live(&st, 1, 0, 2), "mass packets are never stale");
+    }
+}

@@ -56,16 +56,16 @@ impl Application for Sssp {
         self.relax(st, msg.payload, meta, false)
     }
 
-    fn apply_relay(&self, st: &mut SsspState, payload: u32, _aux: u32) {
+    fn apply_relay(&self, st: &mut SsspState, payload: u32, _aux: u32, _qid: u16) {
         st.dist = st.dist.min(payload);
     }
 
-    fn diffuse_live(&self, st: &SsspState, payload: u32, _aux: u32) -> bool {
+    fn diffuse_live(&self, st: &SsspState, payload: u32, _aux: u32, _qid: u16) -> bool {
         st.dist == payload
     }
 
     /// Relaxation over the (min, +) semiring: neighbour gets dist + w(e).
-    fn edge_payload(&self, payload: u32, aux: u32, weight: u32) -> (u32, u32) {
+    fn edge_payload(&self, payload: u32, aux: u32, weight: u32, _qid: u16) -> (u32, u32) {
         (payload.saturating_add(weight), aux)
     }
 
@@ -101,8 +101,8 @@ mod tests {
     #[test]
     fn weights_add_along_edges() {
         let app = Sssp;
-        assert_eq!(app.edge_payload(10, 0, 7).0, 17);
-        assert_eq!(app.edge_payload(UNREACHED - 1, 0, 7).0, UNREACHED, "saturates");
+        assert_eq!(app.edge_payload(10, 0, 7, 0).0, 17);
+        assert_eq!(app.edge_payload(UNREACHED - 1, 0, 7, 0).0, UNREACHED, "saturates");
     }
 
     #[test]
@@ -125,8 +125,8 @@ mod tests {
     fn diffuse_prunes_when_improved() {
         let app = Sssp;
         let st = SsspState { dist: 10 };
-        assert!(app.diffuse_live(&st, 10, 0));
-        assert!(!app.diffuse_live(&st, 40, 0));
+        assert!(app.diffuse_live(&st, 10, 0, 0));
+        assert!(!app.diffuse_live(&st, 40, 0, 0));
     }
 
     #[test]

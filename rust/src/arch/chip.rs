@@ -204,6 +204,65 @@
 //! determinism suite's shard/axis grids run against both construction
 //! paths).
 //!
+//! # Concurrent query serving (query lanes)
+//!
+//! The engine serves K independent queries — BFS/SSSP roots, PPR seeds
+//! (`apps::serve`) — concurrently on one resident graph by threading a
+//! *query lane* ([`ActionMsg::qid`]) through every application-traffic
+//! carrier: a germinated action keeps its lane, a diffusion inherits its
+//! creating action's lane ([`crate::diffusive::action::Diffusion::qid`]),
+//! and every send a diffusion stages (edge propagate, ghost relay,
+//! rhizome share) carries the lane onward. Two engine-level guarantees
+//! make the lanes *isolated* rather than merely labelled:
+//!
+//! **Combiner lane guard.** [`Lane::try_fold`] refuses to fold two flits
+//! whose `qid`s differ, before the app's combiner is ever consulted — so
+//! an [`Application::combine`] monoid only sees operands of one query
+//! and per-lane state slabs cannot bleed into each other through the
+//! wire. The guard is audited statically (`amcca-lint`'s `combine-qid`
+//! rule) and dynamically (the dsan fold hash carries the lane, and
+//! [`ChipConfig::dsan_legacy_qid_fold`] re-injects the unguarded rule so
+//! `tests/dsan.rs` proves cross-lane folds are caught).
+//!
+//! **Per-lane termination.** [`Metrics::query_delta`] counts each lane's
+//! live *carriers* — queued or in-flight `App`/`RelayDiffuse`/
+//! `RhizomeShare` actions plus parked diffusions (`lane_tracked`);
+//! structural mutation traffic belongs to no lane. Every transition is
+//! balanced: germinate +1; an action retiring into S diffusions nets
+//! S−1 (a pruned action −1); a diffusion's staged send +1 (a send folded
+//! away by the combiner −1, single-sourced in [`Lane::try_fold`] across
+//! all three fold sites); a pruned or finished diffusion −1. A lane at
+//! zero is *settled* and cannot revive — every new carrier is created by
+//! an existing one — so [`Metrics::query_last`], the lane's last touch
+//! cycle, is its completion cycle ([`Chip::query_settled_at`]). Finished
+//! queries thus retire individually, under the global quiescence
+//! machinery, idle fast-forward, and timing wheel unchanged: per-lane
+//! accounting is pure bookkeeping (sums and maxes, merged like every
+//! other metric in fixed shard order), never a scheduling input, which
+//! is what keeps the whole-`Metrics` determinism contract intact for
+//! serve runs.
+//!
+//! **Serving consistency contract (admission-wave snapshots).** The
+//! serve driver (`--serve`) interleaves queries with streamed edge
+//! inserts under one rule: *a query observes the graph as of its
+//! admission wave*. Admissions and mutations are totally ordered by
+//! their scheduled cycles; before a mutation batch applies, the driver
+//! drains the chip to full quiescence with [`Chip::run`] — every
+//! in-flight query completes against the pre-mutation structure — and
+//! only then lets [`crate::rpvo::mutate::apply_batch`] splice the batch
+//! (itself barriered exactly as the wave planner always runs). Queries
+//! admitted later are germinated after the batch settles and see the
+//! widened graph. [`Chip::run_until`] exists for the cadence-accurate
+//! variant: it pauses the cycle loop at a deadline with all engine state
+//! preserved (the sharded leader yields through the same restore path
+//! the adaptive fallback uses, clamped identically to the serial loop,
+//! so the pause point is bit-identical across the shard/axis grid), and
+//! the driver germinates the next admission at its scheduled cycle while
+//! earlier queries are still in flight. Under this contract each query's
+//! result — and its per-lane completion cycle — is bitwise-equal to the
+//! same query run *alone* on the graph snapshot of its admission wave,
+//! which is exactly what `tests/serve.rs` pins.
+//!
 //! # Determinism rules
 //!
 //! The invariants above are guarded *mechanically*, on two layers:
@@ -225,6 +284,10 @@
 //!     explicit arm in `ActionKind::combinable` (no `_` wildcard), so
 //!     new action kinds opt *in* to wire-side folding. [`Lane::try_fold`]
 //!     consults exactly that table.
+//!   * `combine-qid` — [`Lane::try_fold`] must compare the queued and
+//!     arriving flits' query lanes (`qid`) before consulting the app's
+//!     combiner, so concurrent queries can never fold into each other
+//!     (the query-lane guard of the serving section above).
 //! Run locally with `cargo run -p amcca-lint` from `rust/`.
 //!
 //! **Dynamic — `dsan`** (`--features dsan`, armed by
@@ -236,9 +299,11 @@
 //! (positive or negative) folds into an order-independent audit hash,
 //! which `tests/dsan.rs` pins identical across the full shard/axis grid.
 //! The pre-PR-6 fold-eligibility bug (pop evidence not qualified by VC)
-//! is kept re-injectable behind [`ChipConfig::dsan_legacy_fold`] so the
-//! suite can prove the auditor catches that bug class. With the feature
-//! off every probe compiles to an empty inline stub — zero overhead.
+//! is kept re-injectable behind [`ChipConfig::dsan_legacy_fold`], and
+//! the cross-query fold bug (lane guard disabled) behind
+//! [`ChipConfig::dsan_legacy_qid_fold`], so the suite can prove the
+//! auditor catches both bug classes. With the feature off every probe
+//! compiles to an empty inline stub — zero overhead.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
@@ -639,10 +704,50 @@ impl<A: Application> Chip<A> {
 
     /// Inject an action at the cell owning `addr` (host `germinate`,
     /// Listing 1). Free at cycle 0; models the accelerator-style kickoff.
+    /// The action rides query lane 0 (the single-query default); use
+    /// [`Chip::germinate_query`] to kick off one lane of a concurrent
+    /// serve run.
     pub fn germinate(&mut self, addr: Address, kind: ActionKind, payload: u32, aux: u32) {
-        let msg = ActionMsg { kind, target: addr.slot, payload, aux, ext: 0 };
+        let msg = ActionMsg { kind, target: addr.slot, payload, aux, ext: 0, qid: 0 };
+        if lane_tracked(msg.kind) {
+            self.metrics.query_touch(msg.qid, self.now, 1);
+        }
         self.cells[addr.cc as usize].action_q.push_back(msg);
         self.mark_host(addr.cc);
+    }
+
+    /// Inject an application action on query lane `qid` (the serve
+    /// driver's kickoff for one concurrent query). Identical to
+    /// [`Chip::germinate`] with `ActionKind::App` except for the lane
+    /// tag, which the engine threads through every diffusion and staged
+    /// send the query causes — and counts in the per-lane in-flight
+    /// accounting ([`Metrics::query_delta`]), so the query's own
+    /// termination cycle is observable via [`Chip::query_live`] /
+    /// [`Chip::query_settled_at`].
+    pub fn germinate_query(&mut self, addr: Address, payload: u32, aux: u32, qid: u16) {
+        let msg = ActionMsg::app(addr.slot, payload, aux).with_qid(qid);
+        self.metrics.query_touch(qid, self.now, 1);
+        self.cells[addr.cc as usize].action_q.push_back(msg);
+        self.mark_host(addr.cc);
+    }
+
+    /// Live carrier count of query lane `qid`: germinated-or-queued
+    /// actions, in-flight flits, and parked diffusions still working for
+    /// that lane. Zero means the lane is settled — and it cannot revive,
+    /// because every new carrier is created by an existing one.
+    pub fn query_live(&self, qid: u16) -> i64 {
+        self.metrics.query_delta.get(qid as usize).copied().unwrap_or(0)
+    }
+
+    /// The cycle query lane `qid`'s last carrier retired (its completion
+    /// cycle once [`Chip::query_live`] is zero). `None` if the lane never
+    /// carried anything.
+    pub fn query_settled_at(&self, qid: u16) -> Option<u64> {
+        if (qid as usize) < self.metrics.query_delta.len() {
+            Some(self.metrics.query_last[qid as usize])
+        } else {
+            None
+        }
     }
 
     /// Send an InsertEdge mutation action into the chip (host side of §7;
@@ -665,6 +770,7 @@ impl<A: Application> Chip<A> {
             payload: out_delta,
             aux: in_delta,
             ext: 0,
+            qid: 0,
         };
         self.cells[root.cc as usize].action_q.push_back(msg);
         self.mark_host(root.cc);
@@ -691,6 +797,21 @@ impl<A: Application> Chip<A> {
     /// bit-for-bit identical per cycle, so the switch points are
     /// unobservable in results.
     pub fn run(&mut self) -> anyhow::Result<&Metrics> {
+        self.run_until(u64::MAX)?;
+        Ok(&self.metrics)
+    }
+
+    /// Like [`Chip::run`], but pause the cycle loop once `now` reaches
+    /// `deadline` (without stepping past it). Returns `Ok(true)` when the
+    /// chip went quiescent before the deadline and `Ok(false)` when the
+    /// deadline fired first; in the latter case all engine state (queues,
+    /// parked wheel entries, pending marks) is preserved exactly, so the
+    /// caller can germinate more work — the serve driver admitting a
+    /// query mid-run — and call `run_until`/`run` again. The pause point
+    /// is deterministic: both engines check the deadline at the top of
+    /// the cycle loop, before any quiescence decision, so a serial and a
+    /// sharded run pause at the identical cycle with identical state.
+    pub fn run_until(&mut self, deadline: u64) -> anyhow::Result<bool> {
         // A quiet window left over from a previous run must not count
         // toward this run's idle-tree latency (keeps serial stepped mode,
         // serial fast mode, and the sharded engine in exact agreement).
@@ -701,20 +822,27 @@ impl<A: Application> Chip<A> {
         let fast = self.cfg.heatmap_every == 0;
         if nshards > 1 && !fast {
             // Heat-map runs stay fully sharded: frame segments are
-            // collected per worker and merged once at the end.
-            self.run_sharded(nshards, 0)?;
-            return Ok(&self.metrics);
+            // collected per worker and merged once at the end. With
+            // `yield_below == 0` the only yield the leader can take is
+            // the deadline, so the returned bool has `run_until`'s
+            // meaning directly.
+            return self.run_sharded(nshards, 0, deadline);
         }
         let cells = self.cfg.num_cells() as u64;
         let serial_below = SERIAL_BELOW.min((cells / 4).max(1));
         let sharded_above = SHARDED_ABOVE.min((cells / 2).max(1));
         loop {
+            if self.now >= deadline {
+                return Ok(false);
+            }
             let pending = self.serial.next.len() as u64;
             if nshards > 1 && pending >= sharded_above {
                 // Adaptive fallback, parallel half: hand the cycle loop
-                // to the workers until the active set shrinks again.
-                if self.run_sharded(nshards, serial_below)? {
-                    return Ok(&self.metrics);
+                // to the workers until the active set shrinks again (or
+                // the deadline bounces it back here, where the check at
+                // the top of the loop sees it).
+                if self.run_sharded(nshards, serial_below, deadline)? {
+                    return Ok(true);
                 }
                 continue;
             }
@@ -732,20 +860,22 @@ impl<A: Application> Chip<A> {
                         );
                         self.metrics.cycles = done;
                         self.now = done;
-                        return Ok(&self.metrics);
+                        return Ok(true);
                     }
                     // Idle fast-forward: every live cell is parked in the
                     // timing wheel; skip straight to the cycle before the
                     // first expiry (the step below lands exactly on it).
+                    // A jump never crosses the deadline: it stops there
+                    // and the top-of-loop check pauses the run.
                     Some(due) => {
-                        self.now = (due - 1).min(self.cfg.max_cycles);
+                        self.now = (due - 1).min(self.cfg.max_cycles).min(deadline);
                     }
                 }
             } else if !fast {
                 let parked = self.serial.wheel.len() as u64;
                 if let Some(done) = self.terminator.observe(self.now, 0, pending + parked) {
                     self.metrics.cycles = done;
-                    return Ok(&self.metrics);
+                    return Ok(true);
                 }
             }
             anyhow::ensure!(
@@ -942,6 +1072,10 @@ struct Ctx<'e, A: Application> {
     /// Yield back to the serial engine when the total active set for the
     /// coming cycle drops below this (0 = never; run to termination).
     yield_below: u64,
+    /// Pause (CMD_YIELD) once `now` reaches this cycle (`u64::MAX` =
+    /// none). Checked by the leader before any quiescence decision, so
+    /// the pause point matches the serial loop bit-for-bit.
+    deadline: u64,
     #[cfg(feature = "dsan")]
     dsan: &'e Dsan,
 }
@@ -985,15 +1119,20 @@ fn shard_worker<A: Application, V: CellArena<S = A::State> + ?Sized>(
                 .min()
                 .unwrap_or(u64::MAX);
             let idle = total == 0 && wheel_min == u64::MAX;
+            // Deadline pause first — mirrors the serial loop, which
+            // checks the deadline at the top of the cycle, before any
+            // quiescence or fast-forward decision.
             // In-shard idle fast-forward is checked BEFORE the yield
             // fallback: when every live cell is parked in a wheel, a jump
             // keeps the workers alive for the wake cycle instead of
             // bouncing the whole engine to serial and back.
-            let decision = if ctx.fast && total == 0 && wheel_min != u64::MAX {
+            let decision = if now >= ctx.deadline {
+                (CMD_YIELD, now)
+            } else if ctx.fast && total == 0 && wheel_min != u64::MAX {
                 if now >= ctx.cfg.max_cycles {
                     (CMD_ABORT, now)
                 } else {
-                    (CMD_JUMP, (wheel_min - 1).min(ctx.cfg.max_cycles))
+                    (CMD_JUMP, (wheel_min - 1).min(ctx.cfg.max_cycles).min(ctx.deadline))
                 }
             } else if ctx.yield_below > 0 && total < ctx.yield_below {
                 // Adaptive fallback: the coming cycle is cheaper without
@@ -1145,8 +1284,15 @@ impl<A: Application> Chip<A> {
     /// One sharded episode: runs until termination (`Ok(true)`), or —
     /// when `yield_below > 0` — until the active set shrinks under the
     /// threshold and the cycle loop should continue serially
-    /// (`Ok(false)`, pending marks restored to `serial.next`).
-    fn run_sharded(&mut self, nshards: usize, yield_below: u64) -> anyhow::Result<bool> {
+    /// (`Ok(false)`, pending marks restored to `serial.next`). A finite
+    /// `deadline` also yields (same restore path) once `now` reaches it,
+    /// so `run_until` pauses identically on both engines.
+    fn run_sharded(
+        &mut self,
+        nshards: usize,
+        yield_below: u64,
+        deadline: u64,
+    ) -> anyhow::Result<bool> {
         let dim_x = self.cfg.dim_x;
         let dim_y = self.cfg.dim_y;
         // Contiguous bands of grid lines along the resolved axis, as even
@@ -1206,6 +1352,7 @@ impl<A: Application> Chip<A> {
                 tree_depth: self.terminator.tree_depth(),
                 fast: self.cfg.heatmap_every == 0,
                 yield_below,
+                deadline,
                 #[cfg(feature = "dsan")]
                 dsan: &self.dsan,
             };
@@ -1323,6 +1470,17 @@ impl<A: Application> Chip<A> {
 // Per-cycle engine logic, shared by the serial engine and every worker
 // ------------------------------------------------------------------------
 
+/// Which action kinds participate in per-query carrier accounting
+/// ([`Metrics::query_delta`]): the application-traffic kinds that inherit
+/// a query lane. Engine-level mutation and growth traffic
+/// (`InsertEdge`/`MetaBump`/`SproutMember`/`RingSplice`) is structural —
+/// it belongs to no query and settles under the global quiescence
+/// machinery alone.
+#[inline]
+fn lane_tracked(kind: ActionKind) -> bool {
+    matches!(kind, ActionKind::App | ActionKind::RelayDiffuse | ActionKind::RhizomeShare)
+}
+
 /// A shard's view of one cycle: its own cells (mutable, behind the
 /// [`CellArena`] view — a contiguous slice for row bands / the serial
 /// engine, scattered references for column bands), the global read-only
@@ -1408,18 +1566,18 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     #[inline(always)]
     fn dsan_space_publish(&self, _c: CellId) {}
 
-    /// One combiner decision on `(cell, port)` for `target`: `vc` is the
-    /// winning VC of a fold, `None` a no-fold decision.
+    /// One combiner decision on `(cell, port)` for `target` on query lane
+    /// `qid`: `vc` is the winning VC of a fold, `None` a no-fold decision.
     #[cfg(feature = "dsan")]
-    fn dsan_fold(&self, c: CellId, port: usize, target: u32, vc: Option<u8>) {
+    fn dsan_fold(&self, c: CellId, port: usize, target: u32, qid: u16, vc: Option<u8>) {
         if self.cfg.dsan {
-            self.dsan.record_fold(self.now, c, port, target, vc);
+            self.dsan.record_fold(self.now, c, port, target, qid, vc);
         }
     }
 
     #[cfg(not(feature = "dsan"))]
     #[inline(always)]
-    fn dsan_fold(&self, _c: CellId, _port: usize, _target: u32, _vc: Option<u8>) {}
+    fn dsan_fold(&self, _c: CellId, _port: usize, _target: u32, _qid: u16, _vc: Option<u8>) {}
 
     /// A fold hit consumed pop evidence from a foreign VC (only the
     /// re-injected legacy eligibility rule can produce this).
@@ -1433,6 +1591,19 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     #[cfg(not(feature = "dsan"))]
     #[inline(always)]
     fn dsan_foreign_vc_fold(&self) {}
+
+    /// A fold merged flits from two different query lanes (only the
+    /// re-injected `dsan_legacy_qid_fold` rule can produce this).
+    #[cfg(feature = "dsan")]
+    fn dsan_cross_qid_fold(&self) {
+        if self.cfg.dsan {
+            self.dsan.flag_cross_qid_fold();
+        }
+    }
+
+    #[cfg(not(feature = "dsan"))]
+    #[inline(always)]
+    fn dsan_cross_qid_fold(&self) {}
 
     /// Mark a cell for processing next cycle (dedup via epoch stamps).
     #[inline]
@@ -1674,27 +1845,37 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                     busy += work.cycles;
                     self.metrics.actions_work += 1;
                     self.metrics.sram_writes += 1;
+                    let specs = work.diffuse.len() as i64;
                     for spec in work.diffuse {
-                        cell.diffuse_q.push_back(Diffusion::new(msg.target, spec));
+                        cell.diffuse_q.push_back(Diffusion::new(msg.target, msg.qid, spec));
                         self.metrics.diffusions_created += 1;
                     }
                     self.metrics.diffuse_q_hwm =
                         self.metrics.diffuse_q_hwm.max(cell.diffuse_q.len() as u64);
+                    // Lane accounting: the action retired, its diffusions
+                    // carry the lane onward.
+                    self.metrics.query_touch(msg.qid, now, specs - 1);
                 } else {
                     self.metrics.actions_pruned += 1;
+                    self.metrics.query_touch(msg.qid, now, -1);
                 }
             }
             ActionKind::RelayDiffuse => {
                 let cell = self.cells.at_mut(i);
                 let obj = &mut cell.objects[slot];
-                self.app.apply_relay(&mut obj.state, msg.payload, msg.aux);
+                self.app.apply_relay(&mut obj.state, msg.payload, msg.aux, msg.qid);
                 self.metrics.relays += 1;
                 self.metrics.sram_writes += 1;
                 cell.diffuse_q.push_back(Diffusion::new(
                     msg.target,
+                    msg.qid,
                     crate::diffusive::action::DiffuseSpec::edges(msg.payload, msg.aux),
                 ));
                 self.metrics.diffusions_created += 1;
+                // Lane accounting: one carrier (the relay) became one
+                // carrier (the ghost's diffusion) — delta 0, but the
+                // touch keeps the lane's last-activity cycle fresh.
+                self.metrics.query_touch(msg.qid, now, 0);
             }
             ActionKind::RhizomeShare => {
                 let cell = self.cells.at_mut(i);
@@ -1704,10 +1885,12 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                 busy += work.cycles;
                 self.metrics.rhizome_shares += 1;
                 self.metrics.sram_writes += 1;
+                let specs = work.diffuse.len() as i64;
                 for spec in work.diffuse {
-                    cell.diffuse_q.push_back(Diffusion::new(msg.target, spec));
+                    cell.diffuse_q.push_back(Diffusion::new(msg.target, msg.qid, spec));
                     self.metrics.diffusions_created += 1;
                 }
+                self.metrics.query_touch(msg.qid, now, specs - 1);
             }
             ActionKind::InsertEdge => {
                 busy += self.handle_insert_edge(c, &msg);
@@ -1898,6 +2081,8 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         let mut hit: Option<(u8, u8, ActionMsg)> = None;
         #[cfg(feature = "dsan")]
         let mut foreign_vc = false;
+        #[cfg(feature = "dsan")]
+        let mut cross_qid = false;
         let unit = &self.cells.at(i).inputs[port];
         'scan: for vc in 0..unit.num_vcs() as u8 {
             // Per-VC pop evidence: a pop advances only its own VC's ring,
@@ -1911,6 +2096,22 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                     || q.action.target != flit.action.target
                 {
                     continue;
+                }
+                // Query-lane guard (`amcca-lint` rule `combine-qid`):
+                // flits from different concurrent queries must never
+                // fold, whatever the app's combiner would say — state
+                // bleed across lanes breaks the per-query isolation
+                // oracle. TEST HOOK (dsan): `dsan_legacy_qid_fold`
+                // re-injects the unguarded rule so tests/dsan.rs proves
+                // the auditor catches exactly that bug class.
+                if q.action.qid != flit.action.qid {
+                    #[cfg(feature = "dsan")]
+                    let bleed = self.cfg.dsan_legacy_qid_fold;
+                    #[cfg(not(feature = "dsan"))]
+                    let bleed = false;
+                    if !bleed {
+                        continue;
+                    }
                 }
                 let eligible = q.moved_at < now && (off >= 1 || head_popped);
                 // TEST HOOK (dsan): the pre-PR-6 rule took *port-level*
@@ -1937,6 +2138,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                             && off == 0
                             && unit.popped_at() == now
                             && unit.popped_vc() != vc;
+                        cross_qid = q.action.qid != flit.action.qid;
                     }
                     hit = Some((vc, off, m));
                     break 'scan;
@@ -1944,17 +2146,25 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             }
         }
         let Some((vc, off, m)) = hit else {
-            self.dsan_fold(c, port, flit.action.target, None);
+            self.dsan_fold(c, port, flit.action.target, flit.action.qid, None);
             return false;
         };
         #[cfg(feature = "dsan")]
         if foreign_vc {
             self.dsan_foreign_vc_fold();
         }
-        self.dsan_fold(c, port, flit.action.target, Some(vc));
+        #[cfg(feature = "dsan")]
+        if cross_qid {
+            self.dsan_cross_qid_fold();
+        }
+        self.dsan_fold(c, port, flit.action.target, flit.action.qid, Some(vc));
         self.cells.at_mut(i).inputs[port].peek_mut(vc, off).unwrap().action = m;
         self.metrics.flits_combined += 1;
         self.metrics.combined_hops_saved += self.geo.distance(c, flit.dst) as u64;
+        // Lane accounting: two carriers merged into one. All three fold
+        // call sites (forward path, barrier merge, local injection) land
+        // here, so the decrement is single-sourced.
+        self.metrics.query_touch(flit.action.qid, now, -1);
         true
     }
 
@@ -1986,7 +2196,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         // The diffuse clause's own predicate, evaluated lazily (Listing 6).
         let live = {
             let obj = &self.cells.at(i).objects[d.slot as usize];
-            self.app.diffuse_live(&obj.state, d.payload, d.aux)
+            self.app.diffuse_live(&obj.state, d.payload, d.aux, d.qid)
         };
         self.metrics.sram_reads += 1;
         if !live {
@@ -1994,6 +2204,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             cell.diffuse_q.pop_front();
             cell.diff_blocked = false;
             self.metrics.diffusions_pruned += 1;
+            self.metrics.query_touch(d.qid, now, -1);
             self.charge(c, 1);
             return;
         }
@@ -2018,13 +2229,14 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             let obj = &self.cells.at(i).objects[d.slot as usize];
             if d.edges && (d.e_idx as usize) < obj.edges.len() {
                 let e = obj.edges[d.e_idx as usize];
-                let (p, a) = self.app.edge_payload(d.payload, d.aux, e.weight);
+                let (p, a) = self.app.edge_payload(d.payload, d.aux, e.weight, d.qid);
                 let msg = ActionMsg {
                     kind: ActionKind::App,
                     target: e.to.slot,
                     payload: p,
                     aux: a,
                     ext: 0,
+                    qid: d.qid,
                 };
                 (e.to, msg)
             } else if d.edges && (d.g_idx as usize) < obj.ghosts.len() {
@@ -2037,6 +2249,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                         payload: d.payload,
                         aux: d.aux,
                         ext: 0,
+                        qid: d.qid,
                     },
                 )
             } else if let Some((rp, ra)) = d.rhizome {
@@ -2051,6 +2264,7 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                             payload: rp,
                             aux: ra,
                             ext: 0,
+                            qid: d.qid,
                         },
                     )
                 } else {
@@ -2068,11 +2282,16 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
             let cell = self.cells.at_mut(i);
             cell.action_q.push_back(msg);
             self.metrics.messages_local += 1;
+            self.metrics.query_touch(d.qid, now, 1);
             self.advance_cursor(c);
             self.cells.at_mut(i).diff_blocked = false;
             self.charge(c, 1);
         } else if self.inject(c, target_addr, msg) {
             self.metrics.messages_sent += 1;
+            // A send that folded inside `inject` already balanced its
+            // own +1 there (`try_fold` subtracts one carrier), so the
+            // staged-send credit is unconditional here.
+            self.metrics.query_touch(d.qid, now, 1);
             self.advance_cursor(c);
             self.cells.at_mut(i).diff_blocked = false;
             self.charge(c, 1);
@@ -2120,9 +2339,10 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     fn finish_diffusion(&mut self, c: CellId) {
         let i = self.idx(c);
         let cell = self.cells.at_mut(i);
-        cell.diffuse_q.pop_front();
+        let d = cell.diffuse_q.pop_front().unwrap();
         cell.diff_blocked = false;
         self.metrics.diffusions_executed += 1;
+        self.metrics.query_touch(d.qid, self.now, -1);
     }
 
     /// The head diffusion is blocked: mark it, and spend the cycle pruning
@@ -2134,23 +2354,25 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         self.cells.at_mut(i).diff_blocked = true;
         let len = self.cells.at(i).diffuse_q.len();
         let scan = len.min(1 + FILTER_SCAN);
-        let mut dead = [0usize; FILTER_SCAN];
+        let mut dead = [(0usize, 0u16); FILTER_SCAN];
         let mut ndead = 0usize;
         {
             let cell = self.cells.at(i);
             for j in 1..scan {
                 let d = cell.diffuse_q[j];
                 let obj = &cell.objects[d.slot as usize];
-                if !self.app.diffuse_live(&obj.state, d.payload, d.aux) {
-                    dead[ndead] = j;
+                if !self.app.diffuse_live(&obj.state, d.payload, d.aux, d.qid) {
+                    dead[ndead] = (j, d.qid);
                     ndead += 1;
                 }
             }
         }
+        let now = self.now;
         let cell = self.cells.at_mut(i);
         for k in (0..ndead).rev() {
-            cell.diffuse_q.remove(dead[k]);
+            cell.diffuse_q.remove(dead[k].0);
             self.metrics.diffusions_pruned_filter += 1;
+            self.metrics.query_touch(dead[k].1, now, -1);
         }
         self.charge(c, 1);
     }
@@ -2279,13 +2501,13 @@ mod tests {
         fn on_rhizome_share(&self, st: &mut u32, msg: &ActionMsg, m: &VertexMeta) -> Work {
             self.work(st, msg, m)
         }
-        fn apply_relay(&self, st: &mut u32, payload: u32, _aux: u32) {
+        fn apply_relay(&self, st: &mut u32, payload: u32, _aux: u32, _qid: u16) {
             *st = (*st).max(payload);
         }
-        fn diffuse_live(&self, st: &u32, payload: u32, _aux: u32) -> bool {
+        fn diffuse_live(&self, st: &u32, payload: u32, _aux: u32, _qid: u16) -> bool {
             *st == payload
         }
-        fn edge_payload(&self, payload: u32, aux: u32, _w: u32) -> (u32, u32) {
+        fn edge_payload(&self, payload: u32, aux: u32, _w: u32, _qid: u16) -> (u32, u32) {
             (payload - 1, aux)
         }
     }

@@ -139,6 +139,12 @@ pub struct ChipConfig {
     /// the auditor mechanically re-detects that bug class. Never set
     /// outside tests; inert without `--features dsan`.
     pub dsan_legacy_fold: bool,
+    /// TEST HOOK (dsan): disable the combiner's query-lane equality guard
+    /// so flits from *different* queries can fold — the cross-query
+    /// state-bleed bug class `tests/dsan.rs` proves the auditor catches
+    /// (fold-hash divergence + `DsanReport::cross_qid_folds`). Never set
+    /// outside tests; inert without `--features dsan`.
+    pub dsan_legacy_qid_fold: bool,
 }
 
 impl ChipConfig {
@@ -169,6 +175,7 @@ impl ChipConfig {
             shard_axis: ShardAxis::Auto,
             dsan: false,
             dsan_legacy_fold: false,
+            dsan_legacy_qid_fold: false,
         }
     }
 

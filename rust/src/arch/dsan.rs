@@ -51,6 +51,12 @@ pub struct DsanReport {
     /// one that actually popped this cycle — only the re-injected
     /// pre-PR-6 legacy eligibility rule can produce these.
     pub foreign_vc_folds: u64,
+    /// Folds that merged two flits carrying *different* query lanes
+    /// (`ActionMsg::qid`) — cross-query state bleed. Only the re-injected
+    /// [`crate::arch::config::ChipConfig::dsan_legacy_qid_fold`] test hook
+    /// can produce these; a clean engine refuses the pair before the
+    /// app combiner ever sees it.
+    pub cross_qid_folds: u64,
     /// Cell touches by a shard that does not own the cell's band.
     pub ownership_violations: u64,
     /// Two different shards writing the same cell in the same cycle.
@@ -67,6 +73,7 @@ impl DsanReport {
     /// participate.)
     pub fn is_clean(&self) -> bool {
         self.foreign_vc_folds == 0
+            && self.cross_qid_folds == 0
             && self.ownership_violations == 0
             && self.ww_conflicts == 0
             && self.raw_hazards == 0
@@ -75,11 +82,12 @@ impl DsanReport {
     /// One-line human summary for the CLI.
     pub fn summary(&self) -> String {
         format!(
-            "dsan: fold_hash={:#018x} decisions={} foreign_vc_folds={} \
+            "dsan: fold_hash={:#018x} decisions={} foreign_vc_folds={} cross_qid_folds={} \
              ownership_violations={} ww_conflicts={} raw_hazards={} [{}]",
             self.fold_hash,
             self.fold_decisions,
             self.foreign_vc_folds,
+            self.cross_qid_folds,
             self.ownership_violations,
             self.ww_conflicts,
             self.raw_hazards,
@@ -115,6 +123,7 @@ mod gated {
         fold_hash: AtomicU64,
         fold_decisions: AtomicU64,
         foreign_vc_folds: AtomicU64,
+        cross_qid_folds: AtomicU64,
         ownership_violations: AtomicU64,
         ww_conflicts: AtomicU64,
         raw_hazards: AtomicU64,
@@ -133,6 +142,7 @@ mod gated {
                 fold_hash: AtomicU64::new(0),
                 fold_decisions: AtomicU64::new(0),
                 foreign_vc_folds: AtomicU64::new(0),
+                cross_qid_folds: AtomicU64::new(0),
                 ownership_violations: AtomicU64::new(0),
                 ww_conflicts: AtomicU64::new(0),
                 raw_hazards: AtomicU64::new(0),
@@ -167,15 +177,28 @@ mod gated {
         }
 
         /// Fold into the audit stream one combiner decision at
-        /// `(now, cell, port)` for flit target `target`: `vc` is the
-        /// winning VC of a positive decision, `None` a negative one.
-        /// Queue *offsets* deliberately stay out of the tuple — the same
-        /// logical fold lands pre-pop (serial immediate push) or post-pop
-        /// (barrier merge) at different offsets, while the winning VC and
-        /// outcome are pinned by the eligibility rule.
-        pub fn record_fold(&self, now: u64, c: CellId, port: usize, target: u32, vc: Option<u8>) {
+        /// `(now, cell, port)` for flit target `target` on query lane
+        /// `qid`: `vc` is the winning VC of a positive decision, `None` a
+        /// negative one. Queue *offsets* deliberately stay out of the
+        /// tuple — the same logical fold lands pre-pop (serial immediate
+        /// push) or post-pop (barrier merge) at different offsets, while
+        /// the winning VC and outcome are pinned by the eligibility rule.
+        /// The qid *is* in the tuple: a fold that bleeds across query
+        /// lanes lands on a different hash than the per-lane folds a
+        /// clean engine takes, so `tests/dsan.rs` detects lane bleed even
+        /// when the folded-flit count happens to match.
+        pub fn record_fold(
+            &self,
+            now: u64,
+            c: CellId,
+            port: usize,
+            target: u32,
+            qid: u16,
+            vc: Option<u8>,
+        ) {
             let word = mix(now)
                 ^ mix((c as u64) << 32 | (port as u64) << 16 | target as u64)
+                ^ mix(0x3_0000_0000 | qid as u64)
                 ^ mix(match vc {
                     Some(v) => 0x1_0000 | v as u64,
                     None => 0x2_0000,
@@ -190,11 +213,18 @@ mod gated {
             self.foreign_vc_folds.fetch_add(1, Ordering::Relaxed);
         }
 
+        /// A fold merged flits from two different query lanes
+        /// (`dsan_legacy_qid_fold` re-injection only).
+        pub fn flag_cross_qid_fold(&self) {
+            self.cross_qid_folds.fetch_add(1, Ordering::Relaxed);
+        }
+
         pub fn report(&self) -> DsanReport {
             DsanReport {
                 fold_hash: self.fold_hash.load(Ordering::Relaxed),
                 fold_decisions: self.fold_decisions.load(Ordering::Relaxed),
                 foreign_vc_folds: self.foreign_vc_folds.load(Ordering::Relaxed),
+                cross_qid_folds: self.cross_qid_folds.load(Ordering::Relaxed),
                 ownership_violations: self.ownership_violations.load(Ordering::Relaxed),
                 ww_conflicts: self.ww_conflicts.load(Ordering::Relaxed),
                 raw_hazards: self.raw_hazards.load(Ordering::Relaxed),
@@ -210,13 +240,13 @@ mod gated {
         fn fold_hash_is_order_independent() {
             let a = Dsan::new(4);
             let b = Dsan::new(4);
-            let decisions: [(u64, CellId, usize, u32, Option<u8>); 3] =
-                [(5, 1, 0, 7, Some(0)), (5, 2, 3, 7, None), (6, 1, 0, 9, Some(1))];
-            for &(now, c, p, t, vc) in &decisions {
-                a.record_fold(now, c, p, t, vc);
+            let decisions: [(u64, CellId, usize, u32, u16, Option<u8>); 3] =
+                [(5, 1, 0, 7, 0, Some(0)), (5, 2, 3, 7, 2, None), (6, 1, 0, 9, 1, Some(1))];
+            for &(now, c, p, t, q, vc) in &decisions {
+                a.record_fold(now, c, p, t, q, vc);
             }
-            for &(now, c, p, t, vc) in decisions.iter().rev() {
-                b.record_fold(now, c, p, t, vc);
+            for &(now, c, p, t, q, vc) in decisions.iter().rev() {
+                b.record_fold(now, c, p, t, q, vc);
             }
             assert_eq!(a.report(), b.report());
             assert_ne!(a.report().fold_hash, 0);
@@ -227,13 +257,31 @@ mod gated {
             let pos0 = Dsan::new(1);
             let pos1 = Dsan::new(1);
             let neg = Dsan::new(1);
-            pos0.record_fold(5, 0, 2, 7, Some(0));
-            pos1.record_fold(5, 0, 2, 7, Some(1));
-            neg.record_fold(5, 0, 2, 7, None);
+            pos0.record_fold(5, 0, 2, 7, 0, Some(0));
+            pos1.record_fold(5, 0, 2, 7, 0, Some(1));
+            neg.record_fold(5, 0, 2, 7, 0, None);
             let (h0, h1, hn) =
                 (pos0.report().fold_hash, pos1.report().fold_hash, neg.report().fold_hash);
             assert_ne!(h0, h1, "winning VC must be visible in the hash");
             assert_ne!(h0, hn, "fold outcome must be visible in the hash");
+        }
+
+        #[test]
+        fn fold_hash_separates_query_lane() {
+            let q0 = Dsan::new(1);
+            let q1 = Dsan::new(1);
+            q0.record_fold(5, 0, 2, 7, 0, Some(0));
+            q1.record_fold(5, 0, 2, 7, 1, Some(0));
+            assert_ne!(
+                q0.report().fold_hash,
+                q1.report().fold_hash,
+                "the query lane must be visible in the hash"
+            );
+            let d = Dsan::new(1);
+            d.flag_cross_qid_fold();
+            let r = d.report();
+            assert_eq!(r.cross_qid_folds, 1);
+            assert!(!r.is_clean(), "a cross-lane fold is a violation");
         }
 
         #[test]

@@ -5,3 +5,4 @@
 pub mod campaign;
 pub mod experiment;
 pub mod report;
+pub mod serve;

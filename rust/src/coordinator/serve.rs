@@ -1,0 +1,349 @@
+//! Concurrent query serving: admit a seeded Poisson stream of K
+//! BFS / SSSP / personalized-PageRank queries (`apps::serve`) onto one
+//! resident graph, optionally mixed with streamed edge inserts, and
+//! report per-query latency percentiles plus aggregate throughput.
+//!
+//! ## Consistency contract (pinned by `tests/serve.rs`)
+//!
+//! * A query observes the graph **as of its admission wave**: mutations
+//!   are applied only at barriers, and a barrier first drains every
+//!   in-flight lane to quiescence (`chip.run()`), so no lane ever sees a
+//!   half-applied batch or a structure newer than its admission.
+//! * Each query's extracted result is bitwise-equal to a *solo* run of
+//!   the same query on its admission-wave snapshot graph (the isolation
+//!   oracle, `driver::run_solo_query`) — concurrency and mutations under
+//!   other lanes are invisible.
+//! * The whole schedule is deterministic in `cfg.seed`: admission cycles
+//!   come from an integer-arithmetic geometric sampler (the discrete
+//!   Poisson process — no floats, no wall clock), mutations from
+//!   [`MutationBatch::random`], and the engine itself is bit-identical
+//!   across shard counts and banding axes, so `ServeOutcome::metrics`
+//!   and every per-query result are grid-invariant.
+//!
+//! Timing uses [`crate::arch::chip::Chip::run_until`]: the chip simulates
+//! forward to the next admission cycle with earlier queries still in
+//! flight — queries genuinely overlap — while a chip that goes quiescent
+//! early just fast-forwards its clock to the admission cycle.
+
+use crate::apps::driver;
+use crate::apps::serve::{QueryKind, QuerySpec};
+use crate::arch::config::ChipConfig;
+use crate::graph::model::HostGraph;
+use crate::rpvo::mutate::MutationBatch;
+use crate::stats::metrics::Metrics;
+use crate::util::rng::Rng;
+
+/// Seed perturbations for the admission schedule and the mutation
+/// stream, so neither correlates with allocation randomness at the same
+/// `cfg.seed` (same idea as the experiment runner's `MUTATION_SEED`).
+const ADMIT_SEED: u64 = 0x00AD_317E;
+const SERVE_MUT_SEED: u64 = 0x5E4E_D1F0;
+
+/// How many barriers a mutation stream is split over (capped by the
+/// edge count): inserts land *between* admission waves, not as one lump.
+const MUTATION_WAVES: u32 = 4;
+
+/// One serve run: K queries admitted over time on one resident graph.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    pub cfg: ChipConfig,
+    /// The query set; lane `q` is `queries[q]` (see [`random_queries`]).
+    pub queries: Vec<QuerySpec>,
+    /// Random edge inserts streamed between admission waves (0 = static).
+    pub mutations: u32,
+    /// Mean inter-arrival gap in cycles of the admission process.
+    pub mean_gap: u64,
+    /// Check every query against the solo isolation oracle on its
+    /// admission-wave snapshot (clones the host graph per wave — cheap
+    /// on test graphs, skippable on big serving runs).
+    pub verify: bool,
+}
+
+impl ServeSpec {
+    pub fn new(cfg: ChipConfig, queries: Vec<QuerySpec>) -> Self {
+        ServeSpec { cfg, queries, mutations: 0, mean_gap: 2000, verify: false }
+    }
+}
+
+/// Per-query admission/completion bookkeeping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueryReport {
+    pub spec: QuerySpec,
+    /// Cycle the query was germinated (>= its scheduled arrival; a busy
+    /// chip admits at the scheduled cycle, an idle one fast-forwards).
+    pub admitted: u64,
+    /// Cycle the lane's last carrier retired.
+    pub settled: u64,
+    /// `settled - admitted`.
+    pub latency: u64,
+}
+
+/// Everything the CLI / bench harness needs from one serve run.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    pub metrics: Metrics,
+    pub queries: Vec<QueryReport>,
+    /// Per-query per-vertex results (lane order), extracted at the
+    /// earliest barrier after each lane settled.
+    pub results: Vec<Vec<u32>>,
+    /// Nearest-rank latency percentiles over all K queries.
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    /// Last settle cycle minus first admission cycle.
+    pub makespan: u64,
+    /// Queries whose result differed from the solo oracle (0 unless
+    /// something is broken; only counted with `spec.verify`).
+    pub isolation_mismatches: usize,
+    pub dsan: Option<crate::arch::dsan::DsanReport>,
+}
+
+/// Deterministic mixed query set: kinds cycle BFS → SSSP → PPR, roots
+/// uniform over the vertex id space.
+pub fn random_queries(n: u32, k: u16, seed: u64) -> Vec<QuerySpec> {
+    let mut rng = Rng::new(seed ^ ADMIT_SEED);
+    (0..k)
+        .map(|i| QuerySpec {
+            kind: match i % 3 {
+                0 => QueryKind::Bfs,
+                1 => QueryKind::Sssp,
+                _ => QueryKind::Ppr,
+            },
+            root: rng.below(n as u64) as u32,
+        })
+        .collect()
+}
+
+/// Gap to the next arrival of a Bernoulli(1/mean)-per-cycle process —
+/// the discrete Poisson stream, sampled in pure integer arithmetic (the
+/// amcca-lint wall-clock/float rules keep the schedule replayable). The
+/// tail is capped at 64 means so one unlucky draw cannot stall a run.
+fn geometric_gap(rng: &mut Rng, mean: u64) -> u64 {
+    let mean = mean.max(1);
+    let mut gap = 1;
+    while mean > 1 && gap < mean.saturating_mul(64) && rng.below(mean) != 0 {
+        gap += 1;
+    }
+    gap
+}
+
+/// One scheduled event: either admit query lane `q`, or barrier-apply
+/// mutation wave `w`. Ordered by cycle; at ties mutations go first (an
+/// admission at the same cycle then observes the post-insert graph —
+/// any fixed order works, this one is the documented choice).
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    Admit(u16, u64),
+    Mutate(usize, u64),
+}
+
+impl Event {
+    fn cycle(&self) -> u64 {
+        match *self {
+            Event::Admit(_, t) | Event::Mutate(_, t) => t,
+        }
+    }
+
+    fn class(&self) -> u8 {
+        match *self {
+            Event::Mutate(..) => 0,
+            Event::Admit(..) => 1,
+        }
+    }
+}
+
+/// Run the serve scenario. See the module docs for the contract.
+pub fn run_serve(spec: &ServeSpec, g: &HostGraph) -> anyhow::Result<ServeOutcome> {
+    let k = spec.queries.len();
+    anyhow::ensure!(k > 0 && k <= u16::MAX as usize, "need 1..=65535 queries");
+
+    // --- host-side schedule (fixed before the chip starts) --------------
+    let mut rng = Rng::new(spec.cfg.seed ^ ADMIT_SEED);
+    let mut events: Vec<Event> = Vec::new();
+    let mut t = 0u64;
+    for q in 0..k as u16 {
+        t += geometric_gap(&mut rng, spec.mean_gap);
+        events.push(Event::Admit(q, t));
+    }
+    let batches: Vec<MutationBatch> = if spec.mutations == 0 {
+        Vec::new()
+    } else {
+        let all =
+            MutationBatch::random(g.n, spec.mutations, 1, spec.cfg.seed ^ SERVE_MUT_SEED).edges;
+        let waves = (MUTATION_WAVES.min(all.len() as u32)).max(1) as usize;
+        let per = all.len().div_ceil(waves);
+        all.chunks(per).map(|c| MutationBatch { edges: c.to_vec() }).collect()
+    };
+    let mut mrng = Rng::new(spec.cfg.seed ^ SERVE_MUT_SEED);
+    let mut mt = 0u64;
+    let wave_gap = spec.mean_gap.max(1) * (k as u64) / (batches.len() as u64 + 1);
+    for (w, _) in batches.iter().enumerate() {
+        // Spread the waves over the same horizon as the query stream.
+        mt += geometric_gap(&mut mrng, wave_gap);
+        events.push(Event::Mutate(w, mt));
+    }
+    events.sort_by_key(|e| (e.cycle(), e.class()));
+
+    // --- event loop ------------------------------------------------------
+    let (mut chip, mut built) = driver::build_serve(spec.cfg.clone(), g, spec.queries.clone())?;
+    let mut gm = g.clone();
+    let mut admitted: Vec<Option<u64>> = vec![None; k];
+    let mut snapshots: Vec<Option<HostGraph>> = vec![None; k];
+    let mut results: Vec<Option<Vec<u32>>> = vec![None; k];
+
+    for ev in &events {
+        match *ev {
+            Event::Admit(q, t) => {
+                // Simulate forward with earlier queries still in flight;
+                // an early-quiescent chip just fast-forwards its clock.
+                chip.run_until(t)?;
+                if chip.now < t {
+                    chip.now = t;
+                }
+                admitted[q as usize] = Some(chip.now);
+                if spec.verify {
+                    snapshots[q as usize] = Some(gm.clone());
+                }
+                driver::admit_query(&mut chip, &built, q);
+            }
+            Event::Mutate(w, t) => {
+                // Barrier: drain every lane to quiescence, harvest what
+                // settled, then apply the wave — admitted queries never
+                // observe structure newer than their admission.
+                chip.run()?;
+                if chip.now < t {
+                    chip.now = t;
+                }
+                harvest(&chip, &built, &admitted, &mut results);
+                driver::apply_mutations(&mut chip, &mut built, &batches[w])?;
+                batches[w].mirror_into(&mut gm);
+            }
+        }
+    }
+    chip.run()?;
+    harvest(&chip, &built, &admitted, &mut results);
+
+    // --- latency / throughput bookkeeping --------------------------------
+    let mut queries = Vec::with_capacity(k);
+    for (q, qspec) in spec.queries.iter().enumerate() {
+        let admitted = admitted[q].expect("every lane was admitted");
+        let settled = chip
+            .query_settled_at(q as u16)
+            .expect("every admitted lane carried at least its kickoff");
+        queries.push(QueryReport { spec: *qspec, admitted, settled, latency: settled - admitted });
+    }
+    let mut lat: Vec<u64> = queries.iter().map(|r| r.latency).collect();
+    lat.sort_unstable();
+    let pctl = |p: u64| lat[((lat.len() - 1) * p as usize) / 100];
+    let first = queries.iter().map(|r| r.admitted).min().unwrap();
+    let last = queries.iter().map(|r| r.settled).max().unwrap();
+
+    // --- isolation oracle -------------------------------------------------
+    let mut isolation_mismatches = 0;
+    if spec.verify {
+        for q in 0..k {
+            let snap = snapshots[q].as_ref().unwrap();
+            let solo =
+                driver::run_solo_query(spec.cfg.clone(), snap, spec.queries.clone(), q as u16)?;
+            if results[q].as_ref().unwrap() != &solo {
+                isolation_mismatches += 1;
+            }
+        }
+    }
+
+    Ok(ServeOutcome {
+        metrics: chip.metrics.clone(),
+        results: results.into_iter().map(|r| r.expect("harvested after final drain")).collect(),
+        p50: pctl(50),
+        p95: pctl(95),
+        p99: pctl(99),
+        makespan: last.saturating_sub(first),
+        isolation_mismatches,
+        dsan: chip.dsan_report(),
+        queries,
+    })
+}
+
+/// Extract every admitted-but-unharvested lane's result. Callers only
+/// invoke this at barriers (full quiescence), so every admitted lane is
+/// settled and its slabs are final for the structure it ran on.
+fn harvest(
+    chip: &crate::arch::chip::Chip<crate::apps::serve::Serve>,
+    built: &crate::rpvo::builder::BuiltGraph,
+    admitted: &[Option<u64>],
+    results: &mut [Option<Vec<u32>>],
+) {
+    for q in 0..admitted.len() {
+        if admitted[q].is_some() && results[q].is_none() {
+            debug_assert_eq!(chip.query_live(q as u16), 0, "barrier harvest of a live lane");
+            results[q] = Some(driver::serve_result(chip, built, q as u16));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::erdos;
+
+    fn cfg() -> ChipConfig {
+        let mut c = ChipConfig::torus(4);
+        c.seed = 7;
+        c
+    }
+
+    #[test]
+    fn random_queries_are_mixed_and_in_range() {
+        let qs = random_queries(50, 9, 3);
+        assert_eq!(qs.len(), 9);
+        assert!(qs.iter().all(|q| q.root < 50));
+        for kind in [QueryKind::Bfs, QueryKind::Sssp, QueryKind::Ppr] {
+            assert!(qs.iter().any(|q| q.kind == kind), "{kind:?} missing from the mix");
+        }
+        assert_eq!(qs, random_queries(50, 9, 3), "deterministic in the seed");
+    }
+
+    #[test]
+    fn geometric_gaps_have_roughly_the_right_mean() {
+        let mut rng = Rng::new(11);
+        let n = 4000u64;
+        let total: u64 = (0..n).map(|_| geometric_gap(&mut rng, 100)).sum();
+        let mean = total / n;
+        assert!((60..=140).contains(&mean), "mean gap {mean} far from 100");
+        let mut rng = Rng::new(11);
+        assert!((0..100).all(|_| geometric_gap(&mut rng, 1) == 1), "mean 1 is back-to-back");
+    }
+
+    #[test]
+    fn serve_reports_latencies_and_isolated_results() {
+        let mut g = erdos::generate(96, 420, 5);
+        g.randomize_weights(9, 4);
+        let mut spec = ServeSpec::new(cfg(), random_queries(96, 6, 7));
+        spec.mean_gap = 300;
+        spec.verify = true;
+        let out = run_serve(&spec, &g).unwrap();
+        assert_eq!(out.isolation_mismatches, 0, "every lane must match its solo oracle");
+        assert_eq!(out.results.len(), 6);
+        assert!(out.queries.iter().all(|r| r.settled >= r.admitted));
+        assert!(out.p50 <= out.p95 && out.p95 <= out.p99);
+        assert!(out.makespan > 0);
+        // Admissions are strictly ordered by the schedule (gap >= 1).
+        for w in out.queries.windows(2) {
+            assert!(w[0].admitted < w[1].admitted);
+        }
+    }
+
+    #[test]
+    fn serve_under_mutation_still_matches_admission_snapshots() {
+        let g = erdos::generate(80, 360, 6);
+        let mut spec = ServeSpec::new(cfg(), random_queries(80, 5, 13));
+        spec.mean_gap = 400;
+        spec.mutations = 24;
+        spec.verify = true;
+        let out = run_serve(&spec, &g).unwrap();
+        assert_eq!(
+            out.isolation_mismatches, 0,
+            "mutation barriers must preserve admission-wave snapshots"
+        );
+    }
+}

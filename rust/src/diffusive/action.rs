@@ -85,6 +85,11 @@ impl Work {
 pub struct Diffusion {
     /// Vertex object (on this cell) whose edges/links are being diffused.
     pub slot: Slot,
+    /// Query lane inherited from the action that requested the diffusion;
+    /// every send this diffusion stages carries the same lane, so a
+    /// query's traffic stays identifiable end to end (see
+    /// [`crate::noc::message::ActionMsg::qid`]).
+    pub qid: u16,
     pub payload: u32,
     pub aux: u32,
     pub edges: bool,
@@ -97,9 +102,10 @@ pub struct Diffusion {
 }
 
 impl Diffusion {
-    pub fn new(slot: Slot, spec: DiffuseSpec) -> Self {
+    pub fn new(slot: Slot, qid: u16, spec: DiffuseSpec) -> Self {
         Diffusion {
             slot,
+            qid,
             payload: spec.payload,
             aux: spec.aux,
             edges: spec.edges,
@@ -173,9 +179,10 @@ mod tests {
 
     #[test]
     fn diffusion_starts_at_cursor_zero() {
-        let d = Diffusion::new(3, DiffuseSpec::edges(9, 1));
+        let d = Diffusion::new(3, 5, DiffuseSpec::edges(9, 1));
         assert_eq!((d.e_idx, d.g_idx, d.r_idx), (0, 0, 0));
         assert_eq!(d.slot, 3);
+        assert_eq!(d.qid, 5, "the query lane rides the parked closure");
         assert_eq!(d.payload, 9);
     }
 }

@@ -15,6 +15,24 @@
 //! costs `Work::cycles`, each staged `propagate` costs one cycle, and
 //! diffusions are evaluated lazily so their predicate can prune them long
 //! after the action that created them retired (§5, Listing 6 rationale).
+//!
+//! # Query lanes (concurrent serving)
+//!
+//! Every action carries a *query lane* ([`ActionMsg::qid`]) so K
+//! independent queries (BFS/SSSP roots, PPR seeds — `apps::serve`) can
+//! interleave their fine-grain tasks on one resident graph. The runtime
+//! threads the lane mechanically: an action's qid is inherited by every
+//! diffusion its work requests, and by every send those diffusions stage
+//! (edge propagates, ghost relays, rhizome shares). The trait methods that
+//! see operands without the full message ([`Application::diffuse_live`],
+//! [`Application::edge_payload`], [`Application::apply_relay`]) receive
+//! the lane explicitly so a multi-query app can index per-query state
+//! slabs; single-query apps ignore it. Isolation is the *engine's*
+//! obligation, not the app's: the router combiner refuses to fold flits
+//! from different lanes (see [`Application::combine`]), and per-lane
+//! in-flight accounting gives each query its own termination cycle — the
+//! serving consistency contract is spelled out in the `arch::chip` module
+//! docs.
 
 use crate::diffusive::action::{RepairSpec, Work};
 use crate::noc::message::ActionMsg;
@@ -65,17 +83,20 @@ pub trait Application: Send + Sync + 'static {
     fn on_rhizome_share(&self, st: &mut Self::State, msg: &ActionMsg, meta: &VertexMeta) -> Work;
 
     /// A RelayDiffuse reached a ghost: refresh its state snapshot so queued
-    /// ghost diffusions can be pruned against newer operands.
-    fn apply_relay(&self, st: &mut Self::State, payload: u32, aux: u32);
+    /// ghost diffusions can be pruned against newer operands. `qid` is the
+    /// relay's query lane (multi-query apps refresh only that lane's slab).
+    fn apply_relay(&self, st: &mut Self::State, payload: u32, aux: u32, qid: u16);
 
     /// The diffuse clause's own `predicate` (Listing 6 line 9), evaluated
-    /// lazily each time the parked diffusion is considered.
-    fn diffuse_live(&self, st: &Self::State, payload: u32, aux: u32) -> bool;
+    /// lazily each time the parked diffusion is considered. `qid` is the
+    /// diffusion's query lane.
+    fn diffuse_live(&self, st: &Self::State, payload: u32, aux: u32, qid: u16) -> bool;
 
     /// Operands for the action propagated along one out-edge, given the
     /// diffusion snapshot and the edge weight (BFS: lvl+1; SSSP: dist+w;
-    /// PageRank: score share unchanged).
-    fn edge_payload(&self, payload: u32, aux: u32, weight: u32) -> (u32, u32);
+    /// PageRank: score share unchanged). `qid` is the diffusion's query
+    /// lane (the staged send carries the same lane automatically).
+    fn edge_payload(&self, payload: u32, aux: u32, weight: u32, qid: u16) -> (u32, u32);
 
     /// Wire-side message *combiner* (`ChipConfig::combine`): fold two
     /// application actions bound for the same vertex object into one, so
@@ -85,8 +106,12 @@ pub trait Application: Send + Sync + 'static {
     ///
     /// Contract:
     ///   * Only called for pairs of `ActionKind::App` messages with equal
-    ///     destination cell and equal `target` slot. Engine-level mutation
-    ///     actions (`InsertEdge`/`MetaBump`/`SproutMember`/`RingSplice`)
+    ///     destination cell, equal `target` slot, and equal query lane
+    ///     (`ActionMsg::qid`) — the engine's qid-equality guard means a
+    ///     combiner never sees two different queries' operands, so
+    ///     multi-query apps may fold per-lane without cross-query checks.
+    ///     Engine-level mutation actions
+    ///     (`InsertEdge`/`MetaBump`/`SproutMember`/`RingSplice`)
     ///     and the system kinds (`RelayDiffuse`/`RhizomeShare`) are never
     ///     offered — they carry addresses or feed counted collectives, not
     ///     monoid values.

@@ -219,6 +219,13 @@ fn real_main() -> anyhow::Result<()> {
                  \x20                             path or message-driven InsertEdge actions\n\
                  \x20 --mutations N               (run) stream N random edge inserts through\n\
                  \x20                             the live chip with incremental repair\n\
+                 \x20 --serve [K]                 (run) admit a Poisson stream of K mixed\n\
+                 \x20                             BFS/SSSP/PPR queries (default 8) on one\n\
+                 \x20                             resident graph; with --mutations, inserts\n\
+                 \x20                             land at admission-wave barriers; writes\n\
+                 \x20                             BENCH_serve.json\n\
+                 \x20 --mean-gap N                (serve) mean query inter-arrival gap in\n\
+                 \x20                             cycles (default 2000)\n\
                  \x20 --ingest-wave N             mutation-stream wave cap: how many\n\
                  \x20                             independent inserts settle per chip run\n\
                  \x20                             (0 = auto, 1 = per-edge; same results)\n\
@@ -254,6 +261,9 @@ fn print_dsan(cfg: &ChipConfig, dsan: Option<&amcca::arch::dsan::DsanReport>) {
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
+    if args.has("serve") {
+        return cmd_serve(args, cfg);
+    }
     let app = AppKind::from_name(args.get("app").unwrap_or("bfs"))
         .ok_or_else(|| anyhow::anyhow!("unknown --app"))?;
     let mut exp = Experiment::new(app, cfg.clone());
@@ -363,6 +373,88 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Concurrent query serving (`--serve K`): a seeded Poisson stream of K
+/// mixed BFS/SSSP/PPR queries on one resident graph, optionally mixed
+/// with `--mutations` edge inserts applied at admission-wave barriers
+/// (see `coordinator::serve` for the consistency contract). Besides the
+/// human-readable summary this writes `BENCH_serve.json` at the repo
+/// root — the latency/throughput snapshot CI archives per PR.
+fn cmd_serve(args: &Args, cfg: amcca::arch::config::ChipConfig) -> anyhow::Result<()> {
+    use amcca::coordinator::serve::{random_queries, run_serve, ServeSpec};
+    let (gname, g) = graph_from(args)?;
+    // `--serve` alone means the K=8 smoke default.
+    let k: u16 = match args.get("serve") {
+        Some("true") | None => 8,
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad --serve value: {v}"))?,
+    };
+    anyhow::ensure!(k > 0, "--serve needs at least one query");
+    let mut spec = ServeSpec::new(cfg.clone(), random_queries(g.n, k, cfg.seed));
+    spec.mutations = args.num("mutations", 0u32)?;
+    spec.mean_gap = args.num("mean-gap", 2000u64)?;
+    spec.verify = !args.has("no-verify");
+    let t0 = std::time::Instant::now();
+    let out = run_serve(&spec, &g)?;
+    let wall = t0.elapsed();
+    println!(
+        "serve k={k} graph={gname} ({} v, {} e) chip={}x{} {} combine={} mutations={} mean_gap={}",
+        g.n,
+        g.m(),
+        cfg.dim_x,
+        cfg.dim_y,
+        cfg.topology,
+        cfg.combine,
+        spec.mutations,
+        spec.mean_gap,
+    );
+    println!("{}", out.metrics.summary());
+    let qpm = k as f64 * 1e6 / out.makespan.max(1) as f64;
+    println!(
+        "latency cycles: p50={} p95={} p99={} | makespan={} ({qpm:.2} queries/Mcycle)",
+        out.p50, out.p95, out.p99, out.makespan,
+    );
+    println!(
+        "wall={wall:.2?} ({:.1} Mcycles/s, {:.1} queries/s)",
+        out.metrics.cycles as f64 / wall.as_secs_f64() / 1e6,
+        k as f64 / wall.as_secs_f64(),
+    );
+    if spec.verify {
+        anyhow::ensure!(
+            out.isolation_mismatches == 0,
+            "{} queries diverged from their solo-run isolation oracle",
+            out.isolation_mismatches
+        );
+        println!("isolation: all {k} queries match their solo-run oracle");
+    }
+    print_dsan(&cfg, out.dsan.as_ref());
+    write_serve_json(&[
+        ("queries".into(), k as f64),
+        ("mutations".into(), spec.mutations as f64),
+        ("latency-p50-cycles".into(), out.p50 as f64),
+        ("latency-p95-cycles".into(), out.p95 as f64),
+        ("latency-p99-cycles".into(), out.p99 as f64),
+        ("makespan-cycles".into(), out.makespan as f64),
+        ("queries-per-mcycle".into(), qpm),
+        ("queries-per-sec-wall".into(), k as f64 / wall.as_secs_f64()),
+    ]);
+    Ok(())
+}
+
+/// Minimal JSON emitter for the flat serve snapshot (same shape as the
+/// hotpath bench's `BENCH_hotpath.json`).
+fn write_serve_json(entries: &[(String, f64)]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    let mut out = String::from("{\n");
+    for (i, (name, v)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        out.push_str(&format!("  \"{}\": {:.4}{}\n", name.replace('"', "\\\""), v, comma));
+    }
+    out.push_str("}\n");
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn cmd_stats(args: &Args) -> anyhow::Result<()> {

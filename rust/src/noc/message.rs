@@ -58,6 +58,12 @@ impl ActionKind {
     /// instead of inheriting it. Only plain application actions fold —
     /// mutation and rhizome-protocol traffic carries per-message identity
     /// (addresses, ring splices) that `Application::combine` cannot merge.
+    ///
+    /// Kind eligibility is necessary, not sufficient: the engine
+    /// additionally requires *equal query lanes* (`ActionMsg::qid`) on
+    /// both flits — the qid-equality clause audited by `amcca-lint`'s
+    /// `combine-qid` rule — so combining can never bleed one concurrent
+    /// query's operands into another's.
     #[inline]
     pub fn combinable(self) -> bool {
         match self {
@@ -77,8 +83,14 @@ impl ActionKind {
 /// `payload`/`aux` are app-interpreted 32-bit operands (BFS level, SSSP
 /// distance, PageRank score bits + iteration index). `ext` is a third
 /// operand used by the engine-level mutation actions (the edge weight of
-/// an [`ActionKind::InsertEdge`]); application actions leave it 0. A
-/// 256-bit flit (§6.1) has room for all three plus the header.
+/// an [`ActionKind::InsertEdge`]); application actions leave it 0. `qid`
+/// is the *query lane*: a small dense query id tagging which concurrent
+/// query (BFS/SSSP root, PPR seed — see `apps::serve`) this action works
+/// for. Single-query runs leave it 0. The engine threads it from action
+/// to diffusion to every staged send, and the router combiner only folds
+/// flits with *equal* qids, so concurrent queries never observe each
+/// other's operands. A 256-bit flit (§6.1) has room for all of this plus
+/// the header.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ActionMsg {
     pub kind: ActionKind,
@@ -87,18 +99,28 @@ pub struct ActionMsg {
     pub payload: u32,
     pub aux: u32,
     pub ext: u32,
+    /// Query lane (dense query id; 0 for single-query runs).
+    pub qid: u16,
 }
 
 impl Default for ActionMsg {
     fn default() -> Self {
-        ActionMsg { kind: ActionKind::App, target: 0, payload: 0, aux: 0, ext: 0 }
+        ActionMsg { kind: ActionKind::App, target: 0, payload: 0, aux: 0, ext: 0, qid: 0 }
     }
 }
 
 impl ActionMsg {
     #[inline]
     pub fn app(target: Slot, payload: u32, aux: u32) -> Self {
-        ActionMsg { kind: ActionKind::App, target, payload, aux, ext: 0 }
+        ActionMsg { kind: ActionKind::App, target, payload, aux, ext: 0, qid: 0 }
+    }
+
+    /// Tag this action with a query lane (builder style; see the `qid`
+    /// field docs).
+    #[inline]
+    pub fn with_qid(mut self, qid: u16) -> Self {
+        self.qid = qid;
+        self
     }
 
     /// Engine-level mutation action carrying a PGAS [`Address`] operand
@@ -109,7 +131,7 @@ impl ActionMsg {
     #[inline]
     pub fn with_addr(kind: ActionKind, target: Slot, addr: Address, ext: u32) -> Self {
         let packed = addr.pack();
-        ActionMsg { kind, target, payload: (packed >> 32) as u32, aux: packed as u32, ext }
+        ActionMsg { kind, target, payload: (packed >> 32) as u32, aux: packed as u32, ext, qid: 0 }
     }
 
     /// The [`Address`] operand of an engine-level mutation action (the
@@ -266,6 +288,17 @@ mod tests {
         {
             assert_eq!(k.combinable(), k == App, "{k:?}");
         }
+    }
+
+    #[test]
+    fn qid_lane_defaults_zero_and_builds() {
+        assert_eq!(ActionMsg::app(3, 1, 2).qid, 0, "single-query traffic rides lane 0");
+        assert_eq!(ActionMsg::default().qid, 0);
+        let m = ActionMsg::app(3, 1, 2).with_qid(7);
+        assert_eq!(m.qid, 7);
+        assert_eq!((m.target, m.payload, m.aux), (3, 1, 2), "with_qid only sets the lane");
+        let a = ActionMsg::with_addr(ActionKind::InsertEdge, 9, Address::new(4, 2), 5);
+        assert_eq!(a.qid, 0, "mutation actions are untagged system traffic");
     }
 
     #[test]

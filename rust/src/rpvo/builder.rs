@@ -375,11 +375,11 @@ mod tests {
         fn on_rhizome_share(&self, _s: &mut (), _m: &ActionMsg, _meta: &VertexMeta) -> Work {
             Work::none(0)
         }
-        fn apply_relay(&self, _s: &mut (), _p: u32, _a: u32) {}
-        fn diffuse_live(&self, _s: &(), _p: u32, _a: u32) -> bool {
+        fn apply_relay(&self, _s: &mut (), _p: u32, _a: u32, _q: u16) {}
+        fn diffuse_live(&self, _s: &(), _p: u32, _a: u32, _q: u16) -> bool {
             false
         }
-        fn edge_payload(&self, p: u32, a: u32, _w: u32) -> (u32, u32) {
+        fn edge_payload(&self, p: u32, a: u32, _w: u32, _q: u16) -> (u32, u32) {
             (p, a)
         }
     }

@@ -63,6 +63,26 @@
 //! safe because repairs are monotonic-relaxation germinates whose
 //! fixpoint depends only on the mutated structure (see
 //! [`crate::diffusive::handler::Application::repair`]).
+//!
+//! # Mutation under concurrent serving
+//!
+//! The serve driver ([`crate::coordinator::serve`]) interleaves this
+//! module's batches with a stream of concurrent queries, and the
+//! contract is **snapshot isolation at admission-wave barriers**: a
+//! batch is applied only after the chip has fully drained (every
+//! admitted query settled — no diffusion may observe a half-applied
+//! wave), and every query admitted *after* the barrier sees the whole
+//! batch. Each query's result therefore equals a solo run on the graph
+//! snapshot current at its admission; `MutationBatch::mirror_into`
+//! keeps the host-side mirror of each snapshot for the oracle.
+//!
+//! Serving apps report [`Application::can_repair`]` == false`: a repair
+//! germinate carries no query id, so rippling it into lanes mid-flight
+//! would bleed one query's relaxation into another's slab. For such
+//! apps [`apply_batch`] mutates **structure + degree metadata only**
+//! (the `repairable == false` early-outs below) — exactly the serving
+//! barrier semantics, since queries admitted later re-traverse the
+//! widened edge lists from scratch and need no repair ripple.
 
 use crate::arch::addr::Address;
 use crate::arch::chip::Chip;

@@ -109,6 +109,22 @@ pub struct Metrics {
     pub action_q_hwm: u64,
     /// High-water mark across cells of the diffuse queue.
     pub diffuse_q_hwm: u64,
+    // -- query lanes -------------------------------------------------------
+    /// Per-query-lane in-flight carrier balance, indexed by
+    /// `ActionMsg::qid` (grown on demand; single-query runs use lane 0).
+    /// A *carrier* is anything that can still cause work for the lane: a
+    /// queued or in-flight application action and a parked diffusion.
+    /// Every transition adds a signed delta (germinate +1, action retired
+    /// −1 + its diffusions, staged send +1, fold −1, prune −1, …), so the
+    /// entry is exactly the lane's live carrier count — 0 means the query
+    /// terminated, and it cannot revive because every new carrier is
+    /// created by an existing one. Deltas are plain sums, so the
+    /// per-shard partials merge commutatively like every other counter.
+    pub query_delta: Vec<i64>,
+    /// Last cycle each query lane was touched (max-merged). Once
+    /// `query_delta[q]` reaches 0 this is lane `q`'s completion cycle —
+    /// per-query latency falls out with no polling.
+    pub query_last: Vec<u64>,
 }
 
 impl Metrics {
@@ -143,6 +159,21 @@ impl Metrics {
         }
         (self.diffusions_pruned + self.diffusions_pruned_filter) as f64
             / self.diffusions_created as f64
+    }
+
+    /// One query-lane carrier transition at cycle `now`: apply the signed
+    /// `delta` to lane `qid`'s balance and refresh its last-activity
+    /// cycle. Zero-delta touches (e.g. a relay that consumed one carrier
+    /// and produced one) still matter: they keep `query_last` honest.
+    #[inline]
+    pub fn query_touch(&mut self, qid: u16, now: u64, delta: i64) {
+        let q = qid as usize;
+        if self.query_delta.len() <= q {
+            self.query_delta.resize(q + 1, 0);
+            self.query_last.resize(q + 1, 0);
+        }
+        self.query_delta[q] += delta;
+        self.query_last[q] = self.query_last[q].max(now);
     }
 
     /// Merge per-shard/per-thread partials (engine workers, campaign
@@ -180,6 +211,19 @@ impl Metrics {
         self.compute_cycles += o.compute_cycles;
         self.action_q_hwm = self.action_q_hwm.max(o.action_q_hwm);
         self.diffuse_q_hwm = self.diffuse_q_hwm.max(o.diffuse_q_hwm);
+        // Query lanes: deltas sum, last-activity cycles max — both
+        // elementwise after growing to the wider of the two vectors
+        // (shards that never carried a lane simply contribute nothing).
+        if o.query_delta.len() > self.query_delta.len() {
+            self.query_delta.resize(o.query_delta.len(), 0);
+            self.query_last.resize(o.query_last.len(), 0);
+        }
+        for (q, d) in o.query_delta.iter().enumerate() {
+            self.query_delta[q] += d;
+        }
+        for (q, l) in o.query_last.iter().enumerate() {
+            self.query_last[q] = self.query_last[q].max(*l);
+        }
     }
 
     /// Compact one-line summary for logs.

@@ -17,6 +17,12 @@
 //!    provably sprouts members (`members_sprouted > 0`) keeps the audit
 //!    clean and invariant across shard/axis points.
 //!
+//! The concurrent-serving PR extends the suite with the combiner's
+//! query-lane guard: the fold-decision hash now mixes each decision's
+//! `qid`, the unguarded combiner (`ChipConfig::dsan_legacy_qid_fold`) is
+//! re-injectable and caught as `cross_qid_folds`, and a mixed-lane serve
+//! run with mutations joins the shard/axis invariance grid.
+//!
 //! Run with `cargo test --features dsan --test dsan`. Without the
 //! feature this file compiles to nothing, so tier-1 runs are unaffected.
 
@@ -116,6 +122,91 @@ fn auditor_catches_reinjected_legacy_vc_bug() {
     // The fold rewrote the queued VC 1 head in place: min(9, 7) = 7.
     let head = chip.cells[c as usize].inputs[port].peek(1, 0).unwrap();
     assert_eq!(head.action.payload, 7, "legacy fold min-combined the payloads");
+}
+
+/// Lane-guard twin of contract 1: re-inject the *unguarded* combiner —
+/// no query-lane equality clause (`ChipConfig::dsan_legacy_qid_fold`) —
+/// and prove the auditor catches the cross-query state bleed.
+///
+/// Scenario: cell 5's north input queues two lane-0 application flits on
+/// VC 0 (the offset-1 flit is fold-eligible without pop evidence). A
+/// same-`(dst, target)` flit arrives on lane 1:
+///
+/// * clean rule: unequal `qid`s never fold, whatever the app combiner
+///   would say — the arriving flit keeps its own lane;
+/// * unguarded rule: the min fold fires across lanes, rewriting lane 0's
+///   queued payload with lane 1's — exactly the bleed that breaks the
+///   per-query isolation oracle. dsan flags it as a `cross_qid_folds`
+///   violation and a `fold_hash` mismatch.
+#[test]
+fn auditor_catches_reinjected_cross_qid_fold() {
+    let cfg = dsan_cfg(1, ShardAxis::Rows);
+    let mut chip = Chip::new(cfg, Bfs).unwrap();
+    let c: u32 = 5;
+    let port = 0; // north input
+    let unit = &mut chip.cells[c as usize].inputs[port];
+    assert!(unit.try_push(0, app_flit(c, 9, 3)));
+    assert!(unit.try_push(0, app_flit(c, 9, 3)));
+    chip.now = 5;
+
+    // Clean rule: the arriving lane-1 flit must not fold into lane 0.
+    let probe =
+        Flit::new(0, Address::new(c, 0), (0, 0), ActionMsg::app(0, 7, 0).with_qid(1), 5);
+    assert!(!chip.dsan_probe_fold(c, port, &probe), "lane guard must refuse the fold");
+    let clean = chip.dsan_report().expect("auditor is armed");
+    assert_eq!(clean.fold_decisions, 1, "the negative decision is audited too");
+    assert_eq!(clean.cross_qid_folds, 0);
+    assert!(clean.is_clean());
+
+    // Unguarded rule: the same probe folds across lanes — and is flagged.
+    chip.cfg.dsan_legacy_qid_fold = true;
+    assert!(chip.dsan_probe_fold(c, port, &probe), "unguarded combiner folds across lanes");
+    let legacy = chip.dsan_report().expect("auditor is armed");
+    assert_eq!(legacy.fold_decisions, 2);
+    assert_eq!(legacy.cross_qid_folds, 1, "dsan must catch the cross-lane fold");
+    assert!(!legacy.is_clean(), "the unguarded combiner must audit dirty");
+    assert_ne!(
+        clean.fold_hash, legacy.fold_hash,
+        "the divergent decision must be visible in the audit hash"
+    );
+    // The bleed itself: lane 0's queued flit now carries lane 1's min.
+    let q = chip.cells[c as usize].inputs[port].peek(0, 1).unwrap();
+    assert_eq!(
+        (q.action.payload, q.action.qid),
+        (7, 0),
+        "cross-lane fold rewrote lane 0's payload with lane 1's"
+    );
+}
+
+/// Serve leg of the invariance grid: a concurrent multi-query run (mixed
+/// BFS/SSSP/PPR lanes, edge inserts at admission-wave barriers) must
+/// audit clean — zero cross-lane folds — with a bitwise-identical
+/// fold-decision stream at every shard/axis grid point. This is the
+/// qid-aware extension of contract 2: the decision hash now mixes each
+/// decision's query lane, so even a lane-permuting bug that preserves
+/// fold *counts* would surface as a hash divergence.
+#[test]
+fn serve_fold_audit_invariant_across_grid() {
+    use amcca::coordinator::serve::{random_queries, run_serve, ServeSpec};
+    let g = Dataset::WK.build(Scale::Tiny);
+    let mut reference: Option<DsanReport> = None;
+    for (shards, axis) in axis_grid() {
+        let mut cfg = dsan_cfg(shards, axis);
+        cfg.rpvo_max = 8;
+        let mut spec = ServeSpec::new(cfg, random_queries(g.n, 8, 7));
+        spec.mean_gap = 500;
+        spec.mutations = 16;
+        let out = run_serve(&spec, &g).unwrap();
+        let report = out.dsan.expect("auditor is armed");
+        assert_eq!(report.cross_qid_folds, 0, "lane guard must hold under serve");
+        assert!(report.is_clean(), "{axis:?} x {shards}: {}", report.summary());
+        match &reference {
+            None => reference = Some(report),
+            Some(want) => {
+                assert_eq!(want, &report, "serve audit diverged at {axis:?} x {shards}");
+            }
+        }
+    }
 }
 
 /// Contract 2: on a clean engine the *entire* fold-decision stream —

@@ -26,6 +26,7 @@ fn every_fixture_trips_its_rule() {
         ("float_ordering.rs", amcca_lint::RULE_FLOAT_ORDERING),
         ("wall_clock.rs", amcca_lint::RULE_WALL_CLOCK),
         ("combine_table.rs", amcca_lint::RULE_COMBINE_TABLE),
+        ("combine_qid.rs", amcca_lint::RULE_COMBINE_QID),
     ];
     for (name, rule) in fixtures {
         let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/lint/fixtures")).join(name);
@@ -53,5 +54,23 @@ fn combine_table_rule_sees_the_real_enum() {
             .iter()
             .any(|f| f.rule == amcca_lint::RULE_COMBINE_TABLE && f.msg.contains("MetaBump")),
         "dropping an arm must trip combine-table; got {findings:?}"
+    );
+}
+
+#[test]
+fn combine_qid_rule_sees_the_real_fold_guard() {
+    // Same bar as the combine-table probe: the rule must parse the real
+    // `try_fold` in arch/chip.rs — neutralizing the qid lane guard (the
+    // first `q.action.qid != flit.action.qid` comparison, ahead of the
+    // `app.combine` call) must produce a finding.
+    let chip = src_root().join("arch/chip.rs");
+    let source = std::fs::read_to_string(&chip).expect("read arch/chip.rs");
+    assert!(amcca_lint::lint_source("arch/chip.rs", &source).is_empty());
+    let broken = source.replacen("q.action.qid != flit.action.qid", "false", 1);
+    assert_ne!(broken, source, "expected the try_fold qid guard to exist");
+    let findings = amcca_lint::lint_source("arch/chip.rs", &broken);
+    assert!(
+        findings.iter().any(|f| f.rule == amcca_lint::RULE_COMBINE_QID),
+        "dropping the qid lane guard must trip combine-qid; got {findings:?}"
     );
 }

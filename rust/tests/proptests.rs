@@ -313,6 +313,7 @@ fn prop_combine_algebra() {
             payload: rng.next_u64() as u32,
             aux,
             ext: 0,
+            qid: 0,
         }
     }
 
@@ -363,6 +364,7 @@ fn prop_combine_algebra() {
                 payload: vals[i].to_bits(),
                 aux: iter,
                 ext: exts[i],
+                qid: 0,
             })
             .collect();
         // The engine always folds with the queued (earlier) flit on the
@@ -389,6 +391,66 @@ fn prop_combine_algebra() {
         assert_eq!(pr.combine(&msgs[0], &late), None, "pagerank: iterations must not mix");
         let kick = ActionMsg { aux: amcca::apps::pagerank::KICKOFF, ..msgs[0] };
         assert_eq!(pr.combine(&kick, &kick), None, "pagerank: kickoff must refuse");
+    });
+}
+
+/// Concurrent serving isolation: for any graph, chip, query mix, and
+/// admission schedule — optionally with edge inserts landing at
+/// admission-wave barriers — every served query's result equals the
+/// same query run alone on its admission snapshot (the
+/// `driver::run_solo_query` oracle; see `coordinator::serve`).
+#[test]
+fn prop_serve_isolation() {
+    use amcca::coordinator::serve::{random_queries, run_serve, ServeSpec};
+    qcheck("serve_isolation", |rng| {
+        let g = random_graph(rng, 120);
+        let cfg = random_cfg(rng);
+        let k = 2 + rng.below(5) as u16;
+        let queries = random_queries(g.n, k, rng.next_u64());
+        let mut spec = ServeSpec::new(cfg.clone(), queries.clone());
+        spec.mean_gap = 1 + rng.below(600);
+        if rng.chance(0.4) {
+            // Mutating run: the orchestrator's oracle checks every lane
+            // against its own admission-wave snapshot graph.
+            spec.mutations = 1 + rng.below(12) as u32;
+            spec.verify = true;
+            let out = run_serve(&spec, &g).unwrap();
+            assert_eq!(out.isolation_mismatches, 0, "a lane saw another lane or a later wave");
+        } else {
+            // Static graph: spot-check one random lane per case.
+            let out = run_serve(&spec, &g).unwrap();
+            let q = rng.below(k as u64) as u16;
+            let solo = driver::run_solo_query(cfg, &g, queries, q).unwrap();
+            assert_eq!(out.results[q as usize], solo, "lane {q} diverged from its solo run");
+        }
+    });
+}
+
+/// The combiner's query-lane guard under maximal fold pressure: several
+/// same-kind queries admitted back-to-back with combining forced on, so
+/// their flits interleave in the same router buffers. Same-lane flits
+/// fold (min-monoid); flits with unequal `qid`s must never fold — a
+/// cross-lane min would push one query's frontier into another's slab,
+/// which this property would catch as a solo-run mismatch.
+#[test]
+fn prop_combine_qid_guard() {
+    use amcca::apps::serve::{QueryKind, QuerySpec};
+    use amcca::coordinator::serve::{run_serve, ServeSpec};
+    qcheck("combine_qid_guard", |rng| {
+        let g = random_graph(rng, 100);
+        let mut cfg = random_cfg(rng);
+        cfg.combine = true;
+        let kind = if rng.chance(0.5) { QueryKind::Bfs } else { QueryKind::Sssp };
+        let k = 2 + rng.below(3) as usize;
+        let queries: Vec<QuerySpec> =
+            (0..k).map(|_| QuerySpec { kind, root: rng.below(g.n as u64) as u32 }).collect();
+        let mut spec = ServeSpec::new(cfg.clone(), queries.clone());
+        spec.mean_gap = 1; // back-to-back admissions: maximal wire overlap
+        let out = run_serve(&spec, &g).unwrap();
+        for q in 0..k as u16 {
+            let solo = driver::run_solo_query(cfg.clone(), &g, queries.clone(), q).unwrap();
+            assert_eq!(out.results[q as usize], solo, "cross-lane fold bled into lane {q}");
+        }
     });
 }
 

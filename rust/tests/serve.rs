@@ -1,0 +1,207 @@
+//! Concurrent-serving regression: K mixed BFS/SSSP/PPR queries admitted
+//! as a Poisson stream onto one resident graph (`coordinator::serve`)
+//! must be
+//!
+//! * **grid-invariant** — whole-`Metrics`, per-query results, and
+//!   per-query admission/settle cycles bit-identical across 1/2/4
+//!   engine shards and every banding axis, with combining on and off
+//!   (within a combine setting; folding legitimately changes wire
+//!   counters *between* settings);
+//! * **isolated** — every query's extracted result bitwise-equal to the
+//!   same query run *alone* on the same chip config (the solo oracle,
+//!   `driver::run_solo_query`), with the BFS/SSSP lanes additionally
+//!   equal to the BSP references;
+//! * **snapshot-consistent under mutation** — with edge inserts landing
+//!   at admission-wave barriers, every query still equals a solo run on
+//!   the graph as of its admission wave (see the serving section of the
+//!   `arch::chip` module docs for the contract).
+//!
+//! The combiner's query-lane guard is what makes the first two hold
+//! together on a hub-heavy graph: same-lane flits fold (min-monoid),
+//! cross-lane flits never do (amcca-lint `combine-qid` pins the guard
+//! textually; `tests/dsan.rs` proves the auditor catches its removal).
+
+use amcca::apps::driver;
+use amcca::apps::serve::{QueryKind, SCALE, UNREACHED};
+use amcca::arch::config::{ChipConfig, ShardAxis};
+use amcca::baseline::bsp;
+use amcca::coordinator::serve::{random_queries, run_serve, ServeOutcome, ServeSpec};
+use amcca::graph::datasets::{Dataset, Scale};
+use amcca::graph::model::HostGraph;
+
+const K: u16 = 8;
+const SEED: u64 = 11;
+
+fn wk() -> HostGraph {
+    Dataset::WK.build(Scale::Tiny)
+}
+
+fn cfg_on(shards: usize, axis: ShardAxis, combine: bool) -> ChipConfig {
+    let mut cfg = ChipConfig::torus(16);
+    cfg.seed = SEED;
+    cfg.rpvo_max = 8;
+    cfg.shards = shards;
+    cfg.shard_axis = axis;
+    cfg.combine = combine;
+    cfg
+}
+
+/// Serial reference plus every banding axis at 2 and 4 shards.
+fn axis_grid() -> Vec<(usize, ShardAxis)> {
+    let mut grid = vec![(1, ShardAxis::Rows)];
+    for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+        for shards in [2usize, 4] {
+            grid.push((shards, axis));
+        }
+    }
+    grid
+}
+
+fn serve_wk(g: &HostGraph, cfg: ChipConfig, mutations: u32, verify: bool) -> ServeOutcome {
+    let mut spec = ServeSpec::new(cfg, random_queries(g.n, K, SEED));
+    spec.mean_gap = 500; // well under WK solve time: admissions overlap
+    spec.mutations = mutations;
+    spec.verify = verify;
+    run_serve(&spec, g).unwrap()
+}
+
+/// Tentpole pin: the serve schedule (admissions, in-flight overlap,
+/// `run_until` deadline pauses, barrier drains) is bit-for-bit
+/// grid-invariant — whole `Metrics`, every per-vertex result, every
+/// admission/settle cycle — for combining on and off alike, with and
+/// without a mutation stream between waves.
+#[test]
+fn serve_grid_invariance() {
+    let g = wk();
+    for mutations in [0u32, 24] {
+        for combine in [true, false] {
+            let mut reference: Option<ServeOutcome> = None;
+            for &(shards, axis) in &axis_grid() {
+                let out = serve_wk(&g, cfg_on(shards, axis, combine), mutations, false);
+                match &reference {
+                    None => reference = Some(out),
+                    Some(r) => {
+                        assert_eq!(
+                            r.metrics, out.metrics,
+                            "metrics diverged at shards={shards} axis={axis:?} \
+                             combine={combine} mutations={mutations}"
+                        );
+                        assert_eq!(r.results, out.results, "per-query results diverged");
+                        assert_eq!(r.queries, out.queries, "admission/settle cycles diverged");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Results (not wire metrics) must also be bitwise-equal between the
+/// combining legs: same-lane folds are min-monoid for BFS/SSSP and
+/// refused for PPR, so folding is invisible in every slab.
+#[test]
+fn serve_results_survive_combining() {
+    let g = wk();
+    let on = serve_wk(&g, cfg_on(2, ShardAxis::Rows, true), 0, false);
+    let off = serve_wk(&g, cfg_on(2, ShardAxis::Rows, false), 0, false);
+    assert_eq!(on.results, off.results, "combining must be invisible in query results");
+    assert_eq!(on.queries, off.queries, "and in admission/settle cycles");
+}
+
+/// Isolation oracle: every concurrent query equals the same query run
+/// alone (same config, same full query set, one lane germinated), and
+/// the BFS/SSSP lanes equal the BSP references. Run with combining on
+/// and off — the lane guard is what keeps hub folds from bleeding one
+/// query into another.
+#[test]
+fn serve_queries_are_isolated() {
+    let g = wk();
+    let queries = random_queries(g.n, K, SEED);
+    for combine in [true, false] {
+        let cfg = cfg_on(2, ShardAxis::Rows, combine);
+        let out = serve_wk(&g, cfg.clone(), 0, false);
+        for (q, spec) in queries.iter().enumerate() {
+            let solo =
+                driver::run_solo_query(cfg.clone(), &g, queries.clone(), q as u16).unwrap();
+            assert_eq!(
+                out.results[q], solo,
+                "query {q} ({spec:?}) diverged from its solo run (combine={combine})"
+            );
+            match spec.kind {
+                QueryKind::Bfs => {
+                    assert_eq!(out.results[q], bsp::bfs_levels(&g, spec.root), "q{q} vs BSP BFS");
+                }
+                QueryKind::Sssp => {
+                    let want = bsp::sssp_dists(&g, spec.root);
+                    for (v, (&w, &got)) in want.iter().zip(&out.results[q]).enumerate() {
+                        let got = if got == UNREACHED { u64::MAX } else { got as u64 };
+                        assert_eq!(w, got, "q{q} SSSP mismatch at v{v}");
+                    }
+                }
+                QueryKind::Ppr => {
+                    let total: u64 = out.results[q].iter().map(|&m| m as u64).sum();
+                    assert_eq!(total, SCALE as u64, "q{q} PPR mass must be conserved");
+                }
+            }
+        }
+    }
+}
+
+/// Serve-under-mutation: inserts land only at admission-wave barriers,
+/// so every query's result equals a solo run on the snapshot it was
+/// admitted against — even though the resident graph keeps growing
+/// while later queries run.
+#[test]
+fn serve_under_mutation_matches_admission_snapshots() {
+    let g = wk();
+    for combine in [true, false] {
+        let out = serve_wk(&g, cfg_on(2, ShardAxis::Auto, combine), 48, true);
+        assert_eq!(
+            out.isolation_mismatches, 0,
+            "mutating between waves must not leak into admitted queries (combine={combine})"
+        );
+    }
+}
+
+/// Per-lane termination: once the driver has run to quiescence every
+/// admitted lane reports zero live carriers, its settle cycle is at or
+/// after its admission, and an unadmitted lane stays untouched (its
+/// slab everywhere at the init value).
+#[test]
+fn settled_lanes_are_retired_and_unadmitted_lanes_inert() {
+    let g = wk();
+    let queries = random_queries(g.n, K, SEED);
+    let cfg = cfg_on(1, ShardAxis::Rows, true);
+    let (mut chip, built) = driver::build_serve(cfg, &g, queries.clone()).unwrap();
+    // Admit all but the last lane.
+    for q in 0..K - 1 {
+        driver::admit_query(&mut chip, &built, q);
+    }
+    chip.run().unwrap();
+    for q in 0..K - 1 {
+        assert_eq!(chip.query_live(q), 0, "lane {q} must settle");
+        assert!(chip.query_settled_at(q).is_some());
+    }
+    let idle = driver::serve_result(&chip, &built, K - 1);
+    let init = match queries[K as usize - 1].kind {
+        QueryKind::Ppr => 0,
+        _ => UNREACHED,
+    };
+    assert!(
+        idle.iter().all(|&v| v == init),
+        "unadmitted lane {} must stay at its init value",
+        K - 1
+    );
+    // Late admission still works on the already-solved chip.
+    driver::admit_query(&mut chip, &built, K - 1);
+    chip.run().unwrap();
+    assert_eq!(chip.query_live(K - 1), 0);
+    let late = driver::serve_result(&chip, &built, K - 1);
+    let solo = driver::run_solo_query(
+        cfg_on(1, ShardAxis::Rows, true),
+        &g,
+        queries.clone(),
+        K - 1,
+    )
+    .unwrap();
+    assert_eq!(late, solo, "a lane admitted after others settled still matches its solo run");
+}
