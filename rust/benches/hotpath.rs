@@ -446,6 +446,74 @@ fn main() {
         }
     }
 
+    // --- runtime load rebalancing: MigrateObject between ingest waves ------
+    // A hub-concentrated stream under vicinity allocation heats the hub's
+    // anchor cells (a whole member subtree lands on its root's cell while
+    // it has space). rebalance=off leaves the pile where allocation put
+    // it; rebalance=on moves the hottest members to the coolest cells
+    // between waves through the full MigrateObject/TombstoneFwd/
+    // MigrateAck protocol. Results are bit-identical (pinned by
+    // tests/determinism.rs); the paired `sim-mcycles` and `p99-cell-load`
+    // entries quantify the queueing and occupancy-tail effect.
+    {
+        use amcca::arch::config::{AllocPolicy, BuildMode};
+        use amcca::rpvo::mutate::MutationBatch;
+        let g = Dataset::WK.build(scale);
+        let in_deg = g.in_degrees();
+        let hub = (0..g.n).min_by_key(|&v| in_deg[v as usize]).unwrap();
+        let mut edges = MutationBatch::random(g.n, 256, 1, 0x7EBA).edges;
+        edges.extend((0..768u32).map(|k| {
+            let u = (hub + 1 + k) % g.n;
+            (if u == hub { (hub + 1) % g.n } else { u }, hub, 1)
+        }));
+        let batch = MutationBatch { edges };
+        for (label, rebalance) in [("rebalance=off", false), ("rebalance=on", true)] {
+            let mut cfg = ChipConfig::torus(64);
+            cfg.rpvo_max = 16;
+            cfg.rhizome_growth = true;
+            cfg.alloc = AllocPolicy::Vicinity;
+            cfg.build_mode = BuildMode::OnChip;
+            cfg.rebalance = rebalance;
+            cfg.rebalance_threshold = 150;
+            let mut samples: Vec<std::time::Duration> = Vec::new();
+            let mut st = (0u64, 0u64, 0u64, 0u32);
+            for _ in 0..3 {
+                let (mut chip, mut built) = driver::run_bfs(cfg.clone(), &g, 0).unwrap();
+                let t0 = Instant::now();
+                driver::apply_mutations(&mut chip, &mut built, &batch).unwrap();
+                samples.push(t0.elapsed());
+                let counts: Vec<u32> =
+                    chip.cells.iter().map(|c| c.live_objects() as u32).collect();
+                st = (
+                    chip.metrics.cycles,
+                    chip.metrics.members_migrated,
+                    chip.metrics.tombstone_forwards,
+                    amcca::stats::metrics::p99_cell_load(&counts),
+                );
+            }
+            assert!(st.1 > 0 || !rebalance, "rebalance=on must migrate on the hub stream");
+            assert!(rebalance || st.1 == 0, "rebalance=off must not migrate");
+            samples.sort();
+            let dur = samples[samples.len() / 2];
+            let mcps = st.0 as f64 / dur.as_secs_f64() / 1e6;
+            let name = format!("bfs WK{sc} 64x64 [{label}]");
+            t.row(&[
+                name.clone(),
+                format!("{dur:?}"),
+                format!(
+                    "{mcps:.2} Mcycles/s ({} Mcyc, {} migrations, {} relays, p99 load {})",
+                    st.0 as f64 / 1e6,
+                    st.1,
+                    st.2,
+                    st.3
+                ),
+            ]);
+            json.push((name.clone(), mcps));
+            json.push((format!("{name} sim-mcycles"), st.0 as f64 / 1e6));
+            json.push((format!("{name} p99-cell-load"), st.3 as f64));
+        }
+    }
+
     // --- wire-side combining: hub flits folded in router buffers -----------
     // BFS and PageRank on the WK hub dataset with rhizomes, combining on
     // vs off (`ChipConfig::combine`). Folding changes what the wire

@@ -1,0 +1,13 @@
+//! Fixture: trips `tombstone-epoch`. The reclaim window is exactly one
+//! settled ingest wave, so the epoch must be matched with `==` on the
+//! settled wave counter; the `<=` below silently widens the window to
+//! "anything overdue", making the reclaim schedule depend on how many
+//! waves a particular batch happened to run.
+
+pub struct PendingTombstone {
+    pub epoch: u64,
+}
+
+pub fn reclaim_tombstones(pending: &mut Vec<PendingTombstone>, wave: u64) {
+    pending.retain(|t| !(t.epoch <= wave));
+}

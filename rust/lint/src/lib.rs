@@ -63,6 +63,9 @@ pub const RULE_WALL_CLOCK: &str = "wall-clock";
 pub const RULE_COMBINE_TABLE: &str = "combine-table";
 /// `try_fold` reaches `Application::combine` without a qid lane guard.
 pub const RULE_COMBINE_QID: &str = "combine-qid";
+/// Tombstone reclaim must compare its epoch with `==` on the settled
+/// wave counter, never an ordering operator.
+pub const RULE_TOMBSTONE_EPOCH: &str = "tombstone-epoch";
 
 /// Directories under `src/` that the default pass walks: the engine
 /// modules whose behaviour feeds `Metrics` (the five named in the issue)
@@ -96,6 +99,7 @@ pub fn lint_source(path: &str, source: &str) -> Vec<Finding> {
     check_wall_clock(path, &raw, &code, &mut out);
     check_combine_table(path, &raw, &code, &mut out);
     check_combine_qid(path, &raw, &code, &mut out);
+    check_tombstone_epoch(path, &raw, &code, &mut out);
     out.sort_by_key(|f| f.line);
     out
 }
@@ -479,6 +483,57 @@ fn check_combine_qid(path: &str, raw: &[&str], code: &[String], out: &mut Vec<Fi
     }
 }
 
+/// In any file defining the tombstone reclaim (`fn reclaim_tombstones`,
+/// the host half of the migration protocol in `rpvo::mutate`), the relay
+/// window must be decided by an exact `==` against the settled wave
+/// counter. An ordering comparison (`<`, `<=`, `>`, `>=`) on the epoch
+/// widens or narrows the one-wave relay window depending on how many
+/// waves a particular batch happened to run — the window stops being a
+/// pure function of the settled counter and the reclaim schedule can
+/// diverge between otherwise-identical runs. (Wall-clock comparisons are
+/// already banned outright by the `wall-clock` rule, which walks the same
+/// roots.)
+fn check_tombstone_epoch(path: &str, raw: &[&str], code: &[String], out: &mut Vec<Finding>) {
+    let Some(fn_at) = code.iter().position(|l| l.contains("fn reclaim_tombstones")) else {
+        return;
+    };
+    let body = block_of(code, fn_at);
+    let mut exact = false;
+    for (n, l) in &body {
+        if !has_token(l, "epoch") {
+            continue;
+        }
+        if l.contains("==") {
+            exact = true;
+        }
+        let ordered = ["epoch <", "epoch >", "< epoch", "> epoch", "<= epoch", ">= epoch"]
+            .iter()
+            .any(|p| l.contains(p));
+        if ordered && !allowed(raw, *n, RULE_TOMBSTONE_EPOCH) {
+            out.push(Finding {
+                path: path.to_string(),
+                line: *n,
+                rule: RULE_TOMBSTONE_EPOCH,
+                msg: "tombstone reclaim compares its epoch with an ordering operator; the \
+                      relay window is exactly one settled wave and must be decided by `==` \
+                      on the settled wave counter"
+                    .to_string(),
+            });
+        }
+    }
+    if !exact {
+        out.push(Finding {
+            path: path.to_string(),
+            line: fn_at + 1,
+            rule: RULE_TOMBSTONE_EPOCH,
+            msg: "`fn reclaim_tombstones` never compares its epoch with `==`; the relay \
+                  window must be an exact match on the settled wave counter (no wall-clock, \
+                  no live state)"
+                .to_string(),
+        });
+    }
+}
+
 /// Variant names of the enum whose `{` opens at/after `start`.
 fn enum_variants(code: &[String], start: usize) -> Vec<String> {
     let mut variants = Vec::new();
@@ -537,6 +592,7 @@ mod tests {
             (include_str!("../fixtures/wall_clock.rs"), RULE_WALL_CLOCK),
             (include_str!("../fixtures/combine_table.rs"), RULE_COMBINE_TABLE),
             (include_str!("../fixtures/combine_qid.rs"), RULE_COMBINE_QID),
+            (include_str!("../fixtures/tombstone_epoch.rs"), RULE_TOMBSTONE_EPOCH),
         ] {
             let findings = lint_source("fixture.rs", fixture);
             assert!(
@@ -618,6 +674,43 @@ mod tests {
             ok.replace("if q.action.qid != f.action.qid {\n        return false;\n    }\n    ", "");
         assert_ne!(bad, ok);
         assert_eq!(rules_of(&lint_source("x.rs", &bad)), vec![RULE_COMBINE_QID]);
+    }
+
+    #[test]
+    fn tombstone_epoch_requires_exact_match() {
+        let ok = "fn reclaim_tombstones(pending: &mut Vec<(u64, u32)>, wave: u64) {\n    \
+                  pending.retain(|t| t.0 != wave && t.epoch == wave);\n}\n";
+        assert!(lint_source("x.rs", ok).is_empty(), "exact == on the epoch must pass");
+        let ordered = "fn reclaim_tombstones(pending: &mut Vec<(u64, u32)>, wave: u64) {\n    \
+                       pending.retain(|t| !(t.epoch <= wave));\n}\n";
+        let rules = rules_of(&lint_source("x.rs", ordered));
+        assert!(rules.contains(&RULE_TOMBSTONE_EPOCH), "{rules:?}");
+        let never = "fn reclaim_tombstones(pending: &mut Vec<(u64, u32)>, wave: u64) {\n    \
+                     pending.clear();\n}\n";
+        assert_eq!(rules_of(&lint_source("x.rs", never)), vec![RULE_TOMBSTONE_EPOCH]);
+        // files without a reclaim fn are out of the rule's scope
+        assert!(lint_source("x.rs", "fn epoch_cmp(a: u64, b: u64) -> bool { a < b }\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn new_migration_kinds_need_explicit_combine_arms() {
+        // The three MigrateObject-protocol kinds must fail the table check
+        // until each carries an explicit arm — no wildcard inheritance.
+        let src = "pub enum ActionKind {\n    App = 0,\n    MigrateObject = 1,\n    \
+                   TombstoneFwd = 2,\n    MigrateAck = 3,\n}\n\nimpl ActionKind {\n    \
+                   pub fn combinable(self) -> bool {\n        match self {\n            \
+                   ActionKind::App => true,\n            ActionKind::TombstoneFwd => false,\n        \
+                   }\n    }\n}\n";
+        let f = lint_source("x.rs", src);
+        let missing: Vec<&str> = f
+            .iter()
+            .filter(|f| f.rule == RULE_COMBINE_TABLE)
+            .map(|f| f.msg.as_str())
+            .collect();
+        assert_eq!(missing.len(), 2, "{missing:?}");
+        assert!(missing.iter().any(|m| m.contains("MigrateObject")));
+        assert!(missing.iter().any(|m| m.contains("MigrateAck")));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use std::collections::VecDeque;
 
-use crate::arch::addr::Slot;
+use crate::arch::addr::{Address, Slot};
 use crate::diffusive::action::Diffusion;
 use crate::diffusive::throttle::Throttle;
 use crate::noc::channel::InputUnit;
@@ -28,6 +28,20 @@ pub struct Cell<S> {
     pub diffuse_q: VecDeque<Diffusion>,
     /// Object arena: vertex objects owned by this cell.
     pub objects: Vec<Object<S>>,
+    /// Slots reclaimed by the migration protocol, available for reuse.
+    /// Slots are stable indices into `objects` (external `Address`es point
+    /// at them), so a reclaimed object is never removed from the `Vec` —
+    /// its storage is gutted and the slot queued here for the next
+    /// [`Cell::alloc_object`]. Always empty with `--rebalance off`.
+    pub free: Vec<Slot>,
+    /// One-epoch tombstone relays installed by the migration protocol:
+    /// `(old slot, forwarding address, reclaim epoch)`. An action arriving
+    /// for a listed slot is re-injected toward the forwarding address
+    /// (`ActionKind::TombstoneFwd`); the host clears the entry — and frees
+    /// the slot — when the settled wave counter *equals* the reclaim epoch
+    /// (see `rpvo::mutate::reclaim_tombstones`). At most a handful of
+    /// entries per cell, so lookup is a linear scan.
+    pub tombstones: Vec<(Slot, Address, u64)>,
     /// SRAM words used by the arena (capacity enforcement at build time).
     pub mem_words: usize,
     /// Cell busy executing work until this cycle (exclusive).
@@ -56,6 +70,8 @@ impl<S> Cell<S> {
             action_q: VecDeque::new(),
             diffuse_q: VecDeque::new(),
             objects: Vec::new(),
+            free: Vec::new(),
+            tombstones: Vec::new(),
             mem_words: 0,
             busy_until: 0,
             wheel_armed: false,
@@ -80,11 +96,32 @@ impl<S> Cell<S> {
             || self.has_flits()
     }
 
-    /// Install an object, returning its slot.
+    /// Install an object, returning its slot. Reuses a migration-reclaimed
+    /// slot when one is free (LIFO — deterministic, host-ordered), else
+    /// appends.
     pub fn alloc_object(&mut self, obj: Object<S>) -> Slot {
         self.mem_words += obj.words();
-        self.objects.push(obj);
-        (self.objects.len() - 1) as Slot
+        if let Some(slot) = self.free.pop() {
+            self.objects[slot as usize] = obj;
+            slot
+        } else {
+            self.objects.push(obj);
+            (self.objects.len() - 1) as Slot
+        }
+    }
+
+    /// Resident vertex objects (arena load): allocated slots minus
+    /// reclaimed ones. This is the settled quantity the migration trigger
+    /// and the heat-map `load` channel see — compute load, where
+    /// [`Cell::occupancy`] is queue depth.
+    pub fn live_objects(&self) -> usize {
+        self.objects.len() - self.free.len()
+    }
+
+    /// The forwarding address if `slot` is currently tombstoned.
+    #[inline]
+    pub fn tombstone_for(&self, slot: Slot) -> Option<Address> {
+        self.tombstones.iter().find(|t| t.0 == slot).map(|t| t.1)
     }
 
     /// Total router buffer occupancy (heat-map frames).
@@ -151,6 +188,32 @@ mod tests {
         let s1 = c.alloc_object(Object::new_root(1, 0, 0));
         assert_eq!((s0, s1), (0, 1));
         assert!(c.mem_words >= 8);
+    }
+
+    #[test]
+    fn reclaimed_slots_are_reused_without_shifting_others() {
+        let mut c: Cell<u32> = Cell::new(2, 4);
+        let s0 = c.alloc_object(Object::new_root(0, 0, 0));
+        let s1 = c.alloc_object(Object::new_root(1, 0, 0));
+        let s2 = c.alloc_object(Object::new_root(2, 0, 0));
+        assert_eq!((s0, s1, s2), (0, 1, 2));
+        assert_eq!(c.live_objects(), 3);
+        c.free.push(s1);
+        assert_eq!(c.live_objects(), 2, "a freed slot leaves the arena load");
+        let s3 = c.alloc_object(Object::new_root(3, 0, 0));
+        assert_eq!(s3, s1, "freed slot is reused, not appended");
+        assert_eq!(c.objects.len(), 3, "slot indices of live objects never shift");
+        assert_eq!(c.objects[s3 as usize].vid, 3);
+        assert_eq!(c.live_objects(), 3);
+    }
+
+    #[test]
+    fn tombstone_lookup_finds_only_listed_slots() {
+        let mut c: Cell<u32> = Cell::new(2, 4);
+        assert_eq!(c.tombstone_for(0), None);
+        c.tombstones.push((2, Address::new(9, 4), 7));
+        assert_eq!(c.tombstone_for(2), Some(Address::new(9, 4)));
+        assert_eq!(c.tombstone_for(1), None);
     }
 
     #[test]

@@ -263,6 +263,61 @@
 //! same query run *alone* on the graph snapshot of its admission wave,
 //! which is exactly what `tests/serve.rs` pins.
 //!
+//! # Runtime load rebalancing (`ChipConfig::rebalance`)
+//!
+//! Placement is otherwise frozen at allocation time, so a
+//! hub-concentrated stream leaves a few cells saturated while their
+//! neighbours idle. With rebalancing on, [`crate::rpvo::mutate`] runs an
+//! inter-wave *rebalance phase*: after each ingest wave settles, a
+//! deterministic trigger — computed **only** from settled per-wave
+//! arena loads ([`Cell::live_objects`] per cell), never live racing
+//! state, so the decision is identical on every shard count and band
+//! axis — selects hot cells whose load exceeds a configured percentage
+//! of the chip median (`ChipConfig::rebalance_threshold`) and migrates
+//! one rhizome member root (plus its vicinity subtree) from each to the
+//! coolest eligible cell under the placement policy.
+//!
+//! **Migration/tombstone contract.** The move itself runs host-side
+//! between chip runs, under the same covenant runtime sprouting uses
+//! (no live shard's arena is ever mutated mid-cycle):
+//!   1. the member root and its whole vicinity subtree are copied to
+//!      the destination cell (state, meta, edges; intra-tree ghost
+//!      links remapped in a second pass);
+//!   2. every sibling's rhizome ring — and the host root table — is
+//!      respliced to the new locality, so all *future* traffic (fresh
+//!      germinates, ring shares, mutation actions) addresses the new
+//!      cell directly;
+//!   3. the vacated **root** slot gets a *one-epoch tombstone relay*
+//!      (`Cell::tombstones`): an action still addressed to the old slot
+//!      — in-flight application traffic, including laned `qid` queries
+//!      admitted by `--serve` before the move — is re-injected toward
+//!      the new address as [`ActionKind::TombstoneFwd`], which executes
+//!      at the destination exactly as `App` (same arm; a distinct kind
+//!      keeps forwards out of the wire combiner and countable as
+//!      [`Metrics::tombstone_forwards`]). Forwarding preserves the
+//!      query lane and touches it with delta 0 (one carrier consumed,
+//!      one created), so per-lane termination accounting stays exact.
+//!      Subtree ghost slots are reclaimed immediately — they are
+//!      referenced only by intra-tree links that moved with the copy.
+//!   4. the tombstone's reclaim epoch is stamped from the **settled
+//!      wave counter** (`Ingest::wave_no`): installed at `wave_no + 1`,
+//!      reclaimed by `rpvo::mutate::reclaim_tombstones` when the
+//!      counter *equals* the stamp (`==`, pinned by the lint's
+//!      `tombstone-epoch` rule — no wall-clock, no live state, no
+//!      open-ended windows). Reclaim re-aims every remaining stale
+//!      edge chip-wide, clears the relay, guts the slot, and queues it
+//!      on the cell's free list for reuse ([`Cell::alloc_object`]).
+//! In `BuildMode::OnChip` runs the tombstone is installed by the
+//! protocol's own action vocabulary instead of a host write: the host
+//! germinates a [`ActionKind::MigrateObject`] at the old cell, which
+//! installs the relay at its own locality and acknowledges the new
+//! root with a [`ActionKind::MigrateAck`] — mirroring the
+//! `SproutMember`/`RingSplice` handshake — inside one structural chip
+//! run. Ownership hand-off is audited: each tombstone install stamps an
+//! ownership-transfer record in the dsan shadow state
+//! (`DsanReport::ownership_transfers` / `transfer_hash`, commutative,
+//! so the audit is bit-identical across the shard/axis grid).
+//!
 //! # Determinism rules
 //!
 //! The invariants above are guarded *mechanically*, on two layers:
@@ -788,6 +843,23 @@ impl<A: Application> Chip<A> {
         self.mark_host(sibling.cc);
     }
 
+    /// Send a MigrateObject action to the OLD cell of a migrated member
+    /// root: the on-chip half of the rebalance protocol (see the module
+    /// docs). The old cell installs the one-epoch tombstone relay toward
+    /// `new_root` at its own locality — with `reclaim_epoch` stamped from
+    /// the settled wave counter — and acknowledges the new root with a
+    /// MigrateAck, mirroring the `SproutMember`/`RingSplice` handshake.
+    pub fn germinate_migrate(&mut self, old_root: Address, new_root: Address, reclaim_epoch: u64) {
+        let msg = ActionMsg::with_addr(
+            ActionKind::MigrateObject,
+            old_root.slot,
+            new_root,
+            reclaim_epoch as u32,
+        );
+        self.cells[old_root.cc as usize].action_q.push_back(msg);
+        self.mark_host(old_root.cc);
+    }
+
     /// Run until the termination detector reports, or `max_cycles`.
     ///
     /// With `cfg.shards > 1` this is an *adaptive hybrid*: cycles whose
@@ -929,11 +1001,13 @@ impl<A: Application> Chip<A> {
     fn sample_frame(&mut self) {
         let cap =
             (NUM_PORTS * self.cfg.num_vcs as usize * self.cfg.vc_buffer) as f32;
+        let mem = self.cfg.cell_mem_objects.max(1) as f32;
         let frame = Frame {
             cycle: self.now,
             dim_x: self.cfg.dim_x,
             dim_y: self.cfg.dim_y,
             occupancy: self.cells.iter().map(|c| c.occupancy() as f32 / cap).collect(),
+            load: self.cells.iter().map(|c| c.live_objects() as f32 / mem).collect(),
             congested: self
                 .congested
                 .iter()
@@ -996,6 +1070,22 @@ impl<A: Application> Chip<A> {
     pub fn dsan_report(&self) -> Option<DsanReport> {
         None
     }
+
+    /// Stamp an ownership-transfer record for a migrated member root:
+    /// the host install path of the rebalance protocol (host-built
+    /// graphs write the tombstone directly between runs; the on-chip
+    /// path records from the `MigrateObject` handler). No-op without
+    /// the `dsan` feature or with [`ChipConfig::dsan`] unarmed.
+    #[cfg(feature = "dsan")]
+    pub fn dsan_record_transfer(&self, old: CellId, new: CellId, epoch: u64) {
+        if self.cfg.dsan {
+            self.dsan.record_transfer(old, new, epoch);
+        }
+    }
+
+    /// See the `dsan`-feature version; a no-op stub without it.
+    #[cfg(not(feature = "dsan"))]
+    pub fn dsan_record_transfer(&self, _old: CellId, _new: CellId, _epoch: u64) {}
 
     /// TEST PROBE (dsan builds only): run one combiner fold decision for
     /// an arriving `flit` on cell `c`'s input `port` exactly as a
@@ -1083,8 +1173,9 @@ struct Ctx<'e, A: Application> {
 /// What each worker hands back for deterministic merging (shard order).
 struct ShardOut {
     metrics: Metrics,
-    /// (cycle, own-range occupancy, own-range congestion) heat-map rows.
-    frames: Vec<(u64, Vec<f32>, Vec<bool>)>,
+    /// (cycle, own-range occupancy, own-range arena load, own-range
+    /// congestion) heat-map rows.
+    frames: Vec<(u64, Vec<f32>, Vec<f32>, Vec<bool>)>,
     /// Marks pending at exit (non-empty only on abort or yield).
     leftover: Vec<CellId>,
     /// Timing-wheel entries parked at exit (non-empty only on abort or
@@ -1101,7 +1192,7 @@ fn shard_worker<A: Application, V: CellArena<S = A::State> + ?Sized>(
     let _guard = PoisonGuard(ctx.barrier);
     let mut sense = false;
     let mut metrics = Metrics::default();
-    let mut frames: Vec<(u64, Vec<f32>, Vec<bool>)> = Vec::new();
+    let mut frames: Vec<(u64, Vec<f32>, Vec<f32>, Vec<bool>)> = Vec::new();
     let mut now = ctx.start_now;
     // Leader-only quiescence tracking for the fully-stepped (heat-map) mode.
     let mut quiet_since: Option<u64> = None;
@@ -1249,8 +1340,8 @@ fn shard_worker<A: Application, V: CellArena<S = A::State> + ?Sized>(
             }
             lane.finish_cycle();
             if ctx.cfg.heatmap_every > 0 && now % ctx.cfg.heatmap_every == 0 {
-                let (occ, cong) = lane.sample_segment();
-                frames.push((now, occ, cong));
+                let (occ, load, cong) = lane.sample_segment();
+                frames.push((now, occ, load, cong));
             }
         }
     }
@@ -1413,11 +1504,13 @@ impl<A: Application> Chip<A> {
                 // row bands this is plain concatenation; column bands
                 // interleave).
                 let mut occupancy = vec![0f32; n];
+                let mut load = vec![0f32; n];
                 let mut cong = vec![false; n];
                 for (k, o) in outs.iter().enumerate() {
                     band.for_each_cell(k, |local, c| {
                         occupancy[c as usize] = o.frames[idx].1[local];
-                        cong[c as usize] = o.frames[idx].2[local];
+                        load[c as usize] = o.frames[idx].2[local];
+                        cong[c as usize] = o.frames[idx].3[local];
                     });
                 }
                 self.heatmap.frames.push(Frame {
@@ -1425,6 +1518,7 @@ impl<A: Application> Chip<A> {
                     dim_x,
                     dim_y,
                     occupancy,
+                    load,
                     congested: cong,
                 });
             }
@@ -1478,7 +1572,16 @@ impl<A: Application> Chip<A> {
 /// machinery alone.
 #[inline]
 fn lane_tracked(kind: ActionKind) -> bool {
-    matches!(kind, ActionKind::App | ActionKind::RelayDiffuse | ActionKind::RhizomeShare)
+    // `TombstoneFwd` is an application action in flight (a re-injected
+    // `App`), so it stays in its query's carrier balance; the migration
+    // control kinds (`MigrateObject`/`MigrateAck`) are structural.
+    matches!(
+        kind,
+        ActionKind::App
+            | ActionKind::RelayDiffuse
+            | ActionKind::RhizomeShare
+            | ActionKind::TombstoneFwd
+    )
 }
 
 /// A shard's view of one cycle: its own cells (mutable, behind the
@@ -1604,6 +1707,21 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     #[cfg(not(feature = "dsan"))]
     #[inline(always)]
     fn dsan_cross_qid_fold(&self) {}
+
+    /// A tombstone install handed ownership of a migrated root from cell
+    /// `old` to cell `new` with reclaim epoch `epoch` (on-chip
+    /// `MigrateObject` path; the host install path records through
+    /// [`Chip::dsan_record_transfer`]).
+    #[cfg(feature = "dsan")]
+    fn dsan_transfer(&self, old: CellId, new: CellId, epoch: u64) {
+        if self.cfg.dsan {
+            self.dsan.record_transfer(old, new, epoch);
+        }
+    }
+
+    #[cfg(not(feature = "dsan"))]
+    #[inline(always)]
+    fn dsan_transfer(&self, _old: CellId, _new: CellId, _epoch: u64) {}
 
     /// Mark a cell for processing next cycle (dedup via epoch stamps).
     #[inline]
@@ -1834,9 +1952,49 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         }
         let mut busy = 1u32; // predicate resolution / dispatch
         self.metrics.sram_reads += 2; // state + operand fetch
+        // Tombstone relay (rebalance module docs): an application action
+        // still addressed to a migrated root's old slot is re-injected
+        // toward the new locality before the slot is reclaimed. Only
+        // App-class traffic can legitimately land on a tombstone (rings,
+        // root tables, and host addressing were respliced at the
+        // migration barrier; a retried MigrateObject must re-run its own
+        // handler, not forward), so the intercept is gated on the kind.
+        // The forward re-tags as `TombstoneFwd` — executed as `App` at
+        // the destination — preserving payload, aux, ext, and the query
+        // lane (delta-0 touch: one carrier consumed, one created).
+        if matches!(msg.kind, ActionKind::App | ActionKind::TombstoneFwd) {
+            if let Some(fwd) = self.cells.at(i).tombstone_for(msg.target) {
+            let fwd_msg = ActionMsg { kind: ActionKind::TombstoneFwd, target: fwd.slot, ..msg };
+            let epoch = now + 1;
+            if fwd.cc == c {
+                let cell = self.cells.at_mut(i);
+                cell.action_q.push_back(fwd_msg);
+                self.metrics.messages_local += 1;
+                self.metrics.tombstone_forwards += 1;
+                self.metrics.query_touch(msg.qid, now, 0);
+                Self::mark(&mut self.st.next, cell, c, epoch);
+            } else if self.inject(c, fwd, fwd_msg) {
+                self.metrics.messages_sent += 1;
+                self.metrics.tombstone_forwards += 1;
+                self.metrics.query_touch(msg.qid, now, 0);
+                let cell = self.cells.at_mut(i);
+                Self::mark(&mut self.st.next, cell, c, epoch);
+            } else {
+                // Local port full: retry the original next cycle (the
+                // relay is a pure re-aim, so the retry is idempotent).
+                let cell = self.cells.at_mut(i);
+                cell.action_q.push_back(msg);
+                Self::mark(&mut self.st.next, cell, c, epoch);
+            }
+            let cell = self.cells.at_mut(i);
+            cell.busy_until = now + 1;
+            self.metrics.compute_cycles += 1;
+            return;
+            }
+        }
         let slot = msg.target as usize;
         match msg.kind {
-            ActionKind::App => {
+            ActionKind::App | ActionKind::TombstoneFwd => {
                 let cell = self.cells.at_mut(i);
                 let obj = &mut cell.objects[slot];
                 if self.app.predicate(&obj.state, &msg) {
@@ -1916,6 +2074,16 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
                 obj.meta.rhizome_size += 1;
                 self.metrics.ring_splices += 1;
                 self.metrics.sram_writes += 1;
+                busy += 1;
+            }
+            ActionKind::MigrateObject => {
+                busy += self.handle_migrate_object(c, &msg);
+            }
+            ActionKind::MigrateAck => {
+                // Handshake closing a MigrateObject: the new root learns
+                // its old slot's relay is armed. The packed operand (the
+                // old address) is informational — the host already owns
+                // the root table — so the ack only charges the visit.
                 busy += 1;
             }
         }
@@ -2054,6 +2222,52 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
         } else {
             // Local port full: retry next cycle (only the ack re-runs;
             // the splice above is idempotent).
+            let cell = self.cells.at_mut(i);
+            cell.action_q.push_back(*msg);
+            Self::mark(&mut self.st.next, cell, c, epoch);
+        }
+        2
+    }
+
+    /// Handle a MigrateObject action (rebalance protocol, module docs):
+    /// executed at the migrated member's OLD cell, with the new root
+    /// address packed in (payload, aux) and the reclaim epoch — stamped
+    /// from the settled wave counter — in `ext`. Installs the one-epoch
+    /// tombstone relay at this locality and acknowledges the new root
+    /// with a MigrateAck, mirroring the `SproutMember`/`RingSplice`
+    /// handshake. The install is guarded (idempotent), so an ack that
+    /// could not be injected this cycle retries by re-executing the
+    /// whole action. Returns the compute cycles charged.
+    fn handle_migrate_object(&mut self, c: CellId, msg: &ActionMsg) -> u32 {
+        let new_root = msg.operand_addr();
+        let i = self.idx(c);
+        {
+            let cell = self.cells.at_mut(i);
+            if cell.tombstone_for(msg.target).is_none() {
+                cell.tombstones.push((msg.target, new_root, msg.ext as u64));
+                self.metrics.sram_writes += 1;
+                self.dsan_transfer(c, new_root.cc, msg.ext as u64);
+            }
+        }
+        let ack = ActionMsg::with_addr(
+            ActionKind::MigrateAck,
+            new_root.slot,
+            Address::new(c, msg.target),
+            0,
+        );
+        let epoch = self.now + 1;
+        if new_root.cc == c {
+            let cell = self.cells.at_mut(i);
+            cell.action_q.push_back(ack);
+            self.metrics.messages_local += 1;
+            Self::mark(&mut self.st.next, cell, c, epoch);
+        } else if self.inject(c, new_root, ack) {
+            self.metrics.messages_sent += 1;
+            let cell = self.cells.at_mut(i);
+            Self::mark(&mut self.st.next, cell, c, epoch);
+        } else {
+            // Local port full: retry next cycle (only the ack re-runs;
+            // the tombstone install above is idempotent).
             let cell = self.cells.at_mut(i);
             cell.action_q.push_back(*msg);
             Self::mark(&mut self.st.next, cell, c, epoch);
@@ -2455,16 +2669,19 @@ impl<'a, A: Application, V: CellArena<S = A::State> + ?Sized> Lane<'a, A, V> {
     /// order (call after `finish_cycle` so congestion flags are fresh).
     /// The merge in `run_sharded` scatters the segments back through the
     /// same band map.
-    fn sample_segment(&self) -> (Vec<f32>, Vec<bool>) {
+    fn sample_segment(&self) -> (Vec<f32>, Vec<f32>, Vec<bool>) {
         let cap = (NUM_PORTS * self.cfg.num_vcs as usize * self.cfg.vc_buffer) as f32;
+        let mem = self.cfg.cell_mem_objects.max(1) as f32;
         let len = self.band.len_of(self.k) as usize;
         let mut occ = Vec::with_capacity(len);
+        let mut load = Vec::with_capacity(len);
         let mut cong = Vec::with_capacity(len);
         self.band.for_each_cell(self.k, |local, c| {
             occ.push(self.cells.at(local).occupancy() as f32 / cap);
+            load.push(self.cells.at(local).live_objects() as f32 / mem);
             cong.push(self.congested[c as usize].load(Ordering::Relaxed));
         });
-        (occ, cong)
+        (occ, load, cong)
     }
 }
 
@@ -2934,6 +3151,7 @@ mod tests {
         for (a, b) in rows.heatmap.frames.iter().zip(&cols.heatmap.frames) {
             assert_eq!(a.cycle, b.cycle);
             assert_eq!(a.occupancy, b.occupancy, "cycle {} occupancy diverged", a.cycle);
+            assert_eq!(a.load, b.load, "cycle {} arena load diverged", a.cycle);
             assert_eq!(a.congested, b.congested, "cycle {} congestion diverged", a.cycle);
         }
     }
@@ -2949,6 +3167,53 @@ mod tests {
         slow.run().unwrap();
         assert_eq!(fast.metrics, slow.metrics);
         assert_eq!(fast.now, slow.now);
+    }
+
+    #[test]
+    fn migrate_tombstone_protocol_forwards_in_flight_actions() {
+        // On-chip half of the rebalance protocol: a MigrateObject at the
+        // old cell arms the one-epoch tombstone relay and acks the new
+        // root; an App action still addressed to the old slot is then
+        // re-injected as TombstoneFwd and executes at the new locality.
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let old = chip.install(0, Object::new_root(7, 0, 0));
+        let new = chip.install(15, Object::new_root(7, 1, 0));
+        chip.germinate_migrate(old, new, 3);
+        chip.run().unwrap();
+        assert_eq!(
+            chip.cells[old.cc as usize].tombstone_for(old.slot),
+            Some(new),
+            "MigrateObject must install the relay at the old locality"
+        );
+        chip.germinate(old, ActionKind::App, 5, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(new).state, 5, "forwarded action executes at the new root");
+        assert_eq!(chip.object(old).state, 0, "old copy stays untouched behind the relay");
+        assert_eq!(chip.metrics.tombstone_forwards, 1);
+        assert_eq!(chip.query_live(0), 0, "forwarding must keep lane accounting balanced");
+    }
+
+    #[test]
+    fn chained_tombstones_forward_to_the_final_locality() {
+        // A member migrated twice before reclaim: old -> mid -> new. The
+        // forward re-executes the relay check at each hop, so an action
+        // aimed at the oldest slot still lands on the final copy.
+        let mut cfg = ChipConfig::mesh(4);
+        cfg.throttling = false;
+        let mut chip = Chip::new(cfg, Flood).unwrap();
+        let old = chip.install(0, Object::new_root(7, 0, 0));
+        let mid = chip.install(5, Object::new_root(7, 1, 0));
+        let new = chip.install(10, Object::new_root(7, 2, 0));
+        chip.germinate_migrate(old, mid, 3);
+        chip.germinate_migrate(mid, new, 4);
+        chip.run().unwrap();
+        chip.germinate(old, ActionKind::App, 9, 0);
+        chip.run().unwrap();
+        assert_eq!(chip.object(new).state, 9);
+        assert_eq!(chip.metrics.tombstone_forwards, 2, "one forward per relay hop");
+        assert_eq!(chip.query_live(0), 0);
     }
 
     #[test]

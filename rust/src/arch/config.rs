@@ -80,6 +80,28 @@ pub struct ChipConfig {
     /// across shard counts, banding axes, and ingest-wave caps either
     /// way; this flag only changes *which* structure the stream builds.
     pub rhizome_growth: bool,
+    /// Runtime load rebalancing (`--rebalance on`): between ingest waves,
+    /// a deterministic trigger — computed only from the *settled* per-cell
+    /// object-arena loads after the wave's repairs drained, never from
+    /// live racing state, so the decision is identical on every shard
+    /// count and banding axis — selects member roots on cells whose load
+    /// exceeds [`ChipConfig::rebalance_threshold`] percent of the chip
+    /// median, copies each member (state, meta, vicinity subtree) to the
+    /// coolest eligible cell under the placement policy, resplices its
+    /// rhizome ring and ghost links, and leaves a one-epoch tombstone
+    /// relay on the old cell that forwards in-flight actions (including
+    /// laned `--serve` query traffic) until the next settled wave reclaims
+    /// the slot. Off by default: placement stays frozen at allocation
+    /// time, the pre-rebalance behaviour. Results remain bit-identical
+    /// across shard counts and banding axes either way; see the
+    /// migration/tombstone contract in the `arch::chip` module docs.
+    pub rebalance: bool,
+    /// Hot-cell threshold for the migration trigger, in percent of the
+    /// chip-median settled cell load (`--rebalance-threshold`, default
+    /// 200 = migrate from cells loaded past 2x the median). Pure integer
+    /// arithmetic on the settled load vector — the trigger is a pure
+    /// function of that vector (pinned by a qcheck property).
+    pub rebalance_threshold: u32,
     /// Wire-side message combining (`--combine on|off`, default on): fold
     /// same-destination application actions at the router-buffer choke
     /// points — a cell's Local injection port and the receiving input
@@ -163,6 +185,8 @@ impl ChipConfig {
             ghost_arity: 2,
             rpvo_max: 1,
             rhizome_growth: false,
+            rebalance: false,
+            rebalance_threshold: 200,
             combine: true,
             alloc: AllocPolicy::Mixed,
             build_mode: BuildMode::Host,
@@ -255,6 +279,11 @@ impl ChipConfig {
         anyhow::ensure!(self.local_edgelist_size >= 1, "local edge-list must hold >= 1 edge");
         anyhow::ensure!(self.ghost_arity >= 1, "ghost arity must be >= 1");
         anyhow::ensure!(self.rpvo_max >= 1, "rpvo_max must be >= 1");
+        anyhow::ensure!(
+            self.rebalance_threshold >= 100,
+            "rebalance_threshold is a percentage of the median cell load and must be >= 100 \
+             (below that every at-median cell would count as hot)"
+        );
         Ok(())
     }
 }

@@ -65,6 +65,18 @@ pub struct DsanReport {
     /// (must be impossible: `refresh` runs at end-of-cycle N, routing
     /// reads at N+1).
     pub raw_hazards: u64,
+    /// Ownership-transfer stamps recorded by the rebalance protocol: one
+    /// per tombstone install (host write or on-chip `MigrateObject`),
+    /// handing a migrated member root from its old cell to its new one.
+    /// A comparison value like `fold_hash`, not a violation count — the
+    /// grid-invariance suite pins it identical across shard counts and
+    /// band axes.
+    pub ownership_transfers: u64,
+    /// Commutative hash over every transfer tuple `(old, new, epoch)` —
+    /// same construction as `fold_hash`, so two runs that migrated the
+    /// same members to the same places on the same settled epochs match
+    /// exactly, regardless of recording order.
+    pub transfer_hash: u64,
 }
 
 impl DsanReport {
@@ -83,7 +95,8 @@ impl DsanReport {
     pub fn summary(&self) -> String {
         format!(
             "dsan: fold_hash={:#018x} decisions={} foreign_vc_folds={} cross_qid_folds={} \
-             ownership_violations={} ww_conflicts={} raw_hazards={} [{}]",
+             ownership_violations={} ww_conflicts={} raw_hazards={} transfers={} \
+             transfer_hash={:#018x} [{}]",
             self.fold_hash,
             self.fold_decisions,
             self.foreign_vc_folds,
@@ -91,6 +104,8 @@ impl DsanReport {
             self.ownership_violations,
             self.ww_conflicts,
             self.raw_hazards,
+            self.ownership_transfers,
+            self.transfer_hash,
             if self.is_clean() { "clean" } else { "VIOLATIONS" }
         )
     }
@@ -127,6 +142,8 @@ mod gated {
         ownership_violations: AtomicU64,
         ww_conflicts: AtomicU64,
         raw_hazards: AtomicU64,
+        ownership_transfers: AtomicU64,
+        transfer_hash: AtomicU64,
         /// Per-cell write stamp, packed `(cycle << 8) | (shard + 1)`.
         /// Cycle counts stay far below 2^56 and `MAX_SHARDS` is 16, so
         /// the packing is exact. 0 = never touched.
@@ -146,6 +163,8 @@ mod gated {
                 ownership_violations: AtomicU64::new(0),
                 ww_conflicts: AtomicU64::new(0),
                 raw_hazards: AtomicU64::new(0),
+                ownership_transfers: AtomicU64::new(0),
+                transfer_hash: AtomicU64::new(0),
                 access: (0..cells).map(|_| AtomicU64::new(0)).collect(),
                 space_stamp: (0..cells).map(|_| AtomicU64::new(u64::MAX)).collect(),
             }
@@ -219,6 +238,18 @@ mod gated {
             self.cross_qid_folds.fetch_add(1, Ordering::Relaxed);
         }
 
+        /// Stamp one ownership transfer of a migrated member root from
+        /// cell `old` to cell `new`, reclaimable at settled-wave `epoch`.
+        /// Commutative like `record_fold`: host installs (serial, between
+        /// runs) and on-chip `MigrateObject` installs (any shard, any
+        /// barrier interleaving) land on the same accumulated hash as
+        /// long as the transfer *set* matches.
+        pub fn record_transfer(&self, old: CellId, new: CellId, epoch: u64) {
+            let word = mix((old as u64) << 32 | new as u64) ^ mix(0x4_0000_0000 | epoch);
+            self.transfer_hash.fetch_add(mix(word), Ordering::Relaxed);
+            self.ownership_transfers.fetch_add(1, Ordering::Relaxed);
+        }
+
         pub fn report(&self) -> DsanReport {
             DsanReport {
                 fold_hash: self.fold_hash.load(Ordering::Relaxed),
@@ -228,6 +259,8 @@ mod gated {
                 ownership_violations: self.ownership_violations.load(Ordering::Relaxed),
                 ww_conflicts: self.ww_conflicts.load(Ordering::Relaxed),
                 raw_hazards: self.raw_hazards.load(Ordering::Relaxed),
+                ownership_transfers: self.ownership_transfers.load(Ordering::Relaxed),
+                transfer_hash: self.transfer_hash.load(Ordering::Relaxed),
             }
         }
     }
@@ -282,6 +315,32 @@ mod gated {
             let r = d.report();
             assert_eq!(r.cross_qid_folds, 1);
             assert!(!r.is_clean(), "a cross-lane fold is a violation");
+        }
+
+        #[test]
+        fn transfer_hash_is_order_independent_and_clean() {
+            let a = Dsan::new(4);
+            let b = Dsan::new(4);
+            let transfers: [(CellId, CellId, u64); 3] = [(0, 3, 2), (1, 2, 2), (0, 1, 5)];
+            for &(old, new, ep) in &transfers {
+                a.record_transfer(old, new, ep);
+            }
+            for &(old, new, ep) in transfers.iter().rev() {
+                b.record_transfer(old, new, ep);
+            }
+            assert_eq!(a.report(), b.report());
+            assert_eq!(a.report().ownership_transfers, 3);
+            assert_ne!(a.report().transfer_hash, 0);
+            assert!(a.report().is_clean(), "transfers are audit data, not violations");
+            // Direction and epoch must both be visible in the hash.
+            let fwd = Dsan::new(4);
+            let rev = Dsan::new(4);
+            let late = Dsan::new(4);
+            fwd.record_transfer(0, 3, 2);
+            rev.record_transfer(3, 0, 2);
+            late.record_transfer(0, 3, 4);
+            assert_ne!(fwd.report().transfer_hash, rev.report().transfer_hash);
+            assert_ne!(fwd.report().transfer_hash, late.report().transfer_hash);
         }
 
         #[test]

@@ -121,6 +121,10 @@ pub struct Outcome {
     pub heatmap: Heatmap,
     pub rhizomatic_vertices: u64,
     pub objects: u64,
+    /// p99 per-cell object-arena load (live objects, nearest-rank) at run
+    /// end — the headline the rebalance bench rows pair with Mcycles: on a
+    /// hub-concentrated stream `--rebalance on` must pull this down.
+    pub p99_cell_load: u32,
     pub verified_mismatches: usize,
     /// Present iff the run streamed mutations (`Experiment::mutations`).
     pub stream: Option<StreamReport>,
@@ -243,6 +247,9 @@ fn solved_outcome<A: Application>(
         heatmap: chip.heatmap.clone(),
         rhizomatic_vertices: built.rhizomatic_vertices,
         objects: built.objects,
+        p99_cell_load: crate::stats::metrics::p99_cell_load(
+            &chip.cells.iter().map(|c| c.live_objects() as u32).collect::<Vec<_>>(),
+        ),
         verified_mismatches: mism,
         stream,
         dsan: chip.dsan_report(),

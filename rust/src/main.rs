@@ -93,6 +93,17 @@ fn config_from(args: &Args) -> anyhow::Result<ChipConfig> {
             _ => anyhow::bail!("unknown --rhizome-growth {v} (on|off)"),
         };
     }
+    // Runtime load rebalancing: migrate hot rhizome members to cool cells
+    // between ingest waves via the MigrateObject/tombstone protocol (off
+    // by default — placement frozen at allocation time).
+    if let Some(v) = args.get("rebalance") {
+        cfg.rebalance = match v {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            _ => anyhow::bail!("unknown --rebalance {v} (on|off)"),
+        };
+    }
+    cfg.rebalance_threshold = args.num("rebalance-threshold", cfg.rebalance_threshold)?;
     // Wire-side message combining: fold same-destination app actions in
     // router buffers (on by default — off reproduces pre-combining NoC
     // traffic; min-monoid app results are bitwise-identical either way).
@@ -215,6 +226,10 @@ fn real_main() -> anyhow::Result<()> {
                  \x20 --rpvo-max N                max RPVOs per rhizome (default 1)\n\
                  \x20 --rhizome-growth on|off     sprout rhizome members at runtime when a\n\
                  \x20                             streamed vertex becomes a hub (default off)\n\
+                 \x20 --rebalance on|off          migrate hot rhizome members to cool cells\n\
+                 \x20                             between ingest waves (default off)\n\
+                 \x20 --rebalance-threshold N     hot-cell trigger, percent of the median\n\
+                 \x20                             settled cell load (default 200, min 100)\n\
                  \x20 --build host|onchip         graph construction path: host-side fast\n\
                  \x20                             path or message-driven InsertEdge actions\n\
                  \x20 --mutations N               (run) stream N random edge inserts through\n\
@@ -348,6 +363,13 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             s.stats_post.format(),
             out.metrics.members_sprouted,
             out.metrics.ring_splices,
+        );
+        // The rebalance headline (CI smoke greps these): migrations and
+        // relay traffic from the stream, plus the p99 arena load the
+        // migrations are supposed to pull down.
+        println!(
+            "rebalance: members_migrated={} tombstone_forwards={} p99_cell_load={}",
+            out.metrics.members_migrated, out.metrics.tombstone_forwards, out.p99_cell_load,
         );
         println!(
             "share histogram pre-stream (tail mass {:.1}%):\n{}",
@@ -552,6 +574,8 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     t.row(&["ghost arity".into(), cfg.ghost_arity.to_string()]);
     t.row(&["rpvo_max".into(), cfg.rpvo_max.to_string()]);
     t.row(&["rhizome growth".into(), cfg.rhizome_growth.to_string()]);
+    t.row(&["rebalance".into(), cfg.rebalance.to_string()]);
+    t.row(&["rebalance threshold %".into(), cfg.rebalance_threshold.to_string()]);
     t.row(&["combining".into(), cfg.combine.to_string()]);
     print!("{}", t.render());
     Ok(())

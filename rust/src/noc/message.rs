@@ -49,6 +49,29 @@ pub enum ActionKind {
     /// ring — so the widened ring closes member-by-member at the data's
     /// locality, with no host-side stop-the-world.
     RingSplice = 6,
+    /// Runtime load rebalancing (ROADMAP item 5): the target member root
+    /// has been copied to a cooler cell and this action, executed at the
+    /// *old* cell, installs a one-epoch tombstone relay there. The new
+    /// root's address rides packed in (payload, aux); `ext` carries the
+    /// settled-wave epoch at which the host reclaims the slot (compared
+    /// with `==` — see the `tombstone-epoch` lint rule). The old cell
+    /// acknowledges with a [`ActionKind::MigrateAck`] to the new root.
+    /// Handled by the engine (`arch::chip`); trigger and copy protocol in
+    /// [`crate::rpvo::mutate`].
+    MigrateObject = 7,
+    /// An application action that arrived at a tombstoned slot and was
+    /// re-injected toward the member's new locality. Semantically
+    /// identical to [`ActionKind::App`] at the destination (same
+    /// payload/aux/ext/qid, target rewritten to the new slot); the
+    /// distinct kind keeps forwarded traffic out of the router combiner
+    /// (a forwarded flit's old-slot fold window has already closed) and
+    /// countable (`tombstone_forwards`).
+    TombstoneFwd = 8,
+    /// Handshake closing a [`ActionKind::MigrateObject`]: the old cell
+    /// confirms its tombstone is armed to the freshly installed root
+    /// (old root address packed in (payload, aux)), mirroring how
+    /// [`ActionKind::RingSplice`] closes a sprout.
+    MigrateAck = 9,
 }
 
 impl ActionKind {
@@ -74,6 +97,9 @@ impl ActionKind {
             ActionKind::MetaBump => false,
             ActionKind::SproutMember => false,
             ActionKind::RingSplice => false,
+            ActionKind::MigrateObject => false,
+            ActionKind::TombstoneFwd => false,
+            ActionKind::MigrateAck => false,
         }
     }
 }
@@ -284,8 +310,18 @@ mod tests {
     #[test]
     fn only_app_actions_fold() {
         use ActionKind::*;
-        for k in [App, RelayDiffuse, RhizomeShare, InsertEdge, MetaBump, SproutMember, RingSplice]
-        {
+        for k in [
+            App,
+            RelayDiffuse,
+            RhizomeShare,
+            InsertEdge,
+            MetaBump,
+            SproutMember,
+            RingSplice,
+            MigrateObject,
+            TombstoneFwd,
+            MigrateAck,
+        ] {
             assert_eq!(k.combinable(), k == App, "{k:?}");
         }
     }

@@ -84,7 +84,7 @@
 //! barrier semantics, since queries admitted later re-traverse the
 //! widened edge lists from scratch and need no repair ripple.
 
-use crate::arch::addr::Address;
+use crate::arch::addr::{Address, CellId, Slot};
 use crate::arch::chip::Chip;
 use crate::arch::config::{AllocPolicy, BuildMode};
 use crate::diffusive::handler::Application;
@@ -108,6 +108,15 @@ pub struct Ingest {
     out_seq: Vec<u32>,
     /// Reused tree-walk queue (the insert hot path never allocates).
     scratch: Vec<Address>,
+    /// Settled ingest-wave counter: incremented once per wave *after* the
+    /// wave's repairs drained. The rebalance trigger and the tombstone
+    /// reclaim compare against this — never against live racing state —
+    /// which is what makes both decisions identical on every shard count
+    /// and banding axis.
+    pub wave_no: u64,
+    /// Migrations whose old root slot still carries a tombstone relay,
+    /// awaiting reclaim at their epoch (see [`reclaim_tombstones`]).
+    pub tombstones: Vec<PendingTombstone>,
 }
 
 impl Ingest {
@@ -117,17 +126,38 @@ impl Ingest {
             in_seq: vec![0; n as usize],
             out_seq: vec![0; n as usize],
             scratch: Vec::new(),
+            wave_no: 0,
+            tombstones: Vec::new(),
         }
     }
 
     /// Re-read per-cell occupancy from the live arenas. Needed after an
     /// on-chip mutation run: `InsertEdge` actions grow ghosts engine-side,
-    /// invisible to the host-side allocator until this resync.
+    /// invisible to the host-side allocator until this resync. Counts
+    /// *live* objects so migration-reclaimed slots read as free capacity.
     pub fn resync<A: Application>(&mut self, chip: &Chip<A>) {
         for (ci, cell) in chip.cells.iter().enumerate() {
-            self.alloc.counts[ci] = cell.objects.len() as u32;
+            self.alloc.counts[ci] = cell.live_objects() as u32;
         }
     }
+}
+
+/// One migration awaiting reclaim: the old member-root slot keeps a
+/// tombstone relay (forwarding in-flight actions to `new`) until the
+/// settled wave counter *equals* `epoch` — exactly one full ingest wave
+/// after the move, so every action germinated before the migration has
+/// long since drained and only stale `Edge::to` pointers can still aim at
+/// the old slot.
+#[derive(Clone, Copy, Debug)]
+pub struct PendingTombstone {
+    /// The migrated-away member root (tombstoned slot).
+    pub old: Address,
+    /// The member's new locality, where the relay forwards.
+    pub new: Address,
+    /// Settled wave count at which the relay is dismantled and the slot
+    /// reclaimed. Compared with `==` only (the amcca-lint
+    /// `tombstone-epoch` rule pins this).
+    pub epoch: u64,
 }
 
 /// Outcome of one host-path insert.
@@ -394,9 +424,251 @@ pub fn member_tree<A: Application>(chip: &Chip<A>, root: Address) -> Vec<Address
     tree
 }
 
-/// Total objects installed across all arenas (roots + ghosts).
+/// Total live objects across all arenas (roots + ghosts, minus
+/// migration-reclaimed slots awaiting reuse).
 pub fn total_objects<A: Application>(chip: &Chip<A>) -> u64 {
-    chip.cells.iter().map(|c| c.objects.len() as u64).sum()
+    chip.cells.iter().map(|c| c.live_objects() as u64).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Runtime load rebalancing (`ChipConfig::rebalance`): the MigrateObject
+// protocol's host half. The engine half — tombstone relay in the inject
+// path, MigrateObject/MigrateAck handshake, ownership-transfer stamping —
+// lives in `arch::chip`; see its module docs for the full contract.
+// ---------------------------------------------------------------------------
+
+/// Cells below this settled load never trigger a migration, whatever the
+/// median says: on a nearly empty chip a 2-object cell is "double the
+/// median", but moving its member buys nothing.
+pub const REBALANCE_MIN: u32 = 4;
+
+/// The migration trigger: indices of cells whose settled object-arena
+/// load exceeds `threshold_pct` percent of the chip-median load (and the
+/// [`REBALANCE_MIN`] floor), in ascending cell order. A *pure function*
+/// of the settled load vector — no chip state, no clock, no randomness —
+/// which is what the determinism contract needs and a qcheck property
+/// pins: the same vector always selects the same cells, on every shard
+/// count and banding axis.
+pub fn hot_cells(counts: &[u32], threshold_pct: u32) -> Vec<usize> {
+    if counts.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted = counts.to_vec();
+    sorted.sort_unstable();
+    let median = sorted[sorted.len() / 2].max(1) as u64;
+    counts
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c >= REBALANCE_MIN && (c as u64) * 100 > threshold_pct as u64 * median)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// The coolest eligible destination for a migration out of `exclude`:
+/// the minimum-load cell (lowest id on ties — pure integer tie-break)
+/// that can still absorb `need` more objects under `cap`. `None` when no
+/// cell fits, in which case the member stays put this pass.
+pub fn coolest_cell(counts: &[u32], need: u32, cap: u32, exclude: usize) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &c) in counts.iter().enumerate() {
+        if i == exclude || c as u64 + need as u64 > cap as u64 {
+            continue;
+        }
+        if best.map_or(true, |b| c < counts[b]) {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Overwrite a migrated-away object with an inert ghost husk. Slot
+/// indices are external addresses and must never shift (see
+/// [`crate::arch::cell::Cell::free`]), so the storage is gutted in place;
+/// the caller decides when the slot itself joins the free list. The husk
+/// carries no edges, ghosts, or ring links, so chip-wide sweeps (edge
+/// multisets, metadata fixups) see nothing stale.
+fn gut_slot<A: Application>(chip: &mut Chip<A>, a: Address) {
+    let (vid, member, meta) = {
+        let o = chip.object(a);
+        (o.vid, o.member, o.meta)
+    };
+    let husk = Object::new_ghost(vid, member, chip.app.init(&meta));
+    let cell = &mut chip.cells[a.cc as usize];
+    // `mem_words` counted this object at its install size; edges grown
+    // since were never added, so saturate rather than underflow.
+    let words = cell.objects[a.slot as usize].words();
+    cell.mem_words = cell.mem_words.saturating_sub(words);
+    cell.objects[a.slot as usize] = husk;
+}
+
+/// Move one member root — state, meta, and its whole vicinity subtree —
+/// to cell `dst`, splice every structure that names it, and leave a
+/// tombstone relay on the old root slot until `epoch`:
+///
+/// 1. two-pass subtree copy: clone each tree object into `dst`, then
+///    re-aim the copies' intra-tree ghost pointers at the new addresses;
+/// 2. resplice the sibling rhizome rings and the host root table at the
+///    new locality (host-side on both build modes — member roots ARE the
+///    user-visible vertex addresses, the same covenant construction and
+///    sprouting use);
+/// 3. gut the old slots. Subtree ghosts are referenced only by the
+///    intra-tree pointers that moved with the copy and the chip is
+///    quiescent at the rebalance barrier, so their slots free
+///    immediately. The *root* can still be named by stale `Edge::to`
+///    pointers anywhere on the chip, so its slot instead gets the
+///    tombstone relay — installed directly on the host path, or by a
+///    `MigrateObject` action (acked with `MigrateAck`) when
+///    `via_actions`, the caller running the chip to settle it.
+fn migrate_member<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+    old_root: Address,
+    dst: CellId,
+    epoch: u64,
+    via_actions: bool,
+) -> anyhow::Result<Address> {
+    let tree = member_tree(chip, old_root);
+    let mut new_addrs = Vec::with_capacity(tree.len());
+    for &a in &tree {
+        let obj = chip.object(a).clone();
+        new_addrs.push(chip.install(dst, obj));
+    }
+    for &na in &new_addrs {
+        // Safe unwrap: a ghost pointer always names a member of its own
+        // tree (that is what `member_tree` walks).
+        let mut ghosts = std::mem::take(&mut chip.object_mut(na).ghosts);
+        for g in ghosts.iter_mut() {
+            let k = tree.iter().position(|&t| t == *g).expect("ghost outside its member tree");
+            *g = new_addrs[k];
+        }
+        chip.object_mut(na).ghosts = ghosts;
+    }
+    let new_root = new_addrs[0];
+    let (vid, member) = {
+        let o = chip.object(old_root);
+        (o.vid, o.member)
+    };
+    let siblings = chip.object(old_root).rhizome.clone();
+    for &s in &siblings {
+        for r in chip.object_mut(s).rhizome.iter_mut() {
+            if *r == old_root {
+                *r = new_root;
+            }
+        }
+    }
+    built.roots[vid as usize][member as usize] = new_root;
+    for (k, &a) in tree.iter().enumerate() {
+        gut_slot(chip, a);
+        if k > 0 {
+            chip.cells[a.cc as usize].free.push(a.slot);
+        }
+    }
+    if via_actions {
+        chip.germinate_migrate(old_root, new_root, epoch);
+    } else {
+        chip.cells[old_root.cc as usize].tombstones.push((old_root.slot, new_root, epoch));
+        chip.dsan_record_transfer(old_root.cc, new_root.cc, epoch);
+    }
+    built.ingest.tombstones.push(PendingTombstone { old: old_root, new: new_root, epoch });
+    chip.metrics.members_migrated += 1;
+    Ok(new_root)
+}
+
+/// One inter-wave rebalance step (`ChipConfig::rebalance`): compute the
+/// settled per-cell load vector, and for each [`hot_cells`] cell (in
+/// ascending order) move its largest-subtree member root (first in slot
+/// order on ties) to the [`coolest_cell`] destination, skipping cells
+/// where no destination fits. The load vector is refreshed between
+/// migrations so one pass cannot stampede every hot member onto the same
+/// cool cell. On the on-chip path the `MigrateObject`/`MigrateAck`
+/// handshake settles in one run at the end; occupancy and object counts
+/// resync afterwards (migrations are rare — one O(cells) sweep is noise,
+/// the same argument as sprouting).
+pub fn rebalance_pass<A: Application>(
+    chip: &mut Chip<A>,
+    built: &mut BuiltGraph,
+) -> anyhow::Result<()> {
+    let via_actions = chip.cfg.build_mode == BuildMode::OnChip;
+    let cap = chip.cfg.cell_mem_objects as u32;
+    let epoch = built.ingest.wave_no + 1;
+    let mut counts: Vec<u32> = chip.cells.iter().map(|c| c.live_objects() as u32).collect();
+    let hot = hot_cells(&counts, chip.cfg.rebalance_threshold);
+    let mut migrated = false;
+    for h in hot {
+        let mut candidates: Vec<Address> = Vec::new();
+        for (slot, o) in chip.cells[h].objects.iter().enumerate() {
+            if !o.is_root() {
+                continue; // ghosts and gutted husks are not migration units
+            }
+            let a = Address::new(h as CellId, slot as Slot);
+            if built.roots[o.vid as usize][o.member as usize] == a {
+                candidates.push(a);
+            }
+        }
+        let mut pick: Option<(Address, usize)> = None;
+        for &a in &candidates {
+            let size = member_tree(chip, a).len();
+            if pick.map_or(true, |(_, s)| size > s) {
+                pick = Some((a, size));
+            }
+        }
+        let (root, size) = match pick {
+            Some(p) => p,
+            None => continue, // hot purely from ghosts of remote members
+        };
+        let dst = match coolest_cell(&counts, size as u32, cap, h) {
+            Some(d) => d,
+            None => continue, // chip too full to move anything this pass
+        };
+        migrate_member(chip, built, root, dst as CellId, epoch, via_actions)?;
+        migrated = true;
+        for (ci, cell) in chip.cells.iter().enumerate() {
+            counts[ci] = cell.live_objects() as u32;
+        }
+    }
+    if migrated {
+        if via_actions {
+            chip.run()?; // tombstone install + ack settle at the barrier
+        }
+        built.ingest.resync(chip);
+        built.objects = total_objects(chip);
+    }
+    Ok(())
+}
+
+/// Dismantle tombstone relays whose reclaim epoch has arrived. The relay
+/// window is exactly one settled ingest wave: an entry is reclaimed when
+/// the settled wave counter *equals* its epoch — an `==` on settled
+/// counters, never an ordering comparison and never live state (the
+/// amcca-lint `tombstone-epoch` rule pins this). Reclaiming re-aims every
+/// stale `Edge::to` on the chip from the old root to the new locality (a
+/// deterministic cell/slot/edge-order sweep), removes the cell's relay
+/// entry, and frees the slot for [`crate::arch::cell::Cell::alloc_object`]
+/// reuse.
+pub fn reclaim_tombstones<A: Application>(chip: &mut Chip<A>, built: &mut BuiltGraph) {
+    let wave = built.ingest.wave_no;
+    let due: Vec<PendingTombstone> =
+        built.ingest.tombstones.iter().copied().filter(|t| t.epoch == wave).collect();
+    if due.is_empty() {
+        return;
+    }
+    built.ingest.tombstones.retain(|t| t.epoch != wave);
+    for t in &due {
+        for cell in chip.cells.iter_mut() {
+            for o in cell.objects.iter_mut() {
+                for e in o.edges.iter_mut() {
+                    if e.to == t.old {
+                        e.to = t.new;
+                    }
+                }
+            }
+        }
+        let cell = &mut chip.cells[t.old.cc as usize];
+        cell.tombstones.retain(|&(s, _, _)| s != t.old.slot);
+        cell.free.push(t.old.slot);
+    }
+    built.ingest.resync(chip);
+    built.objects = total_objects(chip);
 }
 
 /// A batch of edge insertions streamed through the live chip, with the
@@ -549,6 +821,12 @@ pub fn apply_batch<A: Application>(
     let mut repair_targets: Vec<Address> = Vec::new();
     let mut start = 0usize;
     while start < batch.edges.len() {
+        // Tombstones due at the current settled wave count are dismantled
+        // before the wave germinates anything new — including relays a
+        // *previous* batch installed after its last wave (they persist
+        // across batches so inter-batch traffic, e.g. `--serve` queries,
+        // keeps forwarding through them).
+        reclaim_tombstones(chip, built);
         let end = wave_end(built, batch, start, cap, growth);
         chip.metrics.ingest_waves += 1;
         // (1) structural mutation: the whole wave settles in one run.
@@ -579,6 +857,14 @@ pub fn apply_batch<A: Application>(
             if germinated {
                 chip.run()?;
             }
+        }
+        // The wave has fully settled: advance the settled counter and —
+        // with `--rebalance on` — run the inter-wave migration step
+        // against it. Both read only settled state, so the whole
+        // rebalance schedule is identical on every shard count and axis.
+        built.ingest.wave_no += 1;
+        if chip.cfg.rebalance {
+            rebalance_pass(chip, built)?;
         }
         start = end;
     }
@@ -1020,6 +1306,143 @@ mod tests {
         let scores = crate::apps::driver::pagerank_scores(&chip, &built);
         let (bad, max_rel) = crate::apps::driver::verify_pagerank(&gm, 4, &scores);
         assert_eq!(bad, 0, "recompute over sprouted members diverged (max_rel={max_rel})");
+    }
+
+    #[test]
+    fn trigger_is_pure_median_relative_and_floor_guarded() {
+        // median of [1, 2, 9, 2, 4] is 2; threshold 200% needs load > 4
+        // AND the REBALANCE_MIN floor, so only the 9 is hot (4 * 100 is
+        // not strictly above 400).
+        assert_eq!(hot_cells(&[1, 2, 9, 2, 4], 200), vec![2]);
+        // far past the median but below the floor: never hot
+        assert_eq!(hot_cells(&[0, 0, 3, 0, 0], 200), Vec::<usize>::new());
+        // repeated calls agree (purity smoke; the qcheck property fuzzes it)
+        assert_eq!(hot_cells(&[5, 1, 1, 1, 20], 150), hot_cells(&[5, 1, 1, 1, 20], 150));
+        // coolest: argmin with lowest-id tie-break, capacity-gated, never
+        // the hot cell itself
+        assert_eq!(coolest_cell(&[3, 1, 1, 9], 2, 8, 3), Some(1));
+        assert_eq!(coolest_cell(&[3, 1, 1, 9], 8, 8, 3), None, "nothing fits");
+        assert_eq!(coolest_cell(&[0, 5], 1, 8, 0), Some(1), "source cell excluded");
+    }
+
+    #[test]
+    fn hot_hub_members_migrate_and_stay_consistent() {
+        // Vicinity allocation piles the whole build onto a few cells, so
+        // the trigger is guaranteed to fire; the stream then has to keep
+        // every invariant while members move: closed rings, exact repair,
+        // pinned bookkeeping, and a live tombstone for each pending relay.
+        for mode in [BuildMode::Host, BuildMode::OnChip] {
+            let g = skewed_graph();
+            let mut cfg = ChipConfig::torus(4);
+            cfg.local_edgelist_size = 2;
+            cfg.rpvo_max = 4;
+            cfg.rhizome_growth = true;
+            cfg.rebalance = true;
+            cfg.rebalance_threshold = 150;
+            cfg.alloc = AllocPolicy::Vicinity;
+            cfg.build_mode = mode;
+            let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+            let batch = hub_batch(70, 3 * built.cutoff_chunk, 60);
+            let mut gm = g.clone();
+            batch.mirror_into(&mut gm);
+            assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
+            assert!(chip.metrics.members_migrated > 0, "{mode:?}: nothing migrated");
+            for t in &built.ingest.tombstones {
+                assert_eq!(
+                    chip.cells[t.old.cc as usize].tombstone_for(t.old.slot),
+                    Some(t.new),
+                    "{mode:?}: pending relay not installed on the cell"
+                );
+                assert!(t.epoch > built.ingest.wave_no, "{mode:?}: overdue relay");
+            }
+            assert_ring_closed(&chip, &built, 0);
+            assert_ring_closed(&chip, &built, 70);
+            let levels = crate::apps::driver::bfs_levels(&chip, &built);
+            assert_eq!(
+                crate::apps::driver::verify_bfs(&gm, 0, &levels),
+                0,
+                "{mode:?}: repair diverged from recompute under migration"
+            );
+            assert_eq!(built.objects, total_objects(&chip), "{mode:?}: object count drifted");
+            for (ci, cell) in chip.cells.iter().enumerate() {
+                assert_eq!(
+                    built.ingest.alloc.counts[ci],
+                    cell.live_objects() as u32,
+                    "{mode:?}: occupancy drifted at cell {ci}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_off_freezes_placement_and_counters() {
+        // Default (`rebalance = false`): the same concentrated stream
+        // leaves placement exactly where allocation put it — no
+        // migrations, no relays, no reclaimed slots — while the settled
+        // wave counter still advances (it is plain wave accounting).
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(4);
+        cfg.local_edgelist_size = 2;
+        cfg.rpvo_max = 4;
+        cfg.rhizome_growth = true;
+        cfg.alloc = AllocPolicy::Vicinity;
+        let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+        let batch = hub_batch(70, 3 * built.cutoff_chunk, 60);
+        assert!(apply_batch(&mut chip, &mut built, &batch).unwrap());
+        assert_eq!(chip.metrics.members_migrated, 0);
+        assert_eq!(chip.metrics.tombstone_forwards, 0);
+        assert!(built.ingest.tombstones.is_empty());
+        assert!(chip.cells.iter().all(|c| c.free.is_empty() && c.tombstones.is_empty()));
+        assert_eq!(built.ingest.wave_no, chip.metrics.ingest_waves);
+    }
+
+    #[test]
+    fn reclaim_reaims_stale_edges_and_frees_the_slot() {
+        let g = skewed_graph();
+        let mut cfg = ChipConfig::torus(8);
+        cfg.local_edgelist_size = 4;
+        cfg.rpvo_max = 4;
+        let (mut chip, mut built) = crate::apps::driver::run_bfs(cfg, &g, 0).unwrap();
+        let old = built.roots[0][0];
+        let aimed = |chip: &Chip<Bfs>, a: Address| {
+            chip.cells
+                .iter()
+                .flat_map(|c| &c.objects)
+                .flat_map(|o| &o.edges)
+                .filter(|e| e.to == a)
+                .count()
+        };
+        let n_stale = aimed(&chip, old);
+        assert!(n_stale > 0, "hub member 0 must carry in-edges");
+        let dst: CellId = if old.cc == 0 { 1 } else { 0 };
+        let levels_before = crate::apps::driver::bfs_levels(&chip, &built);
+
+        let new_root = migrate_member(&mut chip, &mut built, old, dst, 2, false).unwrap();
+        assert_eq!(built.roots[0][0], new_root);
+        assert_eq!(new_root.cc, dst);
+        assert_eq!(chip.metrics.members_migrated, 1);
+        assert_eq!(chip.cells[old.cc as usize].tombstone_for(old.slot), Some(new_root));
+        assert_eq!(aimed(&chip, old), n_stale, "stale edges wait for the reclaim");
+        built.ingest.resync(&chip);
+        built.objects = total_objects(&chip);
+
+        // Not `<=`, not `>=`: the relay dismantles exactly AT its epoch.
+        built.ingest.wave_no = 1;
+        reclaim_tombstones(&mut chip, &mut built);
+        assert!(
+            chip.cells[old.cc as usize].tombstone_for(old.slot).is_some(),
+            "epoch 2 must survive wave 1"
+        );
+        built.ingest.wave_no = 2;
+        reclaim_tombstones(&mut chip, &mut built);
+        assert_eq!(chip.cells[old.cc as usize].tombstone_for(old.slot), None);
+        assert!(built.ingest.tombstones.is_empty());
+        assert_eq!(aimed(&chip, old), 0, "every stale edge re-aimed");
+        assert_eq!(aimed(&chip, new_root), n_stale);
+        assert!(chip.cells[old.cc as usize].free.contains(&old.slot));
+        assert_eq!(built.objects, total_objects(&chip));
+        // Values rode along untouched: the graph answers exactly as before.
+        assert_eq!(crate::apps::driver::bfs_levels(&chip, &built), levels_before);
     }
 
     #[test]

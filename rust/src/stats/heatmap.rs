@@ -10,6 +10,11 @@ pub struct Frame {
     pub dim_y: u32,
     /// Buffer occupancy fraction per cell (0 = empty, 1 = all buffers full).
     pub occupancy: Vec<f32>,
+    /// Object-arena load fraction per cell: resident (live) objects over
+    /// `cell_mem_objects`. Compute load, where `occupancy` is queue depth —
+    /// the channel the migration trigger reasons about, sampled here so
+    /// Fig.-5 frames show where the *objects* sit, not just the flits.
+    pub load: Vec<f32>,
     /// Cells whose congestion flag was raised (exported to neighbours).
     pub congested: Vec<bool>,
 }
@@ -93,6 +98,7 @@ mod tests {
             dim_x: 2,
             dim_y: 2,
             occupancy: vec![0.0, 0.3, 0.8, 1.0],
+            load: vec![0.25, 0.5, 0.0, 1.0],
             congested: cong.to_vec(),
         }
     }

@@ -51,6 +51,14 @@ pub struct Metrics {
     /// (`SproutMember`/`RingSplice` actions on-chip, direct splices on the
     /// host ingest path — both count 2 per sprout per existing sibling).
     pub ring_splices: u64,
+    /// Rhizome member roots migrated to a cooler cell by the inter-wave
+    /// rebalance pass (`ChipConfig::rebalance`): each count moves one
+    /// member root plus its vicinity subtree and installs a one-epoch
+    /// tombstone relay on the vacated slot.
+    pub members_migrated: u64,
+    /// Actions that arrived at a tombstoned slot and were re-injected
+    /// toward the member's new locality (`ActionKind::TombstoneFwd`).
+    pub tombstone_forwards: u64,
     // -- scheduling --------------------------------------------------------
     /// Cells parked in the engine timing wheel: a multi-cycle-busy cell is
     /// scheduled to wake exactly at its busy-timer expiry instead of being
@@ -191,6 +199,8 @@ impl Metrics {
         self.ingest_waves += o.ingest_waves;
         self.members_sprouted += o.members_sprouted;
         self.ring_splices += o.ring_splices;
+        self.members_migrated += o.members_migrated;
+        self.tombstone_forwards += o.tombstone_forwards;
         self.wheel_wakeups += o.wheel_wakeups;
         self.diffusions_created += o.diffusions_created;
         self.diffusions_executed += o.diffusions_executed;
@@ -245,9 +255,47 @@ impl Metrics {
     }
 }
 
+/// Nearest-rank p99 of a per-cell load vector (resident objects per cell,
+/// router occupancy per cell, …). Pure and integer-only so the rebalance
+/// reports are bit-identical on every shard layout; p99 of the *final*
+/// per-cell counts is computed once on the host rather than folded across
+/// shards (percentiles do not merge).
+pub fn p99_cell_load(counts: &[u32]) -> u32 {
+    if counts.is_empty() {
+        return 0;
+    }
+    let mut sorted = counts.to_vec();
+    sorted.sort_unstable();
+    // Nearest-rank: ceil(99/100 * n), 1-based.
+    let rank = (99 * sorted.len()).div_ceil(100);
+    sorted[rank - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn p99_is_nearest_rank_and_order_free() {
+        assert_eq!(p99_cell_load(&[]), 0);
+        assert_eq!(p99_cell_load(&[7]), 7);
+        let asc: Vec<u32> = (1..=100).collect();
+        assert_eq!(p99_cell_load(&asc), 99);
+        let mut desc = asc.clone();
+        desc.reverse();
+        assert_eq!(p99_cell_load(&desc), 99, "pure function of the multiset");
+        let n200: Vec<u32> = (1..=200).collect();
+        assert_eq!(p99_cell_load(&n200), 198);
+    }
+
+    #[test]
+    fn migration_counters_merge_as_sums() {
+        let mut a = Metrics { members_migrated: 2, tombstone_forwards: 5, ..Default::default() };
+        let b = Metrics { members_migrated: 1, tombstone_forwards: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.members_migrated, 3);
+        assert_eq!(a.tombstone_forwards, 9);
+    }
 
     #[test]
     fn fractions() {

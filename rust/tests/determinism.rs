@@ -538,6 +538,39 @@ fn growth_streaming_identical_across_shards_and_axes() {
 }
 
 #[test]
+fn rebalance_streaming_identical_across_shards_and_axes() {
+    // MigrateObject determinism pin: with `--rebalance on` and vicinity
+    // allocation concentrating the build onto one cell, the inter-wave
+    // trigger (settled heat only, same rule everywhere) provably fires,
+    // and the full protocol — copy, ring/ghost resplice, tombstone relay,
+    // epoch-gated reclaim — leaves whole-`Metrics` and every BFS level
+    // bit-identical across {Rows, Cols, Auto} x {1, 2, 4}.
+    let g = Dataset::R18.build(Scale::Tiny);
+    let (batch, _hub) = growth_batch(&g, 8);
+    let mut gm = g.clone();
+    batch.mirror_into(&mut gm);
+    let grid = axis_grid();
+    assert_axis_invariant("bfs-rebalance/R18", &grid, |mut c| {
+        c.rpvo_max = 8;
+        c.rhizome_growth = true;
+        c.rebalance = true;
+        c.rebalance_threshold = 150;
+        c.alloc = amcca::arch::config::AllocPolicy::Vicinity;
+        c.build_mode = amcca::arch::config::BuildMode::OnChip;
+        let (mut chip, mut built) = driver::run_bfs(c, &g, 0).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        assert!(chip.metrics.members_migrated > 0, "rebalance must actually fire");
+        let levels = driver::bfs_levels(&chip, &built);
+        assert_eq!(
+            driver::verify_bfs(&gm, 0, &levels),
+            0,
+            "repair across migrated members != from-scratch recompute"
+        );
+        (chip.metrics.clone(), levels)
+    });
+}
+
+#[test]
 fn growth_host_vs_onchip_structurally_equivalent() {
     // Host-build and onchip-build streaming must widen the same rhizomes
     // the same way: identical member counts everywhere, rings closed

@@ -288,6 +288,45 @@ fn growth_stream_audits_clean_and_invariant() {
     }
 }
 
+/// Rebalance leg of contract 3: with `--rebalance on` and vicinity
+/// allocation concentrating the build, the inter-wave MigrateObject
+/// protocol provably fires. Every ownership hand-off is stamped into the
+/// audit (`ownership_transfers` plus the order-insensitive
+/// `transfer_hash`), the run stays clean, and the whole report — fold
+/// stream and transfer stream alike — is shard/axis-invariant.
+#[test]
+fn rebalance_stream_audits_clean_and_invariant() {
+    let g = Dataset::R18.build(Scale::Tiny);
+    let batch = growth_batch(&g, 8);
+    let mut reference: Option<DsanReport> = None;
+    let grid =
+        [(1, ShardAxis::Rows), (2, ShardAxis::Rows), (2, ShardAxis::Cols), (4, ShardAxis::Auto)];
+    for (shards, axis) in grid {
+        let mut cfg = dsan_cfg(shards, axis);
+        cfg.rpvo_max = 8;
+        cfg.rhizome_growth = true;
+        cfg.rebalance = true;
+        cfg.rebalance_threshold = 150;
+        cfg.alloc = amcca::arch::config::AllocPolicy::Vicinity;
+        cfg.build_mode = BuildMode::OnChip;
+        let (mut chip, mut built) = driver::run_bfs(cfg, &g, 0).unwrap();
+        assert!(driver::apply_mutations(&mut chip, &mut built, &batch).unwrap());
+        assert!(chip.metrics.members_migrated > 0, "rebalance must actually fire");
+        let report = chip.dsan_report().expect("auditor is armed");
+        assert!(
+            report.ownership_transfers > 0,
+            "every migration must stamp an ownership transfer"
+        );
+        assert!(report.is_clean(), "{axis:?} x {shards}: {}", report.summary());
+        match &reference {
+            None => reference = Some(report),
+            Some(want) => {
+                assert_eq!(want, &report, "rebalance audit diverged at {axis:?} x {shards}");
+            }
+        }
+    }
+}
+
 /// The auditor is opt-in even in `dsan` builds: without `ChipConfig::dsan`
 /// there is no report and no stamping — `--features dsan` alone must not
 /// change observable behavior.

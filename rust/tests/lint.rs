@@ -27,6 +27,7 @@ fn every_fixture_trips_its_rule() {
         ("wall_clock.rs", amcca_lint::RULE_WALL_CLOCK),
         ("combine_table.rs", amcca_lint::RULE_COMBINE_TABLE),
         ("combine_qid.rs", amcca_lint::RULE_COMBINE_QID),
+        ("tombstone_epoch.rs", amcca_lint::RULE_TOMBSTONE_EPOCH),
     ];
     for (name, rule) in fixtures {
         let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/lint/fixtures")).join(name);
@@ -54,6 +55,44 @@ fn combine_table_rule_sees_the_real_enum() {
             .iter()
             .any(|f| f.rule == amcca_lint::RULE_COMBINE_TABLE && f.msg.contains("MetaBump")),
         "dropping an arm must trip combine-table; got {findings:?}"
+    );
+}
+
+#[test]
+fn combine_table_rule_covers_the_migration_kinds() {
+    // The MigrateObject protocol added three ActionKinds; each must stay
+    // pinned by an explicit `combinable()` arm — deleting the arm has to
+    // fail the lint, or a future kind could silently inherit folding.
+    let msg = src_root().join("noc/message.rs");
+    let source = std::fs::read_to_string(&msg).expect("read noc/message.rs");
+    for kind in ["MigrateObject", "TombstoneFwd", "MigrateAck"] {
+        let arm = format!("ActionKind::{kind} => false,");
+        let broken = source.replacen(&arm, "", 1);
+        assert_ne!(broken, source, "expected the {kind} arm to exist");
+        let findings = amcca_lint::lint_source("noc/message.rs", &broken);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.rule == amcca_lint::RULE_COMBINE_TABLE && f.msg.contains(kind)),
+            "dropping the {kind} arm must trip combine-table; got {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn tombstone_epoch_rule_sees_the_real_reclaim() {
+    // The rule must parse the real `reclaim_tombstones` in rpvo/mutate.rs:
+    // the `==` window compare is what keeps the relay open for exactly one
+    // settled wave, so loosening it to an ordering must produce a finding.
+    let mutate = src_root().join("rpvo/mutate.rs");
+    let source = std::fs::read_to_string(&mutate).expect("read rpvo/mutate.rs");
+    assert!(amcca_lint::lint_source("rpvo/mutate.rs", &source).is_empty());
+    let broken = source.replacen("t.epoch == wave", "t.epoch <= wave", 1);
+    assert_ne!(broken, source, "expected the == window compare to exist");
+    let findings = amcca_lint::lint_source("rpvo/mutate.rs", &broken);
+    assert!(
+        findings.iter().any(|f| f.rule == amcca_lint::RULE_TOMBSTONE_EPOCH),
+        "loosening the epoch compare must trip tombstone-epoch; got {findings:?}"
     );
 }
 

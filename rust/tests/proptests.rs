@@ -454,6 +454,56 @@ fn prop_combine_qid_guard() {
     });
 }
 
+/// The rebalance trigger is a pure function of the settled per-wave heat
+/// vector: for any random occupancy vector and threshold, repeated calls
+/// agree exactly, every flagged cell is provably hot by the published
+/// rule (median-relative with the `REBALANCE_MIN` floor), flagged cells
+/// come out in ascending index order, and the destination pick is the
+/// argmin with lowest-index tie-break that fits capacity and never
+/// selects the excluded (hot) cell.
+#[test]
+fn prop_rebalance_trigger_pure() {
+    use amcca::rpvo::mutate::{coolest_cell, hot_cells, REBALANCE_MIN};
+    qcheck("rebalance_trigger_pure", |rng| {
+        let n = 1 + rng.usize_below(64);
+        let counts: Vec<u32> = (0..n).map(|_| rng.below(40) as u32).collect();
+        let threshold = 100 + rng.below(300) as u32;
+
+        let hot = hot_cells(&counts, threshold);
+        assert_eq!(hot, hot_cells(&counts, threshold), "trigger must be pure");
+        let mut sorted = counts.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2].max(1) as u64;
+        for w in hot.windows(2) {
+            assert!(w[0] < w[1], "hot cells must come out in ascending order");
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let is_hot = c >= REBALANCE_MIN && (c as u64) * 100 > threshold as u64 * median;
+            assert_eq!(
+                hot.contains(&i),
+                is_hot,
+                "cell {i} (load {c}, median {median}, thr {threshold}) misclassified"
+            );
+        }
+
+        let need = 1 + rng.below(8) as u32;
+        let cap = 8 + rng.below(40) as u32;
+        let exclude = rng.usize_below(n);
+        let got = coolest_cell(&counts, need, cap, exclude);
+        assert_eq!(got, coolest_cell(&counts, need, cap, exclude), "pick must be pure");
+        let want = counts
+            .iter()
+            .enumerate()
+            .filter(|&(i, &c)| i != exclude && c as u64 + need as u64 <= cap as u64)
+            .min_by_key(|&(i, &c)| (c, i))
+            .map(|(i, _)| i);
+        assert_eq!(got, want, "pick must be the lowest-index argmin that fits");
+        if let Some(d) = got {
+            assert_ne!(d, exclude, "the hot cell must never receive its own member");
+        }
+    });
+}
+
 /// The simulator is deterministic: same config + same graph => identical
 /// cycle counts and message counts.
 #[test]

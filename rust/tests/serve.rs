@@ -162,6 +162,37 @@ fn serve_under_mutation_matches_admission_snapshots() {
     }
 }
 
+/// Serve isolation must survive runtime migration: `--rebalance on` with
+/// vicinity allocation concentrates the resident graph so the inter-wave
+/// trigger provably fires between admission waves, and laned query
+/// traffic then reaches migrated members through tombstone relays — yet
+/// every query must still equal its solo-oracle run on the admission
+/// snapshot, and the whole schedule must stay grid-invariant.
+#[test]
+fn serve_under_mutation_with_rebalance_matches_snapshots() {
+    let g = wk();
+    let rebalance_cfg = |shards: usize, axis: ShardAxis| {
+        let mut cfg = cfg_on(shards, axis, true);
+        cfg.rebalance = true;
+        cfg.rebalance_threshold = 150;
+        cfg.alloc = amcca::arch::config::AllocPolicy::Vicinity;
+        cfg
+    };
+    let out = serve_wk(&g, rebalance_cfg(2, ShardAxis::Auto), 48, true);
+    assert!(out.metrics.members_migrated > 0, "migration must fire under serve");
+    assert_eq!(
+        out.isolation_mismatches, 0,
+        "migrating members between waves must not leak into admitted queries"
+    );
+    // Spot-check grid invariance of the full rebalancing serve schedule
+    // (the determinism suite sweeps the full grid on the mutation path).
+    let a = serve_wk(&g, rebalance_cfg(1, ShardAxis::Rows), 48, false);
+    let b = serve_wk(&g, rebalance_cfg(4, ShardAxis::Cols), 48, false);
+    assert_eq!(a.metrics, b.metrics, "rebalancing serve metrics diverged across grids");
+    assert_eq!(a.results, b.results, "rebalancing serve results diverged across grids");
+    assert_eq!(a.queries, b.queries, "admission/settle cycles diverged across grids");
+}
+
 /// Per-lane termination: once the driver has run to quiescence every
 /// admitted lane reports zero live carriers, its settle cycle is at or
 /// after its admission, and an unadmitted lane stays untouched (its
